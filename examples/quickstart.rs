@@ -1,0 +1,55 @@
+//! Quickstart: fine-tune the tiny model on a synthetic SST-2 with
+//! TeZO-Adam, entirely through the public API.
+//!
+//! ```sh
+//! make artifacts          # once: python AOT -> artifacts/tiny
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use tezo::config::{Method, TrainConfig};
+use tezo::coordinator::trainer::{DataSource, Trainer};
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::runtime::{ParamStore, Runtime};
+
+fn main() -> Result<()> {
+    // 1. open the AOT artifacts for a model config (python never runs here)
+    let rt = Runtime::open_config("tiny")?;
+    println!("model: {} ({} params)", rt.manifest.config.name, rt.manifest.config.n_params);
+
+    // 2. load the initial parameters as device-resident buffers
+    let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
+
+    // 3. build a few-shot task (k=16 per class, MeZO protocol)
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
+                         rt.manifest.config.seq_len, 0);
+    let label_tokens = task.label_tokens();
+    let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+    let eval_batches = builder.eval_batches(128);
+
+    // 4. configure TeZO-Adam with the Table-6 presets and train
+    let mut cfg = TrainConfig::with_preset(Method::TezoAdam, "tiny");
+    cfg.steps = 150;
+    cfg.eval_every = 50;
+    let mut trainer = Trainer::new(&rt, cfg, DataSource::Task(builder))
+        .with_eval(eval_batches, label_tokens);
+    trainer.on_step = Some(Box::new(|step, loss| {
+        if step % 25 == 0 {
+            println!("  step {step:4}  loss {loss:.4}");
+        }
+    }));
+    let outcome = trainer.run(&mut params)?;
+
+    // 5. inspect the results
+    println!("\nloss {:.4} -> {:.4}",
+             outcome.metrics.initial_loss_avg(20),
+             outcome.metrics.final_loss_avg(20));
+    for (step, acc) in &outcome.metrics.evals {
+        println!("accuracy @ {step:4}: {:.1}%", acc * 100.0);
+    }
+    println!("optimizer state: {} bytes (TeZO-Adam keeps only factor panels + tau vectors)",
+             outcome.state_bytes);
+    Ok(())
+}

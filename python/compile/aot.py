@@ -1,0 +1,247 @@
+"""AOT pipeline: lower every step function to HLO text + emit manifest.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model config:
+
+    artifacts/<config>/
+      manifest.json            calling conventions for every artifact
+      params/<idx>_<name>.bin  raw little-endian f32 initial parameters
+      <artifact>.hlo.txt       one per step function
+
+Usage:
+    python -m compile.aot --config tiny --out-root ../artifacts
+    python -m compile.aot --config tiny,small --kernels-only  (microbenches)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import zo_steps as zs
+from .configs import ModelConfig, get_config
+from .model import init_params
+
+# ---------------------------------------------------------------------------
+# Eq.(7): layer-wise rank schedule
+# ---------------------------------------------------------------------------
+
+def matrix_rank_threshold(w: np.ndarray, threshold: float) -> int:
+    """Rank(W) = number of singular values > threshold * sigma_max."""
+    s = np.linalg.svd(w, compute_uv=False)
+    if s.size == 0 or s[0] <= 0:
+        return 1
+    return max(1, int(np.sum(s > threshold * s[0])))
+
+
+def rank_schedule(cfg: ModelConfig, params: Dict[str, np.ndarray]) -> Dict[str, int]:
+    """Paper Eq.(7): r_l = min({Rank(W) : W in block(l)}, r_max).
+
+    The min over the *block* preserves rank-propagation transitivity without
+    collapsing for deep L. Embeddings share block 0, final LN the last block.
+    """
+    blocks: Dict[int, List[str]] = {}
+    for name, _ in cfg.matrix_params():
+        blocks.setdefault(cfg.block_of(name), []).append(name)
+    block_rank: Dict[int, int] = {}
+    for b, names in blocks.items():
+        ranks = [matrix_rank_threshold(np.asarray(params[n]), cfg.rank_threshold)
+                 for n in names]
+        block_rank[b] = max(1, min(min(ranks), cfg.r_max))
+    return {name: block_rank[cfg.block_of(name)]
+            for name, _ in cfg.matrix_params()}
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> str:
+    with open(path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Artifact inventory per config
+# ---------------------------------------------------------------------------
+
+def artifact_builders(cfg: ModelConfig, ranks: Dict[str, int],
+                      lozo_rank: int, subzo_rank: int):
+    """name -> (fn, example_args, input_desc, output_desc)."""
+    return {
+        "fwd_loss": zs.build_fwd_loss(cfg),
+        "eval_logits": zs.build_eval_logits(cfg),
+        "fo_valgrad": zs.build_fo_valgrad(cfg),
+        "fo_adam_update": zs.build_fo_adam_update(cfg),
+        "mezo_loss_pm": zs.build_mezo_loss_pm(cfg),
+        "mezo_update_sgd": zs.build_mezo_update_sgd(cfg),
+        "mezo_update_m": zs.build_mezo_update_m(cfg),
+        "mezo_update_adam": zs.build_mezo_update_adam(cfg),
+        "tezo_loss_pm": zs.build_tezo_loss_pm(cfg, ranks),
+        "tezo_update_factor": zs.build_tezo_update_factor(cfg, ranks),
+        "tezo_update_adam": zs.build_tezo_update_adam(cfg, ranks),
+        "lozo_init_u": zs.build_lozo_init_u(cfg, lozo_rank),
+        "lozo_loss_pm": zs.build_lozo_loss_pm(cfg, lozo_rank),
+        "lozo_update_sgd": zs.build_lozo_update_sgd(cfg, lozo_rank),
+        "lozo_update_m": zs.build_lozo_update_m(cfg, lozo_rank),
+        "subzo_factors": zs.build_subzo_factors(cfg, subzo_rank),
+        "subzo_loss_pm": zs.build_subzo_loss_pm(cfg, subzo_rank),
+        "subzo_update": zs.build_subzo_update(cfg, subzo_rank),
+        "adamu_loss_pm": zs.build_adamu_loss_pm(cfg),
+        "adamu_update": zs.build_adamu_update(cfg),
+    }
+
+
+# Per-shape standalone kernel artifacts for the L1 microbenches (Fig 3b /
+# Table 8 phase accounting): shapes chosen to span the attention / FFN
+# matrices of the experiment configs.
+KERNEL_SHAPES = [
+    (256, 256, 8), (256, 1024, 8), (512, 512, 16), (512, 2048, 16),
+    (1024, 1024, 32), (1024, 4096, 32), (2048, 2048, 64),
+]
+
+
+def kernel_builders():
+    out = {}
+    for m, n, r in KERNEL_SHAPES:
+        out[f"kernel_tezo_perturb_{m}x{n}_r{r}"] = zs.build_kernel_tezo_perturb(m, n, r)
+        out[f"kernel_mezo_perturb_{m}x{n}"] = zs.build_kernel_mezo_perturb(m, n)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def build_config(cfg_name: str, out_root: str, seed: int = 0,
+                 only: List[str] | None = None) -> None:
+    cfg = get_config(cfg_name)
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(os.path.join(out_dir, "params"), exist_ok=True)
+
+    t0 = time.time()
+    params = init_params(cfg, seed=seed)
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    ranks = rank_schedule(cfg, np_params)
+    # LOZO uses a small constant rank (paper Table 6: r=8); SubZO a larger
+    # one (r in {32,64,128}) scaled down with our model sizes.
+    lozo_rank = max(2, min(8, cfg.r_max))
+    subzo_rank = max(4, min(32, cfg.r_max * 2))
+
+    # ---- parameters -----------------------------------------------------
+    param_entries = []
+    for idx, (name, shape) in enumerate(cfg.param_specs()):
+        fname = f"params/{idx:03d}_{name.replace('.', '_')}.bin"
+        arr = np_params[name].astype("<f4")
+        arr.tofile(os.path.join(out_dir, fname))
+        param_entries.append({"name": name, "shape": list(shape),
+                              "dtype": "f32", "bin": fname})
+
+    # ---- artifacts -------------------------------------------------------
+    builders = artifact_builders(cfg, ranks, lozo_rank, subzo_rank)
+    if only:
+        builders = {k: v for k, v in builders.items() if k in only}
+    artifacts = {}
+    for name, (fn, example_args, in_desc, out_desc) in builders.items():
+        t = time.time()
+        text = to_hlo_text(fn, example_args)
+        sha = _write(os.path.join(out_dir, f"{name}.hlo.txt"), text)
+        artifacts[name] = {"file": f"{name}.hlo.txt", "sha256_16": sha,
+                           "inputs": in_desc, "outputs": out_desc}
+        print(f"  [{cfg.name}] {name}: {len(in_desc)} in / {len(out_desc)} out "
+              f"({time.time() - t:.1f}s)")
+
+    manifest = {
+        "config": {
+            "name": cfg.name, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len, "batch": cfg.batch, "r_max": cfg.r_max,
+            "rank_threshold": cfg.rank_threshold, "use_pallas": cfg.use_pallas,
+            "n_params": cfg.n_params(), "init_seed": seed,
+        },
+        "params": param_entries,
+        "matrix_ranks": [{"name": n, "m": s[0], "n": s[1], "rank": ranks[n]}
+                         for n, s in cfg.matrix_params()],
+        "lozo_rank": lozo_rank,
+        "subzo_rank": subzo_rank,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{cfg.name}] done in {time.time() - t0:.1f}s -> {out_dir}")
+
+
+def build_kernels(out_root: str) -> None:
+    out_dir = os.path.join(out_root, "kernels")
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+    for name, (fn, example_args, in_desc, out_desc) in kernel_builders().items():
+        text = to_hlo_text(fn, example_args)
+        sha = _write(os.path.join(out_dir, f"{name}.hlo.txt"), text)
+        artifacts[name] = {"file": f"{name}.hlo.txt", "sha256_16": sha,
+                           "inputs": in_desc, "outputs": out_desc}
+        print(f"  [kernels] {name}")
+    # a minimal-but-complete manifest so the Rust Runtime can open the
+    # kernels dir with the same loader as model configs
+    manifest = {
+        "config": {
+            "name": "kernels", "d_model": 0, "n_layers": 0, "n_heads": 0,
+            "d_ff": 0, "vocab": 0, "seq_len": 0, "batch": 0, "r_max": 0,
+            "rank_threshold": 0.0, "use_pallas": True, "n_params": 0,
+            "init_seed": 0,
+        },
+        "params": [],
+        "matrix_ranks": [],
+        "lozo_rank": 0,
+        "subzo_rank": 0,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny,small",
+                    help="comma-separated config presets")
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact subset (debug)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also build standalone kernel microbench artifacts")
+    ap.add_argument("--kernels-only", action="store_true")
+    args = ap.parse_args()
+
+    if not args.kernels_only:
+        for cfg_name in args.config.split(","):
+            if cfg_name:
+                build_config(cfg_name.strip(), args.out_root, seed=args.seed,
+                             only=args.only.split(",") if args.only else None)
+    if args.kernels or args.kernels_only:
+        build_kernels(args.out_root)
+
+
+if __name__ == "__main__":
+    main()

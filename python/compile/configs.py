@@ -1,0 +1,141 @@
+"""Model/config presets shared by the AOT pipeline and tests.
+
+Every named config fully determines the artifact set: parameter shapes,
+layer-wise rank schedule inputs, batch geometry, and which forward path the
+L2 model uses (pallas kernels vs. plain jnp).
+
+The Rust coordinator never sees this file — everything it needs is baked into
+``artifacts/<config>/manifest.json`` by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """OPTLite decoder-only transformer configuration."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    batch: int
+    # --- ZO / TeZO knobs -------------------------------------------------
+    r_max: int  # cap in Eq.(7)
+    rank_threshold: float = 0.25  # singular-value fraction for Eq.(7)
+    # Effective rank of the planted low-rank component of the random init.
+    # Pretrained LLM weights are approximately low-rank (paper App. A.1.3);
+    # a pure Gaussian init is not, so we plant structure to reproduce the
+    # rank-selection behaviour (documented substitution, DESIGN.md §2).
+    init_rank_frac: float = 0.125
+    init_lowrank_weight: float = 0.7
+    # --- implementation knobs -------------------------------------------
+    use_pallas: bool = False  # route forward through L1 pallas kernels
+    dtype: str = "float32"
+    tie_lm_head: bool = True
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    # ------------------------------------------------------------------
+    # Parameter inventory.  Order here IS the flattened calling convention
+    # for every artifact; manifest.json records it verbatim.
+    # ------------------------------------------------------------------
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        d, dff, v, s = self.d_model, self.d_ff, self.vocab, self.seq_len
+        specs: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed.tok", (v, d)),
+            ("embed.pos", (s, d)),
+        ]
+        for i in range(self.n_layers):
+            p = f"block{i}."
+            specs += [
+                (p + "ln1.g", (d,)),
+                (p + "ln1.b", (d,)),
+                (p + "attn.wq", (d, d)),
+                (p + "attn.wk", (d, d)),
+                (p + "attn.wv", (d, d)),
+                (p + "attn.wo", (d, d)),
+                (p + "ln2.g", (d,)),
+                (p + "ln2.b", (d,)),
+                (p + "ffn.w1", (d, dff)),
+                (p + "ffn.w2", (dff, d)),
+            ]
+        specs += [("final_ln.g", (d,)), ("final_ln.b", (d,))]
+        if not self.tie_lm_head:
+            specs.append(("lm_head", (d, v)))
+        return specs
+
+    def matrix_params(self) -> List[Tuple[str, Tuple[int, int]]]:
+        """2D parameters — the ones low-rank ZO methods factorize."""
+        return [(n, s) for n, s in self.param_specs() if len(s) == 2]
+
+    def vector_params(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """1D parameters — perturbed densely (seed-resampled) by all methods."""
+        return [(n, s) for n, s in self.param_specs() if len(s) == 1]
+
+    def n_params(self) -> int:
+        return sum(int(_prod(s)) for _, s in self.param_specs())
+
+    def block_of(self, name: str) -> int:
+        """Block index used by the Eq.(7) rank schedule (embeddings = block 0,
+        final ln = last block)."""
+        if name.startswith("block"):
+            return int(name[len("block"):name.index(".")])
+        if name.startswith("embed"):
+            return 0
+        return self.n_layers - 1
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # tiny: CI/test config. Routes through the pallas kernels so the full
+    # L1->L2->HLO->rust composition is exercised by every integration test.
+    "tiny": ModelConfig(
+        name="tiny", d_model=64, n_layers=2, n_heads=2, d_ff=256,
+        vocab=256, seq_len=64, batch=4, r_max=8, use_pallas=True,
+    ),
+    # tiny_jnp: identical geometry to tiny but on the jnp forward path —
+    # the pallas-interpret vs fused-jnp ablation of EXPERIMENTS.md §Perf.
+    "tiny_jnp": ModelConfig(
+        name="tiny_jnp", d_model=64, n_layers=2, n_heads=2, d_ff=256,
+        vocab=256, seq_len=64, batch=4, r_max=8, use_pallas=False,
+    ),
+    # small: the workhorse for optimizer-comparison experiments (Tables 4/5
+    # analogue, Fig 4 loss curves). ~3.9M params.
+    "small": ModelConfig(
+        name="small", d_model=256, n_layers=4, n_heads=4, d_ff=1024,
+        vocab=2048, seq_len=128, batch=8, r_max=24,
+    ),
+    # medium: RoBERTa-large stand-in for the Table 3 analogue. ~29M params.
+    "medium": ModelConfig(
+        name="medium", d_model=512, n_layers=8, n_heads=8, d_ff=2048,
+        vocab=8192, seq_len=128, batch=8, r_max=64,
+    ),
+    # e2e: ~92M param GPT2-small-shaped model for the end-to-end driver.
+    "e2e": ModelConfig(
+        name="e2e", d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+        vocab=8192, seq_len=128, batch=4, r_max=64,
+    ),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown config {name!r}; have {sorted(PRESETS)}")

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: fused causal attention for the forward hot path.
+
+ZO fine-tuning is forward-only, so the model forward IS the request-path
+hot spot (two forwards per step). This kernel fuses
+``softmax(Q K^T / sqrt(dh) + mask) V`` per (batch, head) with the full
+sequence block resident in VMEM — at the paper's fine-tuning sequence
+lengths (<= a few hundred tokens) one (S, dh) tile per head fits easily, so
+no online-softmax streaming is needed; the QK^T and PV products both run on
+the MXU.
+
+interpret=True: see tezo_perturb.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    q = q_ref[0]            # (S, dh)
+    k = k_ref[0]
+    v = v_ref[0]
+    dh = q.shape[-1]
+    scale = (1.0 / (dh ** 0.5))
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    logits = logits + mask_ref[...]
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - mx)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+@jax.jit
+def attention(q, k, v, mask):
+    """Fused causal attention via Pallas.
+
+    q,k,v: (B, H, S, dh); mask: (S, S) additive. Grid over (B, H); one
+    (S, dh) block per program instance.
+    """
+    b, h, s, dh = q.shape
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+    out = pl.pallas_call(
+        _attn_kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        interpret=True,
+    )(qf, kf, vf, mask)
+    return out.reshape(b, h, s, dh)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/ranks/dtypes with hypothesis and asserts the Pallas kernels
+(interpret mode) match these reference implementations to float tolerance.
+
+They are also used directly by the L2 model when ``config.use_pallas`` is
+False (the jnp path and the pallas path are interchangeable by construction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# TeZO perturbation / update math (paper Eq. 3, Alg. 1)
+# ---------------------------------------------------------------------------
+
+def tezo_z(u: jax.Array, v: jax.Array, tau: jax.Array) -> jax.Array:
+    """CPD slice at time t: ``Z_t = sum_s tau_s * (u_s ∘ v_s) = U diag(tau) V^T``.
+
+    u: (m, r), v: (n, r), tau: (r,) -> (m, n).
+    """
+    return (u * tau[None, :]) @ v.T
+
+
+def tezo_perturb(w, u, v, tau, rho):
+    """``W + rho * Z_t`` — the TeZO perturbation step."""
+    return w + rho * tezo_z(u, v, tau)
+
+
+def tezo_sgd_update(w, u, v, tau_eff):
+    """``W - U diag(tau_eff) V^T`` where ``tau_eff`` already folds in
+    ``eta * kappa`` (plain TeZO) or ``eta * tau_M`` (TeZO-m)."""
+    return w - tezo_z(u, v, tau_eff)
+
+
+def tezo_adam_update(w, u, v, tau_m, tau_v, lr, eps):
+    """Lightweight TeZO-Adam update (paper Eq. 8, separable second moment).
+
+    ``M = U diag(tau_m) V^T``; ``V = U^2 diag(tau_v) (V^2)^T``;
+    ``W' = W - lr * M / sqrt(V + eps)``.
+    """
+    m = tezo_z(u, v, tau_m)
+    vv = tezo_z(u * u, v * v, tau_v)
+    return w - lr * m / jnp.sqrt(vv + eps)
+
+
+def axpy_perturb(w, z, alpha):
+    """Dense fused ``W + alpha * Z`` (MeZO-family perturb/update)."""
+    return w + alpha * z
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward-path kernels
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, mask):
+    """Causal scaled-dot-product attention.
+
+    q,k,v: (B, H, S, Dh); mask: (S, S) additive (0 / large negative).
+    """
+    dh = q.shape[-1]
+    scale = jnp.asarray(1.0 / (dh ** 0.5), dtype=q.dtype)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    logits = logits + mask[None, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)
+
+
+def cross_entropy(logits, targets, mask):
+    """Masked mean token cross-entropy.
+
+    logits: (B, S, V); targets: (B, S) int32; mask: (B, S) float.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: fused TeZO perturbation ``W' = W + rho * U diag(tau) V^T``.
+
+This is the paper's per-step CPD extraction (Eq. 3) fused with the weight
+read-modify-write, i.e. the ZO analogue of an axpy with a rank-r
+reconstruction on the fly.
+
+TPU mapping (DESIGN.md §4): the weight is tiled into (bm, bn) VMEM blocks;
+the (bm, r) slice of U and (bn, r) slice of V ride along via BlockSpec index
+maps, so the factor panels are reused across a full row/column of tiles and
+the rank-r reconstruction runs on the MXU as a (bm×r)@(r×bn) matmul. W is
+read once and written once — arithmetic intensity ~r FLOPs per W byte,
+versus 0.5 for the unfused materialize-then-axpy pair.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+on the Rust CPU runtime. Real-TPU perf is estimated analytically
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _perturb_kernel(w_ref, u_ref, v_ref, tau_ref, rho_ref, o_ref):
+    """One (bm, bn) tile: ``o = w + rho * (u * tau) @ v^T``."""
+    u = u_ref[...]          # (bm, r)
+    v = v_ref[...]          # (bn, r)
+    tau = tau_ref[...]      # (r,)
+    rho = rho_ref[0]
+    z = jnp.dot(u * tau[None, :], v.T, preferred_element_type=jnp.float32)
+    o_ref[...] = w_ref[...] + rho * z.astype(w_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (keeps the grid exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def tezo_perturb(w, u, v, tau, rho, *, bm: int = 256, bn: int = 256):
+    """Fused ``W + rho * U diag(tau) V^T`` via Pallas.
+
+    w: (m, n); u: (m, r); v: (n, r); tau: (r,); rho: scalar.
+    """
+    m, n = w.shape
+    r = tau.shape[0]
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    rho_vec = jnp.reshape(rho.astype(w.dtype) if hasattr(rho, "astype")
+                          else jnp.asarray(rho, w.dtype), (1,))
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _perturb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),        # W tile
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),          # U row panel
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),          # V col panel
+            pl.BlockSpec((r,), lambda i, j: (0,)),               # tau (whole)
+            pl.BlockSpec((1,), lambda i, j: (0,)),               # rho
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=True,
+    )(w, u, v, tau, rho_vec)

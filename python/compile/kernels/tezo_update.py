@@ -1,0 +1,99 @@
+"""L1 Pallas kernels: fused TeZO parameter updates (paper Alg. 1 lines 11-18).
+
+Two kernels:
+
+* ``tezo_sgd_update`` — ``W' = W - U diag(tau_eff) V^T``. ``tau_eff`` folds
+  the scalar chain (``eta * kappa * tau`` for TeZO, ``eta * tau_M`` for
+  TeZO-m) so one kernel serves both the plain and momentum variants — that is
+  exactly the memory story of the paper: the *whole* optimizer state is the
+  r-vector, so the update kernel never sees a full-size moment tensor.
+
+* ``tezo_adam_update`` — the lightweight TeZO-Adam step (paper Eq. 8):
+  ``M = U diag(tau_m) V^T``; ``V = U^2 diag(tau_v) (V^2)^T`` (separable term
+  only; the cross term has zero expectation and is dropped);
+  ``W' = W - lr * M / sqrt(V + eps)``. Reconstructing both moments tile-wise
+  in VMEM means Adam costs two rank-r MXU matmuls per tile instead of two
+  full-size HBM-resident moment tensors.
+
+See tezo_perturb.py for the tiling/TPU-mapping notes and why interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tezo_perturb import _pick_block
+
+
+def _sgd_kernel(w_ref, u_ref, v_ref, tau_ref, o_ref):
+    u = u_ref[...]
+    v = v_ref[...]
+    tau = tau_ref[...]
+    g = jnp.dot(u * tau[None, :], v.T, preferred_element_type=jnp.float32)
+    o_ref[...] = w_ref[...] - g.astype(w_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def tezo_sgd_update(w, u, v, tau_eff, *, bm: int = 256, bn: int = 256):
+    """``W - U diag(tau_eff) V^T`` via Pallas (TeZO / TeZO-m update)."""
+    m, n = w.shape
+    r = tau_eff.shape[0]
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((r,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=True,
+    )(w, u, v, tau_eff)
+
+
+def _adam_kernel(w_ref, u_ref, v_ref, tm_ref, tv_ref, sc_ref, o_ref):
+    u = u_ref[...]
+    v = v_ref[...]
+    tm = tm_ref[...]
+    tv = tv_ref[...]
+    lr = sc_ref[0]
+    eps = sc_ref[1]
+    m = jnp.dot(u * tm[None, :], v.T, preferred_element_type=jnp.float32)
+    vv = jnp.dot((u * u) * tv[None, :], (v * v).T,
+                 preferred_element_type=jnp.float32)
+    g = m / jnp.sqrt(vv + eps)
+    o_ref[...] = w_ref[...] - lr * g.astype(w_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def tezo_adam_update(w, u, v, tau_m, tau_v, lr, eps, *, bm: int = 256,
+                     bn: int = 256):
+    """Lightweight TeZO-Adam update via Pallas (paper Eq. 8)."""
+    m, n = w.shape
+    r = tau_m.shape[0]
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    sc = jnp.stack([jnp.asarray(lr, w.dtype), jnp.asarray(eps, w.dtype)])
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((r,), lambda i, j: (0,)),
+            pl.BlockSpec((r,), lambda i, j: (0,)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=True,
+    )(w, u, v, tau_m, tau_v, sc)

@@ -1,0 +1,148 @@
+"""L2: OPTLite — decoder-only transformer LM in JAX, calling the L1 kernels.
+
+Functional style: parameters are a dict ``name -> jax.Array`` whose order is
+fixed by ``ModelConfig.param_specs()`` (that order is the artifact calling
+convention — see aot.py / manifest.json).
+
+ZO fine-tuning is forward-only, so ``loss_fn`` is the request-path hot spot.
+``config.use_pallas`` routes attention + cross-entropy through the Pallas
+kernels (exercised end-to-end by the ``tiny`` config artifacts); the jnp path
+(``kernels.ref``) is numerically interchangeable and faster under CPU XLA for
+the larger experiment configs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .configs import ModelConfig
+from .kernels import ref
+
+Params = Dict[str, jax.Array]
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Initialize parameters with a planted low-rank + dense mixture.
+
+    Pretrained LLM weights are approximately low-rank (paper App. A.1.3); the
+    Eq.(7) rank schedule and the Fig 1/5/7 analyses are only meaningful if the
+    weights have non-trivial spectra, so each 2D weight is
+    ``(1-g) * dense + g * (A @ B) / sqrt(k)`` with ``k = init_rank_frac *
+    min(m, n)``. Documented substitution — DESIGN.md §2.
+    """
+    rng = np.random.default_rng(seed)
+    params: Params = {}
+    for name, shape in cfg.param_specs():
+        if len(shape) == 1:
+            if name.endswith(".g"):
+                arr = np.ones(shape, np.float32)
+            else:
+                arr = np.zeros(shape, np.float32)
+        else:
+            m, n = shape
+            std = 0.02
+            dense = rng.normal(0.0, std, size=(m, n))
+            k = max(2, int(cfg.init_rank_frac * min(m, n)))
+            a = rng.normal(0.0, std, size=(m, k))
+            b = rng.normal(0.0, 1.0 / np.sqrt(k), size=(k, n))
+            g = cfg.init_lowrank_weight
+            arr = ((1.0 - g) * dense + g * (a @ b)).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Params) -> Tuple[jax.Array, ...]:
+    return tuple(params[n] for n, _ in cfg.param_specs())
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Params:
+    return {n: a for (n, _), a in zip(cfg.param_specs(), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _causal_mask(s: int) -> jax.Array:
+    return jnp.where(jnp.tril(jnp.ones((s, s), jnp.float32)) > 0, 0.0, NEG_INF)
+
+
+def _block(cfg: ModelConfig, params: Params, i: int, x: jax.Array,
+           mask: jax.Array) -> jax.Array:
+    p = f"block{i}."
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    attn_in = _layer_norm(x, params[p + "ln1.g"], params[p + "ln1.b"])
+    q = (attn_in @ params[p + "attn.wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (attn_in @ params[p + "attn.wk"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = (attn_in @ params[p + "attn.wv"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    attn_fn = kernels.attention if cfg.use_pallas else ref.attention
+    o = attn_fn(q, k, v, mask)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ params[p + "attn.wo"]
+    ffn_in = _layer_norm(x, params[p + "ln2.g"], params[p + "ln2.b"])
+    hdd = jax.nn.gelu(ffn_in @ params[p + "ffn.w1"])
+    return x + hdd @ params[p + "ffn.w2"]
+
+
+def logits_fn(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) int32 -> logits (B, S, V)."""
+    b, s = tokens.shape
+    x = params["embed.tok"][tokens] + params["embed.pos"][None, :s, :]
+    mask = _causal_mask(s)
+    for i in range(cfg.n_layers):
+        x = _block(cfg, params, i, x, mask)
+    x = _layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    head = params["embed.tok"].T if cfg.tie_lm_head else params["lm_head"]
+    return x @ head
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            targets: jax.Array, loss_mask: jax.Array) -> jax.Array:
+    """Masked LM loss — classification-as-LM uses a mask selecting the
+    verbalizer position(s), exactly the MeZO evaluation protocol."""
+    logits = logits_fn(cfg, params, tokens)
+    ce_fn = kernels.cross_entropy if cfg.use_pallas else ref.cross_entropy
+    return ce_fn(logits, targets, loss_mask)
+
+
+def eval_logits_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   positions: jax.Array) -> jax.Array:
+    """Logits at one position per row (the verbalizer slot).
+
+    positions: (B,) int32 -> (B, V).
+    """
+    logits = logits_fn(cfg, params, tokens)
+    return jax.vmap(lambda row, p: row[p])(logits, positions)
+
+
+# ---------------------------------------------------------------------------
+# Perturbation builder shared by the ZO step functions (zo_steps.py)
+# ---------------------------------------------------------------------------
+
+def dense_normal_like(key: jax.Array, specs: List[Tuple[str, Tuple[int, ...]]]):
+    """Per-parameter standard normals, each from fold_in(key, index) — the
+    MeZO resampling technique: identical draws for perturb and update given
+    the same step seed, no stored state."""
+    out = {}
+    for idx, (name, shape) in enumerate(specs):
+        out[name] = jax.random.normal(jax.random.fold_in(key, idx), shape,
+                                      jnp.float32)
+    return out

@@ -1,0 +1,860 @@
+"""L2: per-method ZO step functions, AOT-lowered to HLO artifacts.
+
+Every public builder here returns ``(fn, example_args, input_desc,
+output_desc)`` where ``fn`` takes *positional* arguments in the exact order
+recorded in ``input_desc`` — that order is the Rust calling convention and is
+serialized into manifest.json by aot.py.
+
+Conventions shared by all methods
+---------------------------------
+* Parameters come first, flattened in ``cfg.param_specs()`` order.
+* A training *batch* is ``(tokens i32[B,S], targets i32[B,S], mask f32[B,S])``.
+* ``seed`` is a u32 scalar; all in-HLO randomness derives from
+  ``jax.random.PRNGKey(seed)`` + ``fold_in(param_index)`` — the MeZO
+  *resampling technique*: given the step seed, perturb and update regenerate
+  identical draws, so no perturbation tensor is ever stored (Rust stores 4
+  bytes per step).
+* Two-point evaluation is fused: one ``*_loss_pm`` call returns both
+  ``f(W + rho Z)`` and ``f(W - rho Z)``; Rust computes the projected gradient
+  ``kappa = (f+ - f-) / (2 rho)`` on host (scalar work).
+* Low-rank schemes factorize only 2D weights (paper §4.1: "we primarily
+  consider the 2D cases"); 1D params (layernorms) are perturbed densely from
+  the seed and updated with plain ZO-SGD in the TeZO/LOZO/SubZO variants.
+  MeZO variants apply their optimizer to every parameter (their state is
+  full-size anyway) — this matches each paper's own memory accounting.
+* Scalar knobs (rho, lr, coefficients) are f32 scalar inputs so one compiled
+  artifact serves every hyperparameter setting.
+* TeZO-m / TeZO-Adam: the temporal factors ``tau_M, tau_V`` are *state held
+  by Rust* (r floats per layer — the paper's memory claim); the artifacts
+  take the already-accumulated (and bias-corrected) vectors. Momentum
+  accumulation itself is O(r) host work.
+
+Naming: ``us/vs/taus`` lists are ordered like ``cfg.matrix_params()``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .configs import ModelConfig
+from .kernels import ref
+from .model import (Params, dense_normal_like, eval_logits_fn, loss_fn,
+                    unflatten_params)
+
+# ---------------------------------------------------------------------------
+# descriptor helpers
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def _sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _desc(role: str, name: str, shape, dtype: str) -> Dict:
+    return {"role": role, "name": name, "shape": list(int(s) for s in shape),
+            "dtype": dtype}
+
+
+def _param_inputs(cfg: ModelConfig):
+    args, desc = [], []
+    for name, shape in cfg.param_specs():
+        args.append(_sds(shape))
+        desc.append(_desc("param", name, shape, "f32"))
+    return args, desc
+
+
+def _batch_inputs(cfg: ModelConfig):
+    b, s = cfg.batch, cfg.seq_len
+    args = [_sds((b, s), I32), _sds((b, s), I32), _sds((b, s), F32)]
+    desc = [_desc("batch", "tokens", (b, s), "i32"),
+            _desc("batch", "targets", (b, s), "i32"),
+            _desc("batch", "mask", (b, s), "f32")]
+    return args, desc
+
+
+def _scalar(name: str, dtype=F32):
+    d = {F32: "f32", I32: "i32", U32: "u32"}[dtype]
+    return _sds((), dtype), _desc("scalar", name, (), d)
+
+
+def _factor_inputs(cfg: ModelConfig, ranks: Dict[str, int], *,
+                   taus: Sequence[str] = ("tau",), with_uv: bool = True):
+    """(us, vs, tau-vector-groups) inputs for the TeZO family."""
+    args, desc = [], []
+    mats = cfg.matrix_params()
+    if with_uv:
+        for name, (m, n) in mats:
+            args.append(_sds((m, ranks[name])))
+            desc.append(_desc("factor_u", name, (m, ranks[name]), "f32"))
+        for name, (m, n) in mats:
+            args.append(_sds((n, ranks[name])))
+            desc.append(_desc("factor_v", name, (n, ranks[name]), "f32"))
+    for tau_role in taus:
+        for name, _ in mats:
+            args.append(_sds((ranks[name],)))
+            desc.append(_desc(tau_role, name, (ranks[name],), "f32"))
+    return args, desc
+
+
+def _split_factors(cfg: ModelConfig, rest: Sequence, n_tau_groups: int,
+                   with_uv: bool = True):
+    mats = cfg.matrix_params()
+    k = len(mats)
+    idx = 0
+    us = vs = None
+    if with_uv:
+        us = {mats[i][0]: rest[idx + i] for i in range(k)}
+        idx += k
+        vs = {mats[i][0]: rest[idx + i] for i in range(k)}
+        idx += k
+    tau_groups = []
+    for _ in range(n_tau_groups):
+        tau_groups.append({mats[i][0]: rest[idx + i] for i in range(k)})
+        idx += k
+    return us, vs, tau_groups, rest[idx:]
+
+
+def _vector_normals(cfg: ModelConfig, seed):
+    """Dense seed-derived normals for the 1D params only."""
+    key = jax.random.PRNGKey(seed)
+    specs = cfg.param_specs()
+    out = {}
+    for idx, (name, shape) in enumerate(specs):
+        if len(shape) == 1:
+            out[name] = jax.random.normal(jax.random.fold_in(key, idx), shape,
+                                          F32)
+    return out
+
+
+def _all_normals(cfg: ModelConfig, seed):
+    key = jax.random.PRNGKey(seed)
+    return dense_normal_like(key, cfg.param_specs())
+
+
+def _perturbed(cfg: ModelConfig, params: Params, z: Params, scale) -> Params:
+    """W + scale*Z for every param present in z (others pass through).
+
+    Routes through the L1 kernels when the config asks for the pallas path.
+    """
+    out = dict(params)
+    for name, zz in z.items():
+        w = params[name]
+        if cfg.use_pallas and w.ndim == 2:
+            out[name] = kernels.axpy_perturb(w, zz, scale)
+        else:
+            out[name] = w + scale * zz
+    return out
+
+
+def _tezo_z(cfg: ModelConfig, u, v, tau):
+    return ref.tezo_z(u, v, tau)
+
+
+def _tezo_perturbed(cfg: ModelConfig, params, us, vs, taus, vec_z, scale):
+    out = dict(params)
+    for name, _ in cfg.matrix_params():
+        w = params[name]
+        if cfg.use_pallas:
+            out[name] = kernels.tezo_perturb(w, us[name], vs[name], taus[name],
+                                             jnp.asarray(scale, F32))
+        else:
+            out[name] = ref.tezo_perturb(w, us[name], vs[name], taus[name],
+                                         scale)
+    for name, zz in vec_z.items():
+        out[name] = params[name] + scale * zz
+    return out
+
+
+def _loss(cfg: ModelConfig, params: Params, tokens, targets, mask):
+    return loss_fn(cfg, params, tokens, targets, mask)
+
+
+def _out_params_desc(cfg: ModelConfig):
+    return [_desc("param", n, s, "f32") for n, s in cfg.param_specs()]
+
+
+# ===========================================================================
+# shared forward / eval / first-order
+# ===========================================================================
+
+def build_fwd_loss(cfg: ModelConfig):
+    p_args, p_desc = _param_inputs(cfg)
+    b_args, b_desc = _batch_inputs(cfg)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:len(p_args)])
+        tokens, targets, mask = args[len(p_args):]
+        return (_loss(cfg, params, tokens, targets, mask),)
+
+    return fn, p_args + b_args, p_desc + b_desc, [_desc("scalar", "loss", (), "f32")]
+
+
+def build_eval_logits(cfg: ModelConfig):
+    p_args, p_desc = _param_inputs(cfg)
+    b = cfg.batch
+    extra = [_sds((b, cfg.seq_len), I32), _sds((b,), I32)]
+    e_desc = [_desc("batch", "tokens", (b, cfg.seq_len), "i32"),
+              _desc("batch", "positions", (b,), "i32")]
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:len(p_args)])
+        tokens, positions = args[len(p_args):]
+        return (eval_logits_fn(cfg, params, tokens, positions),)
+
+    return fn, p_args + extra, p_desc + e_desc, \
+        [_desc("tensor", "logits", (b, cfg.vocab), "f32")]
+
+
+def build_fo_valgrad(cfg: ModelConfig):
+    """loss + grads for the FT baseline and the Fig 1/5/6/7 spectra.
+
+    Always uses the jnp forward path: pallas interpret kernels do not
+    support reverse-mode autodiff (and the two paths are numerically
+    interchangeable — asserted in python/tests/test_model.py).
+    """
+    import dataclasses
+    dcfg = dataclasses.replace(cfg, use_pallas=False)
+    p_args, p_desc = _param_inputs(cfg)
+    b_args, b_desc = _batch_inputs(cfg)
+
+    def fn(*args):
+        flat = args[:len(p_args)]
+        tokens, targets, mask = args[len(p_args):]
+
+        def f(flat_params):
+            return _loss(dcfg, unflatten_params(dcfg, flat_params), tokens,
+                         targets, mask)
+
+        loss, grads = jax.value_and_grad(f)(tuple(flat))
+        return (loss,) + tuple(grads)
+
+    out_desc = [_desc("scalar", "loss", (), "f32")] + \
+        [_desc("grad", n, s, "f32") for n, s in cfg.param_specs()]
+    return fn, p_args + b_args, p_desc + b_desc, out_desc
+
+
+def build_fo_adam_update(cfg: ModelConfig):
+    """Adam step for the FT baseline: full-size m, v state in/out."""
+    p_args, p_desc = _param_inputs(cfg)
+    g_args = [_sds(s) for _, s in cfg.param_specs()]
+    g_desc = [_desc("grad", n, s, "f32") for n, s in cfg.param_specs()]
+    m_args = [_sds(s) for _, s in cfg.param_specs()]
+    m_desc = [_desc("state_m", n, s, "f32") for n, s in cfg.param_specs()]
+    v_args = [_sds(s) for _, s in cfg.param_specs()]
+    v_desc = [_desc("state_v", n, s, "f32") for n, s in cfg.param_specs()]
+    s_lr, d_lr = _scalar("lr")
+    s_b1, d_b1 = _scalar("beta1")
+    s_b2, d_b2 = _scalar("beta2")
+    s_eps, d_eps = _scalar("eps")
+    s_t, d_t = _scalar("step_t")
+    n = len(p_args)
+
+    def fn(*args):
+        params, grads = args[:n], args[n:2 * n]
+        m, v = args[2 * n:3 * n], args[3 * n:4 * n]
+        lr, b1, b2, eps, t = args[4 * n:]
+        new_p, new_m, new_v = [], [], []
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        for p, g, mm, vv in zip(params, grads, m, v):
+            mm = b1 * mm + (1.0 - b1) * g
+            vv = b2 * vv + (1.0 - b2) * g * g
+            upd = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            new_p.append(p - lr * upd)
+            new_m.append(mm)
+            new_v.append(vv)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v)
+
+    inputs = p_args + g_args + m_args + v_args + [s_lr, s_b1, s_b2, s_eps, s_t]
+    in_desc = p_desc + g_desc + m_desc + v_desc + [d_lr, d_b1, d_b2, d_eps, d_t]
+    out_desc = _out_params_desc(cfg) + m_desc + v_desc
+    return fn, inputs, in_desc, out_desc
+
+
+# ===========================================================================
+# MeZO family (Malladi et al. 2023) — dense Z from seed
+# ===========================================================================
+
+def build_mezo_loss_pm(cfg: ModelConfig):
+    p_args, p_desc = _param_inputs(cfg)
+    b_args, b_desc = _batch_inputs(cfg)
+    s_seed, d_seed = _scalar("seed", U32)
+    s_rho, d_rho = _scalar("rho")
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:len(p_args)])
+        tokens, targets, mask, seed, rho = args[len(p_args):]
+        z = _all_normals(cfg, seed)
+        f_plus = _loss(cfg, _perturbed(cfg, params, z, rho), tokens, targets, mask)
+        f_minus = _loss(cfg, _perturbed(cfg, params, z, -rho), tokens, targets, mask)
+        return f_plus, f_minus
+
+    return fn, p_args + b_args + [s_seed, s_rho], \
+        p_desc + b_desc + [d_seed, d_rho], \
+        [_desc("scalar", "f_plus", (), "f32"), _desc("scalar", "f_minus", (), "f32")]
+
+
+def build_mezo_update_sgd(cfg: ModelConfig):
+    p_args, p_desc = _param_inputs(cfg)
+    s_seed, d_seed = _scalar("seed", U32)
+    s_c, d_c = _scalar("coeff")  # lr * kappa
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:len(p_args)])
+        seed, coeff = args[len(p_args):]
+        z = _all_normals(cfg, seed)
+        out = _perturbed(cfg, params, z, -coeff)
+        return tuple(out[n] for n, _ in cfg.param_specs())
+
+    return fn, p_args + [s_seed, s_c], p_desc + [d_seed, d_c], _out_params_desc(cfg)
+
+
+def build_mezo_update_m(cfg: ModelConfig):
+    """MeZO-m: full-size momentum state in/out (honest memory accounting)."""
+    p_args, p_desc = _param_inputs(cfg)
+    m_args = [_sds(s) for _, s in cfg.param_specs()]
+    m_desc = [_desc("state_m", n, s, "f32") for n, s in cfg.param_specs()]
+    s_seed, d_seed = _scalar("seed", U32)
+    s_k, d_k = _scalar("kappa")
+    s_lr, d_lr = _scalar("lr")
+    s_b1, d_b1 = _scalar("beta1")
+    n = len(p_args)
+
+    def fn(*args):
+        params, m = args[:n], args[n:2 * n]
+        seed, kappa, lr, b1 = args[2 * n:]
+        z = _all_normals(cfg, seed)
+        specs = cfg.param_specs()
+        new_p, new_m = [], []
+        for (name, _), p, mm in zip(specs, params, m):
+            g = kappa * z[name]
+            mm = b1 * mm + (1.0 - b1) * g
+            new_p.append(p - lr * mm)
+            new_m.append(mm)
+        return tuple(new_p) + tuple(new_m)
+
+    return fn, p_args + m_args + [s_seed, s_k, s_lr, s_b1], \
+        p_desc + m_desc + [d_seed, d_k, d_lr, d_b1], \
+        _out_params_desc(cfg) + m_desc
+
+
+def build_mezo_update_adam(cfg: ModelConfig):
+    """MeZO-Adam: full-size m and v state (the 3x memory row of Fig 3a)."""
+    p_args, p_desc = _param_inputs(cfg)
+    m_args = [_sds(s) for _, s in cfg.param_specs()]
+    m_desc = [_desc("state_m", n, s, "f32") for n, s in cfg.param_specs()]
+    v_args = [_sds(s) for _, s in cfg.param_specs()]
+    v_desc = [_desc("state_v", n, s, "f32") for n, s in cfg.param_specs()]
+    s_seed, d_seed = _scalar("seed", U32)
+    s_k, d_k = _scalar("kappa")
+    s_lr, d_lr = _scalar("lr")
+    s_b1, d_b1 = _scalar("beta1")
+    s_b2, d_b2 = _scalar("beta2")
+    s_eps, d_eps = _scalar("eps")
+    s_t, d_t = _scalar("step_t")
+    n = len(p_args)
+
+    def fn(*args):
+        params, m, v = args[:n], args[n:2 * n], args[2 * n:3 * n]
+        seed, kappa, lr, b1, b2, eps, t = args[3 * n:]
+        z = _all_normals(cfg, seed)
+        specs = cfg.param_specs()
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        new_p, new_m, new_v = [], [], []
+        for (name, _), p, mm, vv in zip(specs, params, m, v):
+            g = kappa * z[name]
+            mm = b1 * mm + (1.0 - b1) * g
+            vv = b2 * vv + (1.0 - b2) * g * g
+            upd = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            new_p.append(p - lr * upd)
+            new_m.append(mm)
+            new_v.append(vv)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v)
+
+    inputs = p_args + m_args + v_args + [s_seed, s_k, s_lr, s_b1, s_b2, s_eps, s_t]
+    in_desc = p_desc + m_desc + v_desc + [d_seed, d_k, d_lr, d_b1, d_b2, d_eps, d_t]
+    return fn, inputs, in_desc, _out_params_desc(cfg) + m_desc + v_desc
+
+
+# ===========================================================================
+# TeZO family (this paper)
+# ===========================================================================
+
+def build_tezo_loss_pm(cfg: ModelConfig, ranks: Dict[str, int]):
+    p_args, p_desc = _param_inputs(cfg)
+    f_args, f_desc = _factor_inputs(cfg, ranks)
+    b_args, b_desc = _batch_inputs(cfg)
+    s_seed, d_seed = _scalar("seed", U32)
+    s_rho, d_rho = _scalar("rho")
+    n = len(p_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us, vs, (taus,), rest = _split_factors(cfg, args[n:], 1)
+        tokens, targets, mask, seed, rho = rest
+        vec_z = _vector_normals(cfg, seed)
+        f_plus = _loss(cfg, _tezo_perturbed(cfg, params, us, vs, taus, vec_z, rho),
+                       tokens, targets, mask)
+        f_minus = _loss(cfg, _tezo_perturbed(cfg, params, us, vs, taus, vec_z, -rho),
+                        tokens, targets, mask)
+        return f_plus, f_minus
+
+    return fn, p_args + f_args + b_args + [s_seed, s_rho], \
+        p_desc + f_desc + b_desc + [d_seed, d_rho], \
+        [_desc("scalar", "f_plus", (), "f32"), _desc("scalar", "f_minus", (), "f32")]
+
+
+def build_tezo_update_factor(cfg: ModelConfig, ranks: Dict[str, int]):
+    """Shared TeZO / TeZO-m update: ``W -= U diag(tau_eff) V^T``.
+
+    tau_eff is computed by the Rust coordinator (lr*kappa*tau for plain TeZO,
+    lr*tau_M for TeZO-m) — O(r) host work, which is the paper's entire point:
+    momentum lives in the temporal factor.
+    1D params: plain dense ZO-SGD with coeff1d = lr*kappa.
+    """
+    p_args, p_desc = _param_inputs(cfg)
+    f_args, f_desc = _factor_inputs(cfg, ranks, taus=("tau_eff",))
+    s_seed, d_seed = _scalar("seed", U32)
+    s_c, d_c = _scalar("coeff1d")
+    n = len(p_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us, vs, (tau_eff,), rest = _split_factors(cfg, args[n:], 1)
+        seed, coeff1d = rest
+        out = dict(params)
+        for name, _ in cfg.matrix_params():
+            if cfg.use_pallas:
+                out[name] = kernels.tezo_sgd_update(params[name], us[name],
+                                                    vs[name], tau_eff[name])
+            else:
+                out[name] = ref.tezo_sgd_update(params[name], us[name],
+                                                vs[name], tau_eff[name])
+        vec_z = _vector_normals(cfg, seed)
+        for name, zz in vec_z.items():
+            out[name] = out[name] - coeff1d * zz
+        return tuple(out[nm] for nm, _ in cfg.param_specs())
+
+    return fn, p_args + f_args + [s_seed, s_c], \
+        p_desc + f_desc + [d_seed, d_c], _out_params_desc(cfg)
+
+
+def build_tezo_update_adam(cfg: ModelConfig, ranks: Dict[str, int]):
+    """TeZO-Adam lightweight update (paper Eq. 8).
+
+    tau_m / tau_v are the Rust-held factorized moments, already
+    bias-corrected host-side (both moments are linear in their tau vector,
+    so correction commutes with reconstruction).
+    """
+    p_args, p_desc = _param_inputs(cfg)
+    f_args, f_desc = _factor_inputs(cfg, ranks, taus=("tau_m", "tau_v"))
+    s_seed, d_seed = _scalar("seed", U32)
+    s_lr, d_lr = _scalar("lr")
+    s_eps, d_eps = _scalar("eps")
+    s_c, d_c = _scalar("coeff1d")
+    n = len(p_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us, vs, (tau_m, tau_v), rest = _split_factors(cfg, args[n:], 2)
+        seed, lr, eps, coeff1d = rest
+        out = dict(params)
+        for name, _ in cfg.matrix_params():
+            if cfg.use_pallas:
+                out[name] = kernels.tezo_adam_update(
+                    params[name], us[name], vs[name], tau_m[name], tau_v[name],
+                    lr, eps)
+            else:
+                out[name] = ref.tezo_adam_update(
+                    params[name], us[name], vs[name], tau_m[name], tau_v[name],
+                    lr, eps)
+        vec_z = _vector_normals(cfg, seed)
+        for name, zz in vec_z.items():
+            out[name] = out[name] - coeff1d * zz
+        return tuple(out[nm] for nm, _ in cfg.param_specs())
+
+    return fn, p_args + f_args + [s_seed, s_lr, s_eps, s_c], \
+        p_desc + f_desc + [d_seed, d_lr, d_eps, d_c], _out_params_desc(cfg)
+
+
+# ===========================================================================
+# LOZO (Chen et al. 2024) — Z = U V^T, V resampled per step, U lazy
+# ===========================================================================
+
+def _lozo_v(cfg: ModelConfig, seed, rank: int):
+    """Per-matrix V_t ~ N(0,1)^{n x r} from fold_in(seed, matrix index)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for idx, (name, (m, n)) in enumerate(cfg.matrix_params()):
+        out[name] = jax.random.normal(jax.random.fold_in(key, 10_000 + idx),
+                                      (n, rank), F32)
+    return out
+
+
+def build_lozo_init_u(cfg: ModelConfig, rank: int):
+    """U factors for a lazy window: U_l ~ N(0,1)^{m x r} from the seed."""
+    s_seed, d_seed = _scalar("seed", U32)
+
+    def fn(seed):
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        for idx, (name, (m, n)) in enumerate(cfg.matrix_params()):
+            outs.append(jax.random.normal(jax.random.fold_in(key, idx),
+                                          (m, rank), F32))
+        return tuple(outs)
+
+    out_desc = [_desc("factor_u", n, (m, rank), "f32")
+                for n, (m, _) in cfg.matrix_params()]
+    return fn, [s_seed], [d_seed], out_desc
+
+
+def build_lozo_loss_pm(cfg: ModelConfig, rank: int):
+    p_args, p_desc = _param_inputs(cfg)
+    u_args = [_sds((m, rank)) for _, (m, n) in cfg.matrix_params()]
+    u_desc = [_desc("factor_u", n, (m, rank), "f32")
+              for n, (m, _) in cfg.matrix_params()]
+    b_args, b_desc = _batch_inputs(cfg)
+    s_seed, d_seed = _scalar("seed", U32)
+    s_rho, d_rho = _scalar("rho")
+    n = len(p_args)
+    k = len(u_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us = {nm: a for (nm, _), a in zip(cfg.matrix_params(), args[n:n + k])}
+        tokens, targets, mask, seed, rho = args[n + k:]
+        v_t = _lozo_v(cfg, seed, rank)
+        vec_z = _vector_normals(cfg, seed)
+
+        def perturbed(scale):
+            out = dict(params)
+            for name, _ in cfg.matrix_params():
+                out[name] = params[name] + scale * (us[name] @ v_t[name].T)
+            for name, zz in vec_z.items():
+                out[name] = params[name] + scale * zz
+            return out
+
+        f_plus = _loss(cfg, perturbed(rho), *args[n + k:n + k + 3])
+        f_minus = _loss(cfg, perturbed(-rho), *args[n + k:n + k + 3])
+        return f_plus, f_minus
+
+    return fn, p_args + u_args + b_args + [s_seed, s_rho], \
+        p_desc + u_desc + b_desc + [d_seed, d_rho], \
+        [_desc("scalar", "f_plus", (), "f32"), _desc("scalar", "f_minus", (), "f32")]
+
+
+def build_lozo_update_sgd(cfg: ModelConfig, rank: int):
+    p_args, p_desc = _param_inputs(cfg)
+    u_args = [_sds((m, rank)) for _, (m, n) in cfg.matrix_params()]
+    u_desc = [_desc("factor_u", n, (m, rank), "f32")
+              for n, (m, _) in cfg.matrix_params()]
+    s_seed, d_seed = _scalar("seed", U32)
+    s_c, d_c = _scalar("coeff")
+    n = len(p_args)
+    k = len(u_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us = {nm: a for (nm, _), a in zip(cfg.matrix_params(), args[n:n + k])}
+        seed, coeff = args[n + k:]
+        v_t = _lozo_v(cfg, seed, rank)
+        vec_z = _vector_normals(cfg, seed)
+        out = dict(params)
+        for name, _ in cfg.matrix_params():
+            out[name] = params[name] - coeff * (us[name] @ v_t[name].T)
+        for name, zz in vec_z.items():
+            out[name] = params[name] - coeff * zz
+        return tuple(out[nm] for nm, _ in cfg.param_specs())
+
+    return fn, p_args + u_args + [s_seed, s_c], \
+        p_desc + u_desc + [d_seed, d_c], _out_params_desc(cfg)
+
+
+def build_lozo_update_m(cfg: ModelConfig, rank: int):
+    """LOZO-m: momentum accumulated in the V-factor while U is frozen:
+    ``S' = b1 S + (1-b1) kappa V_t``; ``W' = W - lr U S'^T``. State S is
+    (n x r) per matrix — low-rank, matching LOZO's memory row in Table 7."""
+    p_args, p_desc = _param_inputs(cfg)
+    u_args = [_sds((m, rank)) for _, (m, n) in cfg.matrix_params()]
+    u_desc = [_desc("factor_u", n, (m, rank), "f32")
+              for n, (m, _) in cfg.matrix_params()]
+    sarg = [_sds((n, rank)) for _, (m, n) in cfg.matrix_params()]
+    sdesc = [_desc("state_s", n, (shape[1], rank), "f32")
+             for n, shape in cfg.matrix_params()]
+    s_seed, d_seed = _scalar("seed", U32)
+    s_k, d_k = _scalar("kappa")
+    s_lr, d_lr = _scalar("lr")
+    s_b1, d_b1 = _scalar("beta1")
+    n = len(p_args)
+    k = len(u_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us = {nm: a for (nm, _), a in zip(cfg.matrix_params(), args[n:n + k])}
+        ss = {nm: a for (nm, _), a in zip(cfg.matrix_params(),
+                                          args[n + k:n + 2 * k])}
+        seed, kappa, lr, b1 = args[n + 2 * k:]
+        v_t = _lozo_v(cfg, seed, rank)
+        vec_z = _vector_normals(cfg, seed)
+        out = dict(params)
+        new_s = {}
+        for name, _ in cfg.matrix_params():
+            s_new = b1 * ss[name] + (1.0 - b1) * kappa * v_t[name]
+            new_s[name] = s_new
+            out[name] = params[name] - lr * (us[name] @ s_new.T)
+        for name, zz in vec_z.items():
+            out[name] = params[name] - lr * kappa * zz
+        return tuple(out[nm] for nm, _ in cfg.param_specs()) + \
+            tuple(new_s[nm] for nm, _ in cfg.matrix_params())
+
+    return fn, p_args + u_args + sarg + [s_seed, s_k, s_lr, s_b1], \
+        p_desc + u_desc + sdesc + [d_seed, d_k, d_lr, d_b1], \
+        _out_params_desc(cfg) + sdesc
+
+
+# ===========================================================================
+# SubZO (Yu et al. 2024) — Z = U Sigma V^T, orthonormal lazy U/V
+# ===========================================================================
+
+def _ns_orthonormalize(a, iters: int = 20):
+    """Newton-Schulz polar orthonormalization in plain jnp ops.
+
+    ``jnp.linalg.qr`` lowers to a typed-FFI LAPACK custom call that
+    xla_extension 0.5.1 (the Rust runtime) cannot compile, and an unrolled
+    Gram-Schmidt produces an O(r^2)-op graph that XLA:CPU is very slow to
+    compile. Newton-Schulz needs two small matmuls per iteration
+    (``Y <- 1.5 Y - 0.5 Y (Y^T Y)``) and converges quadratically to the
+    polar factor (orthonormal columns) once the spectrum is scaled into
+    (0, sqrt(3)). For tall Gaussian panels sigma ranges in
+    [sqrt(m)-sqrt(r), sqrt(m)+sqrt(r)], so scaling by the upper edge keeps
+    the spectrum well inside the basin.
+    """
+    m, r = a.shape
+    scale = jnp.float32((m ** 0.5 + r ** 0.5) * 1.05)
+    y = a / scale
+    for _ in range(iters):
+        y = 1.5 * y - 0.5 * y @ (y.T @ y)
+    return y
+
+
+def build_subzo_factors(cfg: ModelConfig, rank: int):
+    """Orthonormal U, V per matrix via MGS of Gaussians (lazy refresh)."""
+    s_seed, d_seed = _scalar("seed", U32)
+
+    def fn(seed):
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        for idx, (name, (m, n)) in enumerate(cfg.matrix_params()):
+            gu = jax.random.normal(jax.random.fold_in(key, 2 * idx), (m, rank), F32)
+            gv = jax.random.normal(jax.random.fold_in(key, 2 * idx + 1), (n, rank), F32)
+            outs.append(_ns_orthonormalize(gu))
+            outs.append(_ns_orthonormalize(gv))
+        return tuple(outs)
+
+    out_desc = []
+    for name, (m, n) in cfg.matrix_params():
+        out_desc.append(_desc("factor_u", name, (m, rank), "f32"))
+        out_desc.append(_desc("factor_v", name, (n, rank), "f32"))
+    return fn, [s_seed], [d_seed], out_desc
+
+
+def _subzo_sigma(cfg: ModelConfig, seed, rank: int):
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for idx, (name, _) in enumerate(cfg.matrix_params()):
+        out[name] = jax.random.normal(jax.random.fold_in(key, 20_000 + idx),
+                                      (rank, rank), F32)
+    return out
+
+
+def build_subzo_loss_pm(cfg: ModelConfig, rank: int):
+    p_args, p_desc = _param_inputs(cfg)
+    uv_args, uv_desc = [], []
+    for name, (m, n) in cfg.matrix_params():
+        uv_args.append(_sds((m, rank)))
+        uv_desc.append(_desc("factor_u", name, (m, rank), "f32"))
+    for name, (m, n) in cfg.matrix_params():
+        uv_args.append(_sds((n, rank)))
+        uv_desc.append(_desc("factor_v", name, (n, rank), "f32"))
+    b_args, b_desc = _batch_inputs(cfg)
+    s_seed, d_seed = _scalar("seed", U32)
+    s_rho, d_rho = _scalar("rho")
+    n = len(p_args)
+    k = len(cfg.matrix_params())
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us = {nm: a for (nm, _), a in zip(cfg.matrix_params(), args[n:n + k])}
+        vs = {nm: a for (nm, _), a in zip(cfg.matrix_params(),
+                                          args[n + k:n + 2 * k])}
+        tokens, targets, mask, seed, rho = args[n + 2 * k:]
+        sig = _subzo_sigma(cfg, seed, rank)
+        vec_z = _vector_normals(cfg, seed)
+
+        def perturbed(scale):
+            out = dict(params)
+            for name, _ in cfg.matrix_params():
+                out[name] = params[name] + scale * (us[name] @ sig[name] @ vs[name].T)
+            for name, zz in vec_z.items():
+                out[name] = params[name] + scale * zz
+            return out
+
+        f_plus = _loss(cfg, perturbed(rho), tokens, targets, mask)
+        f_minus = _loss(cfg, perturbed(-rho), tokens, targets, mask)
+        return f_plus, f_minus
+
+    return fn, p_args + uv_args + b_args + [s_seed, s_rho], \
+        p_desc + uv_desc + b_desc + [d_seed, d_rho], \
+        [_desc("scalar", "f_plus", (), "f32"), _desc("scalar", "f_minus", (), "f32")]
+
+
+def build_subzo_update(cfg: ModelConfig, rank: int):
+    p_args, p_desc = _param_inputs(cfg)
+    uv_args, uv_desc = [], []
+    for name, (m, n) in cfg.matrix_params():
+        uv_args.append(_sds((m, rank)))
+        uv_desc.append(_desc("factor_u", name, (m, rank), "f32"))
+    for name, (m, n) in cfg.matrix_params():
+        uv_args.append(_sds((n, rank)))
+        uv_desc.append(_desc("factor_v", name, (n, rank), "f32"))
+    s_seed, d_seed = _scalar("seed", U32)
+    s_c, d_c = _scalar("coeff")
+    n = len(p_args)
+    k = len(cfg.matrix_params())
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us = {nm: a for (nm, _), a in zip(cfg.matrix_params(), args[n:n + k])}
+        vs = {nm: a for (nm, _), a in zip(cfg.matrix_params(),
+                                          args[n + k:n + 2 * k])}
+        seed, coeff = args[n + 2 * k:]
+        sig = _subzo_sigma(cfg, seed, rank)
+        vec_z = _vector_normals(cfg, seed)
+        out = dict(params)
+        for name, _ in cfg.matrix_params():
+            out[name] = params[name] - coeff * (us[name] @ sig[name] @ vs[name].T)
+        for name, zz in vec_z.items():
+            out[name] = params[name] - coeff * zz
+        return tuple(out[nm] for nm, _ in cfg.param_specs())
+
+    return fn, p_args + uv_args + [s_seed, s_c], \
+        p_desc + uv_desc + [d_seed, d_c], _out_params_desc(cfg)
+
+
+# ===========================================================================
+# ZO-AdaMU (Jiang et al. 2024) — perturbation adapted by momentum+uncertainty
+# ===========================================================================
+
+def build_adamu_loss_pm(cfg: ModelConfig):
+    """z_t = sqrt(1-alpha) z_rand + sqrt(alpha) m_pert — the perturbation is
+    biased toward the momentum of past perturbation directions. m_pert is a
+    full-size state tensor (ZO-AdaMU's memory is MeZO-Adam-like)."""
+    p_args, p_desc = _param_inputs(cfg)
+    m_args = [_sds(s) for _, s in cfg.param_specs()]
+    m_desc = [_desc("state_mpert", n, s, "f32") for n, s in cfg.param_specs()]
+    b_args, b_desc = _batch_inputs(cfg)
+    s_seed, d_seed = _scalar("seed", U32)
+    s_rho, d_rho = _scalar("rho")
+    s_a, d_a = _scalar("alpha")
+    n = len(p_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        m = {nm: a for (nm, _), a in zip(cfg.param_specs(), args[n:2 * n])}
+        tokens, targets, mask, seed, rho, alpha = args[2 * n:]
+        z_rand = _all_normals(cfg, seed)
+        z = {nm: jnp.sqrt(1.0 - alpha) * z_rand[nm] + jnp.sqrt(alpha) * m[nm]
+             for nm in z_rand}
+        f_plus = _loss(cfg, _perturbed(cfg, params, z, rho), tokens, targets, mask)
+        f_minus = _loss(cfg, _perturbed(cfg, params, z, -rho), tokens, targets, mask)
+        return f_plus, f_minus
+
+    return fn, p_args + m_args + b_args + [s_seed, s_rho, s_a], \
+        p_desc + m_desc + b_desc + [d_seed, d_rho, d_a], \
+        [_desc("scalar", "f_plus", (), "f32"), _desc("scalar", "f_minus", (), "f32")]
+
+
+def build_adamu_update(cfg: ModelConfig):
+    """Adam-style update on g = kappa z, plus momentum of z itself."""
+    p_args, p_desc = _param_inputs(cfg)
+    m_args = [_sds(s) for _, s in cfg.param_specs()]
+    m_desc = [_desc("state_mpert", n, s, "f32") for n, s in cfg.param_specs()]
+    v_args = [_sds(s) for _, s in cfg.param_specs()]
+    v_desc = [_desc("state_v", n, s, "f32") for n, s in cfg.param_specs()]
+    s_seed, d_seed = _scalar("seed", U32)
+    s_k, d_k = _scalar("kappa")
+    s_lr, d_lr = _scalar("lr")
+    s_a, d_a = _scalar("alpha")
+    s_b1, d_b1 = _scalar("beta1")
+    s_b2, d_b2 = _scalar("beta2")
+    s_eps, d_eps = _scalar("eps")
+    s_t, d_t = _scalar("step_t")
+    n = len(p_args)
+
+    def fn(*args):
+        params, m, v = args[:n], args[n:2 * n], args[2 * n:3 * n]
+        seed, kappa, lr, alpha, b1, b2, eps, t = args[3 * n:]
+        z_rand = _all_normals(cfg, seed)
+        specs = cfg.param_specs()
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        new_p, new_m, new_v = [], [], []
+        for (name, _), p, mm, vv in zip(specs, params, m, v):
+            z = jnp.sqrt(1.0 - alpha) * z_rand[name] + jnp.sqrt(alpha) * mm
+            g = kappa * z
+            mm_new = b1 * mm + (1.0 - b1) * z
+            vv_new = b2 * vv + (1.0 - b2) * g * g
+            upd = (g / bc1) / (jnp.sqrt(vv_new / bc2) + eps)
+            new_p.append(p - lr * upd)
+            new_m.append(mm_new)
+            new_v.append(vv_new)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v)
+
+    inputs = p_args + m_args + v_args + \
+        [s_seed, s_k, s_lr, s_a, s_b1, s_b2, s_eps, s_t]
+    in_desc = p_desc + m_desc + v_desc + \
+        [d_seed, d_k, d_lr, d_a, d_b1, d_b2, d_eps, d_t]
+    return fn, inputs, in_desc, _out_params_desc(cfg) + m_desc + v_desc
+
+
+# ===========================================================================
+# standalone per-shape kernel microbench artifacts (Table 2 / Fig 3b support)
+# ===========================================================================
+
+def build_kernel_tezo_perturb(m: int, n: int, r: int):
+    """Standalone pallas tezo_perturb for one shape — L1 microbenchmarks."""
+    args = [_sds((m, n)), _sds((m, r)), _sds((n, r)), _sds((r,)), _sds((), F32)]
+    desc = [_desc("tensor", "w", (m, n), "f32"),
+            _desc("factor_u", "u", (m, r), "f32"),
+            _desc("factor_v", "v", (n, r), "f32"),
+            _desc("tau", "tau", (r,), "f32"),
+            _desc("scalar", "rho", (), "f32")]
+
+    def fn(w, u, v, tau, rho):
+        return (kernels.tezo_perturb(w, u, v, tau, rho),)
+
+    return fn, args, desc, [_desc("tensor", "out", (m, n), "f32")]
+
+
+def build_kernel_mezo_perturb(m: int, n: int):
+    """Standalone dense seed-based perturb for one shape (MeZO baseline)."""
+    args = [_sds((m, n)), _sds((), U32), _sds((), F32)]
+    desc = [_desc("tensor", "w", (m, n), "f32"),
+            _desc("scalar", "seed", (), "u32"),
+            _desc("scalar", "rho", (), "f32")]
+
+    def fn(w, seed, rho):
+        z = jax.random.normal(jax.random.PRNGKey(seed), (m, n), F32)
+        return (kernels.axpy_perturb(w, z, rho),)
+
+    return fn, args, desc, [_desc("tensor", "out", (m, n), "f32")]

@@ -1,0 +1,73 @@
+"""Paper Appendix A.2 (and Fig 8): the lightweight separable second moment.
+
+Checks (i) the cross term of Z^2 is negligible vs the separable term for
+one step, and (ii) the time-averaged accumulated error E_t = (V_t - V̂_t)/mn
+*decreases* as the model dimension grows — the scaling that justifies
+dropping the cross term for LLM-sized layers.
+
+Scaled-down shapes (paper uses m=n=4096, r=64; we sweep 128..512, r=16) —
+the trend, not the absolute number, is the claim under test.
+"""
+
+import numpy as np
+import pytest
+
+
+def _z_terms(rng, m, n, r):
+    u = rng.normal(size=(m, r))
+    v = rng.normal(size=(n, r))
+    tau = rng.normal(size=(r,))
+    z = (u * tau) @ v.T
+    sep = ((u * u) * (tau * tau)) @ (v * v).T
+    return z, sep
+
+
+def test_cross_term_zero_mean_one_step():
+    """The cross term is zero-mean per coordinate (paper Eq. 8/11): its
+    average over coordinates must vanish relative to the separable term,
+    even though individual entries are not small."""
+    rng = np.random.default_rng(0)
+    m = n = 256
+    r = 16
+    z, sep = _z_terms(rng, m, n, r)
+    cross = z * z - sep
+    assert abs(cross.mean()) < 0.05 * sep.mean(), \
+        (cross.mean(), sep.mean())
+    # averaging over independent draws of tau kills the cross term ~1/sqrt(T)
+    T = 64
+    acc = np.zeros((m, n))
+    u = rng.normal(size=(m, r))
+    v = rng.normal(size=(n, r))
+    for _ in range(T):
+        tau = rng.normal(size=(r,))
+        zz = (u * tau) @ v.T
+        ss = ((u * u) * (tau * tau)) @ (v * v).T
+        acc += zz * zz - ss
+    one = np.linalg.norm(cross)
+    avg = np.linalg.norm(acc / T)
+    assert avg < one, (avg, one)
+
+
+@pytest.mark.parametrize("steps", [200])
+def test_accumulated_error_decreases_with_size(steps):
+    rng = np.random.default_rng(1)
+    beta2 = 0.99
+    errs = {}
+    for size in [64, 128, 256]:
+        m = n = size
+        r = 8
+        u = rng.normal(size=(m, r))
+        v = rng.normal(size=(n, r))
+        vt = np.zeros((m, n))
+        vhat = np.zeros((m, n))
+        acc = 0.0
+        for t in range(steps):
+            tau = rng.normal(size=(r,))
+            z = (u * tau) @ v.T
+            sep = ((u * u) * (tau * tau)) @ (v * v).T
+            vt = beta2 * vt + (1 - beta2) * (z * z)
+            vhat = beta2 * vhat + (1 - beta2) * sep
+            acc += np.linalg.norm(vt - vhat) / (m * n)
+        errs[size] = acc / steps
+    assert errs[128] < errs[64]
+    assert errs[256] < errs[128]

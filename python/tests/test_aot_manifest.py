@@ -1,0 +1,83 @@
+"""AOT pipeline invariants: rank schedule (Eq. 7) and manifest integrity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import matrix_rank_threshold, rank_schedule
+from compile.configs import get_config
+from compile.model import init_params
+
+CFG = get_config("tiny")
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+def test_rank_threshold_on_known_matrix():
+    # diag(10, 9, 1, 0.1): threshold 0.25 -> sigma > 2.5 -> rank 2
+    w = np.diag([10.0, 9.0, 1.0, 0.1])
+    assert matrix_rank_threshold(w, 0.25) == 2
+    assert matrix_rank_threshold(w, 0.05) == 3
+    assert matrix_rank_threshold(np.zeros((4, 4)), 0.25) == 1
+
+
+def test_rank_schedule_within_bounds():
+    params = init_params(CFG, seed=0)
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    ranks = rank_schedule(CFG, np_params)
+    for name, (m, n) in CFG.matrix_params():
+        assert 1 <= ranks[name] <= CFG.r_max
+    # same block -> same rank (Eq.7 is per-block)
+    blocks = {}
+    for name, _ in CFG.matrix_params():
+        blocks.setdefault(CFG.block_of(name), set()).add(ranks[name])
+    for b, rs in blocks.items():
+        assert len(rs) == 1, f"block {b} has mixed ranks {rs}"
+
+
+def test_rank_schedule_deterministic():
+    params = init_params(CFG, seed=0)
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    assert rank_schedule(CFG, np_params) == rank_schedule(CFG, np_params)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_matches_config():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["config"]["name"] == "tiny"
+    assert man["config"]["n_params"] == CFG.n_params()
+    # every param bin exists with the right byte size
+    for p in man["params"]:
+        path = os.path.join(ART, p["bin"])
+        assert os.path.exists(path), path
+        want = 4 * int(np.prod(p["shape"]))
+        assert os.path.getsize(path) == want
+    # every artifact file exists
+    for name, a in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, a["file"])), name
+    # ranks recorded for every matrix param
+    names = {e["name"] for e in man["matrix_ranks"]}
+    assert names == {n for n, _ in CFG.matrix_params()}
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_input_roles_are_wellformed():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    valid_roles = {"param", "batch", "scalar", "factor_u", "factor_v", "tau",
+                   "tau_eff", "tau_m", "tau_v", "state_m", "state_v",
+                   "state_s", "state_mpert", "grad", "tensor"}
+    for name, a in man["artifacts"].items():
+        for d in a["inputs"] + a["outputs"]:
+            assert d["role"] in valid_roles, (name, d)
+            assert d["dtype"] in {"f32", "i32", "u32"}
+        # params-first convention for step artifacts
+        if name.endswith(("_loss_pm", "_update", "_update_sgd", "_update_m",
+                          "_update_adam", "_update_factor")):
+            nparams = len(CFG.param_specs())
+            roles = [d["role"] for d in a["inputs"][:nparams]]
+            assert all(r == "param" for r in roles), name

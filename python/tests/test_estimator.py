@@ -1,0 +1,64 @@
+"""Theorem 1 validation (paper §5): the TeZO estimator is unbiased after
+dividing by r, and its relative variance matches
+delta = 1 + mn + 2mn/r + 6(m+n)/r + 10/r.
+
+Monte-Carlo over (tau, u, v); we use the rho->0 limit form
+   (1/r) <G, Z> Z  with  Z = U diag(tau) V^T,
+which is exactly what the SPSA quotient converges to (Thm 1 proof).
+"""
+
+import numpy as np
+import pytest
+
+
+def _tezo_sample(rng, g, r):
+    m, n = g.shape
+    u = rng.normal(size=(m, r))
+    v = rng.normal(size=(n, r))
+    tau = rng.normal(size=(r,))
+    z = (u * tau) @ v.T
+    return (np.sum(g * z) * z) / r
+
+
+def _delta(m, n, r):
+    return 1.0 + m * n + 2.0 * m * n / r + 6.0 * (m + n) / r + 10.0 / r
+
+
+@pytest.mark.parametrize("m,n,r", [(4, 4, 2), (6, 3, 2), (5, 8, 4)])
+def test_unbiasedness(m, n, r):
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(m, n))
+    trials = 400_000
+    acc = np.zeros_like(g)
+    for _ in range(trials):
+        acc += _tezo_sample(rng, g, r)
+    est = acc / trials
+    # standard error of the mean scales with sqrt(delta/trials)*|g|
+    se = np.sqrt(_delta(m, n, r) / trials) * np.linalg.norm(g)
+    err = np.linalg.norm(est - g)
+    assert err < 6 * se, f"bias too large: {err} vs se {se}"
+
+
+@pytest.mark.parametrize("m,n,r", [(4, 4, 2), (3, 6, 3)])
+def test_variance_matches_delta(m, n, r):
+    rng = np.random.default_rng(1)
+    g = rng.normal(size=(m, n))
+    g_norm2 = np.sum(g * g)
+    trials = 300_000
+    acc = 0.0
+    for _ in range(trials):
+        d = _tezo_sample(rng, g, r) - g
+        acc += np.sum(d * d)
+    var = acc / trials
+    want = _delta(m, n, r) * g_norm2
+    # 4th-moment estimator: generous 15% tolerance
+    assert abs(var - want) / want < 0.15, f"var {var} vs delta*|g|^2 {want}"
+
+
+def test_variance_formula_vs_mezo_order():
+    """The paper's Remark 1: TeZO variance stays within the same order as
+    MeZO's (mn); check the formula's dominant term."""
+    for (m, n, r) in [(64, 64, 8), (1024, 1024, 16)]:
+        d = _delta(m, n, r)
+        assert d / (m * n) < 1.0 + 3.0 / r + 1e-2 + 6.0 * (m + n) / (r * m * n) + 2.0 / r
+        assert d > m * n  # slightly larger than MeZO, as stated

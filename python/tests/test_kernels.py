@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/ranks/scalars; every kernel must match ``ref.py``
+to float32 tolerance for all generated cases.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import kernels
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("kernels")
+
+
+def _np_rng(seed):
+    return np.random.default_rng(seed)
+
+
+dims = st.integers(min_value=1, max_value=96)
+ranks = st.integers(min_value=1, max_value=16)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+scalars = st.floats(min_value=1e-4, max_value=2.0, allow_nan=False)
+
+
+@given(m=dims, n=dims, r=ranks, rho=scalars, seed=seeds)
+def test_tezo_perturb_matches_ref(m, n, r, rho, seed):
+    rng = _np_rng(seed)
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, r)), jnp.float32)
+    tau = jnp.asarray(rng.normal(size=(r,)), jnp.float32)
+    got = kernels.tezo_perturb(w, u, v, tau, jnp.float32(rho))
+    want = ref.tezo_perturb(w, u, v, tau, rho)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@given(m=dims, n=dims, r=ranks, seed=seeds)
+def test_tezo_sgd_update_matches_ref(m, n, r, seed):
+    rng = _np_rng(seed)
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, r)), jnp.float32)
+    tau = jnp.asarray(rng.normal(size=(r,)), jnp.float32)
+    got = kernels.tezo_sgd_update(w, u, v, tau)
+    want = ref.tezo_sgd_update(w, u, v, tau)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@given(m=dims, n=dims, r=ranks, lr=scalars, seed=seeds)
+def test_tezo_adam_update_matches_ref(m, n, r, lr, seed):
+    rng = _np_rng(seed)
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, r)), jnp.float32)
+    tau_m = jnp.asarray(rng.normal(size=(r,)), jnp.float32)
+    tau_v = jnp.asarray(np.abs(rng.normal(size=(r,))) + 1e-3, jnp.float32)
+    got = kernels.tezo_adam_update(w, u, v, tau_m, tau_v, lr, 1e-5)
+    want = ref.tezo_adam_update(w, u, v, tau_m, tau_v, lr, 1e-5)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(m=dims, n=dims, alpha=scalars, seed=seeds)
+def test_axpy_matches_ref(m, n, alpha, seed):
+    rng = _np_rng(seed)
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    got = kernels.axpy_perturb(w, z, alpha)
+    want = ref.axpy_perturb(w, z, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(b=st.integers(1, 3), h=st.integers(1, 4),
+       s=st.sampled_from([4, 16, 33]), dh=st.sampled_from([4, 8, 32]),
+       seed=seeds)
+def test_attention_matches_ref(b, h, s, dh, seed):
+    rng = _np_rng(seed)
+    q, k, v = [jnp.asarray(rng.normal(size=(b, h, s, dh)), jnp.float32)
+               for _ in range(3)]
+    mask = jnp.where(jnp.tril(jnp.ones((s, s))) > 0, 0.0, -1e9).astype(jnp.float32)
+    got = kernels.attention(q, k, v, mask)
+    want = ref.attention(q, k, v, mask)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@given(b=st.integers(1, 4), s=st.sampled_from([4, 16, 64]),
+       v=st.sampled_from([8, 32, 128]), seed=seeds)
+def test_cross_entropy_matches_ref(b, s, v, seed):
+    rng = _np_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, s, v)), jnp.float32)
+    tgt = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(b, s)), jnp.float32)
+    got = kernels.cross_entropy(logits, tgt, mask)
+    want = ref.cross_entropy(logits, tgt, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_cross_entropy_all_masked_is_finite():
+    """Zero mask must not divide by zero."""
+    logits = jnp.zeros((2, 8, 16), jnp.float32)
+    tgt = jnp.zeros((2, 8), jnp.int32)
+    mask = jnp.zeros((2, 8), jnp.float32)
+    out = kernels.cross_entropy(logits, tgt, mask)
+    assert np.isfinite(np.asarray(out))
+    assert np.asarray(out) == 0.0
+
+
+def test_tezo_perturb_block_edge_cases():
+    """Non-divisible dims force _pick_block to shrink; result must not change."""
+    rng = _np_rng(7)
+    for (m, n, r) in [(7, 13, 3), (1, 1, 1), (97, 101, 5)]:
+        w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(n, r)), jnp.float32)
+        tau = jnp.asarray(rng.normal(size=(r,)), jnp.float32)
+        got = kernels.tezo_perturb(w, u, v, tau, jnp.float32(0.1))
+        want = ref.tezo_perturb(w, u, v, tau, 0.1)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_tezo_perturb_zero_tau_is_identity():
+    rng = _np_rng(3)
+    w = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(48, 4)), jnp.float32)
+    tau = jnp.zeros((4,), jnp.float32)
+    out = kernels.tezo_perturb(w, u, v, tau, jnp.float32(123.0))
+    np.testing.assert_allclose(out, w, rtol=0, atol=0)
+
+
+def test_tezo_perturb_plus_minus_roundtrip():
+    """perturb(+rho) then perturb(-rho) restores W to float tolerance —
+    the resampling-technique invariant the Rust trainer relies on."""
+    rng = _np_rng(11)
+    w = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    tau = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    w1 = kernels.tezo_perturb(w, u, v, tau, jnp.float32(1e-3))
+    w2 = kernels.tezo_perturb(w1, u, v, tau, jnp.float32(-1e-3))
+    np.testing.assert_allclose(w2, w, rtol=1e-6, atol=1e-6)

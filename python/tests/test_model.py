@@ -1,0 +1,143 @@
+"""L2 model correctness: shapes, path equivalence, and loss semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import get_config
+from compile.model import (dense_normal_like, eval_logits_fn, flatten_params,
+                           init_params, logits_fn, loss_fn, unflatten_params)
+
+CFG = get_config("tiny")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(1)
+    b, s, v = CFG.batch, CFG.seq_len, CFG.vocab
+    tokens = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    mask = jnp.asarray((rng.random((b, s)) < 0.3).astype(np.float32))
+    return tokens, targets, mask
+
+
+def test_param_specs_cover_params(params):
+    specs = CFG.param_specs()
+    assert set(n for n, _ in specs) == set(params.keys())
+    for n, shape in specs:
+        assert params[n].shape == tuple(shape), n
+
+
+def test_flatten_roundtrip(params):
+    flat = flatten_params(CFG, params)
+    back = unflatten_params(CFG, flat)
+    for k in params:
+        assert (back[k] == params[k]).all()
+
+
+def test_logits_shape(params, batch):
+    tokens, _, _ = batch
+    logits = logits_fn(CFG, params, tokens)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_loss_finite_and_positive(params, batch):
+    loss = loss_fn(CFG, params, *batch)
+    loss = float(loss)
+    assert np.isfinite(loss) and loss > 0.0
+
+
+def test_pallas_and_jnp_paths_agree(params, batch):
+    """The use_pallas=True and False forward paths must be interchangeable
+    (this is what licenses using the jnp path for big configs and grads)."""
+    loss_pallas = loss_fn(CFG, params, *batch)
+    cfg_jnp = dataclasses.replace(CFG, use_pallas=False)
+    loss_jnp = loss_fn(cfg_jnp, params, *batch)
+    np.testing.assert_allclose(np.asarray(loss_pallas), np.asarray(loss_jnp),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_eval_logits_positions(params, batch):
+    tokens, _, _ = batch
+    positions = jnp.asarray([0, 1, 2, CFG.seq_len - 1][:CFG.batch], jnp.int32)
+    out = eval_logits_fn(CFG, params, tokens, positions)
+    assert out.shape == (CFG.batch, CFG.vocab)
+    full = logits_fn(CFG, params, tokens)
+    for i, p in enumerate(np.asarray(positions)):
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(full[i, p]),
+                                   rtol=1e-6)
+
+
+def test_loss_mask_selects_positions(params, batch):
+    """Loss must only depend on masked positions: changing targets outside
+    the mask must not change the loss."""
+    tokens, targets, mask = batch
+    rng = np.random.default_rng(9)
+    other = np.asarray(targets).copy()
+    outside = np.asarray(mask) == 0.0
+    other[outside] = rng.integers(0, CFG.vocab, size=outside.sum())
+    l1 = float(loss_fn(CFG, params, tokens, targets, mask))
+    l2 = float(loss_fn(CFG, params, tokens, jnp.asarray(other), mask))
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_grad_matches_finite_difference(params, batch):
+    """jax.grad of the loss vs central finite differences on a few coords."""
+    cfg = dataclasses.replace(CFG, use_pallas=False)
+    tokens, targets, mask = batch
+
+    def f(flat):
+        return loss_fn(cfg, unflatten_params(cfg, flat), tokens, targets, mask)
+
+    flat = flatten_params(cfg, params)
+    grads = jax.grad(lambda fl: f(fl))(flat)
+    # check the first matrix param at 3 coordinates
+    idx = [n for n, (name, s) in enumerate(cfg.param_specs())
+           if name == "block0.attn.wq"][0]
+    g = np.asarray(grads[idx])
+    w = np.asarray(flat[idx])
+    eps = 3e-3
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        i = rng.integers(0, w.shape[0])
+        j = rng.integers(0, w.shape[1])
+        wp, wm = w.copy(), w.copy()
+        wp[i, j] += eps
+        wm[i, j] -= eps
+        fp = float(f(tuple(jnp.asarray(wp) if k == idx else a
+                           for k, a in enumerate(flat))))
+        fm = float(f(tuple(jnp.asarray(wm) if k == idx else a
+                           for k, a in enumerate(flat))))
+        fd = (fp - fm) / (2 * eps)
+        assert abs(fd - g[i, j]) < 5e-3 + 0.2 * abs(g[i, j]), \
+            f"fd={fd} grad={g[i, j]}"
+
+
+def test_dense_normal_like_is_deterministic():
+    key = jax.random.PRNGKey(42)
+    specs = CFG.param_specs()
+    a = dense_normal_like(key, specs)
+    b = dense_normal_like(key, specs)
+    for n, _ in specs:
+        assert (a[n] == b[n]).all()
+    c = dense_normal_like(jax.random.PRNGKey(43), specs)
+    assert not (np.asarray(a["embed.tok"]) == np.asarray(c["embed.tok"])).all()
+
+
+def test_init_params_planted_low_rank():
+    """The planted component must make weights effectively low-rank at the
+    config threshold (otherwise Eq.7 degenerates to r_max everywhere)."""
+    params = init_params(CFG, seed=0)
+    w = np.asarray(params["block0.attn.wq"])
+    s = np.linalg.svd(w, compute_uv=False)
+    frac_above = np.sum(s > CFG.rank_threshold * s[0]) / len(s)
+    assert frac_above < 0.6, f"weights not low-rank enough: {frac_above}"

@@ -1,0 +1,34 @@
+"""Newton-Schulz orthonormalization (the QR substitute for SubZO factors):
+convergence across the panel shapes the configs actually use."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.zo_steps import _ns_orthonormalize
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.sampled_from([48, 64, 128, 256, 1024]),
+       r=st.sampled_from([4, 8, 16, 32]),
+       seed=st.integers(0, 2**31 - 1))
+def test_ns_orthonormalizes_gaussian_panels(m, r, seed):
+    if r * 3 > m:  # keep panels tall (the SubZO regime)
+        r = max(2, m // 4)
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    q = np.asarray(_ns_orthonormalize(g))
+    gram = q.T @ q
+    err = np.abs(gram - np.eye(r)).max()
+    assert err < 1e-3, f"m={m} r={r}: orthonormality err {err}"
+
+
+def test_ns_preserves_column_space():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    q = np.asarray(_ns_orthonormalize(g))
+    # Q and G must span the same subspace: projecting G onto Q keeps norm
+    proj = q @ (q.T @ np.asarray(g))
+    rel = np.linalg.norm(proj - np.asarray(g)) / np.linalg.norm(np.asarray(g))
+    assert rel < 1e-3, rel

@@ -1,0 +1,264 @@
+"""L2 step-function correctness: each *_loss_pm / *_update artifact function
+must equal a straight-line composition of perturb + forward / update math.
+
+These tests call the *same* python callables that aot.py lowers, so passing
+here + the HLO round-trip test in Rust ends the correctness chain.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import zo_steps as zs
+from compile.aot import rank_schedule
+from compile.configs import get_config
+from compile.kernels import ref
+from compile.model import (flatten_params, init_params, loss_fn,
+                           unflatten_params)
+
+CFG = get_config("tiny")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, seed=0)
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    ranks = rank_schedule(CFG, np_params)
+    rng = np.random.default_rng(5)
+    b, s, v = CFG.batch, CFG.seq_len, CFG.vocab
+    tokens = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    mask = jnp.asarray((rng.random((b, s)) < 0.3).astype(np.float32))
+    return params, ranks, (tokens, targets, mask)
+
+
+def _factors(ranks, seed=3):
+    rng = np.random.default_rng(seed)
+    us, vs, taus = {}, {}, {}
+    for name, (m, n) in CFG.matrix_params():
+        r = ranks[name]
+        us[name] = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+        vs[name] = jnp.asarray(rng.normal(size=(n, r)), jnp.float32)
+        taus[name] = jnp.asarray(rng.normal(size=(r,)), jnp.float32)
+    return us, vs, taus
+
+
+def _flat(params):
+    return list(flatten_params(CFG, params))
+
+
+def test_fwd_loss_builder_equals_loss_fn(setup):
+    params, _, batch = setup
+    fn, _, in_desc, _ = zs.build_fwd_loss(CFG)
+    got = fn(*_flat(params), *batch)[0]
+    want = loss_fn(CFG, params, *batch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    assert len(in_desc) == len(CFG.param_specs()) + 3
+
+
+def test_mezo_loss_pm_symmetry(setup):
+    """f+(rho) == f-(−rho) must hold by construction: swapping the sign of
+    rho swaps the two outputs."""
+    params, _, batch = setup
+    fn, _, _, _ = zs.build_mezo_loss_pm(CFG)
+    seed = jnp.uint32(7)
+    fp, fm = fn(*_flat(params), *batch, seed, jnp.float32(1e-3))
+    fp2, fm2 = fn(*_flat(params), *batch, seed, jnp.float32(-1e-3))
+    np.testing.assert_allclose(np.asarray(fp), np.asarray(fm2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fm), np.asarray(fp2), rtol=1e-6)
+
+
+def test_mezo_loss_pm_matches_manual_perturbation(setup):
+    """loss_pm(seed, rho) == loss(W + rho z) where z is regenerated exactly
+    the way mezo_update_sgd regenerates it (same seed -> same z)."""
+    params, _, batch = setup
+    fn, _, _, _ = zs.build_mezo_loss_pm(CFG)
+    upd, _, _, _ = zs.build_mezo_update_sgd(CFG)
+    seed = jnp.uint32(123)
+    rho = 1e-2
+    fp, fm = fn(*_flat(params), *batch, seed, jnp.float32(rho))
+    # recover z via the update with coeff = -1 (W' = W + z)
+    out = upd(*_flat(params), seed, jnp.float32(-1.0))
+    z = {n: o - params[n] for (n, _), o in zip(CFG.param_specs(), out)}
+    pos = {n: params[n] + rho * z[n] for n in params}
+    neg = {n: params[n] - rho * z[n] for n in params}
+    np.testing.assert_allclose(np.asarray(fp),
+                               np.asarray(loss_fn(CFG, pos, *batch)),
+                               rtol=5e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fm),
+                               np.asarray(loss_fn(CFG, neg, *batch)),
+                               rtol=5e-5, atol=1e-5)
+
+
+def test_tezo_loss_pm_matches_manual(setup):
+    params, ranks, batch = setup
+    us, vs, taus = _factors(ranks)
+    fn, _, _, _ = zs.build_tezo_loss_pm(CFG, ranks)
+    mats = CFG.matrix_params()
+    args = _flat(params) + [us[n] for n, _ in mats] + [vs[n] for n, _ in mats] \
+        + [taus[n] for n, _ in mats] + list(batch) \
+        + [jnp.uint32(9), jnp.float32(1e-2)]
+    fp, fm = fn(*args)
+    # manual: 2D via ref.tezo_perturb, 1D via the same seed-folded normals
+    vecz = zs._vector_normals(CFG, jnp.uint32(9))
+    pos = dict(params)
+    for n, _ in mats:
+        pos[n] = ref.tezo_perturb(params[n], us[n], vs[n], taus[n], 1e-2)
+    for n, z in vecz.items():
+        pos[n] = params[n] + 1e-2 * z
+    np.testing.assert_allclose(np.asarray(fp),
+                               np.asarray(loss_fn(CFG, pos, *batch)),
+                               rtol=5e-5, atol=1e-5)
+
+
+def test_tezo_update_factor_matches_ref(setup):
+    params, ranks, _ = setup
+    us, vs, taus = _factors(ranks)
+    fn, _, _, _ = zs.build_tezo_update_factor(CFG, ranks)
+    mats = CFG.matrix_params()
+    seed, coeff = jnp.uint32(4), jnp.float32(0.01)
+    args = _flat(params) + [us[n] for n, _ in mats] + [vs[n] for n, _ in mats] \
+        + [taus[n] for n, _ in mats] + [seed, coeff]
+    out = fn(*args)
+    vecz = zs._vector_normals(CFG, seed)
+    for (name, shape), o in zip(CFG.param_specs(), out):
+        if len(shape) == 2:
+            want = ref.tezo_sgd_update(params[name], us[name], vs[name],
+                                       taus[name])
+        else:
+            want = params[name] - 0.01 * vecz[name]
+        np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_tezo_update_adam_matches_ref(setup):
+    params, ranks, _ = setup
+    us, vs, taus = _factors(ranks)
+    tau_v = {n: jnp.abs(t) + 1e-4 for n, t in taus.items()}
+    fn, _, _, _ = zs.build_tezo_update_adam(CFG, ranks)
+    mats = CFG.matrix_params()
+    seed = jnp.uint32(4)
+    lr, eps, c1 = jnp.float32(1e-3), jnp.float32(1e-5), jnp.float32(1e-3)
+    args = _flat(params) + [us[n] for n, _ in mats] + [vs[n] for n, _ in mats] \
+        + [taus[n] for n, _ in mats] + [tau_v[n] for n, _ in mats] \
+        + [seed, lr, eps, c1]
+    out = fn(*args)
+    for (name, shape), o in zip(CFG.param_specs(), out):
+        if len(shape) == 2:
+            want = ref.tezo_adam_update(params[name], us[name], vs[name],
+                                        taus[name], tau_v[name], 1e-3, 1e-5)
+            np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_mezo_update_m_state_evolution(setup):
+    """m' = b1*m + (1-b1)*kappa*z and W' = W - lr*m'."""
+    params, _, _ = setup
+    fn, _, _, _ = zs.build_mezo_update_m(CFG)
+    upd, _, _, _ = zs.build_mezo_update_sgd(CFG)
+    seed = jnp.uint32(77)
+    kappa, lr, b1 = 0.5, 1e-2, 0.9
+    m0 = [jnp.ones_like(p) * 0.1 for p in _flat(params)]
+    out = fn(*_flat(params), *m0, seed, jnp.float32(kappa), jnp.float32(lr),
+             jnp.float32(b1))
+    n = len(m0)
+    new_p, new_m = out[:n], out[n:]
+    # recover z
+    zrec = upd(*_flat(params), seed, jnp.float32(-1.0))
+    for p0, m00, np_, nm, zr in zip(_flat(params), m0, new_p, new_m, zrec):
+        z = zr - p0
+        want_m = b1 * m00 + (1 - b1) * kappa * z
+        np.testing.assert_allclose(np.asarray(nm), np.asarray(want_m),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(np_), np.asarray(p0 - lr * want_m),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_lozo_loss_and_update_consistency(setup):
+    """The V_t regenerated in lozo_update must equal the one in lozo_loss_pm:
+    perturbing with rho then updating with coeff=rho must land on W + rho Z
+    (checked via the loss value)."""
+    params, _, batch = setup
+    rank = 4
+    lfn, _, _, _ = zs.build_lozo_loss_pm(CFG, rank)
+    ufn, _, _, _ = zs.build_lozo_update_sgd(CFG, rank)
+    ifn, _, _, _ = zs.build_lozo_init_u(CFG, rank)
+    us = ifn(jnp.uint32(1))
+    seed, rho = jnp.uint32(13), 1e-2
+    fp, _ = lfn(*_flat(params), *us, *batch, seed, jnp.float32(rho))
+    # update with coeff = -rho gives W + rho Z
+    out = ufn(*_flat(params), *us, seed, jnp.float32(-rho))
+    moved = unflatten_params(CFG, out)
+    want = loss_fn(CFG, moved, *batch)
+    np.testing.assert_allclose(np.asarray(fp), np.asarray(want),
+                               rtol=5e-5, atol=1e-5)
+
+
+def test_subzo_factors_orthonormal():
+    rank = 4
+    fn, _, _, _ = zs.build_subzo_factors(CFG, rank)
+    outs = fn(jnp.uint32(2))
+    k = len(CFG.matrix_params())
+    assert len(outs) == 2 * k
+    for i in range(0, 2 * k, 2):
+        u = np.asarray(outs[i])
+        got = u.T @ u
+        np.testing.assert_allclose(got, np.eye(rank), atol=1e-4)
+
+
+def test_subzo_loss_and_update_consistency(setup):
+    params, _, batch = setup
+    rank = 4
+    ffn, _, _, _ = zs.build_subzo_factors(CFG, rank)
+    lfn, _, _, _ = zs.build_subzo_loss_pm(CFG, rank)
+    ufn, _, _, _ = zs.build_subzo_update(CFG, rank)
+    uv = ffn(jnp.uint32(8))
+    us, vs = uv[0::2], uv[1::2]
+    seed, rho = jnp.uint32(21), 1e-2
+    fp, _ = lfn(*_flat(params), *us, *vs, *batch, seed, jnp.float32(rho))
+    out = ufn(*_flat(params), *us, *vs, seed, jnp.float32(-rho))
+    want = loss_fn(CFG, unflatten_params(CFG, out), *batch)
+    np.testing.assert_allclose(np.asarray(fp), np.asarray(want),
+                               rtol=5e-5, atol=1e-5)
+
+
+def test_adamu_update_reduces_loss_direction(setup):
+    """One ZO-AdaMU step with the true kappa sign should (usually) not blow
+    up: just sanity-check state shapes and finiteness."""
+    params, _, batch = setup
+    lfn, _, _, _ = zs.build_adamu_loss_pm(CFG)
+    ufn, _, _, _ = zs.build_adamu_update(CFG)
+    flat = _flat(params)
+    m0 = [jnp.zeros_like(p) for p in flat]
+    v0 = [jnp.zeros_like(p) for p in flat]
+    seed = jnp.uint32(3)
+    fp, fm = lfn(*flat, *m0, *batch, seed, jnp.float32(1e-3), jnp.float32(0.2))
+    kappa = (float(fp) - float(fm)) / (2 * 1e-3)
+    out = ufn(*flat, *m0, *v0, seed, jnp.float32(kappa), jnp.float32(1e-4),
+              jnp.float32(0.2), jnp.float32(0.9), jnp.float32(0.99),
+              jnp.float32(1e-8), jnp.float32(1.0))
+    n = len(flat)
+    assert len(out) == 3 * n
+    for o in out:
+        assert np.isfinite(np.asarray(o)).all()
+
+
+def test_fo_valgrad_and_adam_update(setup):
+    params, _, batch = setup
+    gfn, _, _, _ = zs.build_fo_valgrad(CFG)
+    ufn, _, _, _ = zs.build_fo_adam_update(CFG)
+    flat = _flat(params)
+    out = gfn(*flat, *batch)
+    loss, grads = out[0], out[1:]
+    assert float(loss) > 0
+    m0 = [jnp.zeros_like(p) for p in flat]
+    v0 = [jnp.zeros_like(p) for p in flat]
+    res = ufn(*flat, *grads, *m0, *v0, jnp.float32(1e-3), jnp.float32(0.9),
+              jnp.float32(0.999), jnp.float32(1e-8), jnp.float32(1.0))
+    n = len(flat)
+    new_flat = res[:n]
+    l2 = loss_fn(CFG, unflatten_params(CFG, new_flat), *batch)
+    assert float(l2) < float(loss), "one FO Adam step should reduce loss"

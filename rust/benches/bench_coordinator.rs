@@ -1,0 +1,95 @@
+//! L3 coordinator microbenches: the host-side work that must stay off the
+//! critical path (paper target: everything outside the two forwards < 5%
+//! of step time). Covers seed derivation, tau sampling, tau-space moment
+//! accumulation, batch construction, JSON parsing, SVD rank probing.
+//!
+//! Run: `cargo bench --bench bench_coordinator`.
+
+use tezo::benchkit::{bench, BenchOpts, Report};
+use tezo::coordinator::seeds::{SeedSchedule, Stream};
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::jsonx;
+use tezo::rngx::normal_rng;
+use tezo::tensor::{svd, Matrix};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut rep = Report::new(
+        "L3 coordinator hot-path microbenches",
+        &["median", "mean", "p95", "iters", "outliers"],
+    );
+
+    // seed schedule: one step's worth of seeds
+    let sched = SeedSchedule::new(42);
+    let mut step = 0u64;
+    let s = bench("seed derivation (per step)", opts, || {
+        let a = sched.step_seed(step);
+        let b = sched.seed32(Stream::Data, step);
+        std::hint::black_box((a, b));
+        step += 1;
+    });
+    rep.add_sample(&s);
+
+    // tau draws: 26 matrices x r=64 (the `small`-config shape of the work)
+    let s = bench("tau draws (26 x r=64)", opts, || {
+        for i in 0..26u64 {
+            let mut g = normal_rng(i);
+            let tau: Vec<f32> = (0..64).map(|_| g.next_f32()).collect();
+            std::hint::black_box(tau);
+        }
+    });
+    rep.add_sample(&s);
+
+    // tau-space Adam accumulation (the whole TeZO-Adam optimizer step)
+    let mut tau_m = vec![vec![0.0f32; 64]; 26];
+    let mut tau_v = vec![vec![0.0f32; 64]; 26];
+    let taus = vec![vec![0.1f32; 64]; 26];
+    let s = bench("tau-space adam accumulate (26 x r=64)", opts, || {
+        let kappa = 0.3f32;
+        for ((m, v), t) in tau_m.iter_mut().zip(tau_v.iter_mut()).zip(taus.iter()) {
+            for i in 0..t.len() {
+                m[i] = 0.9 * m[i] + 0.1 * kappa * t[i];
+                v[i] = 0.99 * v[i] + 0.01 * kappa * kappa * t[i] * t[i];
+            }
+        }
+        std::hint::black_box((&tau_m, &tau_v));
+    });
+    rep.add_sample(&s);
+
+    // batch construction (seq 128, batch 8)
+    let task = Task::new(tasks::spec_by_name("rte").unwrap(), Tokenizer::new(2048), 128, 0);
+    let bb = BatchBuilder::new(task, 8, 16);
+    let mut bstep = 0u64;
+    let s = bench("train batch build (8 x 128)", opts, || {
+        let b = bb.train_batch(0, bstep);
+        std::hint::black_box(b);
+        bstep += 1;
+    });
+    rep.add_sample(&s);
+
+    // manifest-scale JSON parse
+    let manifest_path = tezo::artifacts_root().join("tiny/manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        let s = bench("manifest.json parse", opts, || {
+            let v = jsonx::parse(&text).unwrap();
+            std::hint::black_box(v);
+        });
+        rep.add_sample(&s);
+    }
+
+    // Eq.(7) rank probe on a 512x512 weight
+    let mut g = normal_rng(5);
+    let u = Matrix::randn(512, 16, &mut g);
+    let v = Matrix::randn(512, 16, &mut g);
+    let mut w = u.matmul(&v.transpose()).unwrap();
+    let noise = Matrix::randn(512, 512, &mut g);
+    w.axpy(0.02, &noise).unwrap();
+    let s = bench("rank_at_threshold (512x512, k=64)", opts, || {
+        let r = svd::rank_at_threshold(&w, 0.25, 64, 7).unwrap();
+        std::hint::black_box(r);
+    });
+    rep.add_sample(&s);
+
+    rep.print();
+    rep.write_csv(std::path::Path::new("out/coordinator_microbench.csv")).ok();
+}

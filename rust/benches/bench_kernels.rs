@@ -1,0 +1,75 @@
+//! L1 kernel microbenches over the standalone per-shape artifacts
+//! (`artifacts/kernels/`): fused TeZO perturb (rank-r CPD + axpy) vs the
+//! dense MeZO perturb (in-HLO normal + axpy), per weight shape.
+//!
+//! This isolates the perturbation phase the paper's Fig 3(b) decomposes:
+//! at equal shapes the TeZO kernel does O(r) FLOPs/byte on the weight
+//! stream while the dense kernel pays the full RNG + read-write sweep.
+//!
+//! Run: `cargo bench --bench bench_kernels`.
+
+use tezo::benchkit::{bench, BenchOpts, Report};
+use tezo::runtime::{ArgValue, Runtime};
+use tezo::rngx::normal_vec;
+
+const SHAPES: [(usize, usize, usize); 7] = [
+    (256, 256, 8), (256, 1024, 8), (512, 512, 16), (512, 2048, 16),
+    (1024, 1024, 32), (1024, 4096, 32), (2048, 2048, 64),
+];
+
+fn main() {
+    let dir = tezo::artifacts_root().join("kernels");
+    if !dir.join("manifest.json").exists() {
+        println!("(skipping: artifacts/kernels missing — run `make artifacts-kernels`)");
+        return;
+    }
+    let rt = Runtime::open(&dir).expect("runtime");
+    let opts = BenchOpts::from_env();
+    let mut rep = Report::new(
+        "L1 kernel microbench — fused perturb, CPU-PJRT",
+        &["median", "mean", "p95", "iters", "outliers"],
+    );
+
+    for (m, n, r) in SHAPES {
+        let w = normal_vec(1, m * n);
+        let u = normal_vec(2, m * r);
+        let v = normal_vec(3, n * r);
+        let tau = normal_vec(4, r);
+        // stage inputs once as device buffers: the bench then measures pure
+        // kernel execution, not host staging
+        let wb = rt.client.buffer_from_host_buffer(&w, &[m, n], None).unwrap();
+        let ub = rt.client.buffer_from_host_buffer(&u, &[m, r], None).unwrap();
+        let vb = rt.client.buffer_from_host_buffer(&v, &[n, r], None).unwrap();
+        let tb = rt.client.buffer_from_host_buffer(&tau, &[r], None).unwrap();
+        let rho = rt.client.buffer_from_host_buffer(&[1e-3f32], &[], None).unwrap();
+
+        let tezo_name = format!("kernel_tezo_perturb_{m}x{n}_r{r}");
+        rt.executable(&tezo_name).unwrap(); // compile outside timing
+        let s = bench(&format!("tezo {m}x{n} r{r}"), opts, || {
+            let out = rt.call(&tezo_name).unwrap()
+                .arg(ArgValue::Buf(&wb)).unwrap()
+                .arg(ArgValue::Buf(&ub)).unwrap()
+                .arg(ArgValue::Buf(&vb)).unwrap()
+                .arg(ArgValue::Buf(&tb)).unwrap()
+                .arg(ArgValue::Buf(&rho)).unwrap()
+                .run().unwrap();
+            std::hint::black_box(out);
+        });
+        rep.add_sample(&s);
+
+        let mezo_name = format!("kernel_mezo_perturb_{m}x{n}");
+        rt.executable(&mezo_name).unwrap();
+        let seed = rt.client.buffer_from_host_buffer(&[7u32], &[], None).unwrap();
+        let s = bench(&format!("mezo {m}x{n}"), opts, || {
+            let out = rt.call(&mezo_name).unwrap()
+                .arg(ArgValue::Buf(&wb)).unwrap()
+                .arg(ArgValue::Buf(&seed)).unwrap()
+                .arg(ArgValue::Buf(&rho)).unwrap()
+                .run().unwrap();
+            std::hint::black_box(out);
+        });
+        rep.add_sample(&s);
+    }
+    rep.print();
+    rep.write_csv(std::path::Path::new("out/kernel_microbench.csv")).ok();
+}

@@ -1,0 +1,86 @@
+//! Table 2 reproduction: total sampled random elements per method.
+//!
+//! Two parts:
+//!  1. closed-form table at the paper's scale (one 4096x4096 weight,
+//!     T = 15000, r = 64) — the exact Table-2 rows;
+//!  2. measured host-RNG throughput for the draw patterns (what sampling
+//!     actually costs per step at each count).
+//!
+//! Run: `cargo bench --bench bench_table2_sampling` (TEZO_BENCH_FAST=1 for
+//! a quick pass).
+
+use tezo::benchkit::{bench, BenchOpts, Report};
+use tezo::coordinator::counter::closed_form;
+use tezo::rngx::normal_rng;
+
+fn main() {
+    closed_form_table();
+    measured_sampling_cost();
+}
+
+fn closed_form_table() {
+    let (m, n, r, t, nu) = (4096u64, 4096u64, 64u64, 15_000u64, 500u64);
+    let mut rep = Report::new(
+        "Table 2 — total sampled elements (one 4096x4096 weight, T=15000, r=64)",
+        &["total elements", "per-step avg", "vs MeZO"],
+    );
+    let mezo = closed_form::mezo(m, n, t);
+    let rows = [
+        ("MeZO", mezo),
+        ("SubZO (nu=500)", closed_form::subzo(m, n, r, t, nu)),
+        ("LOZO (nu=50)", closed_form::lozo(m, n, r, t, 50)),
+        ("TeZO", closed_form::tezo(m, n, r, t)),
+    ];
+    for (name, total) in rows {
+        rep.add_row(name, vec![
+            format!("{total}"),
+            format!("{:.1}", total as f64 / t as f64),
+            format!("{:.5}x", total as f64 / mezo as f64),
+        ]);
+    }
+    rep.print();
+    rep.write_csv(std::path::Path::new("out/table2_closed_form.csv")).ok();
+}
+
+fn measured_sampling_cost() {
+    let opts = BenchOpts::from_env();
+    let (m, n, r) = (1024usize, 1024usize, 64usize);
+    let mut rep = Report::new(
+        "Table 2 — measured host sampling cost per step (1024x1024, r=64)",
+        &["median", "mean", "p95", "iters", "outliers"],
+    );
+    let mut gen = normal_rng(1);
+    let mut sink = 0.0f32;
+
+    // MeZO: m*n dense draws
+    let s = bench("mezo: m*n draws", opts, || {
+        for _ in 0..m * n {
+            sink += gen.next_f32();
+        }
+    });
+    rep.add_sample(&s);
+    // LOZO: n*r draws (V only)
+    let s = bench("lozo: n*r draws", opts, || {
+        for _ in 0..n * r {
+            sink += gen.next_f32();
+        }
+    });
+    rep.add_sample(&s);
+    // SubZO: r*r draws
+    let s = bench("subzo: r*r draws", opts, || {
+        for _ in 0..r * r {
+            sink += gen.next_f32();
+        }
+    });
+    rep.add_sample(&s);
+    // TeZO: r draws
+    let s = bench("tezo: r draws", opts, || {
+        for _ in 0..r {
+            sink += gen.next_f32();
+        }
+    });
+    rep.add_sample(&s);
+    std::hint::black_box(sink);
+    rep.print();
+    rep.write_csv(std::path::Path::new("out/table2_measured.csv")).ok();
+}

@@ -1,0 +1,101 @@
+//! Table 8 / Fig 3(b) reproduction: wall-clock per training iteration and
+//! per-phase breakdown, per method, on the configs whose artifacts exist
+//! (tiny always; small/medium when built).
+//!
+//! The paper's claim under test: TeZO ~ MeZO step time; TeZO-Adam clearly
+//! faster than MeZO-Adam (1.5-1.6x on H100); low-rank overhead only pays
+//! off as the model grows. Absolute numbers here are CPU-PJRT, the
+//! *ratios* are the reproduction target.
+//!
+//! Run: `cargo bench --bench bench_walltime` (TEZO_BENCH_FAST=1 to shrink).
+
+use std::time::Instant;
+
+use tezo::benchkit::{fmt_time, Report};
+use tezo::config::{Method, TrainConfig};
+use tezo::coordinator::trainer::{DataSource, Trainer};
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::runtime::{ParamStore, Runtime};
+
+const METHODS: [Method; 10] = [
+    Method::Mezo, Method::Subzo, Method::Lozo, Method::Tezo,
+    Method::MezoM, Method::LozoM, Method::TezoM,
+    Method::MezoAdam, Method::ZoAdamu, Method::TezoAdam,
+];
+
+fn main() {
+    let fast = std::env::var_os("TEZO_BENCH_FAST").is_some();
+    let steps = if fast { 6 } else { 30 };
+    // TEZO_BENCH_CONFIGS limits the sweep (the bigger configs cost minutes
+    // of XLA compile + seconds per step on CPU)
+    let configs = std::env::var("TEZO_BENCH_CONFIGS").unwrap_or_else(|_| {
+        if fast { "tiny,tiny_jnp".into() } else { "tiny,tiny_jnp,small,medium".into() }
+    });
+    for config in configs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let dir = tezo::artifacts_root().join(config);
+        if !dir.join("manifest.json").exists() {
+            println!("(skipping {config}: artifacts missing)");
+            continue;
+        }
+        bench_config(config, steps);
+    }
+}
+
+fn bench_config(config: &str, steps: usize) {
+    let rt = Runtime::open(&tezo::artifacts_root().join(config)).expect("runtime");
+    let mut rep = Report::new(
+        &format!("Table 8 / Fig 3(b) — ms per iteration ({config}, {} params)",
+                 rt.manifest.config.n_params),
+        &["ms/step", "fwd %", "update %", "sample %", "host %", "vs mezo"],
+    );
+    let mut mezo_ms = None;
+    let mut rows = Vec::new();
+    for m in METHODS {
+        let mut cfg = TrainConfig::with_preset(m, config);
+        cfg.steps = steps;
+        let mut params = ParamStore::load(&rt.client, &rt.manifest).expect("params");
+        let tok = Tokenizer::new(rt.manifest.config.vocab);
+        let task = Task::new(tasks::spec_by_name("rte").unwrap(), tok,
+                             rt.manifest.config.seq_len, 0);
+        let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+        // warmup run: compiles this method's artifacts into the cache so the
+        // measured run below is pure execution
+        {
+            let mut wcfg = cfg.clone();
+            wcfg.steps = 2;
+            let mut wparams = ParamStore::load(&rt.client, &rt.manifest).expect("params");
+            Trainer::new(&rt, wcfg, DataSource::Task(builder.clone()))
+                .run(&mut wparams)
+                .expect("warmup");
+        }
+        let mut trainer = Trainer::new(&rt, cfg, DataSource::Task(builder));
+        let t0 = Instant::now();
+        let outcome = trainer.run(&mut params).expect("train");
+        let _total = t0.elapsed();
+        let ms = outcome.metrics.wall_seconds / steps as f64 * 1e3;
+        if m == Method::Mezo {
+            mezo_ms = Some(ms);
+        }
+        let t = &outcome.metrics.timers;
+        let tot = t.total_seconds().max(1e-9);
+        rows.push((m, ms,
+                   t.seconds(tezo::coordinator::metrics::Phase::Forward) / tot,
+                   t.seconds(tezo::coordinator::metrics::Phase::Update) / tot,
+                   t.seconds(tezo::coordinator::metrics::Phase::Sampling) / tot,
+                   t.seconds(tezo::coordinator::metrics::Phase::Host) / tot));
+    }
+    for (m, ms, fwd, upd, smp, host) in rows {
+        rep.add_row(m.name(), vec![
+            format!("{ms:.1}"),
+            format!("{:.0}%", fwd * 100.0),
+            format!("{:.0}%", upd * 100.0),
+            format!("{:.0}%", smp * 100.0),
+            format!("{:.0}%", host * 100.0),
+            mezo_ms.map(|base| format!("{:.2}x", ms / base)).unwrap_or_default(),
+        ]);
+    }
+    rep.print();
+    rep.write_csv(std::path::Path::new(&format!("out/table8_{config}.csv"))).ok();
+    println!("note: absolute times are CPU-PJRT ({}); paper ratios are the target",
+             fmt_time(1e-3).trim());
+}

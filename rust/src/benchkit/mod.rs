@@ -1,0 +1,232 @@
+//! Benchmark harness substrate (the offline registry has no `criterion`).
+//!
+//! Criterion-style methodology on a small footprint: warmup phase, timed
+//! sampling until a time or iteration budget is reached, robust statistics
+//! (median/p95 + MAD-based outlier count), and table/CSV reporting used by
+//! the `rust/benches/*` targets to regenerate the paper's tables.
+
+use std::time::{Duration, Instant};
+
+use crate::tensor::stats;
+
+/// One benchmark measurement series.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// per-iteration wall-clock seconds
+    pub iters: Vec<f64>,
+}
+
+impl Sample {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.iters)
+    }
+
+    pub fn median(&self) -> f64 {
+        stats::median(&self.iters)
+    }
+
+    pub fn p95(&self) -> f64 {
+        stats::quantile(&self.iters, 0.95)
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        stats::std_dev(&self.iters)
+    }
+
+    /// Outliers beyond 5 MADs from the median.
+    pub fn outliers(&self) -> usize {
+        let med = self.median();
+        let mut devs: Vec<f64> = self.iters.iter().map(|&x| (x - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = stats::median(&devs).max(1e-12);
+        self.iters.iter().filter(|&&x| (x - med).abs() > 5.0 * 1.4826 * mad).count()
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Faster profile for CI / smoke runs (`TEZO_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var_os("TEZO_BENCH_FAST").is_some() {
+            Self {
+                warmup: Duration::from_millis(50),
+                budget: Duration::from_millis(300),
+                min_iters: 3,
+                max_iters: 200,
+            }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Run `f` under the harness; each call is one iteration.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> Sample {
+    // warmup
+    let w0 = Instant::now();
+    while w0.elapsed() < opts.warmup {
+        f();
+    }
+    // sampling
+    let mut iters = Vec::new();
+    let b0 = Instant::now();
+    while (b0.elapsed() < opts.budget || iters.len() < opts.min_iters)
+        && iters.len() < opts.max_iters
+    {
+        let t = Instant::now();
+        f();
+        iters.push(t.elapsed().as_secs_f64());
+    }
+    Sample { name: name.to_string(), iters }
+}
+
+/// Pretty time with adaptive unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:7.2} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:7.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:7.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:7.3} s ")
+    }
+}
+
+/// Report writer: aligned console table + optional CSV file.
+pub struct Report {
+    title: String,
+    rows: Vec<(String, Vec<String>)>,
+    header: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            rows: Vec::new(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn add_row(&mut self, label: &str, cells: Vec<String>) {
+        self.rows.push((label.to_string(), cells));
+    }
+
+    pub fn add_sample(&mut self, s: &Sample) {
+        self.rows.push((
+            s.name.clone(),
+            vec![
+                fmt_time(s.median()),
+                fmt_time(s.mean()),
+                fmt_time(s.p95()),
+                format!("{}", s.iters.len()),
+                format!("{}", s.outliers()),
+            ],
+        ));
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap_or(8);
+        for (_, cells) in &self.rows {
+            for (i, c) in cells.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        print!("{:label_w$}", "");
+        for (h, w) in self.header.iter().zip(&widths) {
+            print!("  {h:>w$}");
+        }
+        println!();
+        for (label, cells) in &self.rows {
+            print!("{label:label_w$}");
+            for (c, w) in cells.iter().zip(&widths) {
+                print!("  {c:>w$}");
+            }
+            println!();
+        }
+    }
+
+    /// Write `label,cell1,cell2,...` CSV.
+    pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::new();
+        out.push_str("label");
+        for h in &self.header {
+            out.push(',');
+            out.push_str(h);
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(label);
+            for c in cells {
+                out.push(',');
+                out.push_str(c.trim());
+            }
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 1000,
+        };
+        let mut counter = 0u64;
+        let s = bench("noop", opts, || {
+            counter = counter.wrapping_add(1);
+        });
+        assert!(s.iters.len() >= 5);
+        assert!(s.median() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains("s"));
+    }
+}

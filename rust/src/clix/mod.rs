@@ -1,0 +1,195 @@
+//! CLI parsing substrate (the offline registry has no `clap`).
+//!
+//! Declarative-ish parser: commands register flags with [`ArgSpec`]s, the
+//! parser handles `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required checks, and renders `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One flag specification.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub is_switch: bool,
+}
+
+impl ArgSpec {
+    pub const fn opt(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: Some(default), required: false, is_switch: false }
+    }
+
+    pub const fn req(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: true, is_switch: false }
+    }
+
+    pub const fn switch(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: false, is_switch: true }
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        Ok(self.get_f64(name)? as f32)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list(&self, name: &str) -> Result<Vec<String>> {
+        Ok(self
+            .get_str(name)?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect())
+    }
+}
+
+/// Parse `argv` (after the subcommand) against `specs`.
+pub fn parse(argv: &[String], specs: &[ArgSpec]) -> Result<Args> {
+    let mut out = Args::default();
+    for spec in specs {
+        if let Some(d) = spec.default {
+            out.values.insert(spec.name.to_string(), d.to_string());
+        }
+    }
+    let find = |name: &str| -> Result<&ArgSpec> {
+        specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("unknown flag --{name}"))
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(rest) = tok.strip_prefix("--") {
+            let (name, inline) = match rest.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (rest, None),
+            };
+            let spec = find(name)?;
+            if spec.is_switch {
+                if inline.is_some() {
+                    bail!("--{name} is a switch and takes no value");
+                }
+                out.switches.push(name.to_string());
+            } else {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("--{name} expects a value"))?
+                    }
+                };
+                out.values.insert(name.to_string(), value);
+            }
+        } else {
+            out.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    for spec in specs {
+        if spec.required && out.get(spec.name).is_none() {
+            bail!("missing required flag --{}", spec.name);
+        }
+    }
+    Ok(out)
+}
+
+/// Render help text for a command.
+pub fn render_help(cmd: &str, about: &str, specs: &[ArgSpec]) -> String {
+    let mut out = format!("tezo {cmd} — {about}\n\nflags:\n");
+    for s in specs {
+        let kind = if s.is_switch {
+            "".to_string()
+        } else if let Some(d) = s.default {
+            format!(" <value> (default: {d})")
+        } else {
+            " <value> (required)".to_string()
+        };
+        out.push_str(&format!("  --{}{}\n      {}\n", s.name, kind, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_defaults_and_overrides() {
+        let specs = [ArgSpec::opt("steps", "100", "n steps"),
+                     ArgSpec::switch("verbose", "chatty"),
+                     ArgSpec::req("config", "model config")];
+        let args = parse(&sv(&["--config", "tiny", "--steps=250", "--verbose"]), &specs).unwrap();
+        assert_eq!(args.get_usize("steps").unwrap(), 250);
+        assert_eq!(args.get_str("config").unwrap(), "tiny");
+        assert!(args.has("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        let specs = [ArgSpec::req("config", "model config")];
+        assert!(parse(&sv(&[]), &specs).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        let specs = [ArgSpec::opt("a", "1", "")];
+        assert!(parse(&sv(&["--nope", "2"]), &specs).is_err());
+    }
+
+    #[test]
+    fn list_values() {
+        let specs = [ArgSpec::opt("methods", "mezo,tezo", "")];
+        let args = parse(&sv(&[]), &specs).unwrap();
+        assert_eq!(args.get_list("methods").unwrap(), vec!["mezo", "tezo"]);
+    }
+}

@@ -1,0 +1,285 @@
+//! Configuration system: optimizer methods, training hyperparameters, and
+//! the paper's Table-6 preset grid.
+//!
+//! Model geometry is *not* configured here — it is baked into
+//! `artifacts/<config>/manifest.json` by the AOT pipeline and read by
+//! [`crate::runtime::Manifest`]. This module owns everything the L3
+//! coordinator decides at run time.
+
+mod presets;
+
+pub use presets::{preset_for, search_space, PresetRow};
+
+use anyhow::{bail, Result};
+
+/// Every optimizer driver the coordinator implements (paper baselines +
+/// TeZO variants + the first-order FT reference).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Mezo,
+    MezoM,
+    MezoAdam,
+    Lozo,
+    LozoM,
+    Subzo,
+    ZoAdamu,
+    Tezo,
+    TezoM,
+    TezoAdam,
+    FoAdam,
+}
+
+impl Method {
+    pub const ALL: [Method; 11] = [
+        Method::Mezo, Method::MezoM, Method::MezoAdam,
+        Method::Lozo, Method::LozoM, Method::Subzo, Method::ZoAdamu,
+        Method::Tezo, Method::TezoM, Method::TezoAdam, Method::FoAdam,
+    ];
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "mezo" => Method::Mezo,
+            "mezo-m" => Method::MezoM,
+            "mezo-adam" => Method::MezoAdam,
+            "lozo" => Method::Lozo,
+            "lozo-m" => Method::LozoM,
+            "subzo" => Method::Subzo,
+            "zo-adamu" | "adamu" => Method::ZoAdamu,
+            "tezo" => Method::Tezo,
+            "tezo-m" => Method::TezoM,
+            "tezo-adam" => Method::TezoAdam,
+            "fo-adam" | "ft" | "fo" => Method::FoAdam,
+            other => bail!("unknown method {other:?} (see `tezo train --help`)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Mezo => "mezo",
+            Method::MezoM => "mezo-m",
+            Method::MezoAdam => "mezo-adam",
+            Method::Lozo => "lozo",
+            Method::LozoM => "lozo-m",
+            Method::Subzo => "subzo",
+            Method::ZoAdamu => "zo-adamu",
+            Method::Tezo => "tezo",
+            Method::TezoM => "tezo-m",
+            Method::TezoAdam => "tezo-adam",
+            Method::FoAdam => "fo-adam",
+        }
+    }
+
+    /// Is this a zeroth-order method (two forwards) vs first-order?
+    pub fn is_zo(&self) -> bool {
+        !matches!(self, Method::FoAdam)
+    }
+
+    /// Does the method keep full-parameter-size optimizer state?
+    /// (Drives the memory model and the Fig 3a reproduction.)
+    pub fn full_size_state_copies(&self) -> usize {
+        match self {
+            Method::Mezo | Method::Lozo | Method::LozoM | Method::Subzo
+            | Method::Tezo | Method::TezoM | Method::TezoAdam => 0,
+            Method::MezoM => 1,
+            Method::MezoAdam | Method::ZoAdamu => 2,
+            Method::FoAdam => 3, // grads + m + v
+        }
+    }
+}
+
+/// Learning-rate schedule over the run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// linear decay to `final_frac * lr` at the last step
+    Linear { final_frac: f32 },
+    /// cosine decay to `final_frac * lr`
+    Cosine { final_frac: f32 },
+}
+
+impl LrSchedule {
+    /// Effective lr at `step` of `total` steps.
+    pub fn at(&self, lr: f32, step: u64, total: usize) -> f32 {
+        let t = if total <= 1 { 0.0 } else { step as f32 / (total - 1) as f32 };
+        match self {
+            LrSchedule::Constant => lr,
+            LrSchedule::Linear { final_frac } => {
+                lr * (1.0 - t + t * final_frac)
+            }
+            LrSchedule::Cosine { final_frac } => {
+                let lo = lr * final_frac;
+                lo + 0.5 * (lr - lo) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<LrSchedule> {
+        Ok(match s {
+            "constant" | "" => LrSchedule::Constant,
+            "linear" => LrSchedule::Linear { final_frac: 0.1 },
+            "cosine" => LrSchedule::Cosine { final_frac: 0.1 },
+            other => bail!("unknown lr schedule {other:?} (constant|linear|cosine)"),
+        })
+    }
+}
+
+/// Run-time training configuration (one fine-tuning job).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub steps: usize,
+    pub lr: f32,
+    pub rho: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// ZO-AdaMU perturbation-momentum mixing weight.
+    pub adamu_alpha: f32,
+    /// Lazy refresh interval for LOZO-U / SubZO factors (paper Table 6).
+    pub lazy_interval: usize,
+    /// Master seed: drives the per-step seed schedule, data order, factors.
+    pub seed: u64,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Bias-correct the TeZO/MeZO Adam moments.
+    pub bias_correction: bool,
+    /// Learning-rate schedule.
+    pub lr_schedule: LrSchedule,
+    /// Clip |kappa| (the projected gradient) at this value; 0 disables.
+    /// Two-point ZO occasionally measures huge finite differences on sharp
+    /// minibatches — clipping stabilizes the SGD-family without changing
+    /// the estimator in expectation materially.
+    pub kappa_clip: f32,
+    /// q-SPSA: average over this many independent perturbations per step
+    /// (paper's baselines use q=1). Supported by the stateless SGD-form
+    /// methods (mezo/lozo/subzo/tezo); momentum/Adam variants require q=1.
+    pub n_perturb: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            method: Method::Tezo,
+            steps: 100,
+            lr: 1e-6,
+            rho: 1e-3,
+            beta1: 0.9,
+            beta2: 0.99,
+            eps: 1e-5,
+            adamu_alpha: 0.2,
+            lazy_interval: 50,
+            seed: 0,
+            eval_every: 0,
+            bias_correction: true,
+            lr_schedule: LrSchedule::Constant,
+            kappa_clip: 0.0,
+            n_perturb: 1,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Validate cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.n_perturb == 0 || self.n_perturb > 64 {
+            bail!("n_perturb must be in 1..=64");
+        }
+        if self.n_perturb > 1 {
+            let ok = matches!(self.method,
+                Method::Mezo | Method::Lozo | Method::Subzo | Method::Tezo);
+            if !ok {
+                bail!("n_perturb > 1 requires a stateless SGD-form method \
+                       (mezo|lozo|subzo|tezo), got {}", self.method.name());
+            }
+        }
+        if self.rho <= 0.0 {
+            bail!("rho must be positive");
+        }
+        Ok(())
+    }
+}
+
+impl TrainConfig {
+    /// The paper's recommended hyperparameters for (method, model scale)
+    /// from Table 6, scaled to our substitute models.
+    pub fn with_preset(method: Method, model: &str) -> Self {
+        let row = preset_for(method, model);
+        Self {
+            method,
+            lr: row.lr,
+            rho: row.rho,
+            lazy_interval: row.lazy_interval,
+            ..Self::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn zo_flags() {
+        assert!(Method::Tezo.is_zo());
+        assert!(!Method::FoAdam.is_zo());
+        assert_eq!(Method::TezoAdam.full_size_state_copies(), 0);
+        assert_eq!(Method::MezoAdam.full_size_state_copies(), 2);
+    }
+
+    #[test]
+    fn lr_schedules_interpolate() {
+        let lr = 1.0f32;
+        let c = LrSchedule::Constant;
+        assert_eq!(c.at(lr, 0, 100), 1.0);
+        assert_eq!(c.at(lr, 99, 100), 1.0);
+        let l = LrSchedule::Linear { final_frac: 0.1 };
+        assert!((l.at(lr, 0, 100) - 1.0).abs() < 1e-6);
+        assert!((l.at(lr, 99, 100) - 0.1).abs() < 1e-6);
+        let mid = l.at(lr, 49, 100);
+        assert!(mid < 1.0 && mid > 0.1);
+        let cos = LrSchedule::Cosine { final_frac: 0.1 };
+        assert!((cos.at(lr, 0, 100) - 1.0).abs() < 1e-6);
+        assert!((cos.at(lr, 99, 100) - 0.1).abs() < 1e-5);
+        // cosine decays slower than linear early on
+        assert!(cos.at(lr, 20, 100) > l.at(lr, 20, 100));
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let ok = TrainConfig::default();
+        assert!(ok.validate().is_ok());
+        let mut bad = TrainConfig::default();
+        bad.steps = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = TrainConfig::default();
+        bad.n_perturb = 4;
+        bad.method = Method::TezoAdam; // stateful: q-SPSA unsupported
+        assert!(bad.validate().is_err());
+        bad.method = Method::Tezo;
+        assert!(bad.validate().is_ok());
+        let mut bad = TrainConfig::default();
+        bad.rho = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn lr_schedule_parse() {
+        assert_eq!(LrSchedule::parse("constant").unwrap(), LrSchedule::Constant);
+        assert!(matches!(LrSchedule::parse("linear").unwrap(),
+                         LrSchedule::Linear { .. }));
+        assert!(matches!(LrSchedule::parse("cosine").unwrap(),
+                         LrSchedule::Cosine { .. }));
+        assert!(LrSchedule::parse("nope").is_err());
+    }
+}

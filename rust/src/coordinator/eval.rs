@@ -1,0 +1,63 @@
+//! Evaluation: classification accuracy via verbalizer logits, and LM
+//! perplexity for the end-to-end driver.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::exec::{scalar_f32, to_vec_f32};
+use crate::runtime::{ArgValue, ParamStore, Runtime};
+
+/// Accuracy over eval batches: for each row, read the logits at the SEP
+/// position and argmax over the candidate `label_tokens` (the MeZO scoring
+/// protocol).
+pub fn accuracy(rt: &Runtime, params: &ParamStore, batches: &[Batch],
+                label_tokens: &[i32]) -> Result<f64> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in batches {
+        let out = rt
+            .call("eval_logits")?
+            .bufs(params.bufs())?
+            .arg(ArgValue::I32(&b.tokens))?
+            .arg(ArgValue::I32(&b.positions))?
+            .run()?;
+        let logits = to_vec_f32(&out[0])?; // (B, V)
+        let vocab = logits.len() / b.batch;
+        for row in 0..b.batch {
+            let row_logits = &logits[row * vocab..(row + 1) * vocab];
+            let pred = label_tokens
+                .iter()
+                .enumerate()
+                .max_by(|(_, &a), (_, &c)| {
+                    row_logits[a as usize]
+                        .partial_cmp(&row_logits[c as usize])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            if pred == b.labels[row] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Mean masked LM loss over batches (perplexity = exp(loss)).
+pub fn lm_loss(rt: &Runtime, params: &ParamStore, batches: &[Batch]) -> Result<f64> {
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for b in batches {
+        let out = rt
+            .call("fwd_loss")?
+            .bufs(params.bufs())?
+            .arg(ArgValue::I32(&b.tokens))?
+            .arg(ArgValue::I32(&b.targets))?
+            .arg(ArgValue::F32(&b.mask))?
+            .run()?;
+        acc += scalar_f32(&out[0])? as f64;
+        n += 1;
+    }
+    Ok(acc / n.max(1) as f64)
+}

@@ -1,0 +1,73 @@
+//! Greedy autoregressive generation through the `eval_logits` artifact —
+//! the inference path of the fine-tuned model (`tezo generate`).
+//!
+//! The artifact has fixed shapes (B, S), so generation fills a padded token
+//! matrix left-to-right: at each position the artifact returns the logits
+//! at the last committed position per row, and the argmax token is
+//! committed at the next slot.
+
+use anyhow::{ensure, Result};
+
+use crate::data::tokenizer::PAD;
+use crate::runtime::exec::to_vec_f32;
+use crate::runtime::{ArgValue, ParamStore, Runtime};
+
+/// Greedily extend each prompt row by `new_tokens` tokens.
+///
+/// `prompts`: one token vector per row (<= batch rows; padded/truncated to
+/// the artifact's geometry). Returns the full generated rows.
+pub fn greedy_generate(rt: &Runtime, params: &ParamStore,
+                       prompts: &[Vec<i32>], new_tokens: usize)
+                       -> Result<Vec<Vec<i32>>> {
+    let b = rt.manifest.config.batch;
+    let s = rt.manifest.config.seq_len;
+    ensure!(!prompts.is_empty() && prompts.len() <= b,
+            "need 1..={b} prompt rows, got {}", prompts.len());
+    let min_len = prompts.iter().map(|p| p.len()).min().unwrap();
+    ensure!(min_len >= 1, "prompts must be non-empty");
+    let max_len = prompts.iter().map(|p| p.len()).max().unwrap();
+    ensure!(max_len + new_tokens <= s,
+            "prompt ({max_len}) + new_tokens ({new_tokens}) exceeds seq_len {s}");
+
+    // token matrix (B, S), PAD-filled; rows beyond the prompts stay PAD
+    let mut tokens = vec![PAD; b * s];
+    let mut lens: Vec<usize> = Vec::with_capacity(b);
+    for (row, p) in prompts.iter().enumerate() {
+        tokens[row * s..row * s + p.len()].copy_from_slice(p);
+        lens.push(p.len());
+    }
+    for _ in prompts.len()..b {
+        lens.push(1); // dummy rows decode from position 0
+    }
+
+    for _ in 0..new_tokens {
+        let positions: Vec<i32> = lens.iter().map(|&l| (l - 1) as i32).collect();
+        let out = rt
+            .call("eval_logits")?
+            .bufs(params.bufs())?
+            .arg(ArgValue::I32(&tokens))?
+            .arg(ArgValue::I32(&positions))?
+            .run()?;
+        let logits = to_vec_f32(&out[0])?; // (B, V)
+        let v = rt.manifest.config.vocab;
+        for row in 0..prompts.len() {
+            let row_logits = &logits[row * v..(row + 1) * v];
+            let mut best = 0usize;
+            let mut best_val = f32::NEG_INFINITY;
+            // never emit PAD
+            for (tok, &val) in row_logits.iter().enumerate() {
+                if tok as i32 != PAD && val > best_val {
+                    best = tok;
+                    best_val = val;
+                }
+            }
+            if lens[row] < s {
+                tokens[row * s + lens[row]] = best as i32;
+                lens[row] += 1;
+            }
+        }
+    }
+    Ok((0..prompts.len())
+        .map(|row| tokens[row * s..row * s + lens[row]].to_vec())
+        .collect())
+}

@@ -1,0 +1,188 @@
+//! Training metrics: loss curves, phase timing, report emission.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::jsonx::Value;
+use crate::tensor::stats;
+
+/// The per-step phases of a ZO iteration (paper Fig 3b breakdown).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// host-side random sampling (tau vectors, batches)
+    Sampling,
+    /// staging host data to device buffers
+    Upload,
+    /// the fused two-point forward (or FO forward+backward)
+    Forward,
+    /// the parameter update artifact
+    Update,
+    /// host scalar work (kappa, moment accumulation)
+    Host,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] =
+        [Phase::Sampling, Phase::Upload, Phase::Forward, Phase::Update, Phase::Host];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Sampling => "sampling",
+            Phase::Upload => "upload",
+            Phase::Forward => "forward",
+            Phase::Update => "update",
+            Phase::Host => "host",
+        }
+    }
+}
+
+/// Accumulated wall-clock per phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimers {
+    secs: [f64; 5],
+    counts: [u64; 5],
+}
+
+impl PhaseTimers {
+    fn slot(phase: Phase) -> usize {
+        Phase::ALL.iter().position(|p| *p == phase).unwrap()
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let i = Self::slot(phase);
+        self.secs[i] += t0.elapsed().as_secs_f64();
+        self.counts[i] += 1;
+        out
+    }
+
+    pub fn seconds(&self, phase: Phase) -> f64 {
+        self.secs[Self::slot(phase)]
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// (phase, seconds, fraction) rows.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total_seconds().max(1e-12);
+        Phase::ALL
+            .iter()
+            .map(|p| {
+                let s = self.seconds(*p);
+                (p.name(), s, s / total)
+            })
+            .collect()
+    }
+}
+
+/// Full training record for one run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainMetrics {
+    pub losses: Vec<f64>,
+    /// (step, accuracy)
+    pub evals: Vec<(u64, f64)>,
+    pub timers: PhaseTimers,
+    pub steps: u64,
+    pub wall_seconds: f64,
+}
+
+impl TrainMetrics {
+    pub fn record_loss(&mut self, loss: f64) {
+        self.losses.push(loss);
+        self.steps += 1;
+    }
+
+    pub fn final_loss_avg(&self, window: usize) -> f64 {
+        if self.losses.is_empty() {
+            return f64::NAN;
+        }
+        let k = window.min(self.losses.len());
+        stats::mean(&self.losses[self.losses.len() - k..])
+    }
+
+    pub fn initial_loss_avg(&self, window: usize) -> f64 {
+        if self.losses.is_empty() {
+            return f64::NAN;
+        }
+        let k = window.min(self.losses.len());
+        stats::mean(&self.losses[..k])
+    }
+
+    pub fn seconds_per_step(&self) -> f64 {
+        if self.steps == 0 { 0.0 } else { self.wall_seconds / self.steps as f64 }
+    }
+
+    /// Smoothed loss curve (paper Fig 4 uses gaussian_filter1d; EMA with a
+    /// matched bandwidth gives the same qualitative curve).
+    pub fn smoothed_losses(&self, alpha: f64) -> Vec<f64> {
+        stats::ema(&self.losses, alpha)
+    }
+
+    /// Write the loss curve as `step,loss,smoothed` CSV.
+    pub fn write_loss_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let smooth = self.smoothed_losses(0.05);
+        let mut out = String::from("step,loss,smoothed\n");
+        for (i, (l, s)) in self.losses.iter().zip(smooth.iter()).enumerate() {
+            out.push_str(&format!("{i},{l},{s}\n"));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// JSON summary (for EXPERIMENTS.md and the sweep driver).
+    pub fn summary_json(&self, label: &str) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(label)),
+            ("steps", Value::i(self.steps as i64)),
+            ("initial_loss", Value::f(self.initial_loss_avg(20))),
+            ("final_loss", Value::f(self.final_loss_avg(20))),
+            ("wall_seconds", Value::f(self.wall_seconds)),
+            ("sec_per_step", Value::f(self.seconds_per_step())),
+            ("final_accuracy",
+             Value::f(self.evals.last().map(|e| e.1).unwrap_or(f64::NAN))),
+            ("phases", Value::arr(
+                self.timers.breakdown().into_iter()
+                    .map(|(n, s, f)| Value::obj(vec![
+                        ("phase", Value::str(n)),
+                        ("seconds", Value::f(s)),
+                        ("fraction", Value::f(f)),
+                    ]))
+                    .collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let mut t = PhaseTimers::default();
+        t.time(Phase::Forward, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        t.time(Phase::Update, || {});
+        assert!(t.seconds(Phase::Forward) >= 0.004);
+        let br = t.breakdown();
+        assert_eq!(br.len(), 5);
+        let frac_sum: f64 = br.iter().map(|(_, _, f)| f).sum();
+        assert!((frac_sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_windows() {
+        let mut m = TrainMetrics::default();
+        for i in 0..100 {
+            m.record_loss(10.0 - (i as f64) * 0.05);
+        }
+        assert!(m.final_loss_avg(10) < m.initial_loss_avg(10));
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator: the fine-tuning training system.
+//!
+//! [`trainer`] owns the step loop (two-point ZO evaluation, projected
+//! gradient, update dispatch, phase timing); [`optimizer`] implements one
+//! driver per method (MeZO/LOZO/SubZO/ZO-AdaMU baselines, the TeZO family,
+//! and the first-order FT reference); [`seeds`] is the resampling-technique
+//! seed schedule; [`rank`] re-derives the Eq.(7) rank schedule in Rust and
+//! cross-checks the manifest; [`eval`] scores classification accuracy via
+//! verbalizer logits; [`counter`] does the Table-2 sampled-element
+//! accounting; [`metrics`] records loss curves and phase breakdowns.
+
+pub mod counter;
+pub mod eval;
+pub mod generate;
+pub mod metrics;
+pub mod optimizer;
+pub mod probe;
+pub mod rank;
+pub mod seeds;
+pub mod trainer;
+
+pub use counter::SampleCounter;
+pub use metrics::{PhaseTimers, TrainMetrics};
+pub use optimizer::{build_optimizer, StepCtx, ZoOptimizer};
+pub use seeds::SeedSchedule;
+pub use trainer::{TrainOutcome, Trainer};

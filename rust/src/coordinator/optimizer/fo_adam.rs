@@ -1,0 +1,88 @@
+//! First-order Adam reference (the `FT` rows of Tables 3/4/5).
+//!
+//! Uses the `fo_valgrad` artifact (jax.grad lowered at build time) and a
+//! full Adam state — deliberately the expensive baseline the memory tables
+//! compare against.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Method;
+use crate::coordinator::metrics::Phase;
+use crate::runtime::exec::scalar_f32;
+use crate::runtime::{ArgValue, Runtime};
+
+use super::{param_elems, zeros_like_params, ForwardOut, StepCtx, ZoOptimizer};
+
+pub struct FoAdam {
+    m: Vec<xla::PjRtBuffer>,
+    v: Vec<xla::PjRtBuffer>,
+    grads: Option<Vec<xla::PjRtBuffer>>,
+    elems: u64,
+    t: u64,
+}
+
+impl FoAdam {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(Self {
+            m: zeros_like_params(rt)?,
+            v: zeros_like_params(rt)?,
+            grads: None,
+            elems: param_elems(rt),
+            t: 0,
+        })
+    }
+}
+
+impl ZoOptimizer for FoAdam {
+    fn method(&self) -> Method {
+        Method::FoAdam
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        let call = ctx
+            .rt
+            .call("fo_valgrad")?
+            .bufs(ctx.params.bufs())?
+            .arg(ArgValue::I32(&ctx.batch.tokens))?
+            .arg(ArgValue::I32(&ctx.batch.targets))?
+            .arg(ArgValue::F32(&ctx.batch.mask))?;
+        let mut out = ctx.timers.time(Phase::Forward, || call.run())?;
+        let grads = out.split_off(1);
+        let loss = scalar_f32(&out[0])?;
+        self.grads = Some(grads);
+        Ok(ForwardOut::Loss(loss))
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, _kappa: f32) -> Result<()> {
+        self.t += 1;
+        let grads = self
+            .grads
+            .take()
+            .ok_or_else(|| anyhow!("fo-adam update without forward"))?;
+        let n = ctx.params.len();
+        let call = ctx
+            .rt
+            .call("fo_adam_update")?
+            .bufs(ctx.params.bufs())?
+            .bufs(grads.iter())?
+            .bufs(self.m.iter())?
+            .bufs(self.v.iter())?
+            .arg(ArgValue::ScalarF32(ctx.lr))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.beta2))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.eps))?
+            .arg(ArgValue::ScalarF32(self.t as f32))?;
+        let mut out = ctx.timers.time(Phase::Update, || call.run())?;
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        ctx.params.replace_all(out)?;
+        self.m = new_m;
+        self.v = new_v;
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        // m + v (+ transient grads counted as one more copy)
+        3 * self.elems * 4
+    }
+}

@@ -1,0 +1,189 @@
+//! LOZO drivers (Chen et al. 2024): `Z = U V^T`, V resampled in-HLO per
+//! step, U refreshed lazily every `lazy_interval` steps via the
+//! `lozo_init_u` artifact. LOZO-m accumulates momentum in the V-factor
+//! (`S` state, n x r per matrix) while the U subspace is frozen; `S` resets
+//! at each window boundary.
+
+use anyhow::Result;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::metrics::Phase;
+use crate::coordinator::seeds::SeedSchedule;
+use crate::runtime::exec::scalar_f32;
+use crate::runtime::{ArgValue, Runtime};
+
+use super::{vector_elems, zeros_buf, ForwardOut, StepCtx, ZoOptimizer};
+
+/// Lazily-refreshed U panels.
+struct LazyU {
+    us: Vec<xla::PjRtBuffer>,
+    window: u64,
+    rank: usize,
+    /// sum of m over matrices (U refresh draw count = m_sum * r)
+    m_sum: u64,
+    /// sum of n over matrices (V per-step draw count = n_sum * r)
+    n_sum: u64,
+}
+
+impl LazyU {
+    fn init(rt: &Runtime, _cfg: &TrainConfig, _seeds: &SeedSchedule) -> Result<LazyU> {
+        let rank = rt.manifest.lozo_rank;
+        let mats = rt.manifest.matrix_params();
+        let m_sum: u64 = mats.iter().map(|p| p.shape[0] as u64).sum();
+        let n_sum: u64 = mats.iter().map(|p| p.shape[1] as u64).sum();
+        // the first maybe_refresh (step 0) performs the initial draw so the
+        // Table-2 accounting sees it (window = MAX forces it)
+        Ok(LazyU { us: Vec::new(), window: u64::MAX, rank, m_sum, n_sum })
+    }
+
+    fn refresh(&mut self, rt: &Runtime, seed: u32, window: u64) -> Result<()> {
+        let out = rt
+            .call("lozo_init_u")?
+            .arg(ArgValue::ScalarU32(seed))?
+            .run()?;
+        self.us = out;
+        self.window = window;
+        Ok(())
+    }
+
+    /// Refresh if `step` entered a new lazy window; returns draws made.
+    fn maybe_refresh(&mut self, ctx: &mut StepCtx) -> Result<u64> {
+        let interval = ctx.cfg.lazy_interval.max(1) as u64;
+        let window = ctx.step / interval;
+        if window != self.window {
+            let seed = ctx.seeds.window_seed(ctx.step, ctx.cfg.lazy_interval);
+            self.refresh(ctx.rt, seed, window)?;
+            return Ok(self.m_sum * self.rank as u64);
+        }
+        Ok(0)
+    }
+}
+
+fn lozo_forward(ctx: &mut StepCtx, lazy: &LazyU) -> Result<ForwardOut> {
+    let seed = ctx.step_seed();
+    // per-step V draws (in-HLO) + dense 1D
+    ctx.counter.add_matrix(lazy.n_sum * lazy.rank as u64);
+    ctx.counter.add_vector(vector_elems(ctx.rt));
+    let call = ctx
+        .rt
+        .call("lozo_loss_pm")?
+        .bufs(ctx.params.bufs())?
+        .bufs(lazy.us.iter())?
+        .arg(ArgValue::I32(&ctx.batch.tokens))?
+        .arg(ArgValue::I32(&ctx.batch.targets))?
+        .arg(ArgValue::F32(&ctx.batch.mask))?
+        .arg(ArgValue::ScalarU32(seed))?
+        .arg(ArgValue::ScalarF32(ctx.cfg.rho))?;
+    let out = ctx.timers.time(Phase::Forward, || call.run())?;
+    Ok(ForwardOut::TwoPoint {
+        f_plus: scalar_f32(&out[0])?,
+        f_minus: scalar_f32(&out[1])?,
+    })
+}
+
+/// Plain LOZO.
+pub struct Lozo {
+    lazy: LazyU,
+}
+
+impl Lozo {
+    pub fn new(rt: &Runtime, cfg: &TrainConfig, seeds: &SeedSchedule) -> Result<Self> {
+        Ok(Self { lazy: LazyU::init(rt, cfg, seeds)? })
+    }
+}
+
+impl ZoOptimizer for Lozo {
+    fn method(&self) -> Method {
+        Method::Lozo
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        let draws = self.lazy.maybe_refresh(ctx)?;
+        ctx.counter.add_matrix(draws);
+        lozo_forward(ctx, &self.lazy)
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        let seed = ctx.step_seed();
+        let call = ctx
+            .rt
+            .call("lozo_update_sgd")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.lazy.us.iter())?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(ctx.lr * kappa))?;
+        let out = ctx.timers.time(Phase::Update, || call.run())?;
+        ctx.params.replace_all(out)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.lazy.m_sum * self.lazy.rank as u64 * 4
+    }
+}
+
+/// LOZO-m: V-factor momentum `S` (n x r per matrix).
+pub struct LozoM {
+    lazy: LazyU,
+    s: Vec<xla::PjRtBuffer>,
+    s_elems: u64,
+}
+
+impl LozoM {
+    pub fn new(rt: &Runtime, cfg: &TrainConfig, seeds: &SeedSchedule) -> Result<Self> {
+        let lazy = LazyU::init(rt, cfg, seeds)?;
+        let (s, s_elems) = Self::zero_s(rt, lazy.rank)?;
+        Ok(Self { lazy, s, s_elems })
+    }
+
+    fn zero_s(rt: &Runtime, rank: usize) -> Result<(Vec<xla::PjRtBuffer>, u64)> {
+        let mut s = Vec::new();
+        let mut elems = 0u64;
+        for p in rt.manifest.matrix_params() {
+            let n = p.shape[1];
+            s.push(zeros_buf(rt, &[n, rank])?);
+            elems += (n * rank) as u64;
+        }
+        Ok((s, elems))
+    }
+}
+
+impl ZoOptimizer for LozoM {
+    fn method(&self) -> Method {
+        Method::LozoM
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        let draws = self.lazy.maybe_refresh(ctx)?;
+        if draws > 0 && ctx.step > 0 {
+            // subspace changed: reset the V-space momentum
+            let (s, _) = Self::zero_s(ctx.rt, self.lazy.rank)?;
+            self.s = s;
+        }
+        ctx.counter.add_matrix(draws);
+        lozo_forward(ctx, &self.lazy)
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        let seed = ctx.step_seed();
+        let n = ctx.params.len();
+        let call = ctx
+            .rt
+            .call("lozo_update_m")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.lazy.us.iter())?
+            .bufs(self.s.iter())?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(kappa))?
+            .arg(ArgValue::ScalarF32(ctx.lr))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?;
+        let mut out = ctx.timers.time(Phase::Update, || call.run())?;
+        let new_s = out.split_off(n);
+        ctx.params.replace_all(out)?;
+        self.s = new_s;
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        (self.lazy.m_sum * self.lazy.rank as u64 + self.s_elems) * 4
+    }
+}

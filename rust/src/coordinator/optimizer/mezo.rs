@@ -1,0 +1,186 @@
+//! MeZO family drivers (Malladi et al. 2023).
+//!
+//! Dense Z regenerated in-HLO from the step seed. Plain MeZO holds *zero*
+//! state (the resampling technique); -m and -Adam hold full-size moment
+//! buffers — exactly the memory the paper's Fig 3(a) charges them for.
+
+use anyhow::Result;
+
+use crate::config::Method;
+use crate::coordinator::metrics::Phase;
+use crate::runtime::exec::scalar_f32;
+use crate::runtime::{ArgValue, Runtime};
+
+use super::{matrix_elems, param_elems, vector_elems, zeros_like_params, ForwardOut,
+            StepCtx, ZoOptimizer};
+
+/// Shared forward: `mezo_loss_pm(params, batch, seed, rho)`.
+fn mezo_forward(ctx: &mut StepCtx) -> Result<ForwardOut> {
+    let seed = ctx.step_seed();
+    // the artifact draws a dense Z over every parameter
+    ctx.counter.add_matrix(matrix_elems(ctx.rt));
+    ctx.counter.add_vector(vector_elems(ctx.rt));
+    let rt = ctx.rt;
+    let call = rt
+        .call("mezo_loss_pm")?
+        .bufs(ctx.params.bufs())?
+        .arg(ArgValue::I32(&ctx.batch.tokens))?
+        .arg(ArgValue::I32(&ctx.batch.targets))?
+        .arg(ArgValue::F32(&ctx.batch.mask))?
+        .arg(ArgValue::ScalarU32(seed))?
+        .arg(ArgValue::ScalarF32(ctx.cfg.rho))?;
+    let out = ctx.timers.time(Phase::Forward, || call.run())?;
+    Ok(ForwardOut::TwoPoint {
+        f_plus: scalar_f32(&out[0])?,
+        f_minus: scalar_f32(&out[1])?,
+    })
+}
+
+/// Plain MeZO (ZO-SGD): no optimizer state at all.
+pub struct Mezo;
+
+impl Mezo {
+    pub fn new() -> Self {
+        Mezo
+    }
+}
+
+impl Default for Mezo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ZoOptimizer for Mezo {
+    fn method(&self) -> Method {
+        Method::Mezo
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        mezo_forward(ctx)
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        let seed = ctx.step_seed();
+        // update regenerates the SAME z from the same seed: counted once in
+        // the paper's model (the draw is one logical sample per step), so no
+        // second counter increment here.
+        let coeff = ctx.lr * kappa;
+        let call = ctx
+            .rt
+            .call("mezo_update_sgd")?
+            .bufs(ctx.params.bufs())?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(coeff))?;
+        let out = ctx.timers.time(Phase::Update, || call.run())?;
+        ctx.params.replace_all(out)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        4 // the stored seed
+    }
+}
+
+/// MeZO-m: full-size momentum buffer.
+pub struct MezoM {
+    m: Vec<xla::PjRtBuffer>,
+    elems: u64,
+}
+
+impl MezoM {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(Self { m: zeros_like_params(rt)?, elems: param_elems(rt) })
+    }
+}
+
+impl ZoOptimizer for MezoM {
+    fn method(&self) -> Method {
+        Method::MezoM
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        mezo_forward(ctx)
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        let seed = ctx.step_seed();
+        let n = ctx.params.len();
+        let call = ctx
+            .rt
+            .call("mezo_update_m")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.m.iter())?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(kappa))?
+            .arg(ArgValue::ScalarF32(ctx.lr))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?;
+        let mut out = ctx.timers.time(Phase::Update, || call.run())?;
+        let new_m = out.split_off(n);
+        ctx.params.replace_all(out)?;
+        self.m = new_m;
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.elems * 4
+    }
+}
+
+/// MeZO-Adam: full-size first and second moments (the 3x memory row).
+pub struct MezoAdam {
+    m: Vec<xla::PjRtBuffer>,
+    v: Vec<xla::PjRtBuffer>,
+    elems: u64,
+    t: u64,
+}
+
+impl MezoAdam {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(Self {
+            m: zeros_like_params(rt)?,
+            v: zeros_like_params(rt)?,
+            elems: param_elems(rt),
+            t: 0,
+        })
+    }
+}
+
+impl ZoOptimizer for MezoAdam {
+    fn method(&self) -> Method {
+        Method::MezoAdam
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        mezo_forward(ctx)
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        self.t += 1;
+        let seed = ctx.step_seed();
+        let n = ctx.params.len();
+        let call = ctx
+            .rt
+            .call("mezo_update_adam")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.m.iter())?
+            .bufs(self.v.iter())?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(kappa))?
+            .arg(ArgValue::ScalarF32(ctx.lr))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.beta2))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.eps))?
+            .arg(ArgValue::ScalarF32(self.t as f32))?;
+        let mut out = ctx.timers.time(Phase::Update, || call.run())?;
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        ctx.params.replace_all(out)?;
+        self.m = new_m;
+        self.v = new_v;
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        2 * self.elems * 4
+    }
+}

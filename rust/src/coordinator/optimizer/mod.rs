@@ -1,0 +1,141 @@
+//! Optimizer drivers: one per method row of the paper's tables.
+//!
+//! A driver owns the method-specific state (factor panels, tau vectors,
+//! full-size moment buffers, lazy windows) and knows how to call its two
+//! artifacts:
+//!
+//! * `forward(ctx)` — the fused two-point loss (`(f+, f-)`), or loss +
+//!   cached grads for the first-order reference;
+//! * `update(ctx, kappa)` — the parameter update, swapping the new buffers
+//!   into the [`ParamStore`].
+//!
+//! All randomness flows through the step seed (resampling technique) or
+//! through host-generated factor/tau vectors counted by [`SampleCounter`].
+
+mod fo_adam;
+mod lozo;
+mod mezo;
+mod subzo;
+mod tezo;
+mod zo_adamu;
+
+pub use fo_adam::FoAdam;
+pub use lozo::{Lozo, LozoM};
+pub use mezo::{Mezo, MezoAdam, MezoM};
+pub use subzo::Subzo;
+pub use tezo::{Tezo, TezoAdam, TezoM};
+pub use zo_adamu::ZoAdamu;
+
+use anyhow::Result;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::counter::SampleCounter;
+use crate::coordinator::metrics::PhaseTimers;
+use crate::coordinator::seeds::SeedSchedule;
+use crate::data::Batch;
+use crate::runtime::{ParamStore, Runtime};
+
+/// Everything a driver sees during one step.
+pub struct StepCtx<'a> {
+    pub rt: &'a Runtime,
+    pub params: &'a mut ParamStore,
+    pub batch: &'a Batch,
+    pub cfg: &'a TrainConfig,
+    pub seeds: &'a SeedSchedule,
+    pub step: u64,
+    /// q-SPSA sub-perturbation index (0 when n_perturb == 1)
+    pub sub: u32,
+    /// schedule-effective learning rate for this step
+    pub lr: f32,
+    pub timers: &'a mut PhaseTimers,
+    pub counter: &'a mut SampleCounter,
+}
+
+impl<'a> StepCtx<'a> {
+    /// The per-(step, sub) perturbation seed (shared by forward and update).
+    pub fn step_seed(&self) -> u32 {
+        self.seeds.perturb_seed(self.step, self.sub)
+    }
+
+    /// The tau/factor derivation index for this (step, sub).
+    pub fn perturb_index(&self) -> u64 {
+        SeedSchedule::perturb_index(self.step, self.sub)
+    }
+}
+
+/// The outcome of the forward phase.
+pub enum ForwardOut {
+    /// two-point losses (ZO methods)
+    TwoPoint { f_plus: f32, f_minus: f32 },
+    /// plain loss (FO reference; grads cached inside the driver)
+    Loss(f32),
+}
+
+/// One optimizer driver.
+pub trait ZoOptimizer {
+    fn method(&self) -> Method;
+
+    /// Run the forward phase for `ctx.step`.
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut>;
+
+    /// Apply the update. `kappa` is the projected gradient
+    /// `(f+ - f-) / (2 rho)` (unused by the FO driver).
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()>;
+
+    /// Bytes of optimizer state this driver holds resident (device + host) —
+    /// cross-checked against the analytic memory model.
+    fn state_bytes(&self) -> u64;
+}
+
+/// Construct the driver for `cfg.method` against an opened runtime.
+pub fn build_optimizer(rt: &Runtime, cfg: &TrainConfig,
+                       seeds: &SeedSchedule) -> Result<Box<dyn ZoOptimizer>> {
+    Ok(match cfg.method {
+        Method::Mezo => Box::new(Mezo::new()),
+        Method::MezoM => Box::new(MezoM::new(rt)?),
+        Method::MezoAdam => Box::new(MezoAdam::new(rt)?),
+        Method::Lozo => Box::new(Lozo::new(rt, cfg, seeds)?),
+        Method::LozoM => Box::new(LozoM::new(rt, cfg, seeds)?),
+        Method::Subzo => Box::new(Subzo::new(rt, cfg, seeds)?),
+        Method::ZoAdamu => Box::new(ZoAdamu::new(rt)?),
+        Method::Tezo => Box::new(Tezo::new(rt, seeds)?),
+        Method::TezoM => Box::new(TezoM::new(rt, seeds)?),
+        Method::TezoAdam => Box::new(TezoAdam::new(rt, seeds)?),
+        Method::FoAdam => Box::new(FoAdam::new(rt)?),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------------
+
+/// Upload a zero-filled buffer of `shape`.
+pub(crate) fn zeros_buf(rt: &Runtime, shape: &[usize]) -> Result<xla::PjRtBuffer> {
+    let n: usize = shape.iter().product();
+    let host = vec![0.0f32; n];
+    Ok(rt.client.buffer_from_host_buffer(&host, shape, None)?)
+}
+
+/// One zero buffer per parameter (full-size moment state).
+pub(crate) fn zeros_like_params(rt: &Runtime) -> Result<Vec<xla::PjRtBuffer>> {
+    rt.manifest
+        .params
+        .iter()
+        .map(|p| zeros_buf(rt, &p.shape))
+        .collect()
+}
+
+/// Total f32 elements of the full-size parameter set.
+pub(crate) fn param_elems(rt: &Runtime) -> u64 {
+    rt.manifest.params.iter().map(|p| p.numel() as u64).sum()
+}
+
+/// Sum over 1D params of numel (the dense-1D draw count per step).
+pub(crate) fn vector_elems(rt: &Runtime) -> u64 {
+    rt.manifest.vector_params().iter().map(|p| p.numel() as u64).sum()
+}
+
+/// Sum over 2D params of numel.
+pub(crate) fn matrix_elems(rt: &Runtime) -> u64 {
+    rt.manifest.matrix_params().iter().map(|p| p.numel() as u64).sum()
+}

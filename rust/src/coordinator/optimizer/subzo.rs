@@ -1,0 +1,121 @@
+//! SubZO driver (Yu et al. 2024): `Z = U Sigma V^T` with orthonormal U, V
+//! refreshed lazily (QR in the `subzo_factors` artifact) and a Gaussian
+//! r x r Sigma drawn in-HLO each step.
+
+use anyhow::Result;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::metrics::Phase;
+use crate::coordinator::seeds::SeedSchedule;
+use crate::runtime::exec::scalar_f32;
+use crate::runtime::{ArgValue, Runtime};
+
+use super::{vector_elems, ForwardOut, StepCtx, ZoOptimizer};
+
+pub struct Subzo {
+    us: Vec<xla::PjRtBuffer>,
+    vs: Vec<xla::PjRtBuffer>,
+    window: u64,
+    rank: usize,
+    n_mats: u64,
+    uv_units: u64, // sum (m+n)
+}
+
+impl Subzo {
+    pub fn new(rt: &Runtime, _cfg: &TrainConfig, _seeds: &SeedSchedule) -> Result<Self> {
+        let rank = rt.manifest.subzo_rank;
+        let mats = rt.manifest.matrix_params();
+        let uv_units: u64 = mats.iter().map(|p| (p.shape[0] + p.shape[1]) as u64).sum();
+        // first maybe_refresh (step 0) performs the initial draw so the
+        // Table-2 accounting sees it
+        Ok(Subzo {
+            us: Vec::new(),
+            vs: Vec::new(),
+            window: u64::MAX,
+            rank,
+            n_mats: mats.len() as u64,
+            uv_units,
+        })
+    }
+
+    fn refresh(&mut self, rt: &Runtime, seed: u32, window: u64) -> Result<()> {
+        let out = rt
+            .call("subzo_factors")?
+            .arg(ArgValue::ScalarU32(seed))?
+            .run()?;
+        // outputs interleave (U, V) per matrix
+        let mut us = Vec::new();
+        let mut vs = Vec::new();
+        for (i, buf) in out.into_iter().enumerate() {
+            if i % 2 == 0 {
+                us.push(buf);
+            } else {
+                vs.push(buf);
+            }
+        }
+        self.us = us;
+        self.vs = vs;
+        self.window = window;
+        Ok(())
+    }
+
+    fn maybe_refresh(&mut self, ctx: &mut StepCtx) -> Result<u64> {
+        let interval = ctx.cfg.lazy_interval.max(1) as u64;
+        let window = ctx.step / interval;
+        if window != self.window {
+            let seed = ctx.seeds.window_seed(ctx.step, ctx.cfg.lazy_interval);
+            self.refresh(ctx.rt, seed, window)?;
+            return Ok(self.uv_units * self.rank as u64);
+        }
+        Ok(0)
+    }
+}
+
+impl ZoOptimizer for Subzo {
+    fn method(&self) -> Method {
+        Method::Subzo
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        let draws = self.maybe_refresh(ctx)?;
+        ctx.counter.add_matrix(draws);
+        // per-step Sigma draws (r x r per matrix) + dense 1D
+        ctx.counter.add_matrix(self.n_mats * (self.rank * self.rank) as u64);
+        ctx.counter.add_vector(vector_elems(ctx.rt));
+        let seed = ctx.step_seed();
+        let call = ctx
+            .rt
+            .call("subzo_loss_pm")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.us.iter())?
+            .bufs(self.vs.iter())?
+            .arg(ArgValue::I32(&ctx.batch.tokens))?
+            .arg(ArgValue::I32(&ctx.batch.targets))?
+            .arg(ArgValue::F32(&ctx.batch.mask))?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.rho))?;
+        let out = ctx.timers.time(Phase::Forward, || call.run())?;
+        Ok(ForwardOut::TwoPoint {
+            f_plus: scalar_f32(&out[0])?,
+            f_minus: scalar_f32(&out[1])?,
+        })
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        let seed = ctx.step_seed();
+        let call = ctx
+            .rt
+            .call("subzo_update")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.us.iter())?
+            .bufs(self.vs.iter())?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(ctx.lr * kappa))?;
+        let out = ctx.timers.time(Phase::Update, || call.run())?;
+        ctx.params.replace_all(out)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.uv_units * self.rank as u64 * 4
+    }
+}

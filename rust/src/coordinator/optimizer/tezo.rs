@@ -1,0 +1,357 @@
+//! TeZO family drivers (this paper, Alg. 1).
+//!
+//! The CPD factor panels `U_l (m x r_l)`, `V_l (n x r_l)` are drawn ONCE at
+//! construction (host RNG, counted as (m+n)r samples) and live as device
+//! buffers for the whole run. Each step draws only the temporal factors
+//! `tau_l (r_l)` — the O(sqrt(d) + T) sampling story of Table 2 — and the
+//! momentum/Adam state is the tau-sized host vectors `tau_M`, `tau_V`
+//! (the O(r) optimizer state that makes TeZO-Adam cheaper than MeZO-SGD).
+
+use anyhow::Result;
+
+use crate::config::Method;
+use crate::coordinator::metrics::Phase;
+use crate::coordinator::seeds::{SeedSchedule, Stream};
+use crate::rngx::{normal_rng, SplitMix64};
+use crate::runtime::exec::scalar_f32;
+use crate::runtime::{ArgValue, Runtime};
+
+use super::{vector_elems, ForwardOut, StepCtx, ZoOptimizer};
+
+/// Shared factor-panel state.
+struct Factors {
+    /// per-matrix ranks (manifest order of matrix params)
+    ranks: Vec<usize>,
+    us: Vec<xla::PjRtBuffer>,
+    vs: Vec<xla::PjRtBuffer>,
+    /// (m+n)*r elements drawn at init
+    init_draws: u64,
+    /// factor elements resident on device
+    factor_elems: u64,
+}
+
+impl Factors {
+    fn init(rt: &Runtime, seeds: &SeedSchedule) -> Result<Factors> {
+        let mats = rt.manifest.matrix_params();
+        let mut ranks = Vec::with_capacity(mats.len());
+        let mut us = Vec::with_capacity(mats.len());
+        let mut vs = Vec::with_capacity(mats.len());
+        let mut init_draws = 0u64;
+        let mut factor_elems = 0u64;
+        for (idx, p) in mats.iter().enumerate() {
+            let r = rt.manifest.rank_of(&p.name)?;
+            let (m, n) = (p.shape[0], p.shape[1]);
+            let seed = seeds.seed64(Stream::FactorInit, idx as u64);
+            let mut gen = normal_rng(seed);
+            let mut u_host = vec![0.0f32; m * r];
+            for x in u_host.iter_mut() {
+                *x = gen.next_f32();
+            }
+            let mut v_host = vec![0.0f32; n * r];
+            for x in v_host.iter_mut() {
+                *x = gen.next_f32();
+            }
+            us.push(rt.client.buffer_from_host_buffer(&u_host, &[m, r], None)?);
+            vs.push(rt.client.buffer_from_host_buffer(&v_host, &[n, r], None)?);
+            ranks.push(r);
+            init_draws += ((m + n) * r) as u64;
+            factor_elems += ((m + n) * r) as u64;
+        }
+        Ok(Factors { ranks, us, vs, init_draws, factor_elems })
+    }
+
+    /// Draw the tau vectors for one (step, sub) perturbation (host; r_l
+    /// per matrix).
+    fn draw_taus(&self, master: &SeedSchedule, perturb_index: u64) -> Vec<Vec<f32>> {
+        let base = master.seed64(Stream::Perturb, perturb_index);
+        self.ranks
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| {
+                let mut gen = normal_rng(SplitMix64::mix(base, 0x7A0 + i as u64));
+                (0..r).map(|_| gen.next_f32()).collect()
+            })
+            .collect()
+    }
+
+    fn tau_draw_count(&self) -> u64 {
+        self.ranks.iter().map(|&r| r as u64).sum()
+    }
+}
+
+/// Fused two-point forward shared by all TeZO variants.
+fn tezo_forward(ctx: &mut StepCtx, factors: &Factors, taus: &[Vec<f32>])
+                -> Result<ForwardOut> {
+    let seed = ctx.step_seed();
+    ctx.counter.add_matrix(factors.tau_draw_count());
+    ctx.counter.add_vector(vector_elems(ctx.rt));
+    let mut call = ctx
+        .rt
+        .call("tezo_loss_pm")?
+        .bufs(ctx.params.bufs())?
+        .bufs(factors.us.iter())?
+        .bufs(factors.vs.iter())?;
+    for tau in taus {
+        call = call.arg(ArgValue::F32(tau))?;
+    }
+    let call = call
+        .arg(ArgValue::I32(&ctx.batch.tokens))?
+        .arg(ArgValue::I32(&ctx.batch.targets))?
+        .arg(ArgValue::F32(&ctx.batch.mask))?
+        .arg(ArgValue::ScalarU32(seed))?
+        .arg(ArgValue::ScalarF32(ctx.cfg.rho))?;
+    let out = ctx.timers.time(Phase::Forward, || call.run())?;
+    Ok(ForwardOut::TwoPoint {
+        f_plus: scalar_f32(&out[0])?,
+        f_minus: scalar_f32(&out[1])?,
+    })
+}
+
+/// Factor-form update: `W -= U diag(tau_eff) V^T` + dense 1D SGD.
+fn tezo_update_factor(ctx: &mut StepCtx, factors: &Factors,
+                      tau_effs: &[Vec<f32>], coeff1d: f32) -> Result<()> {
+    let seed = ctx.step_seed();
+    let mut call = ctx
+        .rt
+        .call("tezo_update_factor")?
+        .bufs(ctx.params.bufs())?
+        .bufs(factors.us.iter())?
+        .bufs(factors.vs.iter())?;
+    for t in tau_effs {
+        call = call.arg(ArgValue::F32(t))?;
+    }
+    let call = call
+        .arg(ArgValue::ScalarU32(seed))?
+        .arg(ArgValue::ScalarF32(coeff1d))?;
+    let out = ctx.timers.time(Phase::Update, || call.run())?;
+    ctx.params.replace_all(out)
+}
+
+// ---------------------------------------------------------------------------
+// TeZO (plain ZO-SGD form)
+// ---------------------------------------------------------------------------
+
+pub struct Tezo {
+    factors: Factors,
+    /// taus drawn in forward, reused in update (must match exactly)
+    pending_taus: Vec<Vec<f32>>,
+    counted_init: bool,
+}
+
+impl Tezo {
+    pub fn new(rt: &Runtime, seeds: &SeedSchedule) -> Result<Self> {
+        let factors = Factors::init(rt, seeds)?;
+        Ok(Self { factors, pending_taus: Vec::new(), counted_init: false })
+    }
+}
+
+impl ZoOptimizer for Tezo {
+    fn method(&self) -> Method {
+        Method::Tezo
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        if !self.counted_init {
+            // the one-time U/V panel draws — Table 2's (m+n)r term
+            ctx.counter.add_matrix(self.factors.init_draws);
+            self.counted_init = true;
+        }
+        let idx = ctx.perturb_index();
+        let seeds = ctx.seeds;
+        self.pending_taus = ctx.timers.time(Phase::Sampling, || {
+            self.factors.draw_taus(seeds, idx)
+        });
+        tezo_forward(ctx, &self.factors, &self.pending_taus)
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        // Theorem 1: the unbiased estimator is (1/r) <g, Z> Z — the per-layer
+        // 1/r_l keeps the SGD-form step scale comparable to MeZO's (without
+        // it the effective lr is r_l times larger and the shared Table-6
+        // presets diverge).
+        let tau_effs: Vec<Vec<f32>> = self
+            .pending_taus
+            .iter()
+            .zip(self.factors.ranks.iter())
+            .map(|(tau, &r)| {
+                let scale = ctx.lr * kappa / r as f32;
+                tau.iter().map(|&t| scale * t).collect()
+            })
+            .collect();
+        tezo_update_factor(ctx, &self.factors, &tau_effs, ctx.lr * kappa)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.factors.factor_elems * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TeZO-m: momentum in the temporal factor (Alg. 1, TeZO-m branch)
+// ---------------------------------------------------------------------------
+
+pub struct TezoM {
+    factors: Factors,
+    pending_taus: Vec<Vec<f32>>,
+    /// tau_M per matrix — THE momentum state (r floats per layer)
+    tau_m: Vec<Vec<f32>>,
+    counted_init: bool,
+}
+
+impl TezoM {
+    pub fn new(rt: &Runtime, seeds: &SeedSchedule) -> Result<Self> {
+        let factors = Factors::init(rt, seeds)?;
+        let tau_m = factors.ranks.iter().map(|&r| vec![0.0f32; r]).collect();
+        Ok(Self { factors, pending_taus: Vec::new(), tau_m, counted_init: false })
+    }
+}
+
+impl ZoOptimizer for TezoM {
+    fn method(&self) -> Method {
+        Method::TezoM
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        if !self.counted_init {
+            // the one-time U/V panel draws — Table 2's (m+n)r term
+            ctx.counter.add_matrix(self.factors.init_draws);
+            self.counted_init = true;
+        }
+        let idx = ctx.perturb_index();
+        let seeds = ctx.seeds;
+        self.pending_taus = ctx.timers.time(Phase::Sampling, || {
+            self.factors.draw_taus(seeds, idx)
+        });
+        tezo_forward(ctx, &self.factors, &self.pending_taus)
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        let b1 = ctx.cfg.beta1;
+        // tau_M <- b1 tau_M + (1-b1) (kappa/r) tau   (O(r) host work; the
+        // 1/r is the Theorem-1 unbiasedness factor, see Tezo::update)
+        ctx.timers.time(Phase::Host, || {
+            for ((m, tau), &r) in self.tau_m.iter_mut()
+                .zip(self.pending_taus.iter())
+                .zip(self.factors.ranks.iter())
+            {
+                let kr = kappa / r as f32;
+                for (mm, &t) in m.iter_mut().zip(tau.iter()) {
+                    *mm = b1 * *mm + (1.0 - b1) * kr * t;
+                }
+            }
+        });
+        let lr = ctx.lr;
+        let tau_effs: Vec<Vec<f32>> = self
+            .tau_m
+            .iter()
+            .map(|m| m.iter().map(|&t| lr * t).collect())
+            .collect();
+        tezo_update_factor(ctx, &self.factors, &tau_effs, lr * kappa)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        let tau: u64 = self.tau_m.iter().map(|v| v.len() as u64).sum();
+        self.factors.factor_elems * 4 + tau * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TeZO-Adam: lightweight separable second moment (paper Eq. 8)
+// ---------------------------------------------------------------------------
+
+pub struct TezoAdam {
+    factors: Factors,
+    pending_taus: Vec<Vec<f32>>,
+    tau_m: Vec<Vec<f32>>,
+    tau_v: Vec<Vec<f32>>,
+    t: u64,
+    counted_init: bool,
+}
+
+impl TezoAdam {
+    pub fn new(rt: &Runtime, seeds: &SeedSchedule) -> Result<Self> {
+        let factors = Factors::init(rt, seeds)?;
+        let tau_m: Vec<Vec<f32>> = factors.ranks.iter().map(|&r| vec![0.0f32; r]).collect();
+        let tau_v = tau_m.clone();
+        Ok(Self { factors, pending_taus: Vec::new(), tau_m, tau_v, t: 0, counted_init: false })
+    }
+}
+
+impl ZoOptimizer for TezoAdam {
+    fn method(&self) -> Method {
+        Method::TezoAdam
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        if !self.counted_init {
+            // the one-time U/V panel draws — Table 2's (m+n)r term
+            ctx.counter.add_matrix(self.factors.init_draws);
+            self.counted_init = true;
+        }
+        let idx = ctx.perturb_index();
+        let seeds = ctx.seeds;
+        self.pending_taus = ctx.timers.time(Phase::Sampling, || {
+            self.factors.draw_taus(seeds, idx)
+        });
+        tezo_forward(ctx, &self.factors, &self.pending_taus)
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        self.t += 1;
+        let (b1, b2) = (ctx.cfg.beta1, ctx.cfg.beta2);
+        // O(r) host accumulation of both moments in tau space
+        ctx.timers.time(Phase::Host, || {
+            for ((m, v), tau) in self.tau_m.iter_mut().zip(self.tau_v.iter_mut())
+                .zip(self.pending_taus.iter())
+            {
+                for i in 0..tau.len() {
+                    m[i] = b1 * m[i] + (1.0 - b1) * kappa * tau[i];
+                    v[i] = b2 * v[i] + (1.0 - b2) * kappa * kappa * tau[i] * tau[i];
+                }
+            }
+        });
+        // bias correction commutes with the linear reconstruction, so the
+        // corrected vectors are what the artifact receives
+        let (bc1, bc2) = if ctx.cfg.bias_correction {
+            (1.0 - b1.powi(self.t as i32), 1.0 - b2.powi(self.t as i32))
+        } else {
+            (1.0, 1.0)
+        };
+        let tau_m_hat: Vec<Vec<f32>> = self
+            .tau_m
+            .iter()
+            .map(|m| m.iter().map(|&x| x / bc1.max(1e-12)).collect())
+            .collect();
+        let tau_v_hat: Vec<Vec<f32>> = self
+            .tau_v
+            .iter()
+            .map(|v| v.iter().map(|&x| (x / bc2.max(1e-12)).max(0.0)).collect())
+            .collect();
+
+        let seed = ctx.step_seed();
+        let mut call = ctx
+            .rt
+            .call("tezo_update_adam")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.factors.us.iter())?
+            .bufs(self.factors.vs.iter())?;
+        for t in &tau_m_hat {
+            call = call.arg(ArgValue::F32(t))?;
+        }
+        for t in &tau_v_hat {
+            call = call.arg(ArgValue::F32(t))?;
+        }
+        let call = call
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(ctx.lr))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.eps))?
+            .arg(ArgValue::ScalarF32(ctx.lr * kappa))?;
+        let out = ctx.timers.time(Phase::Update, || call.run())?;
+        ctx.params.replace_all(out)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        let tau: u64 = self.tau_m.iter().map(|v| v.len() as u64).sum();
+        self.factors.factor_elems * 4 + 2 * tau * 4
+    }
+}

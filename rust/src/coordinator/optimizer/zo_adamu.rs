@@ -1,0 +1,92 @@
+//! ZO-AdaMU driver (Jiang et al. 2024): the perturbation itself is adapted
+//! by the momentum of past perturbation directions
+//! (`z = sqrt(1-a) z_rand + sqrt(a) m_pert`), and updates are scaled by an
+//! Adam-style second moment. Full-size `m_pert` and `v` states, so its
+//! memory footprint is MeZO-Adam-like (paper Table 4 baseline).
+
+use anyhow::Result;
+
+use crate::config::Method;
+use crate::coordinator::metrics::Phase;
+use crate::runtime::exec::scalar_f32;
+use crate::runtime::{ArgValue, Runtime};
+
+use super::{matrix_elems, param_elems, vector_elems, zeros_like_params, ForwardOut,
+            StepCtx, ZoOptimizer};
+
+pub struct ZoAdamu {
+    m_pert: Vec<xla::PjRtBuffer>,
+    v: Vec<xla::PjRtBuffer>,
+    elems: u64,
+    t: u64,
+}
+
+impl ZoAdamu {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(Self {
+            m_pert: zeros_like_params(rt)?,
+            v: zeros_like_params(rt)?,
+            elems: param_elems(rt),
+            t: 0,
+        })
+    }
+}
+
+impl ZoOptimizer for ZoAdamu {
+    fn method(&self) -> Method {
+        Method::ZoAdamu
+    }
+
+    fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
+        let seed = ctx.step_seed();
+        ctx.counter.add_matrix(matrix_elems(ctx.rt));
+        ctx.counter.add_vector(vector_elems(ctx.rt));
+        let call = ctx
+            .rt
+            .call("adamu_loss_pm")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.m_pert.iter())?
+            .arg(ArgValue::I32(&ctx.batch.tokens))?
+            .arg(ArgValue::I32(&ctx.batch.targets))?
+            .arg(ArgValue::F32(&ctx.batch.mask))?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.rho))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.adamu_alpha))?;
+        let out = ctx.timers.time(Phase::Forward, || call.run())?;
+        Ok(ForwardOut::TwoPoint {
+            f_plus: scalar_f32(&out[0])?,
+            f_minus: scalar_f32(&out[1])?,
+        })
+    }
+
+    fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
+        self.t += 1;
+        let seed = ctx.step_seed();
+        let n = ctx.params.len();
+        let call = ctx
+            .rt
+            .call("adamu_update")?
+            .bufs(ctx.params.bufs())?
+            .bufs(self.m_pert.iter())?
+            .bufs(self.v.iter())?
+            .arg(ArgValue::ScalarU32(seed))?
+            .arg(ArgValue::ScalarF32(kappa))?
+            .arg(ArgValue::ScalarF32(ctx.lr))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.adamu_alpha))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.beta2))?
+            .arg(ArgValue::ScalarF32(ctx.cfg.eps))?
+            .arg(ArgValue::ScalarF32(self.t as f32))?;
+        let mut out = ctx.timers.time(Phase::Update, || call.run())?;
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        ctx.params.replace_all(out)?;
+        self.m_pert = new_m;
+        self.v = new_v;
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        2 * self.elems * 4
+    }
+}

@@ -1,0 +1,95 @@
+//! ZO-gradient diagnostics through the live runtime.
+//!
+//! At fixed parameters and a fixed batch, resample the perturbation seed k
+//! times and study the distribution of the projected gradient
+//! ``kappa = (f+ - f-) / (2 rho)``:
+//!
+//! * `E[kappa^2]` estimates `E[<g, Z>^2] / ||...||` up to the estimator's
+//!   variance constant — Theorem 1's delta shows up as the *ratio* of
+//!   kappa-second-moments between estimators with different (m, n, r);
+//! * the sign consistency of kappa across seeds measures how informative a
+//!   single two-point probe is at the current point (the quantity that
+//!   makes ZO fine-tuning work at all).
+//!
+//! `tezo probe-variance` exposes this per method; EXPERIMENTS.md E11 uses
+//! it as the live-system complement to the Monte-Carlo Theorem-1 tests.
+
+use anyhow::Result;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::counter::SampleCounter;
+use crate::coordinator::metrics::PhaseTimers;
+use crate::coordinator::optimizer::{build_optimizer, ForwardOut, StepCtx};
+use crate::coordinator::seeds::SeedSchedule;
+use crate::data::Batch;
+use crate::runtime::{ParamStore, Runtime};
+use crate::tensor::stats;
+
+/// Distribution summary of kappa over `k` independent seeds.
+#[derive(Clone, Debug)]
+pub struct KappaStats {
+    pub method: Method,
+    pub samples: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub second_moment: f64,
+    /// fraction of draws agreeing with the majority sign
+    pub sign_consistency: f64,
+}
+
+/// Probe the kappa distribution for `method` at the given parameters.
+///
+/// Uses sub-perturbation indices of step 0 so every draw is an independent
+/// stream from the schedule without advancing training state. The update
+/// phase never runs — parameters are untouched.
+pub fn kappa_distribution(rt: &Runtime, params: &mut ParamStore, batch: &Batch,
+                          method: Method, rho: f32, k: usize, seed: u64)
+                          -> Result<KappaStats> {
+    let cfg = TrainConfig { method, rho, seed, ..Default::default() };
+    let seeds = SeedSchedule::new(seed);
+    let mut driver = build_optimizer(rt, &cfg, &seeds)?;
+    let mut timers = PhaseTimers::default();
+    let mut counter = SampleCounter::default();
+    let mut kappas = Vec::with_capacity(k);
+    for i in 0..k {
+        // walk the *step* index (sub is capped at 64 by the schedule)
+        let mut ctx = StepCtx {
+            rt,
+            params,
+            batch,
+            cfg: &cfg,
+            seeds: &seeds,
+            step: i as u64,
+            sub: 0,
+            lr: cfg.lr,
+            timers: &mut timers,
+            counter: &mut counter,
+        };
+        match driver.forward(&mut ctx)? {
+            ForwardOut::TwoPoint { f_plus, f_minus } => {
+                kappas.push(((f_plus - f_minus) / (2.0 * rho)) as f64);
+            }
+            ForwardOut::Loss(_) => {
+                anyhow::bail!("probe requires a ZO method");
+            }
+        }
+    }
+    let mean = stats::mean(&kappas);
+    let std = stats::std_dev(&kappas);
+    let m2 = kappas.iter().map(|k| k * k).sum::<f64>() / kappas.len() as f64;
+    let pos = kappas.iter().filter(|&&k| k > 0.0).count();
+    let sign = pos.max(kappas.len() - pos) as f64 / kappas.len() as f64;
+    Ok(KappaStats {
+        method,
+        samples: k,
+        mean,
+        std,
+        second_moment: m2,
+        sign_consistency: sign,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // runtime-dependent tests live in rust/tests/integration_train.rs
+}

@@ -1,0 +1,84 @@
+//! Eq.(7) layer-wise rank selection, re-derived in Rust.
+//!
+//! The AOT pipeline bakes the rank schedule into artifact shapes (ranks are
+//! compile-time). This module recomputes the schedule from the *shipped
+//! initial weights* with the in-tree SVD and cross-checks the manifest —
+//! the `tezo rank-probe` command and an integration test both run it.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::runtime::{Manifest, ParamStore};
+use crate::tensor::svd;
+
+/// Block index of a parameter (mirrors configs.py `block_of`).
+pub fn block_of(name: &str, n_layers: usize) -> usize {
+    if let Some(rest) = name.strip_prefix("block") {
+        if let Some(dot) = rest.find('.') {
+            if let Ok(i) = rest[..dot].parse::<usize>() {
+                return i;
+            }
+        }
+    }
+    if name.starts_with("embed") {
+        0
+    } else {
+        n_layers.saturating_sub(1)
+    }
+}
+
+/// Recompute the Eq.(7) schedule from the current parameter values.
+/// Returns name -> rank for every 2D weight.
+pub fn rank_schedule(manifest: &Manifest, params: &ParamStore)
+                     -> Result<BTreeMap<String, usize>> {
+    let threshold = manifest.config.rank_threshold;
+    let r_max = manifest.config.r_max;
+    let n_layers = manifest.config.n_layers;
+    // per-block min of Rank(W)
+    let mut block_rank: BTreeMap<usize, usize> = BTreeMap::new();
+    for p in manifest.matrix_params() {
+        let w = params.fetch_matrix(&p.name)?;
+        let r = svd::rank_at_threshold(&w, threshold, r_max, 0xEC7)?;
+        let b = block_of(&p.name, n_layers);
+        block_rank
+            .entry(b)
+            .and_modify(|cur| *cur = (*cur).min(r))
+            .or_insert(r);
+    }
+    let mut out = BTreeMap::new();
+    for p in manifest.matrix_params() {
+        let b = block_of(&p.name, n_layers);
+        out.insert(p.name.clone(), block_rank[&b].min(r_max).max(1));
+    }
+    Ok(out)
+}
+
+/// Compare the recomputed schedule against the manifest's baked ranks.
+/// Returns mismatches as (name, manifest_rank, recomputed_rank).
+pub fn verify_against_manifest(manifest: &Manifest, params: &ParamStore)
+                               -> Result<Vec<(String, usize, usize)>> {
+    let ours = rank_schedule(manifest, params)?;
+    let mut mismatches = Vec::new();
+    for mr in &manifest.matrix_ranks {
+        let got = ours.get(&mr.name).copied().unwrap_or(0);
+        if got != mr.rank {
+            mismatches.push((mr.name.clone(), mr.rank, got));
+        }
+    }
+    Ok(mismatches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_of_matches_python() {
+        assert_eq!(block_of("embed.tok", 4), 0);
+        assert_eq!(block_of("embed.pos", 4), 0);
+        assert_eq!(block_of("block0.attn.wq", 4), 0);
+        assert_eq!(block_of("block3.ffn.w2", 4), 3);
+        assert_eq!(block_of("final_ln.g", 4), 3);
+    }
+}

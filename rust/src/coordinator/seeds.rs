@@ -1,0 +1,109 @@
+//! The resampling-technique seed schedule.
+//!
+//! MeZO's memory trick (adopted by all ZO methods here): instead of storing
+//! the perturbation, store the 4-byte step seed and regenerate identical
+//! draws in the perturb and update phases. The schedule derives independent
+//! u32 seeds per step (and per purpose) from one master seed via splitmix
+//! mixing, so whole runs replay bit-identically from `TrainConfig::seed`.
+
+use crate::rngx::SplitMix64;
+
+/// Deterministic per-step seed derivation.
+#[derive(Clone, Copy, Debug)]
+pub struct SeedSchedule {
+    master: u64,
+}
+
+/// Purpose tags keep independent streams from colliding.
+#[derive(Clone, Copy, Debug)]
+pub enum Stream {
+    /// the ZO perturbation seed handed to loss_pm/update artifacts
+    Perturb,
+    /// factor initialization (TeZO u/v panels)
+    FactorInit,
+    /// lazy-window refresh (LOZO U, SubZO U/V)
+    LazyRefresh,
+    /// batch sampling
+    Data,
+}
+
+impl Stream {
+    fn salt(self) -> u64 {
+        match self {
+            Stream::Perturb => 0x5045_5254,
+            Stream::FactorInit => 0x4641_4354,
+            Stream::LazyRefresh => 0x4C41_5A59,
+            Stream::Data => 0x4441_5441,
+        }
+    }
+}
+
+impl SeedSchedule {
+    pub fn new(master: u64) -> Self {
+        Self { master }
+    }
+
+    /// 64-bit seed for (stream, index).
+    pub fn seed64(&self, stream: Stream, index: u64) -> u64 {
+        SplitMix64::mix(self.master ^ stream.salt(), index)
+    }
+
+    /// u32 seed (what the artifacts take); never 0 so PRNGKey(0) — the
+    /// jax default key — cannot collide with a scheduled step.
+    pub fn seed32(&self, stream: Stream, index: u64) -> u32 {
+        let s = (self.seed64(stream, index) >> 16) as u32;
+        if s == 0 { 1 } else { s }
+    }
+
+    /// Index of sub-perturbation `sub` of `step` (q-SPSA; sub < 64).
+    pub fn perturb_index(step: u64, sub: u32) -> u64 {
+        debug_assert!(sub < 64);
+        (step << 6) | sub as u64
+    }
+
+    /// The per-(step, sub) perturbation seed.
+    pub fn perturb_seed(&self, step: u64, sub: u32) -> u32 {
+        self.seed32(Stream::Perturb, Self::perturb_index(step, sub))
+    }
+
+    /// The per-step perturbation seed (sub = 0).
+    pub fn step_seed(&self, step: u64) -> u32 {
+        self.perturb_seed(step, 0)
+    }
+
+    /// Lazy-window seed for the window containing `step`.
+    pub fn window_seed(&self, step: u64, interval: usize) -> u32 {
+        let window = if interval == 0 { 0 } else { step / interval as u64 };
+        self.seed32(Stream::LazyRefresh, window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_are_deterministic_and_distinct() {
+        let s = SeedSchedule::new(42);
+        assert_eq!(s.step_seed(5), s.step_seed(5));
+        assert_ne!(s.step_seed(5), s.step_seed(6));
+        assert_ne!(s.seed32(Stream::Perturb, 5), s.seed32(Stream::Data, 5));
+    }
+
+    #[test]
+    fn window_seed_constant_within_window() {
+        let s = SeedSchedule::new(7);
+        assert_eq!(s.window_seed(0, 50), s.window_seed(49, 50));
+        assert_ne!(s.window_seed(49, 50), s.window_seed(50, 50));
+    }
+
+    #[test]
+    fn no_low_entropy_collisions() {
+        let s = SeedSchedule::new(0);
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..10_000u64 {
+            seen.insert(s.step_seed(step));
+        }
+        assert!(seen.len() > 9_990, "too many collisions: {}", seen.len());
+    }
+}

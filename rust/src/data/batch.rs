@@ -1,0 +1,172 @@
+//! Few-shot sampling and batching (the paper's k=16 / k=512 protocol).
+
+use crate::rngx::{SplitMix64, Xoshiro256};
+
+use super::corpus::Corpus;
+use super::tasks::Task;
+
+/// One model-ready batch (row-major, shapes [B, S]).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// SEP positions (eval) — one per row
+    pub positions: Vec<i32>,
+    /// gold labels — one per row (classification tasks)
+    pub labels: Vec<usize>,
+}
+
+impl Batch {
+    pub fn empty(batch: usize, seq_len: usize) -> Self {
+        Self {
+            batch,
+            seq_len,
+            tokens: vec![0; batch * seq_len],
+            targets: vec![0; batch * seq_len],
+            mask: vec![0.0; batch * seq_len],
+            positions: vec![0; batch],
+            labels: vec![0; batch],
+        }
+    }
+
+    fn set_row(&mut self, row: usize, tokens: &[i32], targets: &[i32], mask: &[f32],
+               pos: usize, label: usize) {
+        let s = self.seq_len;
+        self.tokens[row * s..(row + 1) * s].copy_from_slice(tokens);
+        self.targets[row * s..(row + 1) * s].copy_from_slice(targets);
+        self.mask[row * s..(row + 1) * s].copy_from_slice(mask);
+        self.positions[row] = pos as i32;
+        self.labels[row] = label;
+    }
+}
+
+/// Few-shot training pool + batch sampler for one task.
+///
+/// `k` examples **per class** form the training pool (the paper's k=16 /
+/// k=512 settings); batches sample uniformly from the pool with the step
+/// seed, so the whole data order is reproducible from the master seed.
+#[derive(Clone, Debug)]
+pub struct BatchBuilder {
+    pub task: Task,
+    pub batch: usize,
+    pub k_shot: usize,
+    /// train-pool example indices (k per class, deterministic)
+    pub pool: Vec<u64>,
+}
+
+impl BatchBuilder {
+    pub fn new(task: Task, batch: usize, k_shot: usize) -> Self {
+        // scan split-0 example indices until k per class are collected
+        let classes = task.spec.n_classes;
+        let mut per_class = vec![0usize; classes];
+        let mut pool = Vec::with_capacity(classes * k_shot);
+        let mut idx = 0u64;
+        while pool.len() < classes * k_shot && idx < (classes * k_shot * 64) as u64 {
+            let ex = task.example(0, idx);
+            if per_class[ex.label] < k_shot {
+                per_class[ex.label] += 1;
+                pool.push(idx);
+            }
+            idx += 1;
+        }
+        Self { task, batch, k_shot, pool }
+    }
+
+    /// Training batch for `step` (seeded by `master_seed`).
+    pub fn train_batch(&self, master_seed: u64, step: u64) -> Batch {
+        let mut rng = Xoshiro256::seed_from(SplitMix64::mix(master_seed ^ 0xBA7C, step));
+        let mut b = Batch::empty(self.batch, self.task.seq_len);
+        for row in 0..self.batch {
+            let pick = self.pool[rng.index(self.pool.len())];
+            let ex = self.task.example(0, pick);
+            b.set_row(row, &ex.tokens, &ex.targets, &ex.mask, ex.sep_pos, ex.label);
+        }
+        b
+    }
+
+    /// Deterministic eval batches covering `n_eval` held-out examples.
+    pub fn eval_batches(&self, n_eval: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut i = 0u64;
+        while (i as usize) < n_eval {
+            let mut b = Batch::empty(self.batch, self.task.seq_len);
+            for row in 0..self.batch {
+                let ex = self.task.eval_example(i);
+                b.set_row(row, &ex.tokens, &ex.targets, &ex.mask, ex.sep_pos, ex.label);
+                i += 1;
+            }
+            out.push(b);
+        }
+        out
+    }
+
+    /// LM batch from a corpus (end-to-end driver).
+    pub fn corpus_batch(corpus: &Corpus, batch: usize, master_seed: u64, step: u64) -> Batch {
+        let mut b = Batch::empty(batch, corpus.seq_len);
+        for row in 0..batch {
+            let idx = SplitMix64::mix(master_seed, step * batch as u64 + row as u64);
+            let (tokens, targets, mask) = corpus.sequence(idx % (1 << 20));
+            b.set_row(row, &tokens, &targets, &mask, corpus.seq_len - 1, 0);
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::spec_by_name;
+    use crate::data::tokenizer::Tokenizer;
+
+    fn builder(k: usize) -> BatchBuilder {
+        let task = Task::new(spec_by_name("sst2").unwrap(), Tokenizer::new(512), 64, 0);
+        BatchBuilder::new(task, 4, k)
+    }
+
+    #[test]
+    fn pool_is_class_balanced() {
+        let bb = builder(16);
+        assert_eq!(bb.pool.len(), 32);
+        let labels: Vec<usize> = bb.pool.iter().map(|&i| bb.task.example(0, i).label).collect();
+        assert_eq!(labels.iter().filter(|&&l| l == 0).count(), 16);
+        assert_eq!(labels.iter().filter(|&&l| l == 1).count(), 16);
+    }
+
+    #[test]
+    fn train_batches_are_reproducible() {
+        let bb = builder(16);
+        let a = bb.train_batch(42, 3);
+        let b = bb.train_batch(42, 3);
+        assert_eq!(a.tokens, b.tokens);
+        let c = bb.train_batch(42, 4);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn eval_batches_cover_requested_count() {
+        let bb = builder(4);
+        let evs = bb.eval_batches(10);
+        assert_eq!(evs.len(), 3); // ceil(10/4)
+        // eval rows never contain the gold label after SEP
+        for b in &evs {
+            for row in 0..b.batch {
+                let pos = b.positions[row] as usize;
+                assert_eq!(b.tokens[row * b.seq_len + pos + 1], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rows_match_examples() {
+        let bb = builder(8);
+        let b = bb.train_batch(7, 0);
+        assert_eq!(b.tokens.len(), 4 * 64);
+        for row in 0..4 {
+            let pos = b.positions[row] as usize;
+            assert!(b.mask[row * 64 + pos] > 0.0);
+        }
+    }
+}

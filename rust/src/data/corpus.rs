@@ -1,0 +1,103 @@
+//! Synthetic corpus for the end-to-end LM training driver.
+//!
+//! A first-order Markov chain over the word region with Zipf-ish unigram
+//! marginals: enough sequential structure that a causal LM has real bits to
+//! learn (loss drops substantially below the uniform baseline), generated
+//! deterministically so runs reproduce.
+
+use crate::rngx::{SplitMix64, Xoshiro256};
+
+use super::tokenizer::{Tokenizer, BOS, PAD};
+
+/// Markov-chain corpus generator.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub tok: Tokenizer,
+    pub seq_len: usize,
+    seed: u64,
+    /// per-state successor tables: state -> K candidate next words
+    branch: usize,
+    states: usize,
+}
+
+impl Corpus {
+    pub fn new(tok: Tokenizer, seq_len: usize, seed: u64) -> Self {
+        let states = tok.n_words().min(4096);
+        Self { tok, seq_len, seed, branch: 8, states }
+    }
+
+    /// The successor table of `state` (deterministic function).
+    fn successors(&self, state: usize) -> Vec<usize> {
+        let mut rng =
+            Xoshiro256::seed_from(SplitMix64::mix(self.seed ^ CORPUS_SALT, state as u64));
+        (0..self.branch).map(|_| rng.index(self.states)).collect()
+    }
+
+    /// Sequence `index`: (tokens, targets, mask) padded to seq_len.
+    pub fn sequence(&self, index: u64) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut rng = Xoshiro256::seed_from(SplitMix64::mix(self.seed, index));
+        let mut tokens = Vec::with_capacity(self.seq_len);
+        tokens.push(BOS);
+        let mut state = rng.index(self.states);
+        for _ in 1..self.seq_len {
+            tokens.push(self.tok.word_token(state));
+            let succ = self.successors(state);
+            // Zipf-ish: lower branch indices much more likely
+            let u = rng.next_f64();
+            let pick = ((self.branch as f64).powf(u) - 1.0) as usize;
+            state = succ[pick.min(self.branch - 1)];
+        }
+        let mut targets = vec![PAD; self.seq_len];
+        let mut mask = vec![0.0f32; self.seq_len];
+        for i in 0..self.seq_len - 1 {
+            targets[i] = tokens[i + 1];
+            mask[i] = 1.0;
+        }
+        (tokens, targets, mask)
+    }
+}
+
+/// Seed salt separating the transition-table stream from the data stream.
+const CORPUS_SALT: u64 = 0x1234_5678_9ABC_DEF0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(Tokenizer::new(2048), 64, 1)
+    }
+
+    #[test]
+    fn sequences_are_deterministic() {
+        let c = corpus();
+        assert_eq!(c.sequence(3), c.sequence(3));
+        assert_ne!(c.sequence(3).0, c.sequence(4).0);
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // bigram entropy must be far below unigram entropy: count distinct
+        // successors actually observed per state
+        let c = corpus();
+        use std::collections::{HashMap, HashSet};
+        let mut succ: HashMap<i32, HashSet<i32>> = HashMap::new();
+        for idx in 0..200 {
+            let (toks, _, _) = c.sequence(idx);
+            for w in toks.windows(2) {
+                if w[0] >= 11 && w[1] >= 11 {
+                    succ.entry(w[0]).or_default().insert(w[1]);
+                }
+            }
+        }
+        let avg: f64 = succ.values().map(|s| s.len() as f64).sum::<f64>() / succ.len() as f64;
+        assert!(avg <= c.branch as f64 + 1.0, "avg successors {avg} too high");
+    }
+
+    #[test]
+    fn mask_covers_all_but_last() {
+        let c = corpus();
+        let (_, _, mask) = c.sequence(0);
+        assert_eq!(mask.iter().filter(|&&m| m > 0.0).count(), c.seq_len - 1);
+    }
+}

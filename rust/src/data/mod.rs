@@ -1,0 +1,25 @@
+//! Dataset substrate: synthetic tasks + corpus shaped like the paper's
+//! evaluation suite.
+//!
+//! The paper fine-tunes pretrained LLMs on 16 GLUE/SuperGLUE/QA datasets
+//! with the MeZO protocol (classification-as-LM: the prompt ends in a
+//! verbalizer slot; the loss is the LM loss at that slot; accuracy is the
+//! argmax over per-class verbalizer tokens). Offline we reproduce the
+//! *protocol* exactly and substitute the text with planted-signal synthetic
+//! tasks ([`tasks`]): each class is correlated with a set of signal tokens,
+//! so fine-tuning has a real, learnable objective and optimizers separate by
+//! convergence speed. DESIGN.md §2 documents the substitution.
+//!
+//! [`corpus`] provides a Markov-chain language for the end-to-end LM
+//! training driver; [`tokenizer`] owns the vocabulary layout shared by all
+//! of it.
+
+pub mod batch;
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batch::{Batch, BatchBuilder};
+pub use corpus::Corpus;
+pub use tasks::{Example, Task, TaskSpec, ALL_TASKS};
+pub use tokenizer::Tokenizer;

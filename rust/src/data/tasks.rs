@@ -1,0 +1,226 @@
+//! The 16 synthetic evaluation tasks (paper Tables 3/4/5 datasets).
+//!
+//! Each task plants per-class *signal tokens*: an example of class `c` mixes
+//! background words with signal words drawn from class `c`'s signal set. The
+//! label verbalizer follows a SEP marker, MeZO-style, and the LM loss is
+//! taken at the SEP position only. Difficulty is controlled by the signal
+//! fraction and the signal-set overlap; the per-task shapes (class count,
+//! prompt length) mirror the original datasets.
+
+use crate::rngx::{SplitMix64, Xoshiro256};
+
+use super::tokenizer::{Tokenizer, BOS, PAD, SEP};
+
+/// Static description of one task.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub n_classes: usize,
+    /// words in the prompt body
+    pub prompt_len: usize,
+    /// fraction of prompt words drawn from the class signal set
+    pub signal_frac: f64,
+    /// signal words per class
+    pub signal_words: usize,
+    /// which paper table the task appears in (3, 4, or 5)
+    pub table: u8,
+}
+
+/// The 16 datasets of the paper, shaped like the originals (class counts;
+/// longer prompts for the QA-style sets). Generation-style tasks (ReCoRD,
+/// SQuAD, DROP) are represented as verbalized classification over candidate
+/// answers, which is how their ZO accuracy is scored in our harness.
+pub const ALL_TASKS: [TaskSpec; 16] = [
+    TaskSpec { name: "sst2", n_classes: 2, prompt_len: 24, signal_frac: 0.30, signal_words: 12, table: 4 },
+    TaskSpec { name: "sst5", n_classes: 5, prompt_len: 24, signal_frac: 0.35, signal_words: 12, table: 3 },
+    TaskSpec { name: "snli", n_classes: 3, prompt_len: 36, signal_frac: 0.30, signal_words: 14, table: 3 },
+    TaskSpec { name: "mnli", n_classes: 3, prompt_len: 40, signal_frac: 0.28, signal_words: 14, table: 3 },
+    TaskSpec { name: "qnli", n_classes: 2, prompt_len: 40, signal_frac: 0.26, signal_words: 12, table: 3 },
+    TaskSpec { name: "trec", n_classes: 6, prompt_len: 16, signal_frac: 0.40, signal_words: 10, table: 3 },
+    TaskSpec { name: "rte", n_classes: 2, prompt_len: 44, signal_frac: 0.24, signal_words: 12, table: 4 },
+    TaskSpec { name: "cb", n_classes: 3, prompt_len: 44, signal_frac: 0.30, signal_words: 10, table: 4 },
+    TaskSpec { name: "boolq", n_classes: 2, prompt_len: 52, signal_frac: 0.22, signal_words: 12, table: 4 },
+    TaskSpec { name: "wsc", n_classes: 2, prompt_len: 28, signal_frac: 0.18, signal_words: 8, table: 4 },
+    TaskSpec { name: "wic", n_classes: 2, prompt_len: 30, signal_frac: 0.20, signal_words: 8, table: 4 },
+    TaskSpec { name: "multirc", n_classes: 2, prompt_len: 56, signal_frac: 0.20, signal_words: 12, table: 4 },
+    TaskSpec { name: "copa", n_classes: 2, prompt_len: 20, signal_frac: 0.34, signal_words: 8, table: 4 },
+    TaskSpec { name: "record", n_classes: 4, prompt_len: 56, signal_frac: 0.26, signal_words: 12, table: 4 },
+    TaskSpec { name: "squad", n_classes: 4, prompt_len: 60, signal_frac: 0.26, signal_words: 12, table: 4 },
+    TaskSpec { name: "drop", n_classes: 4, prompt_len: 60, signal_frac: 0.18, signal_words: 10, table: 4 },
+];
+
+pub fn spec_by_name(name: &str) -> Option<&'static TaskSpec> {
+    ALL_TASKS.iter().find(|t| t.name == name)
+}
+
+/// One encoded example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    /// padded token row, length = seq_len; includes the gold label token
+    /// after SEP (teacher forcing for training)
+    pub tokens: Vec<i32>,
+    /// next-token targets (tokens shifted left; PAD beyond)
+    pub targets: Vec<i32>,
+    /// 1.0 exactly at the SEP position (predicting the verbalizer)
+    pub mask: Vec<f32>,
+    /// position of SEP (where eval reads logits)
+    pub sep_pos: usize,
+    pub label: usize,
+}
+
+/// A materialized task bound to a tokenizer + sequence length.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub spec: &'static TaskSpec,
+    pub tok: Tokenizer,
+    pub seq_len: usize,
+    /// per-class signal word ids
+    signal: Vec<Vec<i32>>,
+    /// task-level seed
+    seed: u64,
+}
+
+impl Task {
+    pub fn new(spec: &'static TaskSpec, tok: Tokenizer, seq_len: usize, seed: u64) -> Self {
+        let task_seed = SplitMix64::mix(seed, fnv(spec.name));
+        let mut rng = Xoshiro256::seed_from(task_seed);
+        // disjoint-ish signal sets per class
+        let mut signal = Vec::with_capacity(spec.n_classes);
+        for c in 0..spec.n_classes {
+            let mut words = Vec::with_capacity(spec.signal_words);
+            for w in 0..spec.signal_words {
+                // deterministic per (class, w) with random offset per task
+                let base = rng.index(tok.n_words() / 2);
+                words.push(tok.word_token(base * 2 + (c + w) % 2));
+            }
+            signal.push(words);
+        }
+        Self { spec, tok, seq_len, signal, seed: task_seed }
+    }
+
+    /// Deterministically generate example `index` of `split` (0=train,1=eval).
+    pub fn example(&self, split: u32, index: u64) -> Example {
+        let ex_seed = SplitMix64::mix(self.seed ^ (split as u64) << 32, index);
+        let mut rng = Xoshiro256::seed_from(ex_seed);
+        let label = rng.index(self.spec.n_classes);
+        let body_len = self.spec.prompt_len.min(self.seq_len.saturating_sub(4));
+        let mut tokens = Vec::with_capacity(self.seq_len);
+        tokens.push(BOS);
+        for _ in 0..body_len {
+            let is_signal = rng.next_f64() < self.spec.signal_frac;
+            if is_signal {
+                let sig = &self.signal[label];
+                tokens.push(sig[rng.index(sig.len())]);
+            } else {
+                tokens.push(self.tok.word_token(rng.index(self.tok.n_words())));
+            }
+        }
+        let sep_pos = tokens.len();
+        tokens.push(SEP);
+        tokens.push(self.tok.label_token(label));
+        // pad
+        while tokens.len() < self.seq_len {
+            tokens.push(PAD);
+        }
+        tokens.truncate(self.seq_len);
+        // next-token targets + mask at sep
+        let mut targets = vec![PAD; self.seq_len];
+        for i in 0..self.seq_len - 1 {
+            targets[i] = tokens[i + 1];
+        }
+        let mut mask = vec![0.0f32; self.seq_len];
+        if sep_pos < self.seq_len {
+            mask[sep_pos] = 1.0;
+        }
+        Example { tokens, targets, mask, sep_pos, label }
+    }
+
+    /// Eval-time variant: label token replaced by PAD (no leakage).
+    pub fn eval_example(&self, index: u64) -> Example {
+        let mut ex = self.example(1, index);
+        if ex.sep_pos + 1 < ex.tokens.len() {
+            ex.tokens[ex.sep_pos + 1] = PAD;
+        }
+        ex
+    }
+
+    /// The candidate verbalizer token ids for accuracy scoring.
+    pub fn label_tokens(&self) -> Vec<i32> {
+        (0..self.spec.n_classes).map(|c| self.tok.label_token(c)).collect()
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(name: &str) -> Task {
+        Task::new(spec_by_name(name).unwrap(), Tokenizer::new(512), 64, 0)
+    }
+
+    #[test]
+    fn sixteen_tasks_match_paper_inventory() {
+        assert_eq!(ALL_TASKS.len(), 16);
+        let t3: Vec<_> = ALL_TASKS.iter().filter(|t| t.table == 3).collect();
+        assert_eq!(t3.len(), 5); // Table 3: SST-5, SNLI, MNLI, QNLI, TREC
+    }
+
+    #[test]
+    fn examples_are_deterministic() {
+        let t = task("sst2");
+        let a = t.example(0, 7);
+        let b = t.example(0, 7);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.label, b.label);
+        let c = t.example(0, 8);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn example_encodes_protocol() {
+        let t = task("snli");
+        let ex = t.example(0, 3);
+        assert_eq!(ex.tokens[0], BOS);
+        assert_eq!(ex.tokens[ex.sep_pos], SEP);
+        assert_eq!(ex.tokens[ex.sep_pos + 1], t.tok.label_token(ex.label));
+        // mask selects exactly the SEP position
+        assert_eq!(ex.mask.iter().filter(|&&m| m > 0.0).count(), 1);
+        assert!(ex.mask[ex.sep_pos] > 0.0);
+        // target at SEP is the label token
+        assert_eq!(ex.targets[ex.sep_pos], t.tok.label_token(ex.label));
+    }
+
+    #[test]
+    fn eval_example_hides_label() {
+        let t = task("rte");
+        let ex = t.eval_example(5);
+        assert_eq!(ex.tokens[ex.sep_pos + 1], PAD);
+    }
+
+    #[test]
+    fn signal_tokens_differ_by_class() {
+        let t = task("sst2");
+        // count signal-set overlap between the two classes
+        let s0: std::collections::HashSet<_> = t.signal[0].iter().collect();
+        let overlap = t.signal[1].iter().filter(|w| s0.contains(w)).count();
+        assert!(overlap < t.spec.signal_words, "classes fully overlap");
+    }
+
+    #[test]
+    fn labels_are_roughly_balanced() {
+        let t = task("sst2");
+        let n = 2000;
+        let ones = (0..n).filter(|&i| t.example(0, i).label == 1).count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "label balance {frac}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Vocabulary layout + word-piece-lite tokenizer.
+//!
+//! Layout within a vocab of size `V` (V comes from the model manifest):
+//!   0            PAD
+//!   1            BOS
+//!   2            SEP (the verbalizer slot marker)
+//!   3..3+C_MAX   verbalizer/label tokens (one per class, C_MAX = 8)
+//!   11..V        word tokens
+//!
+//! Synthetic words are strings; [`Tokenizer::word_id`] maps them into the
+//! word region deterministically (FNV-1a hash). This is the piece of a real
+//! tokenizer the protocol needs: a stable string->id map with reserved
+//! specials.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const LABEL_BASE: i32 = 3;
+pub const MAX_CLASSES: usize = 8;
+pub const WORD_BASE: i32 = LABEL_BASE + MAX_CLASSES as i32;
+
+/// Deterministic tokenizer over a fixed-size vocabulary.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub vocab: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab as i32 > WORD_BASE + 16, "vocab too small: {vocab}");
+        Self { vocab }
+    }
+
+    /// Number of distinct word tokens.
+    pub fn n_words(&self) -> usize {
+        self.vocab - WORD_BASE as usize
+    }
+
+    /// Label token for class `c`.
+    pub fn label_token(&self, c: usize) -> i32 {
+        assert!(c < MAX_CLASSES);
+        LABEL_BASE + c as i32
+    }
+
+    /// Map a word string into the word region (FNV-1a, stable).
+    pub fn word_id(&self, word: &str) -> i32 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in word.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        WORD_BASE + (h % self.n_words() as u64) as i32
+    }
+
+    /// Word token for an integer "word index" (synthetic streams).
+    pub fn word_token(&self, idx: usize) -> i32 {
+        WORD_BASE + (idx % self.n_words()) as i32
+    }
+
+    /// Is `tok` a padding token?
+    pub fn is_pad(&self, tok: i32) -> bool {
+        tok == PAD
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserved_regions_disjoint() {
+        let t = Tokenizer::new(256);
+        for c in 0..MAX_CLASSES {
+            let l = t.label_token(c);
+            assert!(l >= LABEL_BASE && l < WORD_BASE);
+        }
+        assert!(t.word_id("hello") >= WORD_BASE);
+        assert!(t.word_token(0) >= WORD_BASE);
+        assert!((t.word_token(12345) as usize) < t.vocab);
+    }
+
+    #[test]
+    fn word_id_is_stable() {
+        let t = Tokenizer::new(2048);
+        assert_eq!(t.word_id("gradient"), t.word_id("gradient"));
+        assert_ne!(t.word_id("gradient"), t.word_id("hessian"));
+    }
+}

@@ -1,0 +1,53 @@
+//! JSON substrate (the offline registry has no `serde`/`serde_json`).
+//!
+//! A small, strict JSON parser + writer sufficient for manifest.json and
+//! metric/report emission. Parses into a [`Value`] tree with typed accessors
+//! that return `anyhow` errors carrying the access path.
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::parse;
+pub use value::Value;
+pub use write::to_string_pretty;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": "x\ny", "d": true, "e": null}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().idx(1).unwrap().as_f64().unwrap(), 2.5);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str().unwrap(), "x\ny");
+        assert!(v.get("b").unwrap().get("d").unwrap().as_bool().unwrap());
+        assert!(v.get("b").unwrap().get("e").unwrap().is_null());
+        // re-serialize and re-parse: must be identical trees
+        let txt = to_string_pretty(&v);
+        let v2 = parse(&txt).unwrap();
+        assert_eq!(to_string_pretty(&v2), txt);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["{", "[1,]", "{\"a\":}", "tru", "\"\\q\"", "1.2.3", ""] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = parse(r#""Aé""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "Aé");
+    }
+
+    #[test]
+    fn integers_preserved() {
+        let v = parse("[0, 9007199254740993, -12]").unwrap();
+        assert_eq!(v.idx(1).unwrap().as_i64().unwrap(), 9007199254740993);
+        assert_eq!(v.idx(2).unwrap().as_i64().unwrap(), -12);
+    }
+}

@@ -1,0 +1,133 @@
+//! JSON value tree + typed accessors.
+
+use anyhow::{anyhow, Result};
+
+/// A parsed JSON value. Numbers keep an integer/float distinction so that
+/// shape/seed fields survive exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Object(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(anyhow!("expected bool, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Float(f) if f.fract() == 0.0 => Ok(*f as i64),
+            other => Err(anyhow!("expected integer, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        usize::try_from(i).map_err(|_| anyhow!("negative integer {i}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            other => Err(anyhow!("expected number, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(anyhow!("expected string, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(a) => Ok(a),
+            other => Err(anyhow!("expected array, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_object(&self) -> Result<&[(String, Value)]> {
+        match self {
+            Value::Object(o) => Ok(o),
+            other => Err(anyhow!("expected object, got {}", other.kind())),
+        }
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        let obj = self.as_object()?;
+        obj.iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    /// Array index lookup.
+    pub fn idx(&self, i: usize) -> Result<&Value> {
+        let arr = self.as_array()?;
+        arr.get(i).ok_or_else(|| anyhow!("index {i} out of bounds ({})", arr.len()))
+    }
+
+    /// Convenience: `get(key)` then `as_usize`.
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.as_usize().map_err(|e| anyhow!("{key}: {e}"))
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.get(key)?.as_str().map_err(|e| anyhow!("{key}: {e}"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.as_f64().map_err(|e| anyhow!("{key}: {e}"))
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Str(_) => "string",
+            Value::Array(_) => "array",
+            Value::Object(_) => "object",
+        }
+    }
+
+    // ---- builders for report emission ---------------------------------
+
+    pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+        Value::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr(items: Vec<Value>) -> Value {
+        Value::Array(items)
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    pub fn f(x: f64) -> Value {
+        Value::Float(x)
+    }
+
+    pub fn i(x: i64) -> Value {
+        Value::Int(x)
+    }
+}

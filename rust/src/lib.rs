@@ -1,0 +1,47 @@
+//! # TeZO — temporal low-rank zeroth-order optimization for fine-tuning LLMs
+//!
+//! Rust + JAX + Pallas reproduction of *TeZO: Empowering the Low-Rankness on
+//! the Temporal Dimension in the Zeroth-Order Optimization for Fine-tuning
+//! LLMs* (CS.LG 2025).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`).
+//! * **L2** — JAX model + per-optimizer step functions, AOT-lowered to HLO
+//!   text artifacts (`python/compile/`).
+//! * **L3** — this crate: the fine-tuning coordinator. It loads the HLO
+//!   artifacts through PJRT ([`runtime`]), owns all training state
+//!   ([`coordinator`]), and provides the datasets, memory model, benchmark
+//!   harness, and CLI of the evaluation suite.
+//!
+//! Python never runs at training time: after `make artifacts` the `tezo`
+//! binary is self-contained.
+//!
+//! ## Substrate modules
+//!
+//! The offline build environment provides only the `xla` crate, so the
+//! usual ecosystem crates are replaced by in-tree substrates: [`rngx`]
+//! (deterministic RNG), [`jsonx`] (JSON), [`clix`] (CLI parsing),
+//! [`benchkit`] (criterion-style benching), [`proplite`] (property
+//! testing), [`tensor`] (host linear algebra incl. top-k SVD).
+
+pub mod benchkit;
+pub mod clix;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod jsonx;
+pub mod memmodel;
+pub mod proplite;
+pub mod rngx;
+pub mod runtime;
+pub mod tensor;
+
+/// Repository-level version string (also printed by `tezo --version`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Resolve the artifacts root: `$TEZO_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_root() -> std::path::PathBuf {
+    std::env::var_os("TEZO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

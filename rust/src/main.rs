@@ -1,0 +1,510 @@
+//! `tezo` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train          fine-tune one task with one method
+//!   sweep          run the Table 3/4/5 method x task grids (or --list for Table 6)
+//!   memory-report  render Table 7 / Table 9 / Fig 1(c) from the memory model
+//!   rank-probe     recompute the Eq.(7) rank schedule and check the manifest
+//!   inspect        artifact inventory + compile times for a config
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use tezo::clix::{self, ArgSpec};
+use tezo::config::{search_space, Method, TrainConfig};
+use tezo::coordinator::rank;
+use tezo::coordinator::trainer::{DataSource, Trainer};
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::memmodel::tables;
+use tezo::runtime::{ParamStore, Runtime};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd {
+        "train" => cmd_train(rest),
+        "sweep" => cmd_sweep(rest),
+        "memory-report" => cmd_memory(rest),
+        "rank-probe" => cmd_rank_probe(rest),
+        "probe-variance" => cmd_probe_variance(rest),
+        "generate" => cmd_generate(rest),
+        "inspect" => cmd_inspect(rest),
+        "--version" | "version" => {
+            println!("tezo {}", tezo::VERSION);
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `tezo help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "tezo {} — TeZO reproduction (Rust + JAX + Pallas)\n\n\
+         commands:\n\
+         \x20 train          fine-tune one synthetic task with one method\n\
+         \x20 sweep          Table 3/4/5 grids; --list prints Table 6\n\
+         \x20 memory-report  Table 7 / Table 9 / Fig 1(c) (analytic model)\n\
+         \x20 rank-probe     recompute Eq.(7) ranks, verify vs manifest\n\
+         \x20 probe-variance kappa-distribution diagnostics per ZO method\n\
+         \x20 generate       greedy decoding through the eval artifact\n\
+         \x20 inspect        artifact inventory for a config\n\
+         \x20 help           this message\n\n\
+         run `tezo <command> --help` for flags",
+        tezo::VERSION
+    );
+}
+
+// ---------------------------------------------------------------------------
+// train
+// ---------------------------------------------------------------------------
+
+const TRAIN_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("config", "tiny", "model config (artifacts/<config>)"),
+    ArgSpec::opt("method", "tezo", "optimizer: mezo|mezo-m|mezo-adam|lozo|lozo-m|subzo|zo-adamu|tezo|tezo-m|tezo-adam|fo-adam"),
+    ArgSpec::opt("task", "sst2", "synthetic task name (see data::tasks)"),
+    ArgSpec::opt("steps", "200", "training steps"),
+    ArgSpec::opt("k", "16", "few-shot examples per class"),
+    ArgSpec::opt("lr", "", "learning rate (default: Table-6 preset)"),
+    ArgSpec::opt("rho", "1e-3", "perturbation rate"),
+    ArgSpec::opt("seed", "0", "master seed"),
+    ArgSpec::opt("eval-every", "0", "eval interval (0 = end only)"),
+    ArgSpec::opt("eval-n", "128", "held-out eval examples"),
+    ArgSpec::opt("loss-csv", "", "write the loss curve CSV here"),
+    ArgSpec::opt("lr-schedule", "constant", "constant|linear|cosine"),
+    ArgSpec::opt("kappa-clip", "0", "clip |kappa| at this value (0 = off)"),
+    ArgSpec::opt("n-perturb", "1", "q-SPSA perturbations per step (SGD-form only)"),
+    ArgSpec::opt("save-to", "", "write a parameter checkpoint here at the end"),
+    ArgSpec::opt("init-from", "", "initialize parameters from this checkpoint"),
+    ArgSpec::switch("quiet", "suppress per-step output"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, TRAIN_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("train", "fine-tune one task", TRAIN_SPECS));
+        return Ok(());
+    }
+    let config = args.get_str("config")?;
+    let method = Method::parse(args.get_str("method")?)?;
+    let mut cfg = TrainConfig::with_preset(method, config);
+    cfg.steps = args.get_usize("steps")?;
+    cfg.rho = args.get_f32("rho")?;
+    cfg.seed = args.get_u64("seed")?;
+    cfg.eval_every = args.get_usize("eval-every")?;
+    if let Some(lr) = args.get("lr") {
+        if !lr.is_empty() {
+            cfg.lr = lr.parse()?;
+        }
+    }
+    cfg.lr_schedule = tezo::config::LrSchedule::parse(args.get_str("lr-schedule")?)?;
+    cfg.kappa_clip = args.get_f32("kappa-clip")?;
+    cfg.n_perturb = args.get_usize("n-perturb")?;
+    cfg.validate()?;
+
+    let rt = Runtime::open_config(config)?;
+    let mut params = match args.get("init-from") {
+        Some(dir) if !dir.is_empty() => {
+            let (p, step) = tezo::runtime::checkpoint::load(
+                std::path::Path::new(dir), &rt.client, &rt.manifest)?;
+            println!("initialized from checkpoint @ step {step} ({dir})");
+            p
+        }
+        _ => ParamStore::load(&rt.client, &rt.manifest)?,
+    };
+
+    let task_name = args.get_str("task")?;
+    let spec = tasks::spec_by_name(task_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {task_name:?}"))?;
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(spec, tok, rt.manifest.config.seq_len, cfg.seed);
+    let label_tokens = task.label_tokens();
+    let builder = BatchBuilder::new(task, rt.manifest.config.batch, args.get_usize("k")?);
+    let eval_batches = builder.eval_batches(args.get_usize("eval-n")?);
+
+    let quiet = args.has("quiet");
+    let mut trainer = Trainer::new(&rt, cfg.clone(), DataSource::Task(builder))
+        .with_eval(eval_batches, label_tokens);
+    if !quiet {
+        trainer.on_step = Some(Box::new(|step, loss| {
+            if step % 20 == 0 {
+                println!("step {step:5}  loss {loss:.4}");
+            }
+        }));
+    }
+    let outcome = trainer.run(&mut params)?;
+
+    println!("\n== {} on {} ({} steps) ==", method.name(), args.get_str("task")?, cfg.steps);
+    println!("loss: {:.4} -> {:.4}",
+             outcome.metrics.initial_loss_avg(20), outcome.metrics.final_loss_avg(20));
+    if let Some((step, acc)) = outcome.metrics.evals.last() {
+        println!("accuracy @ step {step}: {:.1}%", acc * 100.0);
+    }
+    println!("wall: {:.1}s ({:.1} ms/step)", outcome.metrics.wall_seconds,
+             outcome.metrics.seconds_per_step() * 1e3);
+    for (name, secs, frac) in outcome.metrics.timers.breakdown() {
+        println!("  {name:9} {secs:8.2}s  {:5.1}%", frac * 100.0);
+    }
+    println!("sampled elements: matrix {} vector {}",
+             outcome.counter.matrix_elements, outcome.counter.vector_elements);
+    println!("optimizer state: {} bytes", outcome.state_bytes);
+    if outcome.skipped > 0 {
+        println!("warning: {} non-finite steps skipped", outcome.skipped);
+    }
+    if let Some(path) = args.get("loss-csv") {
+        if !path.is_empty() {
+            outcome.metrics.write_loss_csv(&PathBuf::from(path))?;
+            println!("loss curve -> {path}");
+        }
+    }
+    if let Some(dir) = args.get("save-to") {
+        if !dir.is_empty() {
+            tezo::runtime::checkpoint::save(std::path::Path::new(dir),
+                                            &rt.manifest, &params,
+                                            cfg.steps as u64)?;
+            println!("checkpoint -> {dir}");
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// sweep
+// ---------------------------------------------------------------------------
+
+const SWEEP_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("config", "tiny", "model config"),
+    ArgSpec::opt("table", "4", "paper table to regenerate: 3|4|5"),
+    ArgSpec::opt("steps", "300", "steps per cell"),
+    ArgSpec::opt("k", "16", "examples per class"),
+    ArgSpec::opt("methods", "", "override method list (comma-separated)"),
+    ArgSpec::opt("csv", "", "write the result grid CSV here"),
+    ArgSpec::switch("list", "print the Table-6 search space and exit"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, SWEEP_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("sweep", "table grids", SWEEP_SPECS));
+        return Ok(());
+    }
+    if args.has("list") {
+        println!("== Table 6 — hyperparameter search space ==");
+        for m in Method::ALL {
+            println!("\n[{}]", m.name());
+            for (k, vs) in search_space(m) {
+                println!("  {k}: {}", vs.join(", "));
+            }
+        }
+        return Ok(());
+    }
+    let table: u8 = args.get_str("table")?.parse()?;
+    let methods: Vec<Method> = match args.get("methods") {
+        Some(ms) if !ms.is_empty() => {
+            ms.split(',').map(Method::parse).collect::<Result<_>>()?
+        }
+        _ => default_methods(table),
+    };
+    let task_names: Vec<&str> = table_tasks(table);
+    println!("sweep table {table}: {} methods x {} tasks", methods.len(), task_names.len());
+
+    let config = args.get_str("config")?;
+    let rt = Runtime::open_config(config)?;
+    let steps = args.get_usize("steps")?;
+    let k = args.get_usize("k")?;
+    let mut rows = Vec::new();
+    for m in &methods {
+        let mut cells = Vec::new();
+        for tname in &task_names {
+            let acc = run_cell(&rt, config, *m, tname, steps, k)?;
+            cells.push(format!("{:.1}", acc * 100.0));
+            println!("  {} / {tname}: {:.1}%", m.name(), acc * 100.0);
+        }
+        rows.push((m.name().to_string(), cells));
+    }
+    println!("\n== Table {table} analogue (accuracy %) ==");
+    print!("{:12}", "");
+    for t in &task_names {
+        print!("{t:>9}");
+    }
+    println!();
+    let mut csv = String::from("method");
+    for t in &task_names {
+        csv.push(',');
+        csv.push_str(t);
+    }
+    csv.push('\n');
+    for (name, cells) in &rows {
+        print!("{name:12}");
+        csv.push_str(name);
+        for c in cells {
+            print!("{c:>9}");
+            csv.push(',');
+            csv.push_str(c);
+        }
+        println!();
+        csv.push('\n');
+    }
+    if let Some(path) = args.get("csv") {
+        if !path.is_empty() {
+            let p = PathBuf::from(path);
+            if let Some(dir) = p.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(&p, csv)?;
+            println!("grid -> {path}");
+        }
+    }
+    Ok(())
+}
+
+/// Method rows of each paper table.
+pub fn default_methods(table: u8) -> Vec<Method> {
+    match table {
+        3 => vec![Method::FoAdam, Method::Mezo, Method::Subzo, Method::Lozo,
+                  Method::Tezo, Method::MezoM, Method::LozoM, Method::TezoM],
+        5 => vec![Method::Mezo, Method::Lozo, Method::Subzo, Method::Tezo,
+                  Method::MezoAdam, Method::TezoAdam],
+        _ => vec![Method::Mezo, Method::Subzo, Method::Lozo, Method::Tezo,
+                  Method::MezoM, Method::LozoM, Method::TezoM,
+                  Method::MezoAdam, Method::ZoAdamu, Method::TezoAdam],
+    }
+}
+
+/// Task columns of each paper table.
+pub fn table_tasks(table: u8) -> Vec<&'static str> {
+    match table {
+        3 => vec!["sst5", "snli", "mnli", "qnli", "trec"],
+        5 => vec!["sst2", "rte", "wsc", "wic"],
+        _ => tasks::ALL_TASKS.iter().filter(|t| t.table == 4).map(|t| t.name).collect(),
+    }
+}
+
+fn run_cell(rt: &Runtime, config: &str, method: Method, tname: &str,
+            steps: usize, k: usize) -> Result<f64> {
+    let mut cfg = TrainConfig::with_preset(method, config);
+    cfg.steps = steps;
+    let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
+    let spec = tasks::spec_by_name(tname).unwrap();
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(spec, tok, rt.manifest.config.seq_len, cfg.seed);
+    let label_tokens = task.label_tokens();
+    let builder = BatchBuilder::new(task, rt.manifest.config.batch, k);
+    let eval_batches = builder.eval_batches(128);
+    let mut trainer = Trainer::new(rt, cfg, DataSource::Task(builder))
+        .with_eval(eval_batches, label_tokens);
+    let outcome = trainer.run(&mut params)?;
+    Ok(outcome.metrics.evals.last().map(|e| e.1).unwrap_or(0.0))
+}
+
+// ---------------------------------------------------------------------------
+// memory-report / rank-probe / inspect
+// ---------------------------------------------------------------------------
+
+const MEM_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("table", "7", "which artifact: 7|9|fig1c|all"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_memory(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, MEM_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("memory-report", "memory tables", MEM_SPECS));
+        return Ok(());
+    }
+    match args.get_str("table")? {
+        "7" => tables::table7().print(),
+        "9" => tables::table9().print(),
+        "fig1c" => tables::fig1c().print(),
+        "all" => {
+            tables::table7().print();
+            tables::table9().print();
+            tables::fig1c().print();
+        }
+        other => bail!("unknown table {other:?}"),
+    }
+    Ok(())
+}
+
+const RANK_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("config", "tiny", "model config"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_rank_probe(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, RANK_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("rank-probe", "Eq.(7) ranks", RANK_SPECS));
+        return Ok(());
+    }
+    let rt = Runtime::open_config(args.get_str("config")?)?;
+    let params = ParamStore::load(&rt.client, &rt.manifest)?;
+    let schedule = rank::rank_schedule(&rt.manifest, &params)?;
+    println!("== Eq.(7) rank schedule ({}) ==", rt.manifest.config.name);
+    for mr in &rt.manifest.matrix_ranks {
+        let ours = schedule.get(&mr.name).copied().unwrap_or(0);
+        let mark = if ours == mr.rank { "ok" } else { "MISMATCH" };
+        println!("  {:24} {:5}x{:<5}  manifest r={:3}  rust r={:3}  {}",
+                 mr.name, mr.m, mr.n, mr.rank, ours, mark);
+    }
+    let mismatches = rank::verify_against_manifest(&rt.manifest, &params)?;
+    if mismatches.is_empty() {
+        println!("rank schedule verified: python == rust");
+    } else {
+        println!("{} mismatches (SVD threshold sensitivity)", mismatches.len());
+    }
+    Ok(())
+}
+
+const PROBE_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("config", "tiny", "model config"),
+    ArgSpec::opt("methods", "mezo,lozo,subzo,tezo", "ZO methods to probe"),
+    ArgSpec::opt("task", "sst2", "task supplying the probe batch"),
+    ArgSpec::opt("samples", "32", "independent perturbation seeds"),
+    ArgSpec::opt("rho", "1e-3", "perturbation rate"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_probe_variance(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, PROBE_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("probe-variance", "kappa diagnostics", PROBE_SPECS));
+        return Ok(());
+    }
+    let rt = Runtime::open_config(args.get_str("config")?)?;
+    let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(tasks::spec_by_name(args.get_str("task")?).unwrap(), tok,
+                         rt.manifest.config.seq_len, 0);
+    let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+    let batch = builder.train_batch(0, 0);
+    let k = args.get_usize("samples")?;
+    let rho = args.get_f32("rho")?;
+    println!("== kappa distribution over {k} seeds (rho={rho}) ==");
+    println!("{:10} {:>12} {:>12} {:>12} {:>8}", "method", "mean", "std",
+             "E[k^2]", "sign%");
+    for mname in args.get_list("methods")? {
+        let method = Method::parse(&mname)?;
+        let s = tezo::coordinator::probe::kappa_distribution(
+            &rt, &mut params, &batch, method, rho, k, 7)?;
+        println!("{:10} {:>12.4} {:>12.4} {:>12.4} {:>7.0}%",
+                 s.method.name(), s.mean, s.std, s.second_moment,
+                 s.sign_consistency * 100.0);
+    }
+    println!("\n(E[kappa^2] tracks the estimator's variance constant; sign%\n\
+              is the single-probe informativeness — see EXPERIMENTS.md E11)");
+    Ok(())
+}
+
+const GEN_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("config", "tiny", "model config"),
+    ArgSpec::opt("checkpoint", "", "load params from this checkpoint dir"),
+    ArgSpec::opt("new-tokens", "16", "tokens to generate per row"),
+    ArgSpec::opt("rows", "2", "corpus prompts to decode"),
+    ArgSpec::opt("prompt-len", "16", "prompt length (corpus tokens)"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, GEN_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("generate", "greedy decoding", GEN_SPECS));
+        return Ok(());
+    }
+    let rt = Runtime::open_config(args.get_str("config")?)?;
+    let params = match args.get("checkpoint") {
+        Some(dir) if !dir.is_empty() => {
+            let (p, step) = tezo::runtime::checkpoint::load(
+                std::path::Path::new(dir), &rt.client, &rt.manifest)?;
+            println!("loaded checkpoint @ step {step} from {dir}");
+            p
+        }
+        _ => ParamStore::load(&rt.client, &rt.manifest)?,
+    };
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let corpus = tezo::data::Corpus::new(tok, rt.manifest.config.seq_len, 1);
+    let rows = args.get_usize("rows")?.min(rt.manifest.config.batch);
+    let plen = args.get_usize("prompt-len")?;
+    let prompts: Vec<Vec<i32>> = (0..rows)
+        .map(|i| corpus.sequence(i as u64).0[..plen].to_vec())
+        .collect();
+    let out = tezo::coordinator::generate::greedy_generate(
+        &rt, &params, &prompts, args.get_usize("new-tokens")?)?;
+    for (i, row) in out.iter().enumerate() {
+        let (p, gen) = row.split_at(plen);
+        println!("row {i}: prompt {p:?}\n        -> {gen:?}");
+    }
+    Ok(())
+}
+
+const INSPECT_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("config", "tiny", "model config"),
+    ArgSpec::opt("hlo", "", "print op histogram for this artifact"),
+    ArgSpec::switch("compile", "compile every artifact and report times"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, INSPECT_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("inspect", "artifact inventory", INSPECT_SPECS));
+        return Ok(());
+    }
+    let rt = Runtime::open_config(args.get_str("config")?)?;
+    if let Some(art) = args.get("hlo") {
+        if !art.is_empty() {
+            let meta = rt.manifest.artifact(art)?;
+            let stats = tezo::runtime::hlo_stats::HloStats::from_file(
+                &rt.manifest.dir.join(&meta.file))?;
+            println!("== HLO stats: {art} ==");
+            println!("instructions: {}", stats.instructions);
+            println!("largest tensor: {} ({} elements)",
+                     stats.largest_shape, stats.largest_tensor);
+            for (op, n) in stats.top_ops(20) {
+                println!("  {op:32} {n}");
+            }
+            return Ok(());
+        }
+    }
+    let c = &rt.manifest.config;
+    println!("config {}: d={} L={} heads={} ff={} vocab={} seq={} batch={} params={}",
+             c.name, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.vocab, c.seq_len,
+             c.batch, c.n_params);
+    println!("rank schedule: r_max={} threshold={}", c.r_max, c.rank_threshold);
+    for mr in &rt.manifest.matrix_ranks {
+        println!("  {:24} {:5}x{:<5} r={}", mr.name, mr.m, mr.n, mr.rank);
+    }
+    println!("artifacts ({}):", rt.manifest.artifacts.len());
+    for (name, a) in &rt.manifest.artifacts {
+        let sz = std::fs::metadata(rt.manifest.dir.join(&a.file))
+            .map(|m| m.len())
+            .unwrap_or(0);
+        println!("  {name:24} {:3} in / {:3} out  {:8} bytes",
+                 a.inputs.len(), a.outputs.len(), sz);
+    }
+    if args.has("compile") {
+        let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+        for n in &names {
+            let t = std::time::Instant::now();
+            rt.executable(n)?;
+            println!("  compiled {n} in {:.2}s", t.elapsed().as_secs_f64());
+        }
+        println!("total compile: {:.1}s for {} artifacts",
+                 rt.compile_seconds(), rt.compiled_count());
+    }
+    Ok(())
+}

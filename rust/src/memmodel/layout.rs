@@ -1,0 +1,187 @@
+//! Parameter layouts of the paper's model families (OPT, LLaMA) and of our
+//! OPTLite substitute configs.
+
+/// A 2D weight in the model, with multiplicity (how many identical layers).
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    pub name: &'static str,
+    pub m: usize,
+    pub n: usize,
+    pub count: usize,
+}
+
+/// Parameter layout of one model.
+#[derive(Clone, Debug)]
+pub struct ModelLayout {
+    pub name: String,
+    pub family: &'static str,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub matrices: Vec<MatrixSpec>,
+    /// 1D parameters (layernorms, biases), total element count
+    pub vector_elems: usize,
+}
+
+impl ModelLayout {
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.matrices.iter().map(|m| m.m * m.n * m.count).sum::<usize>() + self.vector_elems
+    }
+
+    /// Sum over matrices of (m + n) * count — the size driver of rank-r
+    /// factor state (multiply by r for elements).
+    pub fn factor_units(&self) -> usize {
+        self.matrices.iter().map(|m| (m.m + m.n) * m.count).sum()
+    }
+
+    /// Number of 2D matrices (counting multiplicity).
+    pub fn n_matrices(&self) -> usize {
+        self.matrices.iter().map(|m| m.count).sum()
+    }
+}
+
+/// OPT family (Zhang et al. 2022): pre-LN decoder, ffn = 4*d, learned
+/// positional embeddings, vocab 50272, seq 2048.
+pub fn opt(size: &str) -> ModelLayout {
+    let (d, l): (usize, usize) = match size {
+        "125m" => (768, 12),
+        "350m" => (1024, 24),
+        "1.3b" => (2048, 24),
+        "2.7b" => (2560, 32),
+        "6.7b" => (4096, 32),
+        "13b" => (5120, 40),
+        "30b" => (7168, 48),
+        other => panic!("unknown OPT size {other}"),
+    };
+    let v = 50272;
+    let s = 2048;
+    let ff = 4 * d;
+    let matrices = vec![
+        MatrixSpec { name: "embed.tok", m: v, n: d, count: 1 },
+        MatrixSpec { name: "embed.pos", m: s + 2, n: d, count: 1 },
+        MatrixSpec { name: "attn.qkvo", m: d, n: d, count: 4 * l },
+        MatrixSpec { name: "ffn.fc1", m: d, n: ff, count: l },
+        MatrixSpec { name: "ffn.fc2", m: ff, n: d, count: l },
+    ];
+    // biases (qkvo + fc1 + fc2) + 2 layernorms per block + final LN
+    let vector_elems = l * (4 * d + ff + d + 4 * d) + 2 * d;
+    ModelLayout {
+        name: format!("opt-{size}"),
+        family: "opt",
+        d_model: d,
+        n_layers: l,
+        d_ff: ff,
+        vocab: v,
+        seq_len: s,
+        matrices,
+        vector_elems,
+    }
+}
+
+/// LLaMA family (Touvron et al. 2023): RMSNorm (no biases), SwiGLU FFN,
+/// vocab 32000, seq 2048, untied output head.
+pub fn llama(size: &str) -> ModelLayout {
+    let (d, l, ff): (usize, usize, usize) = match size {
+        "7b" => (4096, 32, 11008),
+        "13b" => (5120, 40, 13824),
+        "30b" => (6656, 60, 17920),
+        other => panic!("unknown LLaMA size {other}"),
+    };
+    let v = 32000;
+    let matrices = vec![
+        MatrixSpec { name: "embed.tok", m: v, n: d, count: 1 },
+        MatrixSpec { name: "lm_head", m: d, n: v, count: 1 },
+        MatrixSpec { name: "attn.qkvo", m: d, n: d, count: 4 * l },
+        MatrixSpec { name: "ffn.gate_up", m: d, n: ff, count: 2 * l },
+        MatrixSpec { name: "ffn.down", m: ff, n: d, count: l },
+    ];
+    let vector_elems = l * 2 * d + d; // RMSNorm scales
+    ModelLayout {
+        name: format!("llama-{size}"),
+        family: "llama",
+        d_model: d,
+        n_layers: l,
+        d_ff: ff,
+        vocab: v,
+        seq_len: 2048,
+        matrices,
+        vector_elems,
+    }
+}
+
+/// Our OPTLite substitute configs (mirrors python/compile/configs.py) —
+/// used to cross-check the analytic model against measured RSS.
+pub fn optlite(name: &str) -> ModelLayout {
+    let (d, l, ff, v, s): (usize, usize, usize, usize, usize) = match name {
+        "tiny" => (64, 2, 256, 256, 64),
+        "small" => (256, 4, 1024, 2048, 128),
+        "medium" => (512, 8, 2048, 8192, 128),
+        "e2e" => (768, 12, 3072, 8192, 128),
+        other => panic!("unknown OPTLite config {other}"),
+    };
+    let matrices = vec![
+        MatrixSpec { name: "embed.tok", m: v, n: d, count: 1 },
+        MatrixSpec { name: "embed.pos", m: s, n: d, count: 1 },
+        MatrixSpec { name: "attn.qkvo", m: d, n: d, count: 4 * l },
+        MatrixSpec { name: "ffn.w1", m: d, n: ff, count: l },
+        MatrixSpec { name: "ffn.w2", m: ff, n: d, count: l },
+    ];
+    let vector_elems = l * 4 * d + 2 * d;
+    ModelLayout {
+        name: format!("optlite-{name}"),
+        family: "optlite",
+        d_model: d,
+        n_layers: l,
+        d_ff: ff,
+        vocab: v,
+        seq_len: s,
+        matrices,
+        vector_elems,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt_param_counts_are_close_to_nominal() {
+        // within 10% of the headline sizes
+        for (size, nominal) in [("125m", 125e6), ("1.3b", 1.3e9), ("2.7b", 2.7e9),
+                                ("6.7b", 6.7e9), ("13b", 13e9), ("30b", 30e9)] {
+            let n = opt(size).n_params() as f64;
+            assert!((n - nominal).abs() / nominal < 0.10, "{size}: {n} vs {nominal}");
+        }
+    }
+
+    #[test]
+    fn llama_param_counts_are_close_to_nominal() {
+        for (size, nominal) in [("7b", 6.7e9), ("13b", 13e9), ("30b", 32.5e9)] {
+            let n = llama(size).n_params() as f64;
+            assert!((n - nominal).abs() / nominal < 0.10, "{size}: {n} vs {nominal}");
+        }
+    }
+
+    #[test]
+    fn factor_units_scale_like_sqrt_d() {
+        // factor state grows ~sqrt(params): ratio (units / sqrt(params))
+        // should stay within one order of magnitude across sizes
+        let small = opt("125m");
+        let big = opt("13b");
+        let r_small = small.factor_units() as f64 / (small.n_params() as f64).sqrt();
+        let r_big = big.factor_units() as f64 / (big.n_params() as f64).sqrt();
+        assert!(r_big / r_small < 10.0 && r_small / r_big < 10.0);
+    }
+
+    #[test]
+    fn optlite_matches_python_configs() {
+        // python tiny config reports 297_472 params (embed 256*64 + pos
+        // 64*64 + 2 blocks + lns) — keep in sync with configs.py
+        let t = optlite("tiny");
+        assert_eq!(t.n_params(), 256 * 64 + 64 * 64
+            + 2 * (4 * 64 * 64 + 64 * 256 + 256 * 64) + 2 * 4 * 64 + 2 * 64);
+    }
+}

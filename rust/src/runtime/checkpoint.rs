@@ -1,0 +1,75 @@
+//! Parameter checkpointing: save/restore the device-resident parameter set
+//! as raw `.bin` files + a JSON descriptor, compatible with the AOT param
+//! format (so a checkpoint can also seed a fresh run or be inspected with
+//! the same tools as the shipped init).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::jsonx::{self, Value};
+
+use super::manifest::Manifest;
+use super::params::{read_f32_bin, ParamStore};
+
+/// Save `params` under `dir` (created if needed) with run metadata.
+pub fn save(dir: &Path, manifest: &Manifest, params: &ParamStore, step: u64)
+            -> Result<()> {
+    std::fs::create_dir_all(dir.join("params"))
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let mut entries = Vec::new();
+    for (i, e) in params.entries.iter().enumerate() {
+        let host = params.fetch(i)?;
+        let fname = format!("params/{i:03}_{}.bin", e.name.replace('.', "_"));
+        let mut bytes = Vec::with_capacity(host.len() * 4);
+        for x in &host {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(dir.join(&fname), bytes)?;
+        entries.push(Value::obj(vec![
+            ("name", Value::str(&e.name)),
+            ("shape", Value::arr(e.shape.iter().map(|&s| Value::i(s as i64)).collect())),
+            ("bin", Value::str(&fname)),
+        ]));
+    }
+    let doc = Value::obj(vec![
+        ("format", Value::str("tezo-checkpoint-v1")),
+        ("config", Value::str(&manifest.config.name)),
+        ("n_params", Value::i(manifest.config.n_params as i64)),
+        ("step", Value::i(step as i64)),
+        ("params", Value::arr(entries)),
+    ]);
+    std::fs::write(dir.join("checkpoint.json"), jsonx::to_string_pretty(&doc))?;
+    Ok(())
+}
+
+/// Restore parameters from a checkpoint into fresh device buffers.
+/// The checkpoint must match the manifest's config (name + param table).
+pub fn load(dir: &Path, client: &xla::PjRtClient, manifest: &Manifest)
+            -> Result<(ParamStore, u64)> {
+    let text = std::fs::read_to_string(dir.join("checkpoint.json"))
+        .with_context(|| format!("reading {}/checkpoint.json", dir.display()))?;
+    let doc = jsonx::parse(&text)?;
+    if doc.get_str("format")? != "tezo-checkpoint-v1" {
+        bail!("unknown checkpoint format");
+    }
+    ensure!(doc.get_str("config")? == manifest.config.name,
+            "checkpoint is for config {:?}, runtime is {:?}",
+            doc.get_str("config")?, manifest.config.name);
+    let step = doc.get("step")?.as_i64()? as u64;
+    let entries = doc.get("params")?.as_array()?;
+    ensure!(entries.len() == manifest.params.len(),
+            "checkpoint has {} params, manifest {}", entries.len(),
+            manifest.params.len());
+
+    let mut store = ParamStore::load(client, manifest)?; // shapes/entries
+    let mut bufs = Vec::with_capacity(entries.len());
+    for (e, p) in entries.iter().zip(&manifest.params) {
+        ensure!(e.get_str("name")? == p.name,
+                "param order mismatch: {} vs {}", e.get_str("name")?, p.name);
+        let host = read_f32_bin(&dir.join(e.get_str("bin")?), p.numel())?;
+        bufs.push(client.buffer_from_host_buffer(&host, &p.shape, None)?);
+    }
+    store.replace_all(bufs)?;
+    Ok((store, step))
+}

@@ -1,0 +1,83 @@
+//! PJRT client + executable cache.
+//!
+//! One [`Runtime`] per artifact directory. Executables compile lazily on
+//! first use and are cached for the life of the process (XLA:CPU compile of
+//! the bigger step functions takes seconds — the cache is what makes the
+//! steady-state hot loop pure execution).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+
+/// Runtime = PJRT CPU client + manifest + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative compile seconds (reported by `tezo inspect`)
+    compile_secs: RefCell<f64>,
+}
+
+impl Runtime {
+    /// Open the artifact directory for one model config.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    /// Open by config name under the default artifacts root.
+    pub fn open_config(config: &str) -> Result<Runtime> {
+        Self::open(&crate::artifacts_root().join(config))
+    }
+
+    /// Get (compiling if needed) the executable for `artifact`.
+    pub fn executable(&self, artifact: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(artifact) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.artifact(artifact)?;
+        let path = self.manifest.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {artifact}"))?,
+        );
+        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(artifact.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (so the training loop starts hot).
+    pub fn warmup(&self, artifacts: &[&str]) -> Result<()> {
+        for a in artifacts {
+            self.executable(a)?;
+        }
+        Ok(())
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_secs.borrow()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,157 @@
+//! Argument assembly + validated execution of artifacts.
+//!
+//! The manifest records every artifact's positional calling convention;
+//! [`CallBuilder`] assembles the argument vector in that order, validating
+//! role/shape/dtype as it goes, then executes and returns the output
+//! buffers (untupled by the patched xla crate — see third_party/xla).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::client::Runtime;
+use super::manifest::ArtifactMeta;
+
+/// One argument value supplied by the coordinator.
+pub enum ArgValue<'a> {
+    /// An existing device buffer (params, factor panels, optimizer state).
+    Buf(&'a xla::PjRtBuffer),
+    /// Host f32 tensor (uploaded for this call).
+    F32(&'a [f32]),
+    /// Host i32 tensor.
+    I32(&'a [i32]),
+    /// f32 scalar.
+    ScalarF32(f32),
+    /// u32 scalar (seeds).
+    ScalarU32(u32),
+}
+
+/// Assembles the positional argument list for one artifact call.
+pub struct CallBuilder<'rt> {
+    rt: &'rt Runtime,
+    meta: &'rt ArtifactMeta,
+    name: String,
+    /// staged device buffers for host-supplied args (kept alive here)
+    staged: Vec<xla::PjRtBuffer>,
+    /// (position, Staged(idx) | Borrowed(ptr))
+    slots: Vec<Slot<'rt>>,
+}
+
+enum Slot<'a> {
+    Borrowed(&'a xla::PjRtBuffer),
+    Staged(usize),
+}
+
+impl<'rt> Runtime {
+    /// Start building a call to `artifact`.
+    pub fn call(&'rt self, artifact: &str) -> Result<CallBuilder<'rt>> {
+        let meta = self.manifest.artifact(artifact)?;
+        Ok(CallBuilder {
+            rt: self,
+            meta,
+            name: artifact.to_string(),
+            staged: Vec::new(),
+            slots: Vec::new(),
+        })
+    }
+}
+
+impl<'rt> CallBuilder<'rt> {
+    fn next_desc(&self) -> Result<&super::manifest::IoDesc> {
+        self.meta.inputs.get(self.slots.len()).ok_or_else(|| {
+            anyhow::anyhow!("{}: too many arguments (expects {})",
+                            self.name, self.meta.inputs.len())
+        })
+    }
+
+    /// Append one argument (must match the next manifest slot).
+    pub fn arg(mut self, value: ArgValue<'rt>) -> Result<Self> {
+        let desc = self.next_desc()?;
+        let numel: usize = desc.shape.iter().product();
+        match value {
+            ArgValue::Buf(b) => {
+                self.slots.push(Slot::Borrowed(b));
+            }
+            ArgValue::F32(data) => {
+                ensure!(desc.dtype == "f32", "{}: slot {} ({}) wants {}, got f32",
+                        self.name, self.slots.len(), desc.name, desc.dtype);
+                ensure!(data.len() == numel, "{}: slot {} ({}) wants {} elems, got {}",
+                        self.name, self.slots.len(), desc.name, numel, data.len());
+                let buf = self.rt.client.buffer_from_host_buffer(data, &desc.shape, None)?;
+                self.staged.push(buf);
+                self.slots.push(Slot::Staged(self.staged.len() - 1));
+            }
+            ArgValue::I32(data) => {
+                ensure!(desc.dtype == "i32", "{}: slot {} ({}) wants {}, got i32",
+                        self.name, self.slots.len(), desc.name, desc.dtype);
+                ensure!(data.len() == numel, "{}: slot {} ({}) wants {} elems, got {}",
+                        self.name, self.slots.len(), desc.name, numel, data.len());
+                let buf = self.rt.client.buffer_from_host_buffer(data, &desc.shape, None)?;
+                self.staged.push(buf);
+                self.slots.push(Slot::Staged(self.staged.len() - 1));
+            }
+            ArgValue::ScalarF32(x) => {
+                ensure!(desc.dtype == "f32" && numel == 1,
+                        "{}: slot {} ({}) is not an f32 scalar", self.name,
+                        self.slots.len(), desc.name);
+                let buf = self.rt.client.buffer_from_host_buffer(&[x], &[], None)?;
+                self.staged.push(buf);
+                self.slots.push(Slot::Staged(self.staged.len() - 1));
+            }
+            ArgValue::ScalarU32(x) => {
+                ensure!(desc.dtype == "u32" && numel == 1,
+                        "{}: slot {} ({}) is not a u32 scalar", self.name,
+                        self.slots.len(), desc.name);
+                let buf = self.rt.client.buffer_from_host_buffer(&[x], &[], None)?;
+                self.staged.push(buf);
+                self.slots.push(Slot::Staged(self.staged.len() - 1));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Append many buffers (e.g. the whole parameter list).
+    pub fn bufs<'b: 'rt>(mut self, bufs: impl IntoIterator<Item = &'b xla::PjRtBuffer>) -> Result<Self> {
+        for b in bufs {
+            self = self.arg(ArgValue::Buf(b))?;
+        }
+        Ok(self)
+    }
+
+    /// Execute; returns the output buffers (replica 0).
+    pub fn run(self) -> Result<Vec<xla::PjRtBuffer>> {
+        ensure!(self.slots.len() == self.meta.inputs.len(),
+                "{}: got {} args, artifact expects {}",
+                self.name, self.slots.len(), self.meta.inputs.len());
+        let exe = self.rt.executable(&self.name)?;
+        let args: Vec<&xla::PjRtBuffer> = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Borrowed(b) => *b,
+                Slot::Staged(i) => &self.staged[*i],
+            })
+            .collect();
+        let mut out = exe
+            .execute_b(&args)
+            .with_context(|| format!("executing {}", self.name))?;
+        if out.is_empty() {
+            bail!("{}: no replica outputs", self.name);
+        }
+        let row = out.swap_remove(0);
+        ensure!(row.len() == self.meta.outputs.len(),
+                "{}: got {} outputs, manifest says {} (untuple patch missing?)",
+                self.name, row.len(), self.meta.outputs.len());
+        Ok(row)
+    }
+}
+
+/// Read a scalar f32 output buffer.
+pub fn scalar_f32(buf: &xla::PjRtBuffer) -> Result<f32> {
+    let lit = buf.to_literal_sync()?;
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Read an f32 tensor output to host.
+pub fn to_vec_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync()?;
+    Ok(lit.to_vec::<f32>()?)
+}

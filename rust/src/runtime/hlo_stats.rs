@@ -1,0 +1,162 @@
+//! Lightweight HLO-text analyzer for the perf pass.
+//!
+//! Parses the artifact's HLO text (the interchange format) and reports the
+//! structural facts the §Perf targets are stated in:
+//! * op-kind histogram (how many rng ops per step, dots, fusions, ...);
+//! * the largest intermediate tensor (did a full m x n Z materialize more
+//!   than necessary?);
+//! * total parameter-shaped temporaries.
+//!
+//! `tezo inspect --hlo <artifact>` prints this; the integration tests use
+//! [`HloStats::count`] to assert the single-RNG-per-step and fused-update
+//! properties.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Parsed statistics over one HLO module text.
+#[derive(Clone, Debug, Default)]
+pub struct HloStats {
+    /// op name -> occurrences (e.g. "dot", "rng-bit-generator", "fusion")
+    pub ops: BTreeMap<String, usize>,
+    /// total instruction count
+    pub instructions: usize,
+    /// largest tensor element count seen in any instruction result shape
+    pub largest_tensor: u64,
+    /// shape string of that tensor
+    pub largest_shape: String,
+}
+
+impl HloStats {
+    /// Parse HLO text.
+    pub fn parse(text: &str) -> HloStats {
+        let mut stats = HloStats::default();
+        for line in text.lines() {
+            let t = line.trim_start();
+            // instruction lines look like (xla_extension 0.5.1 text form):
+            //   name.N = f32[64,256]{1,0} op-name(...)
+            // optionally prefixed by ROOT or % in other dialects
+            let Some(eq) = t.find(" = ") else { continue };
+            let lhs = t[..eq].trim_start_matches("ROOT ").trim_start_matches('%');
+            if lhs.is_empty()
+                || !lhs.chars().all(|c| c.is_alphanumeric() || ".-_".contains(c))
+            {
+                continue;
+            }
+            let rest = &t[eq + 3..];
+            // result type, e.g. f32[64,256]{1,0} or (f32[..], f32[..])
+            let (shape_part, after_shape) = match rest.find(' ') {
+                Some(sp) => (&rest[..sp], &rest[sp + 1..]),
+                None => continue,
+            };
+            // op name is the token before '('
+            let op = after_shape.split('(').next().unwrap_or("").trim();
+            if op.is_empty() {
+                continue;
+            }
+            stats.instructions += 1;
+            *stats.ops.entry(op.to_string()).or_insert(0) += 1;
+            for (elems, shape) in parse_shapes(shape_part) {
+                if elems > stats.largest_tensor {
+                    stats.largest_tensor = elems;
+                    stats.largest_shape = shape;
+                }
+            }
+        }
+        stats
+    }
+
+    /// Load + parse an artifact file.
+    pub fn from_file(path: &Path) -> Result<HloStats> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Self::parse(&text))
+    }
+
+    /// Occurrences of ops whose name contains `needle`.
+    pub fn count(&self, needle: &str) -> usize {
+        self.ops
+            .iter()
+            .filter(|(k, _)| k.contains(needle))
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    /// Top-k ops by count.
+    pub fn top_ops(&self, k: usize) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self.ops.iter()
+            .map(|(a, b)| (a.clone(), *b))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.truncate(k);
+        v
+    }
+}
+
+/// Extract (element_count, shape_string) for every array shape in a result
+/// type like `f32[64,256]{1,0}` or `(f32[2], u32[])`.
+fn parse_shapes(s: &str) -> Vec<(u64, String)> {
+    let mut out = Vec::new();
+    let bytes = s.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'[' {
+            // find the matching ']'
+            if let Some(end) = s[i + 1..].find(']') {
+                let dims = &s[i + 1..i + 1 + end];
+                let elems: u64 = if dims.is_empty() {
+                    1
+                } else {
+                    dims.split(',')
+                        .filter_map(|d| d.trim().parse::<u64>().ok())
+                        .product()
+                };
+                // recover the dtype prefix
+                let start = s[..i].rfind(|c: char| !c.is_alphanumeric())
+                    .map(|p| p + 1)
+                    .unwrap_or(0);
+                out.push((elems, format!("{}[{}]", &s[start..i], dims)));
+                i += end + 1;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn
+
+ENTRY main {
+  %p0 = f32[64,256]{1,0} parameter(0)
+  %p1 = f32[256,64]{1,0} parameter(1)
+  %dot = f32[64,64]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}
+  %rng = u32[2]{0} rng-bit-generator(%p0), algorithm=rng_default
+  ROOT %t = (f32[64,64]{1,0}) tuple(%dot)
+}
+"#;
+
+    #[test]
+    fn parses_ops_and_shapes() {
+        let s = HloStats::parse(SAMPLE);
+        assert_eq!(s.ops.get("dot"), Some(&1));
+        assert_eq!(s.count("rng"), 1);
+        assert_eq!(s.ops.get("parameter"), Some(&2));
+        assert_eq!(s.largest_tensor, 64 * 256);
+    }
+
+    #[test]
+    fn scalar_shapes_count_as_one() {
+        let shapes = parse_shapes("f32[]");
+        assert_eq!(shapes[0].0, 1);
+        let shapes = parse_shapes("(f32[2,3], u32[])");
+        assert_eq!(shapes[0].0, 6);
+        assert_eq!(shapes[1].0, 1);
+    }
+}

@@ -1,0 +1,192 @@
+//! Typed view of `artifacts/<config>/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::{self, Value};
+
+/// Model geometry baked by the AOT pipeline.
+#[derive(Clone, Debug)]
+pub struct ConfigMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub r_max: usize,
+    pub rank_threshold: f64,
+    pub use_pallas: bool,
+    pub n_params: usize,
+    pub init_seed: i64,
+}
+
+/// One parameter tensor: name, shape, and its raw f32 init file.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub bin: String,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_matrix(&self) -> bool {
+        self.shape.len() == 2
+    }
+}
+
+/// Eq.(7) rank schedule entry for one 2D weight.
+#[derive(Clone, Debug)]
+pub struct MatrixRank {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub rank: usize,
+}
+
+/// One artifact input/output slot.
+#[derive(Clone, Debug)]
+pub struct IoDesc {
+    pub role: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One HLO artifact + its calling convention.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ConfigMeta,
+    pub params: Vec<ParamEntry>,
+    pub matrix_ranks: Vec<MatrixRank>,
+    pub lozo_rank: usize,
+    pub subzo_rank: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let v = jsonx::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_value(dir.to_path_buf(), &v)
+    }
+
+    fn from_value(dir: PathBuf, v: &Value) -> Result<Manifest> {
+        let c = v.get("config")?;
+        let config = ConfigMeta {
+            name: c.get_str("name")?.to_string(),
+            d_model: c.get_usize("d_model")?,
+            n_layers: c.get_usize("n_layers")?,
+            n_heads: c.get_usize("n_heads")?,
+            d_ff: c.get_usize("d_ff")?,
+            vocab: c.get_usize("vocab")?,
+            seq_len: c.get_usize("seq_len")?,
+            batch: c.get_usize("batch")?,
+            r_max: c.get_usize("r_max")?,
+            rank_threshold: c.get_f64("rank_threshold")?,
+            use_pallas: c.get("use_pallas")?.as_bool()?,
+            n_params: c.get_usize("n_params")?,
+            init_seed: c.get("init_seed")?.as_i64()?,
+        };
+        let mut params = Vec::new();
+        for p in v.get("params")?.as_array()? {
+            params.push(ParamEntry {
+                name: p.get_str("name")?.to_string(),
+                shape: shape_of(p.get("shape")?)?,
+                bin: p.get_str("bin")?.to_string(),
+            });
+        }
+        let mut matrix_ranks = Vec::new();
+        for r in v.get("matrix_ranks")?.as_array()? {
+            matrix_ranks.push(MatrixRank {
+                name: r.get_str("name")?.to_string(),
+                m: r.get_usize("m")?,
+                n: r.get_usize("n")?,
+                rank: r.get_usize("rank")?,
+            });
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.get("artifacts")?.as_object()? {
+            artifacts.insert(name.clone(), ArtifactMeta {
+                file: a.get_str("file")?.to_string(),
+                inputs: io_list(a.get("inputs")?)?,
+                outputs: io_list(a.get("outputs")?)?,
+            });
+        }
+        Ok(Manifest {
+            dir,
+            config,
+            params,
+            matrix_ranks,
+            lozo_rank: v.get_usize("lozo_rank")?,
+            subzo_rank: v.get_usize("subzo_rank")?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                                           self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Rank of a named matrix parameter.
+    pub fn rank_of(&self, name: &str) -> Result<usize> {
+        self.matrix_ranks
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.rank)
+            .ok_or_else(|| anyhow::anyhow!("no rank entry for {name:?}"))
+    }
+
+    /// Matrix parameters in param order (the factor-list convention).
+    pub fn matrix_params(&self) -> Vec<&ParamEntry> {
+        self.params.iter().filter(|p| p.is_matrix()).collect()
+    }
+
+    pub fn vector_params(&self) -> Vec<&ParamEntry> {
+        self.params.iter().filter(|p| !p.is_matrix()).collect()
+    }
+}
+
+fn shape_of(v: &Value) -> Result<Vec<usize>> {
+    v.as_array()?.iter().map(|x| x.as_usize()).collect()
+}
+
+fn io_list(v: &Value) -> Result<Vec<IoDesc>> {
+    let mut out = Vec::new();
+    for d in v.as_array()? {
+        let dtype = d.get_str("dtype")?;
+        if !matches!(dtype, "f32" | "i32" | "u32") {
+            bail!("unsupported dtype {dtype:?}");
+        }
+        out.push(IoDesc {
+            role: d.get_str("role")?.to_string(),
+            name: d.get_str("name")?.to_string(),
+            shape: shape_of(d.get("shape")?)?,
+            dtype: dtype.to_string(),
+        });
+    }
+    Ok(out)
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them with
+//! device-resident parameters.
+//!
+//! * [`manifest`] — typed view of `artifacts/<config>/manifest.json` (the
+//!   calling convention emitted by `python/compile/aot.py`).
+//! * [`client`] — PJRT CPU client + lazy executable cache (HLO text →
+//!   `HloModuleProto::from_text_file` → compile; text is the interchange
+//!   format, see DESIGN.md).
+//! * [`params`] — the parameter store: every model weight lives as a
+//!   `PjRtBuffer`; updates swap buffers in place, so the training hot loop
+//!   never copies parameters through the host.
+//! * [`exec`] — argument assembly + typed call wrappers for the artifact
+//!   families (loss_pm, update, eval, grads).
+
+pub mod checkpoint;
+pub mod client;
+pub mod exec;
+pub mod hlo_stats;
+pub mod manifest;
+pub mod params;
+
+pub use client::Runtime;
+pub use exec::ArgValue;
+pub use manifest::{ArtifactMeta, IoDesc, Manifest, MatrixRank, ParamEntry};
+pub use params::ParamStore;

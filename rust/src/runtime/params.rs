@@ -1,0 +1,100 @@
+//! Device-resident parameter store.
+//!
+//! Parameters are `PjRtBuffer`s for their whole life: loaded once from the
+//! AOT `.bin` files, passed to every artifact call by reference, and
+//! *swapped* (not copied) when an update artifact returns the new tensors.
+//! Host copies only happen for analysis (`fetch`) — never on the step path.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::Manifest;
+use crate::tensor::Matrix;
+
+/// All model parameters, in manifest order.
+pub struct ParamStore {
+    pub entries: Vec<super::manifest::ParamEntry>,
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl ParamStore {
+    /// Load the initial parameters shipped with the artifacts.
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest) -> Result<ParamStore> {
+        let mut bufs = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let path = manifest.dir.join(&p.bin);
+            let host = read_f32_bin(&path, p.numel())?;
+            let buf = client
+                .buffer_from_host_buffer(&host, &p.shape, None)
+                .with_context(|| format!("uploading {}", p.name))?;
+            bufs.push(buf);
+        }
+        Ok(ParamStore { entries: manifest.params.clone(), bufs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Buffer of parameter `i` (manifest order).
+    pub fn buf(&self, i: usize) -> &xla::PjRtBuffer {
+        &self.bufs[i]
+    }
+
+    pub fn bufs(&self) -> &[xla::PjRtBuffer] {
+        &self.bufs
+    }
+
+    /// Index of a named parameter.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown param {name:?}"))
+    }
+
+    /// Swap in updated parameter buffers (from an update artifact's outputs).
+    /// `new` must be exactly one buffer per parameter, manifest order.
+    pub fn replace_all(&mut self, new: Vec<xla::PjRtBuffer>) -> Result<()> {
+        ensure!(new.len() == self.bufs.len(),
+                "replace_all: {} buffers for {} params", new.len(), self.bufs.len());
+        self.bufs = new;
+        Ok(())
+    }
+
+    /// Host copy of one parameter (analysis path).
+    pub fn fetch(&self, i: usize) -> Result<Vec<f32>> {
+        let lit = self.bufs[i].to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Host copy of a named 2D parameter as a [`Matrix`].
+    pub fn fetch_matrix(&self, name: &str) -> Result<Matrix> {
+        let i = self.index_of(name)?;
+        let e = &self.entries[i];
+        ensure!(e.shape.len() == 2, "{name} is not 2D");
+        Matrix::from_vec(e.shape[0], e.shape[1], self.fetch(i)?)
+    }
+
+    /// Total parameter elements.
+    pub fn numel(&self) -> usize {
+        self.entries.iter().map(|e| e.numel()).sum()
+    }
+}
+
+/// Read a raw little-endian f32 file of exactly `numel` values.
+pub fn read_f32_bin(path: &Path, numel: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    ensure!(bytes.len() == numel * 4,
+            "{}: {} bytes, expected {}", path.display(), bytes.len(), numel * 4);
+    let mut out = Vec::with_capacity(numel);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(out)
+}

@@ -1,0 +1,204 @@
+//! Row-major f32 matrix with the ops used by oracles and analyses.
+
+use anyhow::{ensure, Result};
+
+use crate::rngx::NormalGen;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        ensure!(data.len() == rows * cols,
+                "data len {} != {rows}x{cols}", data.len());
+        Ok(Self { rows, cols, data })
+    }
+
+    /// i.i.d. standard-normal entries from the given generator.
+    pub fn randn(rows: usize, cols: usize, gen: &mut NormalGen) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for x in m.data.iter_mut() {
+            *x = gen.next_f32();
+        }
+        m
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.at(i, j);
+            }
+        }
+        t
+    }
+
+    /// `self @ other` — blocked ikj loop; f64 accumulation for stability.
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        ensure!(self.cols == other.rows,
+                "matmul dims {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self + alpha * other` in place.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) -> Result<()> {
+        ensure!(self.rows == other.rows && self.cols == other.cols, "axpy shape mismatch");
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Gram matrix `self^T @ self` (used by the SVD routines).
+    pub fn gram(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.cols, self.cols);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..self.cols {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[a * self.cols..(a + 1) * self.cols];
+                for (gv, &rb) in grow.iter_mut().zip(r.iter()) {
+                    *gv += ra * rb;
+                }
+            }
+        }
+        g
+    }
+
+    /// TeZO reconstruction: `U diag(tau) V^T` (host oracle for runtime tests).
+    pub fn cpd_slice(u: &Matrix, v: &Matrix, tau: &[f32]) -> Result<Matrix> {
+        ensure!(u.cols == v.cols && u.cols == tau.len(), "cpd rank mismatch");
+        let mut out = Matrix::zeros(u.rows, v.rows);
+        for s in 0..tau.len() {
+            let t = tau[s];
+            if t == 0.0 {
+                continue;
+            }
+            for i in 0..u.rows {
+                let ui = u.at(i, s) * t;
+                let orow = &mut out.data[i * v.rows..(i + 1) * v.rows];
+                for (o, j) in orow.iter_mut().zip(0..v.rows) {
+                    *o += ui * v.at(j, s);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::normal_rng;
+
+    #[test]
+    fn matmul_identity() {
+        let mut g = normal_rng(1);
+        let a = Matrix::randn(5, 7, &mut g);
+        let i = Matrix::identity(7);
+        assert_eq!(a.matmul(&i).unwrap(), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut g = normal_rng(2);
+        let a = Matrix::randn(4, 9, &mut g);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut g = normal_rng(3);
+        let a = Matrix::randn(6, 4, &mut g);
+        let want = a.transpose().matmul(&a).unwrap();
+        let got = a.gram();
+        for (x, y) in got.data.iter().zip(want.data.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cpd_slice_matches_naive() {
+        let mut g = normal_rng(4);
+        let u = Matrix::randn(5, 3, &mut g);
+        let v = Matrix::randn(7, 3, &mut g);
+        let tau = [0.5f32, -1.0, 2.0];
+        let got = Matrix::cpd_slice(&u, &v, &tau).unwrap();
+        for i in 0..5 {
+            for j in 0..7 {
+                let mut want = 0.0f32;
+                for s in 0..3 {
+                    want += tau[s] * u.at(i, s) * v.at(j, s);
+                }
+                assert!((got.at(i, j) - want).abs() < 1e-5);
+            }
+        }
+    }
+}

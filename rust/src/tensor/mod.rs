@@ -1,0 +1,16 @@
+//! Host linear-algebra substrate.
+//!
+//! Row-major f32 [`Matrix`] with the operations the coordinator needs:
+//! matmul / transpose / axpy for oracles, [`svd::top_singular_values`]
+//! (randomized subspace iteration) for the Eq.(7) rank schedule and the
+//! Fig 1/5/6/7 spectral analyses, and [`stats`] summaries for metrics.
+//!
+//! This is deliberately *host* math: the request path runs on PJRT; these
+//! routines serve analysis, verification oracles, and O(r) optimizer-state
+//! updates.
+
+mod matrix;
+pub mod stats;
+pub mod svd;
+
+pub use matrix::Matrix;

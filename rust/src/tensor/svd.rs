@@ -1,0 +1,217 @@
+//! Singular-value routines for the rank schedule and spectral analyses.
+//!
+//! * [`singular_values_exact`] — full spectrum via one-sided Jacobi on the
+//!   Gram matrix (for matrices with min-dim up to a few hundred; used as the
+//!   oracle in property tests and for the Fig 1/5/6 spectra).
+//! * [`top_singular_values`] — randomized subspace iteration returning the
+//!   top-k values (used by the Eq.(7) rank schedule on large weights).
+//! * [`rank_at_threshold`] — #{sigma_i > threshold * sigma_max}, the
+//!   definition the paper uses for Rank(W).
+
+use anyhow::Result;
+
+use super::Matrix;
+use crate::rngx::normal_rng;
+
+/// Jacobi eigenvalues of a symmetric matrix (in-place sweeps).
+/// Returns eigenvalues sorted descending.
+pub fn symmetric_eigenvalues(a: &Matrix, sweeps: usize) -> Vec<f64> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let idx = |i: usize, j: usize| i * n + j;
+    for _ in 0..sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[idx(i, j)] * m[idx(i, j)];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let akp = m[idx(k, p)];
+                    let akq = m[idx(k, q)];
+                    m[idx(k, p)] = c * akp - s * akq;
+                    m[idx(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[idx(p, k)];
+                    let aqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * apk - s * aqk;
+                    m[idx(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| m[idx(i, i)]).collect();
+    eig.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    eig
+}
+
+/// Full singular-value spectrum (descending) via Jacobi on the smaller Gram
+/// matrix. Exact up to Jacobi convergence; O(min(m,n)^3) — use for analysis
+/// and small oracles.
+pub fn singular_values_exact(a: &Matrix) -> Vec<f64> {
+    let gram = if a.rows >= a.cols { a.gram() } else { a.transpose().gram() };
+    symmetric_eigenvalues(&gram, 30)
+        .into_iter()
+        .map(|e| e.max(0.0).sqrt())
+        .collect()
+}
+
+/// Modified Gram-Schmidt QR: returns Q (same shape, orthonormal columns).
+pub fn orthonormalize(a: &Matrix) -> Matrix {
+    let mut q = a.clone();
+    let (m, n) = (q.rows, q.cols);
+    for j in 0..n {
+        for i in 0..j {
+            let mut dot = 0.0f64;
+            for k in 0..m {
+                dot += q.at(k, i) as f64 * q.at(k, j) as f64;
+            }
+            for k in 0..m {
+                let v = q.at(k, i) * dot as f32;
+                *q.at_mut(k, j) -= v;
+            }
+        }
+        let mut norm = 0.0f64;
+        for k in 0..m {
+            norm += (q.at(k, j) as f64).powi(2);
+        }
+        let norm = norm.sqrt().max(1e-30) as f32;
+        for k in 0..m {
+            *q.at_mut(k, j) /= norm;
+        }
+    }
+    q
+}
+
+/// Top-k singular values via randomized subspace iteration with
+/// oversampling `p` and `iters` power steps.
+pub fn top_singular_values(a: &Matrix, k: usize, seed: u64) -> Result<Vec<f64>> {
+    let k = k.min(a.rows.min(a.cols));
+    if k == 0 {
+        return Ok(vec![]);
+    }
+    // small matrices: exact is cheaper and more accurate
+    if a.rows.min(a.cols) <= 192 {
+        let mut s = singular_values_exact(a);
+        s.truncate(k);
+        return Ok(s);
+    }
+    let p = (k / 2 + 8).min(a.cols.saturating_sub(k)).max(2);
+    let l = (k + p).min(a.rows.min(a.cols));
+    let mut gen = normal_rng(seed);
+    let omega = Matrix::randn(a.cols, l, &mut gen);
+    let at = a.transpose();
+    let mut y = a.matmul(&omega)?; // (m, l)
+    for _ in 0..3 {
+        y = orthonormalize(&y);
+        let z = at.matmul(&y)?; // (n, l)
+        let zq = orthonormalize(&z);
+        y = a.matmul(&zq)?;
+    }
+    let q = orthonormalize(&y); // (m, l)
+    let b = q.transpose().matmul(a)?; // (l, n)
+    let mut s = singular_values_exact(&b);
+    s.truncate(k);
+    Ok(s)
+}
+
+/// Paper's Rank(W): #{sigma_i > threshold * sigma_max}, at least 1.
+/// `k_cap` bounds the work (ranks above the cap are clipped anyway by
+/// Eq.(7)'s r_max).
+pub fn rank_at_threshold(a: &Matrix, threshold: f64, k_cap: usize, seed: u64) -> Result<usize> {
+    let k = (k_cap + 4).min(a.rows.min(a.cols));
+    let s = top_singular_values(a, k, seed)?;
+    if s.is_empty() || s[0] <= 0.0 {
+        return Ok(1);
+    }
+    let cut = threshold * s[0];
+    Ok(s.iter().filter(|&&x| x > cut).count().max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::normal_rng;
+
+    #[test]
+    fn exact_svd_of_diagonal() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, v) in [10.0f32, 5.0, 2.0, 0.5].iter().enumerate() {
+            a.data[i * 4 + i] = *v;
+        }
+        let s = singular_values_exact(&a);
+        for (got, want) in s.iter().zip([10.0, 5.0, 2.0, 0.5]) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn exact_svd_rank_one() {
+        let mut g = normal_rng(0);
+        let u = Matrix::randn(20, 1, &mut g);
+        let v = Matrix::randn(15, 1, &mut g);
+        let a = u.matmul(&v.transpose()).unwrap();
+        let s = singular_values_exact(&a);
+        assert!(s[0] > 0.1);
+        assert!(s[1] < 1e-3 * s[0], "rank-1 matrix has tiny sigma_2: {:?}", &s[..3]);
+    }
+
+    #[test]
+    fn orthonormalize_gives_orthonormal_columns() {
+        let mut g = normal_rng(1);
+        let a = Matrix::randn(30, 6, &mut g);
+        let q = orthonormalize(&a);
+        let gram = q.gram();
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((gram.at(i, j) - want).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_matches_exact_on_lowrank() {
+        let mut g = normal_rng(2);
+        // 256x200 matrix with planted rank-8 structure + small noise
+        let u = Matrix::randn(256, 8, &mut g);
+        let v = Matrix::randn(200, 8, &mut g);
+        let mut a = u.matmul(&v.transpose()).unwrap();
+        let noise = Matrix::randn(256, 200, &mut g);
+        a.axpy(0.01, &noise).unwrap();
+        let exact = singular_values_exact(&a);
+        let fast = top_singular_values(&a, 8, 7).unwrap();
+        for (f, e) in fast.iter().zip(exact.iter()) {
+            assert!((f - e).abs() / e < 0.02, "{f} vs {e}");
+        }
+    }
+
+    #[test]
+    fn rank_threshold_detects_planted_rank() {
+        let mut g = normal_rng(3);
+        let u = Matrix::randn(120, 5, &mut g);
+        let v = Matrix::randn(90, 5, &mut g);
+        let mut a = u.matmul(&v.transpose()).unwrap();
+        let noise = Matrix::randn(120, 90, &mut g);
+        a.axpy(0.005, &noise).unwrap();
+        let r = rank_at_threshold(&a, 0.25, 32, 11).unwrap();
+        assert!((3..=7).contains(&r), "rank {r}");
+    }
+}

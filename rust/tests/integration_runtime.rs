@@ -1,0 +1,262 @@
+//! Runtime integration: artifacts load, execute, and obey their contracts.
+//!
+//! Requires `make artifacts` (tiny config). These tests close the
+//! correctness chain started in python: the same step functions that
+//! passed pytest are exercised here *through the HLO text -> PJRT path*.
+
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::runtime::exec::{scalar_f32, to_vec_f32};
+use tezo::runtime::{ArgValue, ParamStore, Runtime};
+
+fn open_tiny() -> Option<(Runtime, ParamStore)> {
+    let dir = tezo::artifacts_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::open(&dir).expect("open runtime");
+    let params = ParamStore::load(&rt.client, &rt.manifest).expect("load params");
+    Some((rt, params))
+}
+
+fn tiny_batch(rt: &Runtime) -> tezo::data::Batch {
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
+                         rt.manifest.config.seq_len, 0);
+    let bb = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+    bb.train_batch(0, 0)
+}
+
+#[test]
+fn manifest_is_consistent_with_params() {
+    let Some((rt, params)) = open_tiny() else { return };
+    assert_eq!(params.len(), rt.manifest.params.len());
+    assert_eq!(params.numel(), rt.manifest.config.n_params);
+    // every artifact's leading param inputs match the param shapes
+    let meta = rt.manifest.artifact("fwd_loss").unwrap();
+    for (d, p) in meta.inputs.iter().zip(&rt.manifest.params) {
+        assert_eq!(d.role, "param");
+        assert_eq!(d.shape, p.shape, "{}", p.name);
+    }
+}
+
+#[test]
+fn fwd_loss_runs_and_is_finite() {
+    let Some((rt, params)) = open_tiny() else { return };
+    let b = tiny_batch(&rt);
+    let out = rt
+        .call("fwd_loss").unwrap()
+        .bufs(params.bufs()).unwrap()
+        .arg(ArgValue::I32(&b.tokens)).unwrap()
+        .arg(ArgValue::I32(&b.targets)).unwrap()
+        .arg(ArgValue::F32(&b.mask)).unwrap()
+        .run().unwrap();
+    assert_eq!(out.len(), 1);
+    let loss = scalar_f32(&out[0]).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    // vocab=256 -> random-init loss should be near ln(256) ~ 5.5
+    assert!(loss > 2.0 && loss < 12.0, "loss {loss} implausible");
+}
+
+#[test]
+fn mezo_loss_pm_is_seed_deterministic_and_symmetric() {
+    let Some((rt, params)) = open_tiny() else { return };
+    let b = tiny_batch(&rt);
+    let run = |seed: u32, rho: f32| -> (f32, f32) {
+        let out = rt
+            .call("mezo_loss_pm").unwrap()
+            .bufs(params.bufs()).unwrap()
+            .arg(ArgValue::I32(&b.tokens)).unwrap()
+            .arg(ArgValue::I32(&b.targets)).unwrap()
+            .arg(ArgValue::F32(&b.mask)).unwrap()
+            .arg(ArgValue::ScalarU32(seed)).unwrap()
+            .arg(ArgValue::ScalarF32(rho)).unwrap()
+            .run().unwrap();
+        (scalar_f32(&out[0]).unwrap(), scalar_f32(&out[1]).unwrap())
+    };
+    let (fp1, fm1) = run(99, 1e-3);
+    let (fp2, fm2) = run(99, 1e-3);
+    assert_eq!(fp1, fp2, "same seed must replay identically");
+    assert_eq!(fm1, fm2);
+    // sign flip swaps the outputs (z is shared)
+    let (fp3, fm3) = run(99, -1e-3);
+    assert!((fp1 - fm3).abs() < 1e-5, "{fp1} vs {fm3}");
+    assert!((fm1 - fp3).abs() < 1e-5);
+    // different seed -> different perturbation
+    let (fp4, _) = run(100, 1e-3);
+    assert_ne!(fp1, fp4);
+}
+
+#[test]
+fn mezo_update_roundtrip_restores_params() {
+    // W' = update(W, seed, c); W'' = update(W', seed, -c) must equal W
+    // exactly (same z regenerated from the seed — the resampling invariant
+    // the whole training loop depends on).
+    let Some((rt, mut params)) = open_tiny() else { return };
+    let before = params.fetch(2).unwrap();
+    let step = |params: &ParamStore, coeff: f32| -> Vec<xla::PjRtBuffer> {
+        rt.call("mezo_update_sgd").unwrap()
+            .bufs(params.bufs()).unwrap()
+            .arg(ArgValue::ScalarU32(7)).unwrap()
+            .arg(ArgValue::ScalarF32(coeff)).unwrap()
+            .run().unwrap()
+    };
+    let out = step(&params, 0.125); // power of two: exact float arithmetic
+    params.replace_all(out).unwrap();
+    let mid = params.fetch(2).unwrap();
+    assert_ne!(before, mid, "update must change params");
+    let out = step(&params, -0.125);
+    params.replace_all(out).unwrap();
+    let after = params.fetch(2).unwrap();
+    let max_err = before
+        .iter()
+        .zip(after.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-6, "roundtrip error {max_err}");
+}
+
+#[test]
+fn tezo_loss_pm_matches_host_cpd_oracle() {
+    // Reconstruct W + rho * U diag(tau) V^T on host for one weight and
+    // check the artifact's f+ equals fwd_loss of the host-perturbed params.
+    let Some((rt, params)) = open_tiny() else { return };
+    let b = tiny_batch(&rt);
+    let mats = rt.manifest.matrix_params();
+    // Exact checks through the HLO path: identical (seed, taus) replay
+    // bit-identically; zero taus must differ from nonzero taus; factors are
+    // supplied as host F32 args (CallBuilder stages them to device).
+    let (us, vs): (Vec<Vec<f32>>, Vec<Vec<f32>>) = mats
+        .iter()
+        .map(|p| {
+            let r = rt.manifest.rank_of(&p.name).unwrap();
+            (tezo::rngx::normal_vec(1, p.shape[0] * r),
+             tezo::rngx::normal_vec(2, p.shape[1] * r))
+        })
+        .unzip();
+    let run2 = |taus: &[Vec<f32>]| -> (f32, f32) {
+        let mut call = rt.call("tezo_loss_pm").unwrap()
+            .bufs(params.bufs()).unwrap();
+        for u in &us {
+            call = call.arg(ArgValue::F32(u)).unwrap();
+        }
+        for v in &vs {
+            call = call.arg(ArgValue::F32(v)).unwrap();
+        }
+        for t in taus {
+            call = call.arg(ArgValue::F32(t)).unwrap();
+        }
+        let out = call
+            .arg(ArgValue::I32(&b.tokens)).unwrap()
+            .arg(ArgValue::I32(&b.targets)).unwrap()
+            .arg(ArgValue::F32(&b.mask)).unwrap()
+            .arg(ArgValue::ScalarU32(11)).unwrap()
+            .arg(ArgValue::ScalarF32(1e-2)).unwrap()
+            .run().unwrap();
+        (scalar_f32(&out[0]).unwrap(), scalar_f32(&out[1]).unwrap())
+    };
+    let zero_taus: Vec<Vec<f32>> = mats
+        .iter()
+        .map(|p| vec![0.0; rt.manifest.rank_of(&p.name).unwrap()])
+        .collect();
+    let taus: Vec<Vec<f32>> = mats
+        .iter()
+        .enumerate()
+        .map(|(i, p)| tezo::rngx::normal_vec(100 + i as u64,
+                                             rt.manifest.rank_of(&p.name).unwrap()))
+        .collect();
+    let a = run2(&zero_taus);
+    let a2 = run2(&zero_taus);
+    assert_eq!(a, a2, "deterministic replay");
+    let c = run2(&taus);
+    assert_ne!(a.0, c.0, "nonzero taus must perturb the loss");
+}
+
+#[test]
+fn eval_logits_shape_and_determinism() {
+    let Some((rt, params)) = open_tiny() else { return };
+    let b = tiny_batch(&rt);
+    let run = || -> Vec<f32> {
+        let out = rt
+            .call("eval_logits").unwrap()
+            .bufs(params.bufs()).unwrap()
+            .arg(ArgValue::I32(&b.tokens)).unwrap()
+            .arg(ArgValue::I32(&b.positions)).unwrap()
+            .run().unwrap();
+        to_vec_f32(&out[0]).unwrap()
+    };
+    let logits = run();
+    assert_eq!(logits.len(), rt.manifest.config.batch * rt.manifest.config.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert_eq!(logits, run());
+}
+
+#[test]
+fn rank_schedule_rust_matches_python() {
+    let Some((rt, params)) = open_tiny() else { return };
+    let mismatches =
+        tezo::coordinator::rank::verify_against_manifest(&rt.manifest, &params).unwrap();
+    assert!(mismatches.is_empty(),
+            "rank schedule mismatches (python vs rust SVD): {mismatches:?}");
+}
+
+#[test]
+fn fo_valgrad_grad_direction_reduces_loss() {
+    let Some((rt, mut params)) = open_tiny() else { return };
+    let b = tiny_batch(&rt);
+    let out = rt
+        .call("fo_valgrad").unwrap()
+        .bufs(params.bufs()).unwrap()
+        .arg(ArgValue::I32(&b.tokens)).unwrap()
+        .arg(ArgValue::I32(&b.targets)).unwrap()
+        .arg(ArgValue::F32(&b.mask)).unwrap()
+        .run().unwrap();
+    let loss0 = scalar_f32(&out[0]).unwrap();
+    // one small SGD step on host: W -= lr * g
+    let n = params.len();
+    let mut new_bufs = Vec::with_capacity(n);
+    for i in 0..n {
+        let w = params.fetch(i).unwrap();
+        let g = to_vec_f32(&out[1 + i]).unwrap();
+        let lr = 5e-2f32;
+        let upd: Vec<f32> = w.iter().zip(g.iter()).map(|(w, g)| w - lr * g).collect();
+        new_bufs.push(rt.client
+            .buffer_from_host_buffer(&upd, &params.entries[i].shape, None)
+            .unwrap());
+    }
+    params.replace_all(new_bufs).unwrap();
+    let out = rt
+        .call("fwd_loss").unwrap()
+        .bufs(params.bufs()).unwrap()
+        .arg(ArgValue::I32(&b.tokens)).unwrap()
+        .arg(ArgValue::I32(&b.targets)).unwrap()
+        .arg(ArgValue::F32(&b.mask)).unwrap()
+        .run().unwrap();
+    let loss1 = scalar_f32(&out[0]).unwrap();
+    assert!(loss1 < loss0, "gradient step must reduce loss: {loss0} -> {loss1}");
+}
+
+#[test]
+fn subzo_factors_are_orthonormal_through_hlo() {
+    let Some((rt, _params)) = open_tiny() else { return };
+    let out = rt
+        .call("subzo_factors").unwrap()
+        .arg(ArgValue::ScalarU32(5)).unwrap()
+        .run().unwrap();
+    let r = rt.manifest.subzo_rank;
+    // check the first U factor: U^T U = I
+    let meta = rt.manifest.artifact("subzo_factors").unwrap();
+    let m = meta.outputs[0].shape[0];
+    let u = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(u.len(), m * r);
+    for a in 0..r {
+        for b in 0..r {
+            let mut dot = 0.0f64;
+            for row in 0..m {
+                dot += (u[row * r + a] as f64) * (u[row * r + b] as f64);
+            }
+            let want = if a == b { 1.0 } else { 0.0 };
+            assert!((dot - want).abs() < 1e-3, "U^T U [{a},{b}] = {dot}");
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Property tests over the data substrate: tokenizer, tasks, batching,
+//! corpus — the invariants the training protocol depends on.
+
+use tezo::data::tasks::{self, Task};
+use tezo::data::tokenizer::{Tokenizer, BOS, PAD, SEP, WORD_BASE};
+use tezo::data::{BatchBuilder, Corpus};
+use tezo::proplite::{self, prop_assert};
+
+fn any_task(g: &mut proplite::Gen, seq_len: usize, vocab: usize) -> Task {
+    let spec = *g.pick(&tasks::ALL_TASKS);
+    let spec = tasks::spec_by_name(spec.name).unwrap();
+    Task::new(spec, Tokenizer::new(vocab), seq_len, g.u64())
+}
+
+#[test]
+fn examples_always_encode_the_protocol() {
+    proplite::run(150, |g| {
+        let seq_len = *g.pick(&[48usize, 64, 96, 128]);
+        let vocab = *g.pick(&[256usize, 512, 2048]);
+        let t = any_task(g, seq_len, vocab);
+        let ex = t.example(g.usize_in(0..2) as u32, g.u64() % 10_000);
+        prop_assert(ex.tokens.len() == seq_len, "tokens padded to seq_len")?;
+        prop_assert(ex.targets.len() == seq_len && ex.mask.len() == seq_len, "lens")?;
+        prop_assert(ex.tokens[0] == BOS, "starts with BOS")?;
+        prop_assert(ex.tokens[ex.sep_pos] == SEP, "SEP at sep_pos")?;
+        prop_assert(ex.label < t.spec.n_classes, "label in range")?;
+        // the single mask position predicts the label token
+        let masked: Vec<usize> =
+            (0..seq_len).filter(|&i| ex.mask[i] > 0.0).collect();
+        prop_assert(masked == vec![ex.sep_pos], "mask selects only SEP")?;
+        prop_assert(ex.targets[ex.sep_pos] == t.tok.label_token(ex.label),
+                    "target at SEP is the verbalizer")?;
+        // all tokens within vocab
+        prop_assert(ex.tokens.iter().all(|&tk| (tk as usize) < vocab && tk >= 0),
+                    "tokens in vocab")
+    });
+}
+
+#[test]
+fn train_and_eval_splits_are_disjoint_streams() {
+    proplite::run(50, |g| {
+        let t = any_task(g, 64, 512);
+        let idx = g.u64() % 1000;
+        let train = t.example(0, idx);
+        let eval = t.example(1, idx);
+        prop_assert(train.tokens != eval.tokens, "splits differ")
+    });
+}
+
+#[test]
+fn eval_examples_never_leak_the_label() {
+    proplite::run(100, |g| {
+        let t = any_task(g, 64, 512);
+        let ex = t.eval_example(g.u64() % 5000);
+        prop_assert(ex.tokens[ex.sep_pos + 1] == PAD, "label hidden")
+    });
+}
+
+#[test]
+fn batch_builder_pools_are_balanced_for_any_k() {
+    proplite::run(30, |g| {
+        let t = any_task(g, 64, 512);
+        let classes = t.spec.n_classes;
+        let k = *g.pick(&[4usize, 16, 32]);
+        let bb = BatchBuilder::new(t, 4, k);
+        let mut per_class = vec![0usize; classes];
+        for &idx in &bb.pool {
+            per_class[bb.task.example(0, idx).label] += 1;
+        }
+        prop_assert(per_class.iter().all(|&c| c == k),
+                    &format!("pool balance {per_class:?} for k={k}"))
+    });
+}
+
+#[test]
+fn train_batches_only_contain_pool_examples() {
+    proplite::run(20, |g| {
+        let t = any_task(g, 64, 512);
+        let k = 8;
+        let bb = BatchBuilder::new(t, 4, k);
+        // labels observed over many batches must include every class
+        let classes = bb.task.spec.n_classes;
+        let mut seen = vec![false; classes];
+        for step in 0..50 {
+            let b = bb.train_batch(g.u64(), step);
+            for &l in &b.labels {
+                seen[l] = true;
+            }
+        }
+        prop_assert(seen.iter().all(|&s| s), &format!("all classes sampled {seen:?}"))
+    });
+}
+
+#[test]
+fn corpus_tokens_stay_in_word_region() {
+    proplite::run(50, |g| {
+        let vocab = *g.pick(&[256usize, 2048]);
+        let c = Corpus::new(Tokenizer::new(vocab), 64, g.u64());
+        let (tokens, targets, mask) = c.sequence(g.u64() % 100_000);
+        prop_assert(tokens[0] == BOS, "BOS first")?;
+        prop_assert(tokens[1..].iter().all(|&t| t >= WORD_BASE && (t as usize) < vocab),
+                    "words in region")?;
+        // targets shifted
+        for i in 0..tokens.len() - 1 {
+            if mask[i] > 0.0 {
+                prop_assert(targets[i] == tokens[i + 1], "shifted targets")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tokenizer_labels_never_collide_with_words() {
+    proplite::run(100, |g| {
+        let vocab = g.usize_in(64..8192);
+        let t = Tokenizer::new(vocab);
+        let c = g.usize_in(0..8);
+        let w = g.usize_in(0..100_000);
+        prop_assert(t.label_token(c) < WORD_BASE, "label region")?;
+        prop_assert(t.word_token(w) >= WORD_BASE, "word region")?;
+        prop_assert((t.word_token(w) as usize) < vocab, "word below vocab")
+    });
+}

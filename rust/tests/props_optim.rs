@@ -1,0 +1,185 @@
+//! Property tests over optimizer math and coordinator invariants that do
+//! not need the PJRT runtime: tau-space momentum oracles, bias-correction
+//! commutation, seed schedules, memory-model monotonicity, Table-2 closed
+//! forms, preset sanity.
+
+use tezo::config::{Method, TrainConfig};
+use tezo::coordinator::counter::closed_form;
+use tezo::coordinator::seeds::{SeedSchedule, Stream};
+use tezo::memmodel::{self, usage};
+use tezo::proplite::{self, prop_assert, prop_close};
+use tezo::rngx::normal_rng;
+use tezo::tensor::Matrix;
+
+/// tau-space momentum equals full-matrix momentum reconstructed:
+/// M_T = sum_t b1^{T-t}(1-b1) k_t Z_t  ==  U diag(tauM_T) V^T
+#[test]
+fn tau_momentum_commutes_with_reconstruction() {
+    proplite::run(25, |g| {
+        let m = g.usize_in(2..20);
+        let n = g.usize_in(2..20);
+        let r = g.usize_in(1..6);
+        let steps = g.usize_in(1..10);
+        let b1 = 0.9f32;
+        let mut gen = normal_rng(g.u64());
+        let u = Matrix::randn(m, r, &mut gen);
+        let v = Matrix::randn(n, r, &mut gen);
+
+        let mut tau_m = vec![0.0f32; r];
+        let mut full_m = Matrix::zeros(m, n);
+        for _ in 0..steps {
+            let tau: Vec<f32> = (0..r).map(|_| gen.next_f32()).collect();
+            let kappa = gen.next_f32();
+            // tau-space update (what TezoM does)
+            for i in 0..r {
+                tau_m[i] = b1 * tau_m[i] + (1.0 - b1) * kappa * tau[i];
+            }
+            // full-matrix update (the oracle)
+            let z = Matrix::cpd_slice(&u, &v, &tau).unwrap();
+            full_m.scale(b1);
+            full_m.axpy((1.0 - b1) * kappa, &z).unwrap();
+        }
+        let recon = Matrix::cpd_slice(&u, &v, &tau_m).unwrap();
+        let mut diff = 0.0f64;
+        for (a, b) in recon.data.iter().zip(full_m.data.iter()) {
+            diff = diff.max((a - b).abs() as f64);
+        }
+        prop_assert(diff < 1e-4, &format!("momentum mismatch {diff}"))
+    });
+}
+
+/// The separable second moment in tau space equals accumulating the
+/// separable term of Z_t^2 in full space (paper Eq. 8 bookkeeping).
+#[test]
+fn tau_second_moment_commutes_with_separable_reconstruction() {
+    proplite::run(25, |g| {
+        let m = g.usize_in(2..16);
+        let n = g.usize_in(2..16);
+        let r = g.usize_in(1..5);
+        let steps = g.usize_in(1..8);
+        let b2 = 0.99f32;
+        let mut gen = normal_rng(g.u64());
+        let u = Matrix::randn(m, r, &mut gen);
+        let v = Matrix::randn(n, r, &mut gen);
+        let u2 = Matrix::from_vec(m, r, u.data.iter().map(|x| x * x).collect()).unwrap();
+        let v2 = Matrix::from_vec(n, r, v.data.iter().map(|x| x * x).collect()).unwrap();
+
+        let mut tau_v = vec![0.0f32; r];
+        let mut full_v = Matrix::zeros(m, n);
+        for _ in 0..steps {
+            let tau: Vec<f32> = (0..r).map(|_| gen.next_f32()).collect();
+            let kappa = gen.next_f32();
+            for i in 0..r {
+                tau_v[i] = b2 * tau_v[i] + (1.0 - b2) * kappa * kappa * tau[i] * tau[i];
+            }
+            let tau2: Vec<f32> = tau.iter().map(|t| kappa * kappa * t * t).collect();
+            let sep = Matrix::cpd_slice(&u2, &v2, &tau2).unwrap();
+            full_v.scale(b2);
+            full_v.axpy(1.0 - b2, &sep).unwrap();
+        }
+        let recon = Matrix::cpd_slice(&u2, &v2, &tau_v).unwrap();
+        let mut diff = 0.0f64;
+        for (a, b) in recon.data.iter().zip(full_v.data.iter()) {
+            diff = diff.max((a - b).abs() as f64);
+        }
+        prop_assert(diff < 1e-4, &format!("second moment mismatch {diff}"))
+    });
+}
+
+/// Bias correction commutes with reconstruction because both moments are
+/// linear in their tau vectors.
+#[test]
+fn bias_correction_commutes() {
+    proplite::run(50, |g| {
+        let m = g.usize_in(2..12);
+        let n = g.usize_in(2..12);
+        let r = g.usize_in(1..5);
+        let mut gen = normal_rng(g.u64());
+        let u = Matrix::randn(m, r, &mut gen);
+        let v = Matrix::randn(n, r, &mut gen);
+        let tau: Vec<f32> = (0..r).map(|_| gen.next_f32()).collect();
+        let bc = g.f32_in(0.1..1.0);
+        // correct-then-reconstruct
+        let tau_hat: Vec<f32> = tau.iter().map(|t| t / bc).collect();
+        let a = Matrix::cpd_slice(&u, &v, &tau_hat).unwrap();
+        // reconstruct-then-correct
+        let mut b = Matrix::cpd_slice(&u, &v, &tau).unwrap();
+        b.scale(1.0 / bc);
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            prop_close(*x as f64, *y as f64, 1e-5, "commute")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn seed_schedule_streams_are_independent_for_random_masters() {
+    proplite::run(50, |g| {
+        let s = SeedSchedule::new(g.u64());
+        let step = g.u64() % 100_000;
+        let a = s.seed32(Stream::Perturb, step);
+        let b = s.seed32(Stream::Data, step);
+        let c = s.seed32(Stream::FactorInit, step);
+        prop_assert(a != b && b != c && a != c, "stream collision")?;
+        prop_assert(a != 0 && b != 0 && c != 0, "zero seed")
+    });
+}
+
+#[test]
+fn memory_model_is_monotone_in_model_size() {
+    let sizes = ["125m", "1.3b", "2.7b", "6.7b", "13b", "30b"];
+    for m in Method::ALL {
+        let mut prev = 0u64;
+        for s in sizes {
+            let total = usage::memory_usage(&memmodel::opt(s), m).total();
+            assert!(total > prev, "{:?} not monotone at {s}", m);
+            prev = total;
+        }
+    }
+}
+
+#[test]
+fn memory_model_method_ordering_holds_across_families() {
+    proplite::run(9, |g| {
+        let layout = match g.usize_in(0..3) {
+            0 => memmodel::opt(*g.pick(&["1.3b", "6.7b", "13b", "30b"])),
+            1 => memmodel::llama(*g.pick(&["7b", "13b", "30b"])),
+            _ => memmodel::opt("2.7b"),
+        };
+        let get = |m: Method| usage::memory_usage(&layout, m).total();
+        prop_assert(get(Method::TezoAdam) <= get(Method::Mezo),
+                    "tezo-adam <= mezo (the headline claim)")?;
+        prop_assert(get(Method::Mezo) < get(Method::MezoM), "mezo < mezo-m")?;
+        prop_assert(get(Method::MezoM) < get(Method::MezoAdam), "mezo-m < mezo-adam")?;
+        let ratio = get(Method::TezoAdam) as f64 / get(Method::MezoAdam) as f64;
+        prop_assert(ratio < 0.45, &format!("tezo-adam/mezo-adam ratio {ratio}"))
+    });
+}
+
+#[test]
+fn table2_closed_forms_scale_correctly() {
+    proplite::run(100, |g| {
+        let m = g.usize_in(64..4096) as u64;
+        let n = g.usize_in(64..4096) as u64;
+        let r = g.usize_in(1..128) as u64;
+        let t = g.usize_in(1..20_000) as u64;
+        // TeZO must always beat LOZO (nu=1 worst case) once T > ~1
+        let tezo = closed_form::tezo(m, n, r, t);
+        let lozo = closed_form::lozo(m, n, r, t, 50);
+        prop_assert(tezo <= lozo + (m + n) * r, "tezo <= lozo + one refresh")?;
+        // doubling T adds exactly r*T for TeZO (temporal-only growth)
+        let tezo2 = closed_form::tezo(m, n, r, 2 * t);
+        prop_assert(tezo2 - tezo == r * t, "TeZO grows only in tau draws")
+    });
+}
+
+#[test]
+fn presets_cover_every_method_and_model() {
+    for m in Method::ALL {
+        for model in ["tiny", "small", "medium", "e2e"] {
+            let cfg = TrainConfig::with_preset(m, model);
+            assert!(cfg.lr > 0.0 && cfg.rho > 0.0);
+            assert!(cfg.lazy_interval > 0);
+        }
+    }
+}

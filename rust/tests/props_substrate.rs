@@ -1,0 +1,168 @@
+//! Property tests over the substrate modules (proplite harness).
+
+use tezo::jsonx::{self, Value};
+use tezo::proplite::{self, prop_assert, prop_close};
+use tezo::rngx::{self, SplitMix64, Xoshiro256};
+use tezo::tensor::{stats, svd, Matrix};
+
+#[test]
+fn json_roundtrip_random_trees() {
+    proplite::run(200, |g| {
+        let v = random_json(g, 3);
+        let text = jsonx::to_string_pretty(&v);
+        let back = jsonx::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert(back == v, &format!("roundtrip mismatch for {text}"))
+    });
+}
+
+fn random_json(g: &mut proplite::Gen, depth: usize) -> Value {
+    let choice = if depth == 0 { g.usize_in(0..4) } else { g.usize_in(0..6) };
+    match choice {
+        0 => Value::Null,
+        1 => Value::Bool(g.bool()),
+        2 => Value::Int(g.u64() as i64 / 2),
+        3 => {
+            // float with exact decimal repr to survive roundtrip comparisons
+            Value::Float((g.u64() % 1_000_000) as f64 / 64.0)
+        }
+        4 => Value::Array((0..g.usize_in(0..5))
+            .map(|_| random_json(g, depth - 1))
+            .collect()),
+        _ => Value::Object((0..g.usize_in(0..5))
+            .map(|i| (format!("k{i}_{}", g.usize_in(0..100)), random_json(g, depth - 1)))
+            .collect()),
+    }
+}
+
+#[test]
+fn json_strings_with_escapes_roundtrip() {
+    proplite::run(100, |g| {
+        let chars: Vec<char> = vec!['a', '"', '\\', '\n', '\t', 'é', '中', '\u{1F600}', ' '];
+        let n = g.usize_in(0..12);
+        let s: String = (0..n).map(|_| *g.pick(&chars)).collect();
+        let v = Value::Str(s.clone());
+        let text = jsonx::to_string_pretty(&v);
+        let back = jsonx::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert(back == v, &format!("string roundtrip: {s:?}"))
+    });
+}
+
+#[test]
+fn splitmix_mix_avalanche() {
+    // flipping one input bit should flip ~half the output bits
+    proplite::run(100, |g| {
+        let a = g.u64();
+        let b = g.u64();
+        let bit = 1u64 << g.usize_in(0..64);
+        let x = SplitMix64::mix(a, b);
+        let y = SplitMix64::mix(a ^ bit, b);
+        let flipped = (x ^ y).count_ones();
+        prop_assert((16..=48).contains(&flipped),
+                    &format!("avalanche {flipped} bits"))
+    });
+}
+
+#[test]
+fn gaussian_matrix_spectrum_obeys_marchenko_pastur_edge() {
+    // sigma_max of an m x n Gaussian ~ sqrt(m) + sqrt(n); check within 25%
+    proplite::run(8, |g| {
+        let m = g.usize_in(40..80);
+        let n = g.usize_in(40..80);
+        let seed = g.u64();
+        let mut gen = rngx::normal_rng(seed);
+        let a = Matrix::randn(m, n, &mut gen);
+        let s = svd::singular_values_exact(&a);
+        let edge = (m as f64).sqrt() + (n as f64).sqrt();
+        prop_close(s[0], edge, 0.25, "spectral edge")
+    });
+}
+
+#[test]
+fn svd_top_values_match_exact_for_random_shapes() {
+    proplite::run(10, |g| {
+        let m = g.usize_in(10..60);
+        let n = g.usize_in(10..60);
+        let mut gen = rngx::normal_rng(g.u64());
+        let a = Matrix::randn(m, n, &mut gen);
+        let exact = svd::singular_values_exact(&a);
+        let k = g.usize_in(1..m.min(n).min(6));
+        let fast = svd::top_singular_values(&a, k, g.u64()).map_err(|e| e.to_string())?;
+        for (f, e) in fast.iter().zip(exact.iter()) {
+            prop_close(*f, *e, 0.02, "top singular value")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cpd_slice_frobenius_matches_factor_norms_rank1() {
+    // for rank 1: ||tau * u v^T||_F = |tau| * ||u|| * ||v||
+    proplite::run(50, |g| {
+        let m = g.usize_in(2..40);
+        let n = g.usize_in(2..40);
+        let mut gen = rngx::normal_rng(g.u64());
+        let u = Matrix::randn(m, 1, &mut gen);
+        let v = Matrix::randn(n, 1, &mut gen);
+        let tau = [g.f32_in(-2.0..2.0)];
+        let z = Matrix::cpd_slice(&u, &v, &tau).map_err(|e| e.to_string())?;
+        let want = (tau[0].abs() as f64) * u.fro_norm() * v.fro_norm();
+        prop_close(z.fro_norm(), want, 1e-4, "rank-1 norm")
+    });
+}
+
+#[test]
+fn matmul_is_associative_enough() {
+    proplite::run(20, |g| {
+        let a_dim = g.usize_in(2..12);
+        let b_dim = g.usize_in(2..12);
+        let c_dim = g.usize_in(2..12);
+        let d_dim = g.usize_in(2..12);
+        let mut gen = rngx::normal_rng(g.u64());
+        let a = Matrix::randn(a_dim, b_dim, &mut gen);
+        let b = Matrix::randn(b_dim, c_dim, &mut gen);
+        let c = Matrix::randn(c_dim, d_dim, &mut gen);
+        let left = a.matmul(&b).unwrap().matmul(&c).unwrap();
+        let right = a.matmul(&b.matmul(&c).unwrap()).unwrap();
+        let diff = left
+            .data
+            .iter()
+            .zip(right.data.iter())
+            .map(|(x, y)| (x - y).abs() as f64)
+            .fold(0.0, f64::max);
+        prop_assert(diff < 1e-3, &format!("associativity diff {diff}"))
+    });
+}
+
+#[test]
+fn quantile_is_monotone_and_bounded() {
+    proplite::run(100, |g| {
+        let n = g.usize_in(1..200);
+        let xs: Vec<f64> = (0..n).map(|_| g.f64_in(-100.0..100.0)).collect();
+        let q1 = g.f64_in(0.0..1.0);
+        let q2 = g.f64_in(0.0..1.0);
+        let (lo, hi) = if q1 <= q2 { (q1, q2) } else { (q2, q1) };
+        let v_lo = stats::quantile(&xs, lo);
+        let v_hi = stats::quantile(&xs, hi);
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        prop_assert(v_lo <= v_hi + 1e-12, "monotone")?;
+        prop_assert(v_lo >= min - 1e-12 && v_hi <= max + 1e-12, "bounded")
+    });
+}
+
+#[test]
+fn xoshiro_streams_do_not_correlate() {
+    proplite::run(20, |g| {
+        let s1 = g.u64();
+        let s2 = s1 ^ (1 << g.usize_in(0..64));
+        let mut a = Xoshiro256::seed_from(s1);
+        let mut b = Xoshiro256::seed_from(s2);
+        let mut same = 0;
+        for _ in 0..1000 {
+            if a.next_u64() == b.next_u64() {
+                same += 1;
+            }
+        }
+        prop_assert(same == 0, &format!("{same} collisions in adjacent streams"))
+    });
+}

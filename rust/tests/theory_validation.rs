@@ -1,0 +1,144 @@
+//! Theorem 1 validation in Rust (paper §5), mirroring the python test but
+//! through the in-tree RNG + tensor substrate: the TeZO estimator
+//! (1/r) <G, Z> Z with Z = U diag(tau) V^T is unbiased, and its relative
+//! variance matches delta = 1 + mn + 2mn/r + 6(m+n)/r + 10/r.
+
+use tezo::rngx::normal_rng;
+use tezo::tensor::Matrix;
+
+fn delta(m: f64, n: f64, r: f64) -> f64 {
+    1.0 + m * n + 2.0 * m * n / r + 6.0 * (m + n) / r + 10.0 / r
+}
+
+/// One TeZO estimate of G from fresh (u, v, tau).
+fn tezo_sample(gen: &mut tezo::rngx::NormalGen, g: &Matrix, r: usize) -> Matrix {
+    let (m, n) = (g.rows, g.cols);
+    let u = Matrix::randn(m, r, gen);
+    let v = Matrix::randn(n, r, gen);
+    let tau: Vec<f32> = (0..r).map(|_| gen.next_f32()).collect();
+    let z = Matrix::cpd_slice(&u, &v, &tau).unwrap();
+    let proj: f64 = g
+        .data
+        .iter()
+        .zip(z.data.iter())
+        .map(|(a, b)| (*a as f64) * (*b as f64))
+        .sum();
+    let mut out = z;
+    out.scale((proj / r as f64) as f32);
+    out
+}
+
+#[test]
+fn estimator_is_unbiased() {
+    let (m, n, r) = (5, 4, 2);
+    let mut gen = normal_rng(1);
+    let g = Matrix::randn(m, n, &mut gen);
+    let trials = 300_000;
+    let mut acc = Matrix::zeros(m, n);
+    for _ in 0..trials {
+        let s = tezo_sample(&mut gen, &g, r);
+        acc.axpy(1.0, &s).unwrap();
+    }
+    acc.scale(1.0 / trials as f32);
+    // ||mean - g|| must be within a few standard errors
+    let se = (delta(m as f64, n as f64, r as f64) / trials as f64).sqrt() * g.fro_norm();
+    let mut err2 = 0.0f64;
+    for (a, b) in acc.data.iter().zip(g.data.iter()) {
+        err2 += ((a - b) as f64).powi(2);
+    }
+    let err = err2.sqrt();
+    assert!(err < 6.0 * se, "bias {err} vs se {se}");
+}
+
+#[test]
+fn variance_matches_theorem_1_delta() {
+    let (m, n, r) = (4, 4, 2);
+    let mut gen = normal_rng(2);
+    let g = Matrix::randn(m, n, &mut gen);
+    let g_norm2 = g.fro_norm().powi(2);
+    let trials = 250_000;
+    let mut acc = 0.0f64;
+    for _ in 0..trials {
+        let s = tezo_sample(&mut gen, &g, r);
+        let mut d2 = 0.0f64;
+        for (a, b) in s.data.iter().zip(g.data.iter()) {
+            d2 += ((a - b) as f64).powi(2);
+        }
+        acc += d2;
+    }
+    let var = acc / trials as f64;
+    let want = delta(m as f64, n as f64, r as f64) * g_norm2;
+    let rel = (var - want).abs() / want;
+    assert!(rel < 0.15, "variance {var} vs delta*|g|^2 {want} (rel {rel})");
+}
+
+#[test]
+fn variance_grows_as_delta_predicts_with_rank() {
+    // delta decreases in r (for the 1/r terms): higher rank -> lower
+    // relative variance. Verify the *ordering* empirically.
+    let (m, n) = (6, 6);
+    let mut gen = normal_rng(3);
+    let g = Matrix::randn(m, n, &mut gen);
+    let g_norm2 = g.fro_norm().powi(2);
+    let trials = 120_000;
+    let mut measured = Vec::new();
+    for r in [1usize, 4] {
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let s = tezo_sample(&mut gen, &g, r);
+            let mut d2 = 0.0f64;
+            for (a, b) in s.data.iter().zip(g.data.iter()) {
+                d2 += ((a - b) as f64).powi(2);
+            }
+            acc += d2;
+        }
+        measured.push(acc / trials as f64 / g_norm2);
+    }
+    assert!(measured[1] < measured[0],
+            "variance should shrink with rank: {measured:?}");
+    // and both should be within 25% of their delta predictions
+    for (i, r) in [1usize, 4].iter().enumerate() {
+        let want = delta(m as f64, n as f64, *r as f64);
+        let rel = (measured[i] - want).abs() / want;
+        assert!(rel < 0.25, "r={r}: measured {} want {want}", measured[i]);
+    }
+}
+
+/// Fig 8 / App A.2: the accumulated lightweight-second-moment error,
+/// normalized by mn, decreases with model size.
+#[test]
+fn fig8_accumulated_error_shrinks_with_size() {
+    let beta2 = 0.99f32;
+    let steps = 150;
+    let r = 8;
+    let mut errs = Vec::new();
+    for size in [32usize, 64, 128] {
+        let (m, n) = (size, size);
+        let mut gen = normal_rng(size as u64);
+        let u = Matrix::randn(m, r, &mut gen);
+        let v = Matrix::randn(n, r, &mut gen);
+        let u2 = Matrix::from_vec(m, r, u.data.iter().map(|x| x * x).collect()).unwrap();
+        let v2 = Matrix::from_vec(n, r, v.data.iter().map(|x| x * x).collect()).unwrap();
+        let mut vt = Matrix::zeros(m, n);
+        let mut vhat = Matrix::zeros(m, n);
+        let mut acc = 0.0f64;
+        for _ in 0..steps {
+            let tau: Vec<f32> = (0..r).map(|_| gen.next_f32()).collect();
+            let z = Matrix::cpd_slice(&u, &v, &tau).unwrap();
+            let z2 = Matrix::from_vec(m, n, z.data.iter().map(|x| x * x).collect()).unwrap();
+            let tau2: Vec<f32> = tau.iter().map(|t| t * t).collect();
+            let sep = Matrix::cpd_slice(&u2, &v2, &tau2).unwrap();
+            vt.scale(beta2);
+            vt.axpy(1.0 - beta2, &z2).unwrap();
+            vhat.scale(beta2);
+            vhat.axpy(1.0 - beta2, &sep).unwrap();
+            let mut d = Matrix::zeros(m, n);
+            d.axpy(1.0, &vt).unwrap();
+            d.axpy(-1.0, &vhat).unwrap();
+            acc += d.fro_norm() / (m * n) as f64;
+        }
+        errs.push(acc / steps as f64);
+    }
+    assert!(errs[1] < errs[0] && errs[2] < errs[1],
+            "E_t must shrink with size: {errs:?}");
+}
