@@ -1,0 +1,169 @@
+//! Fleet scaling benchmark: (1) the pure synchronization overhead of the
+//! scalar ticket protocol (no runtime needed — echo workers), and (2) when
+//! the tiny artifacts are present, end-to-end `FleetTrainer` steps at 1/2/4
+//! workers against the single-process trainer baseline, plus the
+//! bytes-communicated table vs a hypothetical gradient all-reduce.
+//!
+//! Run: `cargo bench --bench bench_fleet` (TEZO_BENCH_FAST=1 for CI).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use tezo::benchkit::{bench, fmt_time, BenchOpts, Report};
+use tezo::config::{FleetConfig, Method, TrainConfig};
+use tezo::coordinator::trainer::{DataSource, Trainer};
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::fleet::protocol::{aggregate_two_point, Command, Event, Ticket};
+use tezo::fleet::{task_job_factory, FleetTrainer};
+use tezo::memmodel::comm;
+use tezo::runtime::{Manifest, ParamStore, Runtime};
+
+/// One synchronization round against W echo workers: broadcast a ticket,
+/// collect W results, aggregate, broadcast the kappa, collect W acks.
+/// This is everything the fleet adds on top of the forward itself.
+fn protocol_round_trip(rep: &mut Report, opts: BenchOpts, workers: usize) {
+    let (etx, erx) = mpsc::channel::<Event>();
+    let mut cmd_txs = Vec::new();
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let (ctx, crx) = mpsc::channel::<Command>();
+        cmd_txs.push(ctx);
+        let etx = etx.clone();
+        handles.push(std::thread::spawn(move || {
+            while let Ok(cmd) = crx.recv() {
+                match cmd {
+                    Command::Forward(t) => {
+                        let _ = etx.send(Event::TwoPoint {
+                            worker: w,
+                            step: t.step,
+                            sub: t.sub,
+                            f_plus: 1.0 + w as f32,
+                            f_minus: 1.0,
+                            forward_secs: 0.0,
+                        });
+                    }
+                    Command::Apply { ticket, .. } | Command::Skip { ticket } => {
+                        let _ = etx.send(Event::Applied {
+                            worker: w,
+                            step: ticket.step,
+                            sub: ticket.sub,
+                            update_secs: 0.0,
+                        });
+                    }
+                    Command::Stop => return,
+                    Command::Eval { .. } => {}
+                }
+            }
+        }));
+    }
+    drop(etx);
+
+    let mut step = 0u64;
+    let s = bench(&format!("protocol round trip (W={workers})"), opts, || {
+        let ticket = Ticket { step, sub: 0, perturb_seed: 1 };
+        for tx in &cmd_txs {
+            tx.send(Command::Forward(ticket)).unwrap();
+        }
+        let mut slots = vec![(0.0f32, 0.0f32); workers];
+        for _ in 0..workers {
+            match erx.recv().unwrap() {
+                Event::TwoPoint { worker, f_plus, f_minus, .. } => {
+                    slots[worker] = (f_plus, f_minus);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let (fp, fm) = aggregate_two_point(&slots);
+        let kappa = (fp - fm) / 2e-3;
+        for tx in &cmd_txs {
+            tx.send(Command::Apply { ticket, kappa }).unwrap();
+        }
+        for _ in 0..workers {
+            let _ = erx.recv().unwrap();
+        }
+        step += 1;
+    });
+    rep.add_sample(&s);
+
+    for tx in &cmd_txs {
+        let _ = tx.send(Command::Stop);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+fn fleet_scaling(rep: &mut Report, dir: &std::path::Path, steps: usize) {
+    // single-process baseline
+    let rt = Runtime::open(dir).expect("open runtime");
+    let mut cfg = TrainConfig::with_preset(Method::Tezo, "tiny");
+    cfg.steps = steps;
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
+                         rt.manifest.config.seq_len, 0);
+    let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+    let mut params = ParamStore::load(&rt.client, &rt.manifest).unwrap();
+    let t0 = Instant::now();
+    Trainer::new(&rt, cfg.clone(), DataSource::Task(builder))
+        .run(&mut params)
+        .unwrap();
+    let base = t0.elapsed().as_secs_f64() / steps as f64;
+    rep.add_row("trainer (1 proc)",
+                vec![fmt_time(base), "-".into(), "-".into(), "-".into()]);
+    drop(rt);
+
+    let n_params = Manifest::load(dir).unwrap().config.n_params as u64;
+    for workers in [1usize, 2, 4] {
+        // eval_n = 0: pure step throughput, no eval rounds
+        let factory = task_job_factory("sst2".to_string(), 0, 16, 0, None);
+        let mut ft = FleetTrainer::new(FleetConfig::new(workers), cfg.clone(),
+                                       dir.to_path_buf(), factory);
+        let t0 = Instant::now();
+        let out = ft.run().expect("fleet run");
+        let per_step = t0.elapsed().as_secs_f64() / steps as f64;
+        let scalar = out.fleet.comm.total_bytes();
+        let allreduce =
+            comm::gradient_allreduce_step_bytes(n_params, workers as u64)
+                * steps as u64;
+        rep.add_row(
+            &format!("fleet W={workers}"),
+            vec![
+                fmt_time(per_step),
+                format!("{:.3}", out.fleet.straggler_factor()),
+                format!("{scalar}"),
+                if workers > 1 {
+                    format!("{:.1e}x", allreduce as f64 / scalar.max(1) as f64)
+                } else {
+                    "-".into()
+                },
+            ],
+        );
+    }
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut rep = Report::new(
+        "fleet protocol sync overhead",
+        &["median", "mean", "p95", "iters", "outliers"],
+    );
+    for workers in [1usize, 2, 4, 8] {
+        protocol_round_trip(&mut rep, opts, workers);
+    }
+    rep.print();
+    rep.write_csv(std::path::Path::new("out/fleet_protocol_bench.csv")).ok();
+
+    let dir = tezo::artifacts_root().join("tiny");
+    if dir.join("manifest.json").exists() {
+        let steps = if std::env::var_os("TEZO_BENCH_FAST").is_some() { 4 } else { 12 };
+        let mut rep = Report::new(
+            "fleet scaling on tiny artifacts",
+            &["sec/step", "straggler", "comm bytes", "vs all-reduce"],
+        );
+        fleet_scaling(&mut rep, &dir, steps);
+        rep.print();
+        rep.write_csv(std::path::Path::new("out/fleet_scaling.csv")).ok();
+    } else {
+        eprintln!("artifacts/tiny missing: skipping end-to-end fleet scaling");
+    }
+}

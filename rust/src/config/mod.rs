@@ -202,6 +202,41 @@ impl TrainConfig {
     }
 }
 
+/// Data-parallel fleet configuration (the seed-synchronized ZO fleet of
+/// [`crate::fleet`]; see docs/fleet.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// worker replicas; each owns a private runtime + parameter replica and
+    /// one disjoint data shard
+    pub workers: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self { workers: 1 }
+    }
+}
+
+impl FleetConfig {
+    pub fn new(workers: usize) -> Self {
+        Self { workers }
+    }
+
+    /// Validate against the training config the fleet will replicate.
+    pub fn validate(&self, train: &TrainConfig) -> Result<()> {
+        if self.workers == 0 || self.workers > 256 {
+            bail!("fleet workers must be in 1..=256, got {}", self.workers);
+        }
+        if !train.method.is_zo() {
+            bail!("fleet data parallelism requires a ZO method: {} needs \
+                   gradient-sized all-reduce, which the scalar-sync fleet \
+                   exists to avoid",
+                  train.method.name());
+        }
+        Ok(())
+    }
+}
+
 impl TrainConfig {
     /// The paper's recommended hyperparameters for (method, model scale)
     /// from Table 6, scaled to our substitute models.
@@ -271,6 +306,19 @@ mod tests {
         let mut bad = TrainConfig::default();
         bad.rho = 0.0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_config_validation() {
+        let zo = TrainConfig::default(); // tezo
+        assert!(FleetConfig::new(1).validate(&zo).is_ok());
+        assert!(FleetConfig::new(8).validate(&zo).is_ok());
+        assert!(FleetConfig::new(0).validate(&zo).is_err());
+        assert!(FleetConfig::new(1000).validate(&zo).is_err());
+        let mut fo = TrainConfig::default();
+        fo.method = Method::FoAdam;
+        assert!(FleetConfig::new(2).validate(&fo).is_err(),
+                "first-order methods cannot ride the scalar-sync fleet");
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! L3 coordinator: the fine-tuning training system.
 //!
-//! [`trainer`] owns the step loop (two-point ZO evaluation, projected
-//! gradient, update dispatch, phase timing); [`optimizer`] implements one
-//! driver per method (MeZO/LOZO/SubZO/ZO-AdaMU baselines, the TeZO family,
-//! and the first-order FT reference); [`seeds`] is the resampling-technique
-//! seed schedule; [`rank`] re-derives the Eq.(7) rank schedule in Rust and
+//! [`trainer`] owns the run loop (data plumbing, eval hooks, metrics);
+//! [`step`] is the single-step engine (two-point ZO evaluation, projected
+//! gradient, update dispatch) shared with the data-parallel
+//! [`crate::fleet`]; [`optimizer`] implements one driver per method
+//! (MeZO/LOZO/SubZO/ZO-AdaMU baselines, the TeZO family, and the
+//! first-order FT reference); [`seeds`] is the resampling-technique seed
+//! schedule; [`rank`] re-derives the Eq.(7) rank schedule in Rust and
 //! cross-checks the manifest; [`eval`] scores classification accuracy via
 //! verbalizer logits; [`counter`] does the Table-2 sampled-element
 //! accounting; [`metrics`] records loss curves and phase breakdowns.
@@ -17,10 +19,12 @@ pub mod optimizer;
 pub mod probe;
 pub mod rank;
 pub mod seeds;
+pub mod step;
 pub mod trainer;
 
 pub use counter::SampleCounter;
 pub use metrics::{PhaseTimers, TrainMetrics};
 pub use optimizer::{build_optimizer, StepCtx, ZoOptimizer};
 pub use seeds::SeedSchedule;
+pub use step::StepEngine;
 pub use trainer::{TrainOutcome, Trainer};

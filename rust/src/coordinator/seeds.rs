@@ -76,6 +76,28 @@ impl SeedSchedule {
         let window = if interval == 0 { 0 } else { step / interval as u64 };
         self.seed32(Stream::LazyRefresh, window)
     }
+
+    /// Data-stream index of (step, shard) among `shards` disjoint shards.
+    /// Shards interleave (`step * shards + shard`), so every (step, worker)
+    /// pair draws from its own point of the stream and shard 0 of 1 is the
+    /// plain single-process index — the fleet's 1-worker bit-parity hinges
+    /// on that identity.
+    pub fn data_index(step: u64, shard: u32, shards: u32) -> u64 {
+        let n = shards.max(1) as u64;
+        debug_assert!((shard as u64) < n);
+        step * n + shard as u64
+    }
+
+    /// The per-step batch-sampling seed (single process = shard 0 of 1).
+    pub fn data_seed(&self, step: u64) -> u64 {
+        self.shard_data_seed(step, 0, 1)
+    }
+
+    /// The batch-sampling seed of data shard `shard` of `shards` at `step`
+    /// (one shard per fleet worker).
+    pub fn shard_data_seed(&self, step: u64, shard: u32, shards: u32) -> u64 {
+        self.seed64(Stream::Data, Self::data_index(step, shard, shards))
+    }
 }
 
 #[cfg(test)]
@@ -105,5 +127,58 @@ mod tests {
             seen.insert(s.step_seed(step));
         }
         assert!(seen.len() > 9_990, "too many collisions: {}", seen.len());
+    }
+
+    const ALL_STREAMS: [Stream; 4] =
+        [Stream::Perturb, Stream::FactorInit, Stream::LazyRefresh, Stream::Data];
+
+    #[test]
+    fn streams_are_pairwise_independent_at_equal_index() {
+        // The four purpose streams must never hand the same 64-bit seed to
+        // two different consumers at the same index (that would correlate
+        // e.g. the perturbation draw with the batch order).
+        for master in [0u64, 1, 42, 0xFFFF_FFFF_FFFF_FFFF] {
+            let s = SeedSchedule::new(master);
+            for idx in 0..10_000u64 {
+                let seeds: Vec<u64> =
+                    ALL_STREAMS.iter().map(|&st| s.seed64(st, idx)).collect();
+                for i in 0..seeds.len() {
+                    for j in i + 1..seeds.len() {
+                        assert_ne!(seeds[i], seeds[j],
+                                   "master {master}: streams {i}/{j} collide at {idx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seed32_never_returns_zero() {
+        for master in [0u64, 7, u64::MAX] {
+            let s = SeedSchedule::new(master);
+            for idx in 0..10_000u64 {
+                for &st in &ALL_STREAMS {
+                    assert_ne!(s.seed32(st, idx), 0, "master {master} idx {idx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_data_seeds_are_disjoint_across_workers() {
+        let s = SeedSchedule::new(9);
+        let shards = 4u32;
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..5_000u64 {
+            for w in 0..shards {
+                assert!(seen.insert(s.shard_data_seed(step, w, shards)),
+                        "duplicate data seed at step {step} worker {w}");
+            }
+        }
+        // shard 0 of 1 is the single-process data stream (fleet parity)
+        assert_eq!(s.data_seed(17), s.shard_data_seed(17, 0, 1));
+        assert_eq!(s.data_seed(17), s.seed64(Stream::Data, 17));
+        // and differs from the same step's multi-worker shard 0
+        assert_ne!(s.data_seed(17), s.shard_data_seed(17, 0, 4));
     }
 }

@@ -1,0 +1,196 @@
+//! The single-step engine: one sub-perturbation's forward / kappa / update
+//! arithmetic, factored out of [`crate::coordinator::trainer::Trainer`] so
+//! that the data-parallel fleet ([`crate::fleet`]) can drive the *same*
+//! code with an aggregation point spliced between the two phases.
+//!
+//! The contract that makes seed-synchronized data parallelism work:
+//!
+//! * `forward_sub` + `combine` + `clip_kappa` + `update_sub` executed back
+//!   to back are bit-identical to the old in-trainer step;
+//! * `combine` is a pure function of the (possibly shard-averaged) two
+//!   losses, so a coordinator can aggregate `f+`/`f-` across replicas and
+//!   every replica replays the identical update from `(step seed, kappa)`.
+
+use anyhow::Result;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::counter::SampleCounter;
+use crate::coordinator::metrics::PhaseTimers;
+use crate::coordinator::optimizer::{ForwardOut, StepCtx, ZoOptimizer};
+use crate::coordinator::seeds::SeedSchedule;
+use crate::data::Batch;
+use crate::runtime::{ParamStore, Runtime};
+
+/// Training-step arithmetic shared by [`Trainer`] and `fleet::FleetTrainer`.
+///
+/// Owns the run configuration and the derived seed schedule; holds no
+/// per-run mutable state, so one engine can be cloned into every fleet
+/// worker and all replicas stay in lockstep.
+///
+/// [`Trainer`]: crate::coordinator::trainer::Trainer
+#[derive(Clone, Debug)]
+pub struct StepEngine {
+    pub cfg: TrainConfig,
+    pub seeds: SeedSchedule,
+}
+
+impl StepEngine {
+    pub fn new(cfg: TrainConfig) -> Self {
+        let seeds = SeedSchedule::new(cfg.seed);
+        Self { cfg, seeds }
+    }
+
+    /// q-SPSA sub-perturbation count (>= 1).
+    pub fn n_sub(&self) -> u32 {
+        self.cfg.n_perturb.max(1) as u32
+    }
+
+    /// Schedule-effective learning rate at `step`.
+    pub fn lr_at(&self, step: u64) -> f32 {
+        self.cfg.lr_schedule.at(self.cfg.lr, step, self.cfg.steps)
+    }
+
+    /// The lr handed to a sub-perturbation's ctx: `lr_eff / q` for the
+    /// averaged-direction ZO updates; the FO reference ignores kappa and
+    /// must see the full step lr.
+    fn sub_lr(&self, step: u64, method: Method) -> f32 {
+        let lr_eff = self.lr_at(step);
+        if matches!(method, Method::FoAdam) {
+            lr_eff
+        } else {
+            lr_eff / self.n_sub() as f32
+        }
+    }
+
+    /// Run the forward phase of sub-perturbation `sub` of `step`.
+    pub fn forward_sub(&self, rt: &Runtime, driver: &mut dyn ZoOptimizer,
+                       params: &mut ParamStore, batch: &Batch, step: u64,
+                       sub: u32, timers: &mut PhaseTimers,
+                       counter: &mut SampleCounter) -> Result<ForwardOut> {
+        let mut ctx = StepCtx {
+            rt,
+            params,
+            batch,
+            cfg: &self.cfg,
+            seeds: &self.seeds,
+            step,
+            sub,
+            lr: self.lr_at(step) / self.n_sub() as f32,
+            timers,
+            counter,
+        };
+        driver.forward(&mut ctx)
+    }
+
+    /// Fold a forward outcome into `(mean loss, raw kappa)`:
+    /// `kappa = (f+ - f-) / (2 rho)`, zero for the FO path.
+    pub fn combine(&self, fwd: &ForwardOut) -> (f64, f32) {
+        match *fwd {
+            ForwardOut::TwoPoint { f_plus, f_minus } => {
+                let kappa = (f_plus - f_minus) / (2.0 * self.cfg.rho);
+                (((f_plus + f_minus) * 0.5) as f64, kappa)
+            }
+            ForwardOut::Loss(l) => (l as f64, 0.0),
+        }
+    }
+
+    /// Clip |kappa| at `cfg.kappa_clip` (0 disables).
+    pub fn clip_kappa(&self, kappa: f32) -> f32 {
+        if self.cfg.kappa_clip > 0.0 {
+            kappa.clamp(-self.cfg.kappa_clip, self.cfg.kappa_clip)
+        } else {
+            kappa
+        }
+    }
+
+    /// Apply the update phase of sub `sub` with an already-clipped kappa.
+    pub fn update_sub(&self, rt: &Runtime, driver: &mut dyn ZoOptimizer,
+                      params: &mut ParamStore, batch: &Batch, step: u64,
+                      sub: u32, kappa: f32, timers: &mut PhaseTimers,
+                      counter: &mut SampleCounter) -> Result<()> {
+        let mut ctx = StepCtx {
+            rt,
+            params,
+            batch,
+            cfg: &self.cfg,
+            seeds: &self.seeds,
+            step,
+            sub,
+            lr: self.sub_lr(step, driver.method()),
+            timers,
+            counter,
+        };
+        driver.update(&mut ctx, kappa)
+    }
+
+    /// One complete local step (all sub-perturbations, forward + update) —
+    /// the single-process path. Returns the step's (two-point mean) loss;
+    /// a non-finite measurement skips the update and aborts the remaining
+    /// sub-perturbations, returning the offending loss (the run records it
+    /// and continues).
+    pub fn step(&self, rt: &Runtime, driver: &mut dyn ZoOptimizer,
+                params: &mut ParamStore, batch: &Batch, step: u64,
+                timers: &mut PhaseTimers, counter: &mut SampleCounter)
+                -> Result<f64> {
+        let q = self.n_sub();
+        let mut loss_acc = 0.0f64;
+        for sub in 0..q {
+            let fwd = self.forward_sub(rt, driver, params, batch, step, sub,
+                                       timers, counter)?;
+            let (loss, kappa) = self.combine(&fwd);
+            if !loss.is_finite() || !kappa.is_finite() {
+                return Ok(loss);
+            }
+            let kappa = self.clip_kappa(kappa);
+            self.update_sub(rt, driver, params, batch, step, sub, kappa,
+                            timers, counter)?;
+            loss_acc += loss;
+        }
+        Ok(loss_acc / q as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(rho: f32, clip: f32) -> StepEngine {
+        let mut cfg = TrainConfig::default();
+        cfg.rho = rho;
+        cfg.kappa_clip = clip;
+        StepEngine::new(cfg)
+    }
+
+    #[test]
+    fn combine_matches_two_point_formula() {
+        let e = engine(1e-3, 0.0);
+        let (loss, kappa) = e.combine(&ForwardOut::TwoPoint {
+            f_plus: 2.5,
+            f_minus: 2.3,
+        });
+        assert!((loss - 2.4).abs() < 1e-7);
+        let expect = (2.5f32 - 2.3) / (2.0 * 1e-3);
+        assert_eq!(kappa, expect);
+        let (l, k) = e.combine(&ForwardOut::Loss(1.25));
+        assert_eq!(l, 1.25);
+        assert_eq!(k, 0.0);
+    }
+
+    #[test]
+    fn clip_bounds_kappa() {
+        let e = engine(1e-3, 2.0);
+        assert_eq!(e.clip_kappa(5.0), 2.0);
+        assert_eq!(e.clip_kappa(-5.0), -2.0);
+        assert_eq!(e.clip_kappa(1.5), 1.5);
+        let open = engine(1e-3, 0.0);
+        assert_eq!(open.clip_kappa(5.0e6), 5.0e6);
+    }
+
+    #[test]
+    fn seeds_derive_from_cfg_master() {
+        let mut cfg = TrainConfig::default();
+        cfg.seed = 77;
+        let e = StepEngine::new(cfg);
+        assert_eq!(e.seeds.step_seed(3), SeedSchedule::new(77).step_seed(3));
+    }
+}

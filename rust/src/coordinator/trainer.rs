@@ -1,14 +1,18 @@
 //! The training loop: two-point evaluation, projected gradient, update.
 //!
 //! Per step (paper Alg. 1):
-//!   1. sample the batch (seeded — reproducible);
+//!   1. sample the batch (seeded from the `Data` stream — reproducible and
+//!      decorrelated from the perturbation stream);
 //!   2. `forward` — ONE artifact call computes both `f(W + rho Z)` and
 //!      `f(W - rho Z)` (Z regenerated from the step seed / factor panels);
 //!   3. `kappa = (f+ - f-) / (2 rho)` on host;
 //!   4. `update` — the method's update artifact; parameter buffers swap in
 //!      place, optimizer state evolves (O(r) on host for the TeZO family).
 //!
-//! Every phase is timed (Fig 3b), every random draw counted (Table 2).
+//! Steps 2-4 live in [`StepEngine`] (shared with the data-parallel
+//! [`crate::fleet`]); this type owns the run loop, data plumbing, eval
+//! hooks, and metrics. Every phase is timed (Fig 3b), every random draw
+//! counted (Table 2).
 
 use std::time::Instant;
 
@@ -18,8 +22,9 @@ use crate::config::TrainConfig;
 use crate::coordinator::counter::SampleCounter;
 use crate::coordinator::eval;
 use crate::coordinator::metrics::{Phase, TrainMetrics};
-use crate::coordinator::optimizer::{build_optimizer, ForwardOut, StepCtx, ZoOptimizer};
+use crate::coordinator::optimizer::build_optimizer;
 use crate::coordinator::seeds::SeedSchedule;
+use crate::coordinator::step::StepEngine;
 use crate::data::{Batch, BatchBuilder, Corpus};
 use crate::runtime::{ParamStore, Runtime};
 
@@ -32,11 +37,13 @@ pub enum DataSource {
 }
 
 impl DataSource {
-    fn batch(&self, seed: u64, step: u64) -> Batch {
+    /// Build the batch for `step` from a `Stream::Data` seed (see
+    /// [`SeedSchedule::data_seed`] / [`SeedSchedule::shard_data_seed`]).
+    pub fn batch(&self, data_seed: u64, step: u64) -> Batch {
         match self {
-            DataSource::Task(bb) => bb.train_batch(seed, step),
+            DataSource::Task(bb) => bb.train_batch(data_seed, step),
             DataSource::Corpus { corpus, batch } => {
-                BatchBuilder::corpus_batch(corpus, *batch, seed, step)
+                BatchBuilder::corpus_batch(corpus, *batch, data_seed, step)
             }
         }
     }
@@ -54,9 +61,8 @@ pub struct TrainOutcome {
 /// Drives one fine-tuning job.
 pub struct Trainer<'a> {
     pub rt: &'a Runtime,
-    pub cfg: TrainConfig,
+    pub engine: StepEngine,
     pub data: DataSource,
-    pub seeds: SeedSchedule,
     /// optional per-step observer (step, loss)
     pub on_step: Option<Box<dyn FnMut(u64, f64) + 'a>>,
     /// eval batches for the periodic accuracy hook
@@ -65,8 +71,13 @@ pub struct Trainer<'a> {
 
 impl<'a> Trainer<'a> {
     pub fn new(rt: &'a Runtime, cfg: TrainConfig, data: DataSource) -> Self {
-        let seeds = SeedSchedule::new(cfg.seed);
-        Self { rt, cfg, data, seeds, on_step: None, eval_set: None }
+        Self {
+            rt,
+            engine: StepEngine::new(cfg),
+            data,
+            on_step: None,
+            eval_set: None,
+        }
     }
 
     /// Attach a held-out eval set (batches + candidate label tokens).
@@ -75,21 +86,32 @@ impl<'a> Trainer<'a> {
         self
     }
 
+    pub fn cfg(&self) -> &TrainConfig {
+        &self.engine.cfg
+    }
+
+    pub fn seeds(&self) -> &SeedSchedule {
+        &self.engine.seeds
+    }
+
     /// Run the configured number of steps.
     pub fn run(&mut self, params: &mut ParamStore) -> Result<TrainOutcome> {
-        self.cfg.validate()?;
-        let mut driver = build_optimizer(self.rt, &self.cfg, &self.seeds)?;
+        self.engine.cfg.validate()?;
+        let engine = self.engine.clone();
+        let steps = engine.cfg.steps as u64;
+        let mut driver = build_optimizer(self.rt, &engine.cfg, &engine.seeds)?;
         let mut metrics = TrainMetrics::default();
         let mut counter = SampleCounter::default();
         let mut skipped = 0u64;
         let wall0 = Instant::now();
 
-        for step in 0..self.cfg.steps as u64 {
+        for step in 0..steps {
+            let dseed = engine.seeds.data_seed(step);
             let batch = metrics
                 .timers
-                .time(Phase::Sampling, || self.data.batch(self.cfg.seed, step));
-            let loss = self.step(&mut *driver, params, &batch, step,
-                                  &mut metrics, &mut counter)?;
+                .time(Phase::Sampling, || self.data.batch(dseed, step));
+            let loss = engine.step(self.rt, &mut *driver, params, &batch, step,
+                                   &mut metrics.timers, &mut counter)?;
             if loss.is_finite() {
                 metrics.record_loss(loss);
             } else {
@@ -99,8 +121,8 @@ impl<'a> Trainer<'a> {
             if let Some(cb) = self.on_step.as_mut() {
                 cb(step, loss);
             }
-            if self.cfg.eval_every > 0
-                && (step + 1) % self.cfg.eval_every as u64 == 0
+            if engine.cfg.eval_every > 0
+                && (step + 1) % engine.cfg.eval_every as u64 == 0
             {
                 if let Some((batches, labels)) = &self.eval_set {
                     let acc = eval::accuracy(self.rt, params, batches, labels)?;
@@ -108,10 +130,14 @@ impl<'a> Trainer<'a> {
                 }
             }
         }
-        // final eval
-        if let Some((batches, labels)) = &self.eval_set {
-            let acc = eval::accuracy(self.rt, params, batches, labels)?;
-            metrics.evals.push((self.cfg.steps as u64, acc));
+        // final eval, unless the periodic hook already scored the last step
+        let evaled_at_end = engine.cfg.eval_every > 0
+            && steps % engine.cfg.eval_every as u64 == 0;
+        if !evaled_at_end {
+            if let Some((batches, labels)) = &self.eval_set {
+                let acc = eval::accuracy(self.rt, params, batches, labels)?;
+                metrics.evals.push((steps, acc));
+            }
         }
         metrics.wall_seconds = wall0.elapsed().as_secs_f64();
         Ok(TrainOutcome {
@@ -120,58 +146,5 @@ impl<'a> Trainer<'a> {
             state_bytes: driver.state_bytes(),
             skipped,
         })
-    }
-
-    /// One optimization step; returns the (two-point mean) loss.
-    ///
-    /// With `n_perturb = q > 1` (q-SPSA), the step averages q independent
-    /// perturbation directions: each sub-perturbation runs its own fused
-    /// two-point forward and applies its update scaled by `kappa / q`
-    /// (exactly the mean direction for the linear SGD-form updates —
-    /// `TrainConfig::validate` rejects stateful methods).
-    fn step(&self, driver: &mut dyn ZoOptimizer, params: &mut ParamStore,
-            batch: &Batch, step: u64, metrics: &mut TrainMetrics,
-            counter: &mut SampleCounter) -> Result<f64> {
-        let q = self.cfg.n_perturb.max(1) as u32;
-        let lr_eff = self.cfg.lr_schedule.at(self.cfg.lr, step, self.cfg.steps);
-        let mut loss_acc = 0.0f64;
-        for sub in 0..q {
-            let mut ctx = StepCtx {
-                rt: self.rt,
-                params,
-                batch,
-                cfg: &self.cfg,
-                seeds: &self.seeds,
-                step,
-                sub,
-                lr: lr_eff / q as f32,
-                timers: &mut metrics.timers,
-                counter,
-            };
-            let fwd = driver.forward(&mut ctx)?;
-            let (loss, kappa) = match fwd {
-                ForwardOut::TwoPoint { f_plus, f_minus } => {
-                    let kappa = (f_plus - f_minus) / (2.0 * self.cfg.rho);
-                    (((f_plus + f_minus) * 0.5) as f64, kappa)
-                }
-                ForwardOut::Loss(l) => (l as f64, 0.0),
-            };
-            if !loss.is_finite() || !kappa.is_finite() {
-                // skip the update; the run records the NaN and continues
-                return Ok(loss);
-            }
-            let kappa = if self.cfg.kappa_clip > 0.0 {
-                kappa.clamp(-self.cfg.kappa_clip, self.cfg.kappa_clip)
-            } else {
-                kappa
-            };
-            // FO driver ignores kappa and must see the full lr
-            if matches!(driver.method(), crate::config::Method::FoAdam) {
-                ctx.lr = lr_eff;
-            }
-            driver.update(&mut ctx, kappa)?;
-            loss_acc += loss;
-        }
-        Ok(loss_acc / q as f64)
     }
 }

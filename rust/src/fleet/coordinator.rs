@@ -1,0 +1,285 @@
+//! The fleet coordinator: broadcasts per-step tickets, aggregates two-point
+//! losses into one global kappa, and keeps every replica in lockstep.
+//!
+//! Communication per (step, sub-perturbation): one [`Ticket`] down to each
+//! of N workers, one `(f+, f-)` pair up from each, one aggregated kappa
+//! back down — O(N) scalars, independent of model size. The global
+//! estimate is exact data parallelism: with per-worker shard losses
+//! `f±_w`, `kappa = (mean_w f+_w - mean_w f-_w) / (2 rho)` equals the
+//! two-point estimate on the union batch, and every worker replays it
+//! locally through [`StepEngine::update_sub`], so parameter replicas never
+//! diverge (checked by the workers' seed cross-check and by the
+//! fleet determinism tests).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::{FleetConfig, TrainConfig};
+use crate::coordinator::metrics::TrainMetrics;
+use crate::coordinator::optimizer::ForwardOut;
+use crate::coordinator::step::StepEngine;
+
+use super::metrics::FleetMetrics;
+use super::protocol::{aggregate_two_point, Command, Event, Ticket, WorkerReport};
+use super::worker::{self, JobFactory};
+
+/// Result of one fleet run.
+pub struct FleetOutcome {
+    /// global loss curve / evals / wall time (same shape as a single-process
+    /// [`TrainOutcome`](crate::coordinator::trainer::TrainOutcome))
+    pub metrics: TrainMetrics,
+    /// fleet-only accounting: per-worker phases, stragglers, comm bytes
+    pub fleet: FleetMetrics,
+    /// end-of-run per-worker reports (worker order)
+    pub workers: Vec<WorkerReport>,
+    /// non-finite steps skipped in lockstep
+    pub skipped: u64,
+    /// optimizer state bytes of one replica
+    pub state_bytes: u64,
+}
+
+/// Seed-synchronized data-parallel trainer: N worker threads, each with a
+/// private runtime + parameter replica and a disjoint data shard, driven by
+/// scalar tickets from this coordinator.
+pub struct FleetTrainer {
+    pub fleet: FleetConfig,
+    pub cfg: TrainConfig,
+    /// artifact directory every worker opens its own [`Runtime`] from
+    ///
+    /// [`Runtime`]: crate::runtime::Runtime
+    pub artifact_dir: PathBuf,
+    /// per-worker job builder (data shard source, eval set, checkpoint)
+    pub job_factory: Box<JobFactory>,
+    /// optional per-step observer (step, global loss)
+    pub on_step: Option<Box<dyn FnMut(u64, f64) + Send>>,
+}
+
+impl FleetTrainer {
+    pub fn new(fleet: FleetConfig, cfg: TrainConfig, artifact_dir: PathBuf,
+               job_factory: Box<JobFactory>) -> Self {
+        Self { fleet, cfg, artifact_dir, job_factory, on_step: None }
+    }
+
+    /// Run the configured number of steps across the fleet.
+    pub fn run(&mut self) -> Result<FleetOutcome> {
+        self.cfg.validate()?;
+        self.fleet.validate(&self.cfg)?;
+        let workers = self.fleet.workers;
+        let engine = StepEngine::new(self.cfg.clone());
+        let mut on_step = self.on_step.take();
+        let factory: &JobFactory = &*self.job_factory;
+        let dir = self.artifact_dir.clone();
+        let cfg = self.cfg.clone();
+
+        std::thread::scope(|scope| {
+            let (etx, erx) = mpsc::channel::<Event>();
+            let mut cmd_txs: Vec<Sender<Command>> = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let (ctx, crx) = mpsc::channel::<Command>();
+                cmd_txs.push(ctx);
+                let etx = etx.clone();
+                let dir = dir.clone();
+                let cfg = cfg.clone();
+                scope.spawn(move || {
+                    worker::run_worker(w, workers as u32, &dir, &cfg, factory,
+                                       crx, etx)
+                });
+            }
+            drop(etx); // the coordinator only receives
+            let out = drive(&engine, workers, &cmd_txs, &erx, &mut on_step);
+            // on error, dropping the command channels unblocks every worker
+            // so the scope can join instead of hanging
+            drop(cmd_txs);
+            out
+        })
+    }
+}
+
+/// Broadcast a command to every worker.
+fn broadcast(cmd_txs: &[Sender<Command>], cmd: Command) -> Result<()> {
+    for tx in cmd_txs {
+        tx.send(cmd).map_err(|_| anyhow!("a worker exited early"))?;
+    }
+    Ok(())
+}
+
+fn recv(erx: &Receiver<Event>) -> Result<Event> {
+    erx.recv().map_err(|_| anyhow!("all workers exited before reporting"))
+}
+
+/// Collect one `Applied` ack per worker for (step, sub).
+fn collect_acks(erx: &Receiver<Event>, workers: usize, step: u64, sub: u32)
+                -> Result<Vec<f64>> {
+    let mut times = vec![0.0f64; workers];
+    let mut seen = vec![false; workers];
+    for _ in 0..workers {
+        match recv(erx)? {
+            Event::Applied { worker, step: s, sub: sb, update_secs } => {
+                ensure!(s == step && sb == sub,
+                        "ack for ({s},{sb}) during ({step},{sub})");
+                ensure!(!seen[worker], "duplicate ack from worker {worker}");
+                seen[worker] = true;
+                times[worker] = update_secs;
+            }
+            Event::Failed { worker, error } => {
+                bail!("worker {worker} failed: {error}")
+            }
+            other => bail!("unexpected event during ack wait: {other:?}"),
+        }
+    }
+    Ok(times)
+}
+
+/// The synchronous drive loop (runs on the coordinator thread).
+fn drive(engine: &StepEngine, workers: usize, cmd_txs: &[Sender<Command>],
+         erx: &Receiver<Event>,
+         on_step: &mut Option<Box<dyn FnMut(u64, f64) + Send>>)
+         -> Result<FleetOutcome> {
+    let steps = engine.cfg.steps as u64;
+    let q = engine.n_sub();
+    let mut metrics = TrainMetrics::default();
+    let mut fleet = FleetMetrics::new(workers);
+    let mut skipped = 0u64;
+    let wall0 = Instant::now();
+
+    for step in 0..steps {
+        let mut loss_acc = 0.0f64;
+        let mut early: Option<f64> = None;
+        for sub in 0..q {
+            let ticket = Ticket {
+                step,
+                sub,
+                perturb_seed: engine.seeds.perturb_seed(step, sub),
+            };
+            broadcast(cmd_txs, Command::Forward(ticket))?;
+            fleet.comm.on_tickets(workers as u64);
+
+            // slot results by worker index: aggregation order is fixed no
+            // matter which replica answers first
+            let mut slots: Vec<Option<(f32, f32)>> = vec![None; workers];
+            let mut fwd_times = vec![0.0f64; workers];
+            for _ in 0..workers {
+                match recv(erx)? {
+                    Event::TwoPoint { worker, step: s, sub: sb, f_plus,
+                                      f_minus, forward_secs } => {
+                        ensure!(s == step && sb == sub,
+                                "result for ({s},{sb}) during ({step},{sub})");
+                        ensure!(slots[worker].is_none(),
+                                "duplicate result from worker {worker}");
+                        slots[worker] = Some((f_plus, f_minus));
+                        fwd_times[worker] = forward_secs;
+                    }
+                    Event::Failed { worker, error } => {
+                        bail!("worker {worker} failed: {error}")
+                    }
+                    other => bail!("unexpected event during forward wait: \
+                                    {other:?}"),
+                }
+            }
+            fleet.comm.on_results(workers as u64);
+            fleet.record_forward_round(&fwd_times);
+
+            let pairs: Vec<(f32, f32)> =
+                slots.into_iter().map(|s| s.unwrap()).collect();
+            let (f_plus, f_minus) = aggregate_two_point(&pairs);
+            let (loss, kappa_raw) =
+                engine.combine(&ForwardOut::TwoPoint { f_plus, f_minus });
+            if !loss.is_finite() || !kappa_raw.is_finite() {
+                // lockstep skip: every replica must skip together or the
+                // parameter replicas diverge
+                broadcast(cmd_txs, Command::Skip { ticket })?;
+                fleet.comm.on_broadcasts(workers as u64);
+                collect_acks(erx, workers, step, sub)?;
+                early = Some(loss);
+                break;
+            }
+            let kappa = engine.clip_kappa(kappa_raw);
+            broadcast(cmd_txs, Command::Apply { ticket, kappa })?;
+            fleet.comm.on_broadcasts(workers as u64);
+            let upd_times = collect_acks(erx, workers, step, sub)?;
+            fleet.record_update_round(&upd_times);
+            loss_acc += loss;
+        }
+        // same semantics as the single-process engine: a non-finite
+        // measurement aborts the remaining sub-perturbations and the run
+        // records that loss as-is
+        let loss = match early {
+            Some(l) => l,
+            None => loss_acc / q as f64,
+        };
+        if loss.is_finite() {
+            metrics.record_loss(loss);
+        } else {
+            skipped += 1;
+            metrics.record_loss(f64::NAN);
+        }
+        if let Some(cb) = on_step.as_mut() {
+            cb(step, loss);
+        }
+        if engine.cfg.eval_every > 0
+            && (step + 1) % engine.cfg.eval_every as u64 == 0
+        {
+            if let Some(acc) = run_eval(cmd_txs, erx, step + 1)? {
+                metrics.evals.push((step + 1, acc));
+            }
+        }
+    }
+    // final eval, unless the periodic hook already scored the last step
+    // (worker 0 answers NaN when it carries no eval set, which matches a
+    // Trainer without `with_eval`)
+    let evaled_at_end = engine.cfg.eval_every > 0
+        && steps % engine.cfg.eval_every as u64 == 0;
+    if !evaled_at_end {
+        if let Some(acc) = run_eval(cmd_txs, erx, steps)? {
+            metrics.evals.push((steps, acc));
+        }
+    }
+
+    broadcast(cmd_txs, Command::Stop)?;
+    let mut reports: Vec<Option<WorkerReport>> = (0..workers).map(|_| None).collect();
+    for _ in 0..workers {
+        match recv(erx)? {
+            Event::Report(r) => {
+                let w = r.worker;
+                ensure!(reports[w].is_none(), "duplicate report from {w}");
+                reports[w] = Some(*r);
+            }
+            Event::Failed { worker, error } => {
+                bail!("worker {worker} failed during shutdown: {error}")
+            }
+            other => bail!("unexpected event during shutdown: {other:?}"),
+        }
+    }
+    let workers_out: Vec<WorkerReport> =
+        reports.into_iter().map(|r| r.unwrap()).collect();
+    metrics.wall_seconds = wall0.elapsed().as_secs_f64();
+    let state_bytes = workers_out.first().map(|r| r.state_bytes).unwrap_or(0);
+    Ok(FleetOutcome {
+        metrics,
+        fleet,
+        workers: workers_out,
+        skipped,
+        state_bytes,
+    })
+}
+
+/// Ask worker 0 for a held-out eval; `None` when it has no eval set.
+fn run_eval(cmd_txs: &[Sender<Command>], erx: &Receiver<Event>, step: u64)
+            -> Result<Option<f64>> {
+    cmd_txs[0]
+        .send(Command::Eval { step })
+        .map_err(|_| anyhow!("worker 0 exited early"))?;
+    match recv(erx)? {
+        Event::EvalDone { step: s, accuracy, .. } => {
+            ensure!(s == step, "eval for step {s} during step {step}");
+            Ok(if accuracy.is_nan() { None } else { Some(accuracy) })
+        }
+        Event::Failed { worker, error } => {
+            bail!("worker {worker} failed during eval: {error}")
+        }
+        other => bail!("unexpected event during eval: {other:?}"),
+    }
+}

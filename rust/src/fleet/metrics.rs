@@ -1,0 +1,123 @@
+//! Fleet-level metrics: per-worker phase accounting, straggler statistics,
+//! and the communication counters (see [`crate::memmodel::comm`] for the
+//! analytic side).
+//!
+//! The coordinator's synchronous rounds make straggling directly
+//! measurable: each round waits for every worker's two-point result, so the
+//! gap between the slowest worker and the mean is pure idle time on the
+//! fast replicas. `critical_path_secs` (sum of per-round maxima) over
+//! `mean_path_secs` (sum of per-round means) is the fleet's load-imbalance
+//! factor — 1.0 means perfectly balanced shards.
+
+use crate::fleet::protocol::CommStats;
+
+/// Aggregated fleet statistics for one run.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    /// accumulated forward wall seconds per worker
+    pub forward_secs: Vec<f64>,
+    /// accumulated update wall seconds per worker
+    pub update_secs: Vec<f64>,
+    /// synchronous forward rounds driven (steps x sub-perturbations)
+    pub rounds: u64,
+    /// sum over rounds of the slowest worker's forward time
+    pub critical_path_secs: f64,
+    /// sum over rounds of the mean worker forward time
+    pub mean_path_secs: f64,
+    /// sum over rounds of (max - min) forward time
+    pub spread_secs: f64,
+    pub comm: CommStats,
+}
+
+impl FleetMetrics {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            forward_secs: vec![0.0; workers],
+            update_secs: vec![0.0; workers],
+            ..Self::default()
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.forward_secs.len()
+    }
+
+    /// Record one synchronous forward round's per-worker wall times.
+    pub fn record_forward_round(&mut self, times: &[f64]) {
+        debug_assert_eq!(times.len(), self.forward_secs.len());
+        let mut max = 0.0f64;
+        let mut min = f64::INFINITY;
+        let mut sum = 0.0f64;
+        for (acc, &t) in self.forward_secs.iter_mut().zip(times) {
+            *acc += t;
+            max = max.max(t);
+            min = min.min(t);
+            sum += t;
+        }
+        self.rounds += 1;
+        self.critical_path_secs += max;
+        self.mean_path_secs += sum / times.len().max(1) as f64;
+        self.spread_secs += max - min.min(max);
+    }
+
+    /// Record one update round's per-worker wall times.
+    pub fn record_update_round(&mut self, times: &[f64]) {
+        debug_assert_eq!(times.len(), self.update_secs.len());
+        for (acc, &t) in self.update_secs.iter_mut().zip(times) {
+            *acc += t;
+        }
+    }
+
+    /// Load-imbalance factor: critical path over balanced path (>= 1.0).
+    pub fn straggler_factor(&self) -> f64 {
+        if self.mean_path_secs <= 0.0 {
+            1.0
+        } else {
+            self.critical_path_secs / self.mean_path_secs
+        }
+    }
+
+    /// Idle seconds the fast replicas spent waiting for the slowest one.
+    pub fn straggler_wait_secs(&self) -> f64 {
+        (self.critical_path_secs - self.mean_path_secs).max(0.0)
+    }
+
+    /// (worker, forward secs, update secs) rows for reporting.
+    pub fn per_worker(&self) -> Vec<(usize, f64, f64)> {
+        self.forward_secs
+            .iter()
+            .zip(&self.update_secs)
+            .enumerate()
+            .map(|(w, (&f, &u))| (w, f, u))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_accounting_tracks_the_slowest_worker() {
+        let mut m = FleetMetrics::new(4);
+        m.record_forward_round(&[1.0, 1.0, 1.0, 3.0]);
+        m.record_forward_round(&[2.0, 1.0, 1.0, 1.0]);
+        assert_eq!(m.rounds, 2);
+        assert!((m.critical_path_secs - 5.0).abs() < 1e-12);
+        assert!((m.mean_path_secs - 2.75).abs() < 1e-12); // 1.5 + 1.25
+        assert!((m.spread_secs - 3.0).abs() < 1e-12); // 2.0 + 1.0
+        assert!(m.straggler_factor() > 1.0);
+        assert!((m.straggler_wait_secs() - 2.25).abs() < 1e-12);
+        assert_eq!(m.forward_secs, vec![3.0, 2.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn balanced_fleet_has_unit_straggler_factor() {
+        let mut m = FleetMetrics::new(2);
+        m.record_forward_round(&[1.0, 1.0]);
+        assert!((m.straggler_factor() - 1.0).abs() < 1e-12);
+        assert_eq!(m.straggler_wait_secs(), 0.0);
+        // empty metrics are well-defined too
+        assert_eq!(FleetMetrics::new(2).straggler_factor(), 1.0);
+    }
+}

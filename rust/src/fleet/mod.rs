@@ -1,0 +1,34 @@
+//! Seed-synchronized data-parallel ZO training (the fleet).
+//!
+//! The resampling trick (MeZO, adopted by every ZO method here) makes one
+//! training step fully described by a 4-byte perturbation seed plus one
+//! scalar `kappa = (f+ - f-) / (2 rho)`. Data parallelism therefore needs
+//! no gradient all-reduce: N replicas share the seed schedule, each
+//! measures the two-point loss on its own data shard, the coordinator
+//! averages the scalars, and every replica replays the identical update —
+//! O(N) bytes per step, independent of model size (see
+//! [`crate::memmodel::comm`] for the analytic comparison and docs/fleet.md
+//! for the design).
+//!
+//! Layout:
+//! * [`protocol`] — ticket/result/ack message types, scalar aggregation,
+//!   logical wire accounting;
+//! * [`worker`] — one replica: private runtime + params, ticket loop;
+//! * [`coordinator`] — [`FleetTrainer`]: broadcast, aggregate, lockstep;
+//! * [`metrics`] — per-worker phase totals, straggler stats, comm bytes.
+//!
+//! The single-step arithmetic is *not* re-implemented: workers call the
+//! same [`StepEngine`](crate::coordinator::step::StepEngine) the plain
+//! [`Trainer`](crate::coordinator::trainer::Trainer) uses, which is what
+//! makes a 1-worker fleet bit-identical to single-process training (the
+//! `integration_fleet` tests assert this).
+
+pub mod coordinator;
+pub mod metrics;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{FleetOutcome, FleetTrainer};
+pub use metrics::FleetMetrics;
+pub use protocol::{CommStats, WorkerReport};
+pub use worker::{task_job_factory, JobFactory, WorkerJob};

@@ -1,0 +1,188 @@
+//! Coordinator <-> worker message protocol and logical wire accounting.
+//!
+//! Everything that crosses the coordinator/worker boundary is scalar-sized:
+//! a [`Ticket`] (step id + perturbation seed) down, a two-point loss pair
+//! up, one aggregated kappa back down. Parameters, gradients, and optimizer
+//! state never move — every replica regenerates them from the shared seed
+//! schedule. [`CommStats`] counts the logical payload bytes (what a network
+//! transport would carry), using the authoritative wire sizes from
+//! [`crate::memmodel::comm`] so the analytic model and the runtime counter
+//! can be cross-checked.
+
+use crate::coordinator::counter::SampleCounter;
+use crate::coordinator::metrics::PhaseTimers;
+use crate::memmodel::comm::{KAPPA_BYTES, TICKET_BYTES, TWO_POINT_BYTES};
+
+/// Per-(step, sub-perturbation) work ticket broadcast by the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ticket {
+    pub step: u64,
+    /// q-SPSA sub-perturbation index
+    pub sub: u32,
+    /// the perturbation seed every replica must use for this ticket;
+    /// workers cross-check it against their own schedule, so a diverged
+    /// replica fails loudly instead of silently drifting
+    pub perturb_seed: u32,
+}
+
+/// Coordinator -> worker commands.
+#[derive(Clone, Copy, Debug)]
+pub enum Command {
+    /// run the fused two-point forward for this ticket
+    Forward(Ticket),
+    /// apply the globally aggregated (already clipped) kappa
+    Apply { ticket: Ticket, kappa: f32 },
+    /// skip this ticket's update (non-finite global measurement); every
+    /// replica skips together, so parameters stay bit-identical
+    Skip { ticket: Ticket },
+    /// run the held-out eval hook (sent to worker 0 only)
+    Eval { step: u64 },
+    /// finish: send the final [`WorkerReport`] and exit
+    Stop,
+}
+
+/// Worker -> coordinator events.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// two-point measurement for a ticket
+    TwoPoint {
+        worker: usize,
+        step: u64,
+        sub: u32,
+        f_plus: f32,
+        f_minus: f32,
+        /// wall seconds of the forward call (straggler accounting)
+        forward_secs: f64,
+    },
+    /// update applied (or skipped) for a ticket
+    Applied {
+        worker: usize,
+        step: u64,
+        sub: u32,
+        update_secs: f64,
+    },
+    /// eval accuracy (NaN when the worker carries no eval set)
+    EvalDone { worker: usize, step: u64, accuracy: f64 },
+    /// terminal worker failure; the coordinator aborts the fleet
+    Failed { worker: usize, error: String },
+    /// final per-worker report (response to [`Command::Stop`])
+    Report(Box<WorkerReport>),
+}
+
+/// End-of-run report from one worker replica.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub timers: PhaseTimers,
+    pub counter: SampleCounter,
+    pub state_bytes: u64,
+}
+
+/// Mean two-point losses over workers.
+///
+/// Reduces in worker-index order with an f64 accumulator, so the result is
+/// invariant to result *arrival* order (thread scheduling) and, for a
+/// single worker, bit-identical to that worker's own measurement.
+pub fn aggregate_two_point(results: &[(f32, f32)]) -> (f32, f32) {
+    let w = results.len().max(1) as f64;
+    let mut sum_plus = 0.0f64;
+    let mut sum_minus = 0.0f64;
+    for &(f_plus, f_minus) in results {
+        sum_plus += f_plus as f64;
+        sum_minus += f_minus as f64;
+    }
+    ((sum_plus / w) as f32, (sum_minus / w) as f32)
+}
+
+/// Logical communication counters for one fleet run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// tickets broadcast (counted once per worker)
+    pub tickets: u64,
+    /// two-point results received
+    pub results: u64,
+    /// kappa/skip broadcasts (counted once per worker)
+    pub broadcasts: u64,
+    /// coordinator -> workers payload bytes
+    pub bytes_down: u64,
+    /// workers -> coordinator payload bytes
+    pub bytes_up: u64,
+}
+
+impl CommStats {
+    pub fn on_tickets(&mut self, workers: u64) {
+        self.tickets += workers;
+        self.bytes_down += workers * TICKET_BYTES;
+    }
+
+    pub fn on_results(&mut self, workers: u64) {
+        self.results += workers;
+        self.bytes_up += workers * TWO_POINT_BYTES;
+    }
+
+    pub fn on_broadcasts(&mut self, workers: u64) {
+        self.broadcasts += workers;
+        self.bytes_down += workers * KAPPA_BYTES;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_down + self.bytes_up
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmodel::comm::zo_scalar_step_bytes;
+
+    #[test]
+    fn slotted_aggregation_is_invariant_to_arrival_order() {
+        // the coordinator slots results by worker index before reducing, so
+        // any arrival permutation yields a bitwise-identical global mean
+        let by_worker = [(1.25f32, 1.5f32), (0.75, 2.0), (3.5, 0.125), (2.0, 2.25)];
+        let arrivals: [[usize; 4]; 3] =
+            [[0, 1, 2, 3], [3, 1, 0, 2], [2, 3, 1, 0]];
+        let mut outs = Vec::new();
+        for order in arrivals {
+            let mut slots = [(0.0f32, 0.0f32); 4];
+            for worker in order {
+                slots[worker] = by_worker[worker]; // slotting: arrival order irrelevant
+            }
+            outs.push(aggregate_two_point(&slots));
+        }
+        for w in &outs[1..] {
+            assert_eq!(outs[0].0.to_bits(), w.0.to_bits());
+            assert_eq!(outs[0].1.to_bits(), w.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn single_worker_aggregation_is_identity() {
+        for (fp, fm) in [(0.1f32, 0.2f32), (123.456, -7.5), (1e-30, 1e30)] {
+            let (p, m) = aggregate_two_point(&[(fp, fm)]);
+            assert_eq!(p.to_bits(), fp.to_bits());
+            assert_eq!(m.to_bits(), fm.to_bits());
+        }
+    }
+
+    #[test]
+    fn aggregation_propagates_non_finite_shards() {
+        let (p, _) = aggregate_two_point(&[(1.0, 1.0), (f32::NAN, 1.0)]);
+        assert!(p.is_nan(), "a poisoned shard must poison the global mean");
+        let (p, _) = aggregate_two_point(&[(f32::INFINITY, 1.0), (1.0, 1.0)]);
+        assert!(!p.is_finite());
+    }
+
+    #[test]
+    fn comm_stats_match_analytic_model() {
+        // one step, q=1, 4 workers: ticket + result + broadcast per worker
+        let mut c = CommStats::default();
+        c.on_tickets(4);
+        c.on_results(4);
+        c.on_broadcasts(4);
+        assert_eq!(c.total_bytes(), zo_scalar_step_bytes(4, 1));
+        assert_eq!(c.tickets, 4);
+        assert_eq!(c.results, 4);
+        assert_eq!(c.broadcasts, 4);
+    }
+}

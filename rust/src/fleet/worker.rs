@@ -1,0 +1,219 @@
+//! One fleet worker: a private runtime + parameter replica driven by
+//! coordinator tickets.
+//!
+//! The worker never sees another replica's parameters. It samples its own
+//! data shard (`Stream::Data`, shard = worker index), runs the fused
+//! two-point forward for each ticket, reports the scalar loss pair, and
+//! replays the coordinator's aggregated kappa through the *same*
+//! [`StepEngine`] update path the single-process trainer uses — which is
+//! exactly why all replicas stay bit-identical with zero parameter traffic.
+
+use std::path::Path;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::counter::SampleCounter;
+use crate::coordinator::eval;
+use crate::coordinator::metrics::{Phase, PhaseTimers};
+use crate::coordinator::optimizer::{build_optimizer, ForwardOut};
+use crate::coordinator::step::StepEngine;
+use crate::coordinator::trainer::DataSource;
+use crate::data::Batch;
+use crate::runtime::{checkpoint, Manifest, ParamStore, Runtime};
+
+use super::protocol::{Command, Event, Ticket, WorkerReport};
+
+/// Everything one worker needs beyond the shared [`TrainConfig`]: its data
+/// shard source, and (worker 0 only) the eval set and checkpoint target.
+pub struct WorkerJob {
+    pub data: DataSource,
+    /// held-out eval batches + candidate label tokens (worker 0 carries the
+    /// fleet's eval responsibility; other workers leave this `None`)
+    pub eval: Option<(Vec<Batch>, Vec<i32>)>,
+    /// write a final checkpoint here on Stop (worker 0)
+    pub save_to: Option<std::path::PathBuf>,
+}
+
+/// Builds a [`WorkerJob`] from the worker index and the opened manifest.
+/// Shared by reference across worker threads, hence `Sync`; `Send` so the
+/// owning fleet trainer itself can cross threads.
+pub type JobFactory = dyn Fn(usize, &Manifest) -> Result<WorkerJob> + Send + Sync;
+
+/// The standard few-shot-classification job factory (shared by the
+/// `train-dp` CLI, the example, the benches, and the determinism tests):
+/// every worker builds the same task pool — the *seeds* shard the data —
+/// and worker 0 carries the eval set (`eval_n > 0`) and the optional
+/// checkpoint target.
+pub fn task_job_factory(task_name: String, seed: u64, k_shot: usize,
+                        eval_n: usize,
+                        save_to: Option<std::path::PathBuf>)
+                        -> Box<JobFactory> {
+    Box::new(move |worker: usize, manifest: &Manifest|
+                   -> Result<WorkerJob> {
+        let spec = crate::data::tasks::spec_by_name(&task_name)
+            .ok_or_else(|| anyhow!("unknown task {task_name:?}"))?;
+        let tok = crate::data::Tokenizer::new(manifest.config.vocab);
+        let task = crate::data::Task::new(spec, tok, manifest.config.seq_len,
+                                          seed);
+        let label_tokens = task.label_tokens();
+        let builder =
+            crate::data::BatchBuilder::new(task, manifest.config.batch, k_shot);
+        let eval = (worker == 0 && eval_n > 0)
+            .then(|| (builder.eval_batches(eval_n), label_tokens));
+        Ok(WorkerJob {
+            data: DataSource::Task(builder),
+            eval,
+            save_to: if worker == 0 { save_to.clone() } else { None },
+        })
+    })
+}
+
+/// Thread entry point: run the ticket loop, convert any error into a
+/// [`Event::Failed`] so the coordinator aborts cleanly instead of hanging.
+/// A *panic* (as opposed to an `Err`) is also reported via a drop guard —
+/// otherwise the coordinator would block forever on a round the dead
+/// worker never answers; the panic itself still propagates through the
+/// scoped join.
+pub(crate) fn run_worker(worker: usize, workers: u32, artifact_dir: &Path,
+                         cfg: &TrainConfig, factory: &JobFactory,
+                         rx: Receiver<Command>, tx: Sender<Event>) {
+    struct PanicGuard {
+        worker: usize,
+        tx: Sender<Event>,
+    }
+    impl Drop for PanicGuard {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                let _ = self.tx.send(Event::Failed {
+                    worker: self.worker,
+                    error: "worker thread panicked".to_string(),
+                });
+            }
+        }
+    }
+    let _guard = PanicGuard { worker, tx: tx.clone() };
+    if let Err(e) = worker_loop(worker, workers, artifact_dir, cfg, factory,
+                                &rx, &tx) {
+        let _ = tx.send(Event::Failed { worker, error: format!("{e:#}") });
+    }
+}
+
+fn send(tx: &Sender<Event>, ev: Event) -> Result<()> {
+    tx.send(ev).map_err(|_| anyhow!("coordinator channel closed"))
+}
+
+fn worker_loop(worker: usize, workers: u32, artifact_dir: &Path,
+               cfg: &TrainConfig, factory: &JobFactory,
+               rx: &Receiver<Command>, tx: &Sender<Event>) -> Result<()> {
+    let rt = Runtime::open(artifact_dir)
+        .with_context(|| format!("worker {worker}: opening runtime"))?;
+    let engine = StepEngine::new(cfg.clone());
+    let mut driver = build_optimizer(&rt, &engine.cfg, &engine.seeds)?;
+    let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
+    let job = factory(worker, &rt.manifest)
+        .with_context(|| format!("worker {worker}: building job"))?;
+    let mut timers = PhaseTimers::default();
+    let mut counter = SampleCounter::default();
+    // the current step's batch; sub-perturbations and the update phase
+    // reuse it, exactly like the single-process trainer
+    let mut current: Option<(u64, Batch)> = None;
+
+    loop {
+        // a closed command channel means the coordinator is gone (it
+        // aborted); exit quietly — it is not this worker's error
+        let Ok(cmd) = rx.recv() else { return Ok(()) };
+        match cmd {
+            Command::Forward(t) => {
+                check_ticket(&engine, worker, &t)?;
+                if current.as_ref().map(|(s, _)| *s) != Some(t.step) {
+                    let dseed = engine.seeds
+                        .shard_data_seed(t.step, worker as u32, workers);
+                    let b = timers.time(Phase::Sampling,
+                                        || job.data.batch(dseed, t.step));
+                    current = Some((t.step, b));
+                }
+                let (_, batch) = current.as_ref().unwrap();
+                let t0 = Instant::now();
+                let fwd = engine.forward_sub(&rt, &mut *driver, &mut params,
+                                             batch, t.step, t.sub,
+                                             &mut timers, &mut counter)?;
+                let forward_secs = t0.elapsed().as_secs_f64();
+                let ForwardOut::TwoPoint { f_plus, f_minus } = fwd else {
+                    bail!("worker {worker}: fleet requires a two-point ZO \
+                           forward (got a first-order loss)");
+                };
+                send(tx, Event::TwoPoint {
+                    worker,
+                    step: t.step,
+                    sub: t.sub,
+                    f_plus,
+                    f_minus,
+                    forward_secs,
+                })?;
+            }
+            Command::Apply { ticket: t, kappa } => {
+                check_ticket(&engine, worker, &t)?;
+                let Some((step, batch)) = current.as_ref() else {
+                    bail!("worker {worker}: Apply before any Forward");
+                };
+                ensure!(*step == t.step,
+                        "worker {worker}: Apply for step {} but batch is for \
+                         step {step}", t.step);
+                let t0 = Instant::now();
+                engine.update_sub(&rt, &mut *driver, &mut params, batch,
+                                  t.step, t.sub, kappa, &mut timers,
+                                  &mut counter)?;
+                send(tx, Event::Applied {
+                    worker,
+                    step: t.step,
+                    sub: t.sub,
+                    update_secs: t0.elapsed().as_secs_f64(),
+                })?;
+            }
+            Command::Skip { ticket: t } => {
+                send(tx, Event::Applied {
+                    worker,
+                    step: t.step,
+                    sub: t.sub,
+                    update_secs: 0.0,
+                })?;
+            }
+            Command::Eval { step } => {
+                let accuracy = match &job.eval {
+                    Some((batches, labels)) => {
+                        eval::accuracy(&rt, &params, batches, labels)?
+                    }
+                    None => f64::NAN,
+                };
+                send(tx, Event::EvalDone { worker, step, accuracy })?;
+            }
+            Command::Stop => {
+                if let Some(dir) = &job.save_to {
+                    checkpoint::save(dir, &rt.manifest, &params,
+                                     engine.cfg.steps as u64)?;
+                }
+                send(tx, Event::Report(Box::new(WorkerReport {
+                    worker,
+                    timers,
+                    counter,
+                    state_bytes: driver.state_bytes(),
+                })))?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Replica-consistency check: the broadcast perturbation seed must match
+/// this worker's locally derived schedule.
+fn check_ticket(engine: &StepEngine, worker: usize, t: &Ticket) -> Result<()> {
+    let local = engine.seeds.perturb_seed(t.step, t.sub);
+    ensure!(local == t.perturb_seed,
+            "worker {worker}: seed schedule diverged at step {} sub {} \
+             (coordinator {:#x}, local {local:#x})",
+            t.step, t.sub, t.perturb_seed);
+    Ok(())
+}

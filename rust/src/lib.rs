@@ -10,7 +10,8 @@
 //!   text artifacts (`python/compile/`).
 //! * **L3** — this crate: the fine-tuning coordinator. It loads the HLO
 //!   artifacts through PJRT ([`runtime`]), owns all training state
-//!   ([`coordinator`]), and provides the datasets, memory model, benchmark
+//!   ([`coordinator`]), scales out via the seed-synchronized data-parallel
+//!   [`fleet`], and provides the datasets, memory model, benchmark
 //!   harness, and CLI of the evaluation suite.
 //!
 //! Python never runs at training time: after `make artifacts` the `tezo`
@@ -29,6 +30,7 @@ pub mod clix;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod jsonx;
 pub mod memmodel;
 pub mod proplite;

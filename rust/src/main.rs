@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train          fine-tune one task with one method
+//!   train-dp       seed-synchronized data-parallel fine-tuning (fleet)
 //!   sweep          run the Table 3/4/5 method x task grids (or --list for Table 6)
 //!   memory-report  render Table 7 / Table 9 / Fig 1(c) from the memory model
 //!   rank-probe     recompute the Eq.(7) rank schedule and check the manifest
@@ -12,11 +13,12 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use tezo::clix::{self, ArgSpec};
-use tezo::config::{search_space, Method, TrainConfig};
+use tezo::config::{search_space, FleetConfig, Method, TrainConfig};
 use tezo::coordinator::rank;
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
-use tezo::memmodel::tables;
+use tezo::fleet::{task_job_factory, FleetTrainer};
+use tezo::memmodel::{comm, tables};
 use tezo::runtime::{ParamStore, Runtime};
 
 fn main() {
@@ -32,6 +34,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
     match cmd {
         "train" => cmd_train(rest),
+        "train-dp" => cmd_train_dp(rest),
         "sweep" => cmd_sweep(rest),
         "memory-report" => cmd_memory(rest),
         "rank-probe" => cmd_rank_probe(rest),
@@ -55,6 +58,7 @@ fn print_help() {
         "tezo {} — TeZO reproduction (Rust + JAX + Pallas)\n\n\
          commands:\n\
          \x20 train          fine-tune one synthetic task with one method\n\
+         \x20 train-dp       seed-synchronized data-parallel training (--workers N)\n\
          \x20 sweep          Table 3/4/5 grids; --list prints Table 6\n\
          \x20 memory-report  Table 7 / Table 9 / Fig 1(c) (analytic model)\n\
          \x20 rank-probe     recompute Eq.(7) ranks, verify vs manifest\n\
@@ -92,12 +96,10 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     ArgSpec::switch("help", "show help"),
 ];
 
-fn cmd_train(argv: &[String]) -> Result<()> {
-    let args = clix::parse(argv, TRAIN_SPECS)?;
-    if args.has("help") {
-        print!("{}", clix::render_help("train", "fine-tune one task", TRAIN_SPECS));
-        return Ok(());
-    }
+/// Parse the training flags shared by `train` and `train-dp` (both specs
+/// declare the same set — one parser keeps their semantics from drifting,
+/// which the `train-dp --workers 1` parity guarantee depends on).
+fn parse_train_cfg(args: &clix::Args) -> Result<TrainConfig> {
     let config = args.get_str("config")?;
     let method = Method::parse(args.get_str("method")?)?;
     let mut cfg = TrainConfig::with_preset(method, config);
@@ -114,6 +116,18 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     cfg.kappa_clip = args.get_f32("kappa-clip")?;
     cfg.n_perturb = args.get_usize("n-perturb")?;
     cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, TRAIN_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("train", "fine-tune one task", TRAIN_SPECS));
+        return Ok(());
+    }
+    let config = args.get_str("config")?;
+    let method = Method::parse(args.get_str("method")?)?;
+    let cfg = parse_train_cfg(&args)?;
 
     let rt = Runtime::open_config(config)?;
     let mut params = match args.get("init-from") {
@@ -176,6 +190,105 @@ fn cmd_train(argv: &[String]) -> Result<()> {
                                             &rt.manifest, &params,
                                             cfg.steps as u64)?;
             println!("checkpoint -> {dir}");
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// train-dp
+// ---------------------------------------------------------------------------
+
+const TRAIN_DP_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("config", "tiny", "model config (artifacts/<config>)"),
+    ArgSpec::opt("method", "tezo", "ZO optimizer: mezo|mezo-m|mezo-adam|lozo|lozo-m|subzo|zo-adamu|tezo|tezo-m|tezo-adam"),
+    ArgSpec::opt("workers", "2", "data-parallel worker replicas"),
+    ArgSpec::opt("task", "sst2", "synthetic task name (see data::tasks)"),
+    ArgSpec::opt("steps", "200", "training steps"),
+    ArgSpec::opt("k", "16", "few-shot examples per class"),
+    ArgSpec::opt("lr", "", "learning rate (default: Table-6 preset)"),
+    ArgSpec::opt("rho", "1e-3", "perturbation rate"),
+    ArgSpec::opt("seed", "0", "master seed"),
+    ArgSpec::opt("eval-every", "0", "eval interval (0 = end only)"),
+    ArgSpec::opt("eval-n", "128", "held-out eval examples"),
+    ArgSpec::opt("loss-csv", "", "write the global loss curve CSV here"),
+    ArgSpec::opt("lr-schedule", "constant", "constant|linear|cosine"),
+    ArgSpec::opt("kappa-clip", "0", "clip |kappa| at this value (0 = off)"),
+    ArgSpec::opt("n-perturb", "1", "q-SPSA perturbations per step (SGD-form only)"),
+    ArgSpec::opt("save-to", "", "worker 0 writes a checkpoint here at the end"),
+    ArgSpec::switch("quiet", "suppress per-step output"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_train_dp(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, TRAIN_DP_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("train-dp",
+                                       "seed-synchronized data-parallel training",
+                                       TRAIN_DP_SPECS));
+        return Ok(());
+    }
+    let config = args.get_str("config")?;
+    let method = Method::parse(args.get_str("method")?)?;
+    let cfg = parse_train_cfg(&args)?;
+    let fleet = FleetConfig::new(args.get_usize("workers")?);
+    fleet.validate(&cfg)?;
+
+    let save_to = match args.get("save-to") {
+        Some(d) if !d.is_empty() => Some(PathBuf::from(d)),
+        _ => None,
+    };
+    let factory = task_job_factory(args.get_str("task")?.to_string(), cfg.seed,
+                                   args.get_usize("k")?,
+                                   args.get_usize("eval-n")?, save_to);
+
+    let dir = tezo::artifacts_root().join(config);
+    let n_params = tezo::runtime::Manifest::load(&dir)?.config.n_params as u64;
+    let mut trainer = FleetTrainer::new(fleet, cfg.clone(), dir, factory);
+    if !args.has("quiet") {
+        trainer.on_step = Some(Box::new(|step, loss| {
+            if step % 20 == 0 {
+                println!("step {step:5}  loss {loss:.4}");
+            }
+        }));
+    }
+    let outcome = trainer.run()?;
+
+    println!("\n== {} on {} x{} workers ({} steps) ==",
+             method.name(), args.get_str("task")?, fleet.workers, cfg.steps);
+    println!("loss: {:.4} -> {:.4}",
+             outcome.metrics.initial_loss_avg(20),
+             outcome.metrics.final_loss_avg(20));
+    if let Some((step, acc)) = outcome.metrics.evals.last() {
+        println!("accuracy @ step {step}: {:.1}%", acc * 100.0);
+    }
+    println!("wall: {:.1}s ({:.1} ms/step)", outcome.metrics.wall_seconds,
+             outcome.metrics.seconds_per_step() * 1e3);
+    println!("per-worker phases (forward / update seconds):");
+    for (w, fwd, upd) in outcome.fleet.per_worker() {
+        println!("  worker {w}: {fwd:8.2}s / {upd:8.2}s");
+    }
+    println!("straggler factor: {:.3}  (fast replicas idled {:.2}s)",
+             outcome.fleet.straggler_factor(),
+             outcome.fleet.straggler_wait_secs());
+    let scalar = outcome.fleet.comm.total_bytes();
+    let allreduce = comm::gradient_allreduce_step_bytes(n_params, fleet.workers as u64)
+        * cfg.steps as u64;
+    println!("communication: {scalar} bytes total ({} tickets, {} results)",
+             outcome.fleet.comm.tickets, outcome.fleet.comm.results);
+    if fleet.workers > 1 {
+        println!("  gradient all-reduce would move {allreduce} bytes \
+                  ({:.1e}x more)", allreduce as f64 / scalar.max(1) as f64);
+    }
+    println!("optimizer state per replica: {} bytes", outcome.state_bytes);
+    if outcome.skipped > 0 {
+        println!("warning: {} non-finite steps skipped (in lockstep)",
+                 outcome.skipped);
+    }
+    if let Some(path) = args.get("loss-csv") {
+        if !path.is_empty() {
+            outcome.metrics.write_loss_csv(&PathBuf::from(path))?;
+            println!("loss curve -> {path}");
         }
     }
     Ok(())

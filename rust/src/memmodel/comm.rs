@@ -1,0 +1,80 @@
+//! Analytic communication-cost model for data-parallel fine-tuning.
+//!
+//! The resampling trick makes a ZO step fully described by a 4-byte seed
+//! plus one scalar `kappa = (f+ - f-)/(2 rho)`, so the seed-synchronized
+//! fleet ([`crate::fleet`]) moves O(1) bytes per worker per step. This
+//! module pins down the logical wire sizes (the fleet's [`CommStats`]
+//! counts with these constants) and the gradient all-reduce volume a
+//! first-order — or parameter-averaging — data-parallel scheme would move
+//! instead, so the "scalars vs gradients" headline is a computed table, not
+//! prose.
+//!
+//! [`CommStats`]: crate::fleet::CommStats
+
+/// Logical bytes of one work ticket (step u64 + sub u32 + perturb seed u32).
+pub const TICKET_BYTES: u64 = 16;
+/// Logical bytes of one worker's two-point result (f+ and f- as f32).
+pub const TWO_POINT_BYTES: u64 = 8;
+/// Logical bytes of one aggregated-kappa broadcast (f32, padded ticket echo
+/// included for the replica-consistency check).
+pub const KAPPA_BYTES: u64 = 4 + TICKET_BYTES;
+
+/// Total logical wire bytes one training step moves for the fleet protocol:
+/// per sub-perturbation, a ticket down to every worker, a two-point result
+/// up from every worker, and the aggregated kappa broadcast back down.
+pub fn zo_scalar_step_bytes(workers: u64, n_perturb: u64) -> u64 {
+    let q = n_perturb.max(1);
+    q * workers * (TICKET_BYTES + TWO_POINT_BYTES + KAPPA_BYTES)
+}
+
+/// Total wire bytes of one ring all-reduce over an fp32 gradient of
+/// `n_params` elements: each of the `workers` ranks transmits
+/// `2 (W-1)/W * 4 * n_params` bytes (reduce-scatter + all-gather).
+pub fn gradient_allreduce_step_bytes(n_params: u64, workers: u64) -> u64 {
+    if workers <= 1 {
+        return 0;
+    }
+    // summed over ranks: W * 2*(W-1)/W * 4 * n = 2*(W-1)*4*n
+    2 * (workers - 1) * 4 * n_params
+}
+
+/// How many times less traffic the scalar-sync fleet moves than a gradient
+/// all-reduce at the same worker count (per step).
+pub fn reduction_factor(n_params: u64, workers: u64, n_perturb: u64) -> f64 {
+    let scalar = zo_scalar_step_bytes(workers, n_perturb).max(1);
+    gradient_allreduce_step_bytes(n_params, workers) as f64 / scalar as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmodel::layout::opt;
+
+    #[test]
+    fn scalar_sync_is_constant_in_model_size() {
+        let w = zo_scalar_step_bytes(8, 1);
+        assert!(w < 1024, "per-step fleet traffic must be O(workers): {w}");
+        assert_eq!(zo_scalar_step_bytes(8, 1), zo_scalar_step_bytes(8, 1));
+        // q-SPSA scales linearly
+        assert_eq!(zo_scalar_step_bytes(8, 4), 4 * zo_scalar_step_bytes(8, 1));
+    }
+
+    #[test]
+    fn allreduce_is_gradient_sized() {
+        let n = 13_000_000_000u64; // OPT-13B-ish
+        let b = gradient_allreduce_step_bytes(n, 8);
+        assert!(b > n * 4, "all-reduce moves more than one gradient copy");
+        assert_eq!(gradient_allreduce_step_bytes(n, 1), 0);
+    }
+
+    #[test]
+    fn fleet_beats_allreduce_by_many_orders_of_magnitude() {
+        let l = opt("13b");
+        let n = l.n_params() as u64;
+        let f = reduction_factor(n, 8, 1);
+        assert!(f > 1e8, "13B @ 8 workers: reduction factor {f:.1}");
+        // even a tiny model at 2 workers wins by >1000x
+        let f_small = reduction_factor(1_000_000, 2, 1);
+        assert!(f_small > 1e3, "1M @ 2 workers: {f_small:.1}");
+    }
+}

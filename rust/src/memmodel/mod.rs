@@ -4,13 +4,16 @@
 //! state policy, both of which we model exactly over the *real* OPT / LLaMA
 //! parameter layouts ([`layout`]). [`usage`] accounts params, activations,
 //! optimizer state, and per-method ZO factor state; [`tables`] renders the
-//! Table 7 / Table 9 / Fig 1(c) / Fig 3(a) reproductions.
+//! Table 7 / Table 9 / Fig 1(c) / Fig 3(a) reproductions; [`comm`] models
+//! the data-parallel communication cost (the fleet's O(1) scalar sync vs
+//! gradient all-reduce).
 //!
 //! Calibration choices (documented, not fitted per-row): fp16 weights,
 //! fp32 factor vectors and optimizer moments kept in the precision each
 //! method's reference implementation uses, inference activation workspace
 //! proportional to batch x seq x d x layers.
 
+pub mod comm;
 pub mod layout;
 pub mod tables;
 pub mod usage;

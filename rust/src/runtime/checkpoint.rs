@@ -13,25 +13,36 @@ use super::manifest::Manifest;
 use super::params::{read_f32_bin, ParamStore};
 
 /// Save `params` under `dir` (created if needed) with run metadata.
+///
+/// Crash-safe, including when overwriting an existing checkpoint: the
+/// `.bin` files are *step-qualified* (a crashed save can never alias the
+/// files a previous `checkpoint.json` references), every file is written
+/// to a sibling temp path, fsynced, and atomically renamed, and
+/// `checkpoint.json` is renamed *last* — the single commit point. A crash
+/// mid-save leaves the previous checkpoint fully intact (plus orphaned
+/// files from the aborted save, which the next successful save garbage-
+/// collects).
 pub fn save(dir: &Path, manifest: &Manifest, params: &ParamStore, step: u64)
             -> Result<()> {
     std::fs::create_dir_all(dir.join("params"))
         .with_context(|| format!("creating {}", dir.display()))?;
     let mut entries = Vec::new();
+    let mut kept = Vec::new();
     for (i, e) in params.entries.iter().enumerate() {
         let host = params.fetch(i)?;
-        let fname = format!("params/{i:03}_{}.bin", e.name.replace('.', "_"));
-        let mut bytes = Vec::with_capacity(host.len() * 4);
-        for x in &host {
-            bytes.extend_from_slice(&x.to_le_bytes());
-        }
-        std::fs::write(dir.join(&fname), bytes)?;
+        let base = format!("s{step:010}_{i:03}_{}.bin", e.name.replace('.', "_"));
+        write_atomic(&dir.join("params").join(&base), &f32_le_bytes(&host))?;
+        let fname = format!("params/{base}");
+        kept.push(base);
         entries.push(Value::obj(vec![
             ("name", Value::str(&e.name)),
             ("shape", Value::arr(e.shape.iter().map(|&s| Value::i(s as i64)).collect())),
             ("bin", Value::str(&fname)),
         ]));
     }
+    // persist all bin renames with one directory fsync before the json
+    // commit point (write_atomic already fsyncs each file's contents)
+    sync_dir(&dir.join("params"));
     let doc = Value::obj(vec![
         ("format", Value::str("tezo-checkpoint-v1")),
         ("config", Value::str(&manifest.config.name)),
@@ -39,8 +50,65 @@ pub fn save(dir: &Path, manifest: &Manifest, params: &ParamStore, step: u64)
         ("step", Value::i(step as i64)),
         ("params", Value::arr(entries)),
     ]);
-    std::fs::write(dir.join("checkpoint.json"), jsonx::to_string_pretty(&doc))?;
+    write_atomic(&dir.join("checkpoint.json"),
+                 jsonx::to_string_pretty(&doc).as_bytes())?;
+    sync_dir(dir);
+    // the new json is committed: drop bins of older/aborted saves
+    gc_params_dir(&dir.join("params"), &kept);
     Ok(())
+}
+
+/// Bulk little-endian byte image of an f32 slice.
+fn f32_le_bytes(host: &[f32]) -> Vec<u8> {
+    let mut bytes = vec![0u8; host.len() * 4];
+    for (dst, x) in bytes.chunks_exact_mut(4).zip(host) {
+        dst.copy_from_slice(&x.to_le_bytes());
+    }
+    bytes
+}
+
+/// Write `bytes` to `path` via a same-directory temp file + fsync + rename
+/// (rename within one directory is atomic on POSIX filesystems).
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let mut name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("no file name in {}", path.display()))?
+        .to_os_string();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    f.sync_all()
+        .with_context(|| format!("syncing {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Best-effort directory fsync, persisting the renames committed inside it
+/// (unix-specific; a no-op where directories cannot be opened).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Remove `.bin`/`.tmp` files the just-committed checkpoint does not
+/// reference (leftovers of older or crashed saves). Best effort: a failed
+/// removal only wastes disk, never correctness.
+fn gc_params_dir(params_dir: &Path, kept: &[String]) {
+    let Ok(rd) = std::fs::read_dir(params_dir) else { return };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !kept.iter().any(|k| k == name) {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
 }
 
 /// Restore parameters from a checkpoint into fresh device buffers.

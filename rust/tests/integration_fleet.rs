@@ -1,0 +1,122 @@
+//! Fleet determinism integration: the seed-synchronized data-parallel
+//! trainer must (a) reproduce single-process training bit-identically with
+//! one worker, and (b) be invariant to worker scheduling order with many
+//! workers. Both gate on the tiny artifacts being present, like the other
+//! PJRT integration suites.
+
+use std::path::PathBuf;
+
+use tezo::config::{FleetConfig, Method, TrainConfig};
+use tezo::coordinator::trainer::{DataSource, Trainer};
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::fleet::{task_job_factory, FleetOutcome, FleetTrainer};
+use tezo::runtime::{ParamStore, Runtime};
+
+fn tiny_dir() -> Option<PathBuf> {
+    let dir = tezo::artifacts_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+        return None;
+    }
+    Some(dir)
+}
+
+fn cfg_for(method: Method, steps: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::with_preset(method, "tiny");
+    cfg.steps = steps;
+    cfg.seed = seed;
+    cfg.eval_every = steps / 2;
+    cfg
+}
+
+/// The same per-worker job construction the `train-dp` CLI performs.
+fn job_factory(seed: u64) -> Box<tezo::fleet::worker::JobFactory> {
+    task_job_factory("sst2".to_string(), seed, 16, 64, None)
+}
+
+fn run_fleet(dir: &PathBuf, method: Method, workers: usize, steps: usize,
+             seed: u64) -> FleetOutcome {
+    let cfg = cfg_for(method, steps, seed);
+    let mut ft = FleetTrainer::new(FleetConfig::new(workers), cfg,
+                                   dir.clone(), job_factory(seed));
+    ft.run().expect("fleet run")
+}
+
+#[test]
+fn one_worker_fleet_matches_plain_trainer_bitwise() {
+    let Some(dir) = tiny_dir() else { return };
+    let seed = 3u64;
+    let steps = 8usize;
+    for method in [Method::Tezo, Method::Mezo, Method::TezoAdam] {
+        // single-process reference
+        let rt = Runtime::open(&dir).unwrap();
+        let mut params = ParamStore::load(&rt.client, &rt.manifest).unwrap();
+        let tok = Tokenizer::new(rt.manifest.config.vocab);
+        let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
+                             rt.manifest.config.seq_len, seed);
+        let labels = task.label_tokens();
+        let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+        let evals = builder.eval_batches(64);
+        let mut trainer = Trainer::new(&rt, cfg_for(method, steps, seed),
+                                       DataSource::Task(builder))
+            .with_eval(evals, labels);
+        let plain = trainer.run(&mut params).unwrap();
+
+        let fleet = run_fleet(&dir, method, 1, steps, seed);
+        assert_eq!(plain.metrics.losses, fleet.metrics.losses,
+                   "{}: 1-worker fleet diverged from plain trainer",
+                   method.name());
+        assert_eq!(plain.metrics.evals, fleet.metrics.evals,
+                   "{}: eval accuracy diverged", method.name());
+        assert_eq!(plain.skipped, fleet.skipped);
+        assert_eq!(plain.state_bytes, fleet.state_bytes);
+        // every worker sampled the same elements the trainer did
+        assert_eq!(plain.counter, fleet.workers[0].counter,
+                   "{}: sampled-element accounting diverged", method.name());
+    }
+}
+
+#[test]
+fn four_worker_fleet_is_invariant_to_scheduling() {
+    let Some(dir) = tiny_dir() else { return };
+    // repeated runs exercise different thread interleavings; the slotted
+    // scalar aggregation must make the result bitwise reproducible anyway
+    let a = run_fleet(&dir, Method::Tezo, 4, 6, 11);
+    let b = run_fleet(&dir, Method::Tezo, 4, 6, 11);
+    assert_eq!(a.metrics.losses, b.metrics.losses,
+               "4-worker fleet is scheduling-dependent");
+    assert_eq!(a.metrics.evals, b.metrics.evals);
+    assert_eq!(a.fleet.comm, b.fleet.comm, "comm accounting must be exact");
+    // a different master seed must change the trajectory
+    let c = run_fleet(&dir, Method::Tezo, 4, 6, 12);
+    assert_ne!(a.metrics.losses, c.metrics.losses, "seed ignored");
+}
+
+#[test]
+fn more_workers_change_the_data_but_not_the_protocol() {
+    let Some(dir) = tiny_dir() else { return };
+    let one = run_fleet(&dir, Method::Tezo, 1, 5, 7);
+    let two = run_fleet(&dir, Method::Tezo, 2, 5, 7);
+    // different shard unions -> different two-point measurements
+    assert_ne!(one.metrics.losses, two.metrics.losses,
+               "2 workers must average over a larger shard union");
+    // comm volume is O(workers), model-size independent
+    assert_eq!(two.fleet.comm.tickets, 2 * one.fleet.comm.tickets);
+    assert_eq!(two.fleet.comm.results, 2 * one.fleet.comm.results);
+    let per_step = two.fleet.comm.total_bytes() / 5;
+    assert_eq!(per_step,
+               tezo::memmodel::comm::zo_scalar_step_bytes(2, 1),
+               "runtime counter must match the analytic model");
+    // every replica reports identical optimizer state size
+    assert!(two.workers.iter().all(|r| r.state_bytes == two.state_bytes));
+}
+
+#[test]
+fn fleet_rejects_first_order_methods() {
+    // no artifacts needed: validation fails before any worker spawns
+    let cfg = cfg_for(Method::FoAdam, 4, 0);
+    let mut ft = FleetTrainer::new(FleetConfig::new(2), cfg,
+                                   PathBuf::from("artifacts/none"),
+                                   job_factory(0));
+    assert!(ft.run().is_err(), "FO methods need gradient all-reduce");
+}
