@@ -6,6 +6,12 @@
 //! at equal shapes the TeZO kernel does O(r) FLOPs/byte on the weight
 //! stream while the dense kernel pays the full RNG + read-write sweep.
 //!
+//! The second section isolates the *dispatch* layer: identical kernel
+//! executions driven through the legacy positional builder (host args
+//! re-validated and re-uploaded every call) vs a prepared call with
+//! arena staging (plan resolved once, host args uploaded once per step) —
+//! the per-step host→device byte counters quantify the reduction.
+//!
 //! Run: `cargo bench --bench bench_kernels`.
 
 use tezo::benchkit::{bench, BenchOpts, Report};
@@ -72,4 +78,76 @@ fn main() {
     }
     rep.print();
     rep.write_csv(std::path::Path::new("out/kernel_microbench.csv")).ok();
+    bench_dispatch(&rt, opts);
+}
+
+/// Dispatch-layer comparison on one mid-size shape: legacy per-call
+/// staging vs prepared calls + step-arena staging, byte-counted.
+fn bench_dispatch(rt: &Runtime, opts: BenchOpts) {
+    let (m, n, r) = (1024, 1024, 32);
+    let name = format!("kernel_tezo_perturb_{m}x{n}_r{r}");
+    let w = normal_vec(11, m * n);
+    let u = normal_vec(12, m * r);
+    let v = normal_vec(13, n * r);
+    let tau = normal_vec(14, r);
+    let wb = rt.client.buffer_from_host_buffer(&w, &[m, n], None).unwrap();
+    let ub = rt.client.buffer_from_host_buffer(&u, &[m, r], None).unwrap();
+    let vb = rt.client.buffer_from_host_buffer(&v, &[n, r], None).unwrap();
+    rt.executable(&name).unwrap(); // compile outside timing
+
+    let mut rep = Report::new(
+        "Dispatch layer — legacy positional staging vs prepared + arena",
+        &["median", "mean", "p95", "iters", "outliers"],
+    );
+
+    // legacy path: tau + rho validated against the manifest and uploaded
+    // fresh on EVERY call (how every driver dispatched before the
+    // prepared-call refactor)
+    let legacy_calls = std::cell::Cell::new(0u64);
+    let before = rt.stage().stats();
+    let s = bench("legacy CallBuilder (re-stage tau+rho)", opts, || {
+        legacy_calls.set(legacy_calls.get() + 1);
+        let out = rt.call(&name).unwrap()
+            .arg(ArgValue::Buf(&wb)).unwrap()
+            .arg(ArgValue::Buf(&ub)).unwrap()
+            .arg(ArgValue::Buf(&vb)).unwrap()
+            .arg(ArgValue::F32(&tau)).unwrap()
+            .arg(ArgValue::ScalarF32(1e-3)).unwrap()
+            .run().unwrap();
+        std::hint::black_box(out);
+    });
+    rep.add_sample(&s);
+    let legacy = rt.stage().stats().since(&before);
+
+    // prepared path: same executions, but the plan is resolved once and
+    // tau/rho live in the staging pool — uploaded on the first call of the
+    // "step", reused by every later one
+    let prepared_calls = std::cell::Cell::new(0u64);
+    let before = rt.stage().stats();
+    let s = bench("prepared + StepArena (pool-staged)", opts, || {
+        prepared_calls.set(prepared_calls.get() + 1);
+        let arena = rt.step_arena(0);
+        let mut call = rt.prepared(&name).unwrap();
+        call.bind_buf("tensor", "w", &wb).unwrap();
+        call.bind_buf("factor_u", "u", &ub).unwrap();
+        call.bind_buf("factor_v", "v", &vb).unwrap();
+        call.bind_f32("tau", "tau", &tau, &arena).unwrap();
+        call.bind_scalar_f32("rho", 1e-3, &arena).unwrap();
+        let out = call.run().unwrap();
+        std::hint::black_box(out);
+    });
+    rep.add_sample(&s);
+    let prepared = rt.stage().stats().since(&before);
+
+    rep.print();
+    // the two bench runs execute different iteration counts (adaptive
+    // budget), so compare per-call averages, not totals
+    let legacy_per_call = legacy.upload_bytes as f64 / legacy_calls.get().max(1) as f64;
+    let prepared_per_call =
+        prepared.upload_bytes as f64 / prepared_calls.get().max(1) as f64;
+    println!("host->device upload bytes per call: legacy {legacy_per_call:.1} \
+              vs prepared {prepared_per_call:.3} ({:.0}x less; {} bytes \
+              served from the pool)",
+             legacy_per_call / prepared_per_call.max(1e-9),
+             prepared.reused_bytes);
 }

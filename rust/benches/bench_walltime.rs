@@ -46,7 +46,8 @@ fn bench_config(config: &str, steps: usize) {
     let mut rep = Report::new(
         &format!("Table 8 / Fig 3(b) — ms per iteration ({config}, {} params)",
                  rt.manifest.config.n_params),
-        &["ms/step", "fwd %", "update %", "sample %", "host %", "vs mezo"],
+        &["ms/step", "fwd %", "update %", "sample %", "host %", "upB/step",
+          "vs mezo"],
     );
     let mut mezo_ms = None;
     let mut rows = Vec::new();
@@ -78,19 +79,25 @@ fn bench_config(config: &str, steps: usize) {
         }
         let t = &outcome.metrics.timers;
         let tot = t.total_seconds().max(1e-9);
+        // per-step host→device upload bytes: the prepared-call staging pool
+        // dedupes the batch across sub-forwards and the seed across the
+        // forward/update pair (see docs/runtime.md)
+        let up_per_step = outcome.staging.upload_bytes / steps as u64;
         rows.push((m, ms,
                    t.seconds(tezo::coordinator::metrics::Phase::Forward) / tot,
                    t.seconds(tezo::coordinator::metrics::Phase::Update) / tot,
                    t.seconds(tezo::coordinator::metrics::Phase::Sampling) / tot,
-                   t.seconds(tezo::coordinator::metrics::Phase::Host) / tot));
+                   t.seconds(tezo::coordinator::metrics::Phase::Host) / tot,
+                   up_per_step));
     }
-    for (m, ms, fwd, upd, smp, host) in rows {
+    for (m, ms, fwd, upd, smp, host, up) in rows {
         rep.add_row(m.name(), vec![
             format!("{ms:.1}"),
             format!("{:.0}%", fwd * 100.0),
             format!("{:.0}%", upd * 100.0),
             format!("{:.0}%", smp * 100.0),
             format!("{:.0}%", host * 100.0),
+            format!("{up}"),
             mezo_ms.map(|base| format!("{:.2}x", ms / base)).unwrap_or_default(),
         ]);
     }

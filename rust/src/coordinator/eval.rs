@@ -1,26 +1,31 @@
 //! Evaluation: classification accuracy via verbalizer logits, and LM
 //! perplexity for the end-to-end driver.
+//!
+//! Eval sets are fixed for the life of a run, so their tensors are staged
+//! through a *persistent* arena: the first eval pass uploads them, every
+//! later pass (and the final-accuracy hook) reuses the resident device
+//! buffers — zero host→device traffic on repeat evals.
 
 use anyhow::Result;
 
 use crate::data::Batch;
 use crate::runtime::exec::{scalar_f32, to_vec_f32};
-use crate::runtime::{ArgValue, ParamStore, Runtime};
+use crate::runtime::{ParamStore, Runtime};
 
 /// Accuracy over eval batches: for each row, read the logits at the SEP
 /// position and argmax over the candidate `label_tokens` (the MeZO scoring
 /// protocol).
 pub fn accuracy(rt: &Runtime, params: &ParamStore, batches: &[Batch],
                 label_tokens: &[i32]) -> Result<f64> {
+    let arena = rt.persistent_arena();
     let mut correct = 0usize;
     let mut total = 0usize;
     for b in batches {
-        let out = rt
-            .call("eval_logits")?
-            .bufs(params.bufs())?
-            .arg(ArgValue::I32(&b.tokens))?
-            .arg(ArgValue::I32(&b.positions))?
-            .run()?;
+        let mut call = rt.prepared("eval_logits")?;
+        call.bind_bufs("param", params.bufs())?;
+        call.bind_i32("batch", "tokens", &b.tokens, &arena)?;
+        call.bind_i32("batch", "positions", &b.positions, &arena)?;
+        let out = call.run()?;
         let logits = to_vec_f32(&out[0])?; // (B, V)
         let vocab = logits.len() / b.batch;
         for row in 0..b.batch {
@@ -46,16 +51,16 @@ pub fn accuracy(rt: &Runtime, params: &ParamStore, batches: &[Batch],
 
 /// Mean masked LM loss over batches (perplexity = exp(loss)).
 pub fn lm_loss(rt: &Runtime, params: &ParamStore, batches: &[Batch]) -> Result<f64> {
+    let arena = rt.persistent_arena();
     let mut acc = 0.0f64;
     let mut n = 0usize;
     for b in batches {
-        let out = rt
-            .call("fwd_loss")?
-            .bufs(params.bufs())?
-            .arg(ArgValue::I32(&b.tokens))?
-            .arg(ArgValue::I32(&b.targets))?
-            .arg(ArgValue::F32(&b.mask))?
-            .run()?;
+        let mut call = rt.prepared("fwd_loss")?;
+        call.bind_bufs("param", params.bufs())?;
+        call.bind_i32("batch", "tokens", &b.tokens, &arena)?;
+        call.bind_i32("batch", "targets", &b.targets, &arena)?;
+        call.bind_f32("batch", "mask", &b.mask, &arena)?;
+        let out = call.run()?;
         acc += scalar_f32(&out[0])? as f64;
         n += 1;
     }

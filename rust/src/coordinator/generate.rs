@@ -10,7 +10,7 @@ use anyhow::{ensure, Result};
 
 use crate::data::tokenizer::PAD;
 use crate::runtime::exec::to_vec_f32;
-use crate::runtime::{ArgValue, ParamStore, Runtime};
+use crate::runtime::{ParamStore, Runtime};
 
 /// Greedily extend each prompt row by `new_tokens` tokens.
 ///
@@ -40,14 +40,17 @@ pub fn greedy_generate(rt: &Runtime, params: &ParamStore,
         lens.push(1); // dummy rows decode from position 0
     }
 
-    for _ in 0..new_tokens {
+    for it in 0..new_tokens {
+        // each decode position is its own staging epoch: the token matrix
+        // mutates every iteration, so stale stagings are evicted as the
+        // arena advances (prompt-only decode reuses nothing, by design)
+        let arena = rt.step_arena(it as u64);
         let positions: Vec<i32> = lens.iter().map(|&l| (l - 1) as i32).collect();
-        let out = rt
-            .call("eval_logits")?
-            .bufs(params.bufs())?
-            .arg(ArgValue::I32(&tokens))?
-            .arg(ArgValue::I32(&positions))?
-            .run()?;
+        let mut call = rt.prepared("eval_logits")?;
+        call.bind_bufs("param", params.bufs())?;
+        call.bind_i32("batch", "tokens", &tokens, &arena)?;
+        call.bind_i32("batch", "positions", &positions, &arena)?;
+        let out = call.run()?;
         let logits = to_vec_f32(&out[0])?; // (B, V)
         let v = rt.manifest.config.vocab;
         for row in 0..prompts.len() {

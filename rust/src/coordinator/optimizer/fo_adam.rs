@@ -4,14 +4,17 @@
 //! full Adam state — deliberately the expensive baseline the memory tables
 //! compare against.
 
+use std::time::Instant;
+
 use anyhow::{anyhow, Result};
 
 use crate::config::Method;
 use crate::coordinator::metrics::Phase;
 use crate::runtime::exec::scalar_f32;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::Runtime;
 
-use super::{param_elems, zeros_like_params, ForwardOut, StepCtx, ZoOptimizer};
+use super::{bind_batch, param_elems, zeros_like_params, ForwardOut, StepCtx,
+            ZoOptimizer};
 
 pub struct FoAdam {
     m: Vec<xla::PjRtBuffer>,
@@ -39,13 +42,11 @@ impl ZoOptimizer for FoAdam {
     }
 
     fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
-        let call = ctx
-            .rt
-            .call("fo_valgrad")?
-            .bufs(ctx.params.bufs())?
-            .arg(ArgValue::I32(&ctx.batch.tokens))?
-            .arg(ArgValue::I32(&ctx.batch.targets))?
-            .arg(ArgValue::F32(&ctx.batch.mask))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("fo_valgrad")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        bind_batch(&mut call, ctx.batch, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let mut out = ctx.timers.time(Phase::Forward, || call.run())?;
         let grads = out.split_off(1);
         let loss = scalar_f32(&out[0])?;
@@ -60,18 +61,18 @@ impl ZoOptimizer for FoAdam {
             .take()
             .ok_or_else(|| anyhow!("fo-adam update without forward"))?;
         let n = ctx.params.len();
-        let call = ctx
-            .rt
-            .call("fo_adam_update")?
-            .bufs(ctx.params.bufs())?
-            .bufs(grads.iter())?
-            .bufs(self.m.iter())?
-            .bufs(self.v.iter())?
-            .arg(ArgValue::ScalarF32(ctx.lr))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.beta2))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.eps))?
-            .arg(ArgValue::ScalarF32(self.t as f32))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("fo_adam_update")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("grad", &grads)?;
+        call.bind_bufs("state_m", &self.m)?;
+        call.bind_bufs("state_v", &self.v)?;
+        call.bind_scalar_f32("lr", ctx.lr, ctx.arena)?;
+        call.bind_scalar_f32("beta1", ctx.cfg.beta1, ctx.arena)?;
+        call.bind_scalar_f32("beta2", ctx.cfg.beta2, ctx.arena)?;
+        call.bind_scalar_f32("eps", ctx.cfg.eps, ctx.arena)?;
+        call.bind_scalar_f32("step_t", self.t as f32, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let mut out = ctx.timers.time(Phase::Update, || call.run())?;
         let new_v = out.split_off(2 * n);
         let new_m = out.split_off(n);

@@ -4,15 +4,17 @@
 //! (`S` state, n x r per matrix) while the U subspace is frozen; `S` resets
 //! at each window boundary.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::metrics::Phase;
 use crate::coordinator::seeds::SeedSchedule;
 use crate::runtime::exec::scalar_f32;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::{Runtime, StepArena};
 
-use super::{vector_elems, zeros_buf, ForwardOut, StepCtx, ZoOptimizer};
+use super::{bind_batch, vector_elems, zeros_buf, ForwardOut, StepCtx, ZoOptimizer};
 
 /// Lazily-refreshed U panels.
 struct LazyU {
@@ -36,12 +38,11 @@ impl LazyU {
         Ok(LazyU { us: Vec::new(), window: u64::MAX, rank, m_sum, n_sum })
     }
 
-    fn refresh(&mut self, rt: &Runtime, seed: u32, window: u64) -> Result<()> {
-        let out = rt
-            .call("lozo_init_u")?
-            .arg(ArgValue::ScalarU32(seed))?
-            .run()?;
-        self.us = out;
+    fn refresh(&mut self, rt: &Runtime, arena: &StepArena, seed: u32,
+               window: u64) -> Result<()> {
+        let mut call = rt.prepared("lozo_init_u")?;
+        call.bind_scalar_u32("seed", seed, arena)?;
+        self.us = call.run()?;
         self.window = window;
         Ok(())
     }
@@ -52,7 +53,7 @@ impl LazyU {
         let window = ctx.step / interval;
         if window != self.window {
             let seed = ctx.seeds.window_seed(ctx.step, ctx.cfg.lazy_interval);
-            self.refresh(ctx.rt, seed, window)?;
+            self.refresh(ctx.rt, ctx.arena, seed, window)?;
             return Ok(self.m_sum * self.rank as u64);
         }
         Ok(0)
@@ -64,16 +65,14 @@ fn lozo_forward(ctx: &mut StepCtx, lazy: &LazyU) -> Result<ForwardOut> {
     // per-step V draws (in-HLO) + dense 1D
     ctx.counter.add_matrix(lazy.n_sum * lazy.rank as u64);
     ctx.counter.add_vector(vector_elems(ctx.rt));
-    let call = ctx
-        .rt
-        .call("lozo_loss_pm")?
-        .bufs(ctx.params.bufs())?
-        .bufs(lazy.us.iter())?
-        .arg(ArgValue::I32(&ctx.batch.tokens))?
-        .arg(ArgValue::I32(&ctx.batch.targets))?
-        .arg(ArgValue::F32(&ctx.batch.mask))?
-        .arg(ArgValue::ScalarU32(seed))?
-        .arg(ArgValue::ScalarF32(ctx.cfg.rho))?;
+    let t0 = Instant::now();
+    let mut call = ctx.rt.prepared("lozo_loss_pm")?;
+    call.bind_bufs("param", ctx.params.bufs())?;
+    call.bind_bufs("factor_u", &lazy.us)?;
+    bind_batch(&mut call, ctx.batch, ctx.arena)?;
+    call.bind_scalar_u32("seed", seed, ctx.arena)?;
+    call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
+    ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
     let out = ctx.timers.time(Phase::Forward, || call.run())?;
     Ok(ForwardOut::TwoPoint {
         f_plus: scalar_f32(&out[0])?,
@@ -105,13 +104,13 @@ impl ZoOptimizer for Lozo {
 
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
         let seed = ctx.step_seed();
-        let call = ctx
-            .rt
-            .call("lozo_update_sgd")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.lazy.us.iter())?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(ctx.lr * kappa))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("lozo_update_sgd")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("factor_u", &self.lazy.us)?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("coeff", ctx.lr * kappa, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let out = ctx.timers.time(Phase::Update, || call.run())?;
         ctx.params.replace_all(out)
     }
@@ -166,16 +165,16 @@ impl ZoOptimizer for LozoM {
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
         let seed = ctx.step_seed();
         let n = ctx.params.len();
-        let call = ctx
-            .rt
-            .call("lozo_update_m")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.lazy.us.iter())?
-            .bufs(self.s.iter())?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(kappa))?
-            .arg(ArgValue::ScalarF32(ctx.lr))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("lozo_update_m")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("factor_u", &self.lazy.us)?;
+        call.bind_bufs("state_s", &self.s)?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("kappa", kappa, ctx.arena)?;
+        call.bind_scalar_f32("lr", ctx.lr, ctx.arena)?;
+        call.bind_scalar_f32("beta1", ctx.cfg.beta1, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let mut out = ctx.timers.time(Phase::Update, || call.run())?;
         let new_s = out.split_off(n);
         ctx.params.replace_all(out)?;

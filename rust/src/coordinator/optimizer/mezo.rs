@@ -4,15 +4,17 @@
 //! state (the resampling technique); -m and -Adam hold full-size moment
 //! buffers — exactly the memory the paper's Fig 3(a) charges them for.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::config::Method;
 use crate::coordinator::metrics::Phase;
 use crate::runtime::exec::scalar_f32;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::Runtime;
 
-use super::{matrix_elems, param_elems, vector_elems, zeros_like_params, ForwardOut,
-            StepCtx, ZoOptimizer};
+use super::{bind_batch, matrix_elems, param_elems, vector_elems, zeros_like_params,
+            ForwardOut, StepCtx, ZoOptimizer};
 
 /// Shared forward: `mezo_loss_pm(params, batch, seed, rho)`.
 fn mezo_forward(ctx: &mut StepCtx) -> Result<ForwardOut> {
@@ -20,15 +22,13 @@ fn mezo_forward(ctx: &mut StepCtx) -> Result<ForwardOut> {
     // the artifact draws a dense Z over every parameter
     ctx.counter.add_matrix(matrix_elems(ctx.rt));
     ctx.counter.add_vector(vector_elems(ctx.rt));
-    let rt = ctx.rt;
-    let call = rt
-        .call("mezo_loss_pm")?
-        .bufs(ctx.params.bufs())?
-        .arg(ArgValue::I32(&ctx.batch.tokens))?
-        .arg(ArgValue::I32(&ctx.batch.targets))?
-        .arg(ArgValue::F32(&ctx.batch.mask))?
-        .arg(ArgValue::ScalarU32(seed))?
-        .arg(ArgValue::ScalarF32(ctx.cfg.rho))?;
+    let t0 = Instant::now();
+    let mut call = ctx.rt.prepared("mezo_loss_pm")?;
+    call.bind_bufs("param", ctx.params.bufs())?;
+    bind_batch(&mut call, ctx.batch, ctx.arena)?;
+    call.bind_scalar_u32("seed", seed, ctx.arena)?;
+    call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
+    ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
     let out = ctx.timers.time(Phase::Forward, || call.run())?;
     Ok(ForwardOut::TwoPoint {
         f_plus: scalar_f32(&out[0])?,
@@ -66,12 +66,12 @@ impl ZoOptimizer for Mezo {
         // the paper's model (the draw is one logical sample per step), so no
         // second counter increment here.
         let coeff = ctx.lr * kappa;
-        let call = ctx
-            .rt
-            .call("mezo_update_sgd")?
-            .bufs(ctx.params.bufs())?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(coeff))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("mezo_update_sgd")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("coeff", coeff, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let out = ctx.timers.time(Phase::Update, || call.run())?;
         ctx.params.replace_all(out)
     }
@@ -105,15 +105,15 @@ impl ZoOptimizer for MezoM {
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
         let seed = ctx.step_seed();
         let n = ctx.params.len();
-        let call = ctx
-            .rt
-            .call("mezo_update_m")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.m.iter())?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(kappa))?
-            .arg(ArgValue::ScalarF32(ctx.lr))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("mezo_update_m")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("state_m", &self.m)?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("kappa", kappa, ctx.arena)?;
+        call.bind_scalar_f32("lr", ctx.lr, ctx.arena)?;
+        call.bind_scalar_f32("beta1", ctx.cfg.beta1, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let mut out = ctx.timers.time(Phase::Update, || call.run())?;
         let new_m = out.split_off(n);
         ctx.params.replace_all(out)?;
@@ -158,19 +158,19 @@ impl ZoOptimizer for MezoAdam {
         self.t += 1;
         let seed = ctx.step_seed();
         let n = ctx.params.len();
-        let call = ctx
-            .rt
-            .call("mezo_update_adam")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.m.iter())?
-            .bufs(self.v.iter())?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(kappa))?
-            .arg(ArgValue::ScalarF32(ctx.lr))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.beta2))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.eps))?
-            .arg(ArgValue::ScalarF32(self.t as f32))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("mezo_update_adam")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("state_m", &self.m)?;
+        call.bind_bufs("state_v", &self.v)?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("kappa", kappa, ctx.arena)?;
+        call.bind_scalar_f32("lr", ctx.lr, ctx.arena)?;
+        call.bind_scalar_f32("beta1", ctx.cfg.beta1, ctx.arena)?;
+        call.bind_scalar_f32("beta2", ctx.cfg.beta2, ctx.arena)?;
+        call.bind_scalar_f32("eps", ctx.cfg.eps, ctx.arena)?;
+        call.bind_scalar_f32("step_t", self.t as f32, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let mut out = ctx.timers.time(Phase::Update, || call.run())?;
         let new_v = out.split_off(2 * n);
         let new_m = out.split_off(n);

@@ -33,7 +33,7 @@ use crate::coordinator::counter::SampleCounter;
 use crate::coordinator::metrics::PhaseTimers;
 use crate::coordinator::seeds::SeedSchedule;
 use crate::data::Batch;
-use crate::runtime::{ParamStore, Runtime};
+use crate::runtime::{ParamStore, PreparedCall, Runtime, StepArena};
 
 /// Everything a driver sees during one step.
 pub struct StepCtx<'a> {
@@ -49,6 +49,10 @@ pub struct StepCtx<'a> {
     pub lr: f32,
     pub timers: &'a mut PhaseTimers,
     pub counter: &'a mut SampleCounter,
+    /// step-scoped staging arena: host tensors bound through it are
+    /// uploaded at most once per step and shared across the q-SPSA
+    /// sub-forwards and the paired update call
+    pub arena: &'a StepArena<'a>,
 }
 
 impl<'a> StepCtx<'a> {
@@ -61,6 +65,16 @@ impl<'a> StepCtx<'a> {
     pub fn perturb_index(&self) -> u64 {
         SeedSchedule::perturb_index(self.step, self.sub)
     }
+}
+
+/// Bind the training-batch slots (`batch/tokens|targets|mask`) through the
+/// step arena — one upload per step, every loss artifact shares it.
+pub(crate) fn bind_batch(call: &mut PreparedCall, batch: &Batch,
+                         arena: &StepArena) -> Result<()> {
+    call.bind_i32("batch", "tokens", &batch.tokens, arena)?;
+    call.bind_i32("batch", "targets", &batch.targets, arena)?;
+    call.bind_f32("batch", "mask", &batch.mask, arena)?;
+    Ok(())
 }
 
 /// The outcome of the forward phase.

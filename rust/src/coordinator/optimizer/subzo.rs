@@ -2,15 +2,17 @@
 //! refreshed lazily (QR in the `subzo_factors` artifact) and a Gaussian
 //! r x r Sigma drawn in-HLO each step.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::metrics::Phase;
 use crate::coordinator::seeds::SeedSchedule;
 use crate::runtime::exec::scalar_f32;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::{Runtime, StepArena};
 
-use super::{vector_elems, ForwardOut, StepCtx, ZoOptimizer};
+use super::{bind_batch, vector_elems, ForwardOut, StepCtx, ZoOptimizer};
 
 pub struct Subzo {
     us: Vec<xla::PjRtBuffer>,
@@ -38,11 +40,11 @@ impl Subzo {
         })
     }
 
-    fn refresh(&mut self, rt: &Runtime, seed: u32, window: u64) -> Result<()> {
-        let out = rt
-            .call("subzo_factors")?
-            .arg(ArgValue::ScalarU32(seed))?
-            .run()?;
+    fn refresh(&mut self, rt: &Runtime, arena: &StepArena, seed: u32,
+               window: u64) -> Result<()> {
+        let mut call = rt.prepared("subzo_factors")?;
+        call.bind_scalar_u32("seed", seed, arena)?;
+        let out = call.run()?;
         // outputs interleave (U, V) per matrix
         let mut us = Vec::new();
         let mut vs = Vec::new();
@@ -64,7 +66,7 @@ impl Subzo {
         let window = ctx.step / interval;
         if window != self.window {
             let seed = ctx.seeds.window_seed(ctx.step, ctx.cfg.lazy_interval);
-            self.refresh(ctx.rt, seed, window)?;
+            self.refresh(ctx.rt, ctx.arena, seed, window)?;
             return Ok(self.uv_units * self.rank as u64);
         }
         Ok(0)
@@ -83,17 +85,15 @@ impl ZoOptimizer for Subzo {
         ctx.counter.add_matrix(self.n_mats * (self.rank * self.rank) as u64);
         ctx.counter.add_vector(vector_elems(ctx.rt));
         let seed = ctx.step_seed();
-        let call = ctx
-            .rt
-            .call("subzo_loss_pm")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.us.iter())?
-            .bufs(self.vs.iter())?
-            .arg(ArgValue::I32(&ctx.batch.tokens))?
-            .arg(ArgValue::I32(&ctx.batch.targets))?
-            .arg(ArgValue::F32(&ctx.batch.mask))?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.rho))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("subzo_loss_pm")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("factor_u", &self.us)?;
+        call.bind_bufs("factor_v", &self.vs)?;
+        bind_batch(&mut call, ctx.batch, ctx.arena)?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let out = ctx.timers.time(Phase::Forward, || call.run())?;
         Ok(ForwardOut::TwoPoint {
             f_plus: scalar_f32(&out[0])?,
@@ -103,14 +103,14 @@ impl ZoOptimizer for Subzo {
 
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
         let seed = ctx.step_seed();
-        let call = ctx
-            .rt
-            .call("subzo_update")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.us.iter())?
-            .bufs(self.vs.iter())?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(ctx.lr * kappa))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("subzo_update")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("factor_u", &self.us)?;
+        call.bind_bufs("factor_v", &self.vs)?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("coeff", ctx.lr * kappa, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let out = ctx.timers.time(Phase::Update, || call.run())?;
         ctx.params.replace_all(out)
     }

@@ -7,6 +7,8 @@
 //! momentum/Adam state is the tau-sized host vectors `tau_M`, `tau_V`
 //! (the O(r) optimizer state that makes TeZO-Adam cheaper than MeZO-SGD).
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::config::Method;
@@ -14,9 +16,9 @@ use crate::coordinator::metrics::Phase;
 use crate::coordinator::seeds::{SeedSchedule, Stream};
 use crate::rngx::{normal_rng, SplitMix64};
 use crate::runtime::exec::scalar_f32;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::Runtime;
 
-use super::{vector_elems, ForwardOut, StepCtx, ZoOptimizer};
+use super::{bind_batch, vector_elems, ForwardOut, StepCtx, ZoOptimizer};
 
 /// Shared factor-panel state.
 struct Factors {
@@ -85,21 +87,18 @@ fn tezo_forward(ctx: &mut StepCtx, factors: &Factors, taus: &[Vec<f32>])
     let seed = ctx.step_seed();
     ctx.counter.add_matrix(factors.tau_draw_count());
     ctx.counter.add_vector(vector_elems(ctx.rt));
-    let mut call = ctx
-        .rt
-        .call("tezo_loss_pm")?
-        .bufs(ctx.params.bufs())?
-        .bufs(factors.us.iter())?
-        .bufs(factors.vs.iter())?;
-    for tau in taus {
-        call = call.arg(ArgValue::F32(tau))?;
+    let t0 = Instant::now();
+    let mut call = ctx.rt.prepared("tezo_loss_pm")?;
+    call.bind_bufs("param", ctx.params.bufs())?;
+    call.bind_bufs("factor_u", &factors.us)?;
+    call.bind_bufs("factor_v", &factors.vs)?;
+    for (i, tau) in taus.iter().enumerate() {
+        call.bind_nth_f32("tau", i, tau, ctx.arena)?;
     }
-    let call = call
-        .arg(ArgValue::I32(&ctx.batch.tokens))?
-        .arg(ArgValue::I32(&ctx.batch.targets))?
-        .arg(ArgValue::F32(&ctx.batch.mask))?
-        .arg(ArgValue::ScalarU32(seed))?
-        .arg(ArgValue::ScalarF32(ctx.cfg.rho))?;
+    bind_batch(&mut call, ctx.batch, ctx.arena)?;
+    call.bind_scalar_u32("seed", seed, ctx.arena)?;
+    call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
+    ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
     let out = ctx.timers.time(Phase::Forward, || call.run())?;
     Ok(ForwardOut::TwoPoint {
         f_plus: scalar_f32(&out[0])?,
@@ -111,18 +110,19 @@ fn tezo_forward(ctx: &mut StepCtx, factors: &Factors, taus: &[Vec<f32>])
 fn tezo_update_factor(ctx: &mut StepCtx, factors: &Factors,
                       tau_effs: &[Vec<f32>], coeff1d: f32) -> Result<()> {
     let seed = ctx.step_seed();
-    let mut call = ctx
-        .rt
-        .call("tezo_update_factor")?
-        .bufs(ctx.params.bufs())?
-        .bufs(factors.us.iter())?
-        .bufs(factors.vs.iter())?;
-    for t in tau_effs {
-        call = call.arg(ArgValue::F32(t))?;
+    let t0 = Instant::now();
+    let mut call = ctx.rt.prepared("tezo_update_factor")?;
+    call.bind_bufs("param", ctx.params.bufs())?;
+    call.bind_bufs("factor_u", &factors.us)?;
+    call.bind_bufs("factor_v", &factors.vs)?;
+    for (i, t) in tau_effs.iter().enumerate() {
+        call.bind_nth_f32("tau_eff", i, t, ctx.arena)?;
     }
-    let call = call
-        .arg(ArgValue::ScalarU32(seed))?
-        .arg(ArgValue::ScalarF32(coeff1d))?;
+    // the forward half of this (step, sub) already staged this seed —
+    // the arena hands back the same device buffer
+    call.bind_scalar_u32("seed", seed, ctx.arena)?;
+    call.bind_scalar_f32("coeff1d", coeff1d, ctx.arena)?;
+    ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
     let out = ctx.timers.time(Phase::Update, || call.run())?;
     ctx.params.replace_all(out)
 }
@@ -329,23 +329,22 @@ impl ZoOptimizer for TezoAdam {
             .collect();
 
         let seed = ctx.step_seed();
-        let mut call = ctx
-            .rt
-            .call("tezo_update_adam")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.factors.us.iter())?
-            .bufs(self.factors.vs.iter())?;
-        for t in &tau_m_hat {
-            call = call.arg(ArgValue::F32(t))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("tezo_update_adam")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("factor_u", &self.factors.us)?;
+        call.bind_bufs("factor_v", &self.factors.vs)?;
+        for (i, t) in tau_m_hat.iter().enumerate() {
+            call.bind_nth_f32("tau_m", i, t, ctx.arena)?;
         }
-        for t in &tau_v_hat {
-            call = call.arg(ArgValue::F32(t))?;
+        for (i, t) in tau_v_hat.iter().enumerate() {
+            call.bind_nth_f32("tau_v", i, t, ctx.arena)?;
         }
-        let call = call
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(ctx.lr))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.eps))?
-            .arg(ArgValue::ScalarF32(ctx.lr * kappa))?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("lr", ctx.lr, ctx.arena)?;
+        call.bind_scalar_f32("eps", ctx.cfg.eps, ctx.arena)?;
+        call.bind_scalar_f32("coeff1d", ctx.lr * kappa, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let out = ctx.timers.time(Phase::Update, || call.run())?;
         ctx.params.replace_all(out)
     }

@@ -4,15 +4,17 @@
 //! Adam-style second moment. Full-size `m_pert` and `v` states, so its
 //! memory footprint is MeZO-Adam-like (paper Table 4 baseline).
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::config::Method;
 use crate::coordinator::metrics::Phase;
 use crate::runtime::exec::scalar_f32;
-use crate::runtime::{ArgValue, Runtime};
+use crate::runtime::Runtime;
 
-use super::{matrix_elems, param_elems, vector_elems, zeros_like_params, ForwardOut,
-            StepCtx, ZoOptimizer};
+use super::{bind_batch, matrix_elems, param_elems, vector_elems, zeros_like_params,
+            ForwardOut, StepCtx, ZoOptimizer};
 
 pub struct ZoAdamu {
     m_pert: Vec<xla::PjRtBuffer>,
@@ -41,17 +43,15 @@ impl ZoOptimizer for ZoAdamu {
         let seed = ctx.step_seed();
         ctx.counter.add_matrix(matrix_elems(ctx.rt));
         ctx.counter.add_vector(vector_elems(ctx.rt));
-        let call = ctx
-            .rt
-            .call("adamu_loss_pm")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.m_pert.iter())?
-            .arg(ArgValue::I32(&ctx.batch.tokens))?
-            .arg(ArgValue::I32(&ctx.batch.targets))?
-            .arg(ArgValue::F32(&ctx.batch.mask))?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.rho))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.adamu_alpha))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("adamu_loss_pm")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("state_mpert", &self.m_pert)?;
+        bind_batch(&mut call, ctx.batch, ctx.arena)?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
+        call.bind_scalar_f32("alpha", ctx.cfg.adamu_alpha, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let out = ctx.timers.time(Phase::Forward, || call.run())?;
         Ok(ForwardOut::TwoPoint {
             f_plus: scalar_f32(&out[0])?,
@@ -63,20 +63,20 @@ impl ZoOptimizer for ZoAdamu {
         self.t += 1;
         let seed = ctx.step_seed();
         let n = ctx.params.len();
-        let call = ctx
-            .rt
-            .call("adamu_update")?
-            .bufs(ctx.params.bufs())?
-            .bufs(self.m_pert.iter())?
-            .bufs(self.v.iter())?
-            .arg(ArgValue::ScalarU32(seed))?
-            .arg(ArgValue::ScalarF32(kappa))?
-            .arg(ArgValue::ScalarF32(ctx.lr))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.adamu_alpha))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.beta1))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.beta2))?
-            .arg(ArgValue::ScalarF32(ctx.cfg.eps))?
-            .arg(ArgValue::ScalarF32(self.t as f32))?;
+        let t0 = Instant::now();
+        let mut call = ctx.rt.prepared("adamu_update")?;
+        call.bind_bufs("param", ctx.params.bufs())?;
+        call.bind_bufs("state_mpert", &self.m_pert)?;
+        call.bind_bufs("state_v", &self.v)?;
+        call.bind_scalar_u32("seed", seed, ctx.arena)?;
+        call.bind_scalar_f32("kappa", kappa, ctx.arena)?;
+        call.bind_scalar_f32("lr", ctx.lr, ctx.arena)?;
+        call.bind_scalar_f32("alpha", ctx.cfg.adamu_alpha, ctx.arena)?;
+        call.bind_scalar_f32("beta1", ctx.cfg.beta1, ctx.arena)?;
+        call.bind_scalar_f32("beta2", ctx.cfg.beta2, ctx.arena)?;
+        call.bind_scalar_f32("eps", ctx.cfg.eps, ctx.arena)?;
+        call.bind_scalar_f32("step_t", self.t as f32, ctx.arena)?;
+        ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let mut out = ctx.timers.time(Phase::Update, || call.run())?;
         let new_v = out.split_off(2 * n);
         let new_m = out.split_off(n);

@@ -52,7 +52,10 @@ pub fn kappa_distribution(rt: &Runtime, params: &mut ParamStore, batch: &Batch,
     let mut counter = SampleCounter::default();
     let mut kappas = Vec::with_capacity(k);
     for i in 0..k {
-        // walk the *step* index (sub is capped at 64 by the schedule)
+        // walk the *step* index (sub is capped at 64 by the schedule); the
+        // probe batch is fixed, so the content-addressed arena keeps
+        // reusing one staged copy across all k forwards
+        let arena = rt.step_arena(i as u64);
         let mut ctx = StepCtx {
             rt,
             params,
@@ -64,6 +67,7 @@ pub fn kappa_distribution(rt: &Runtime, params: &mut ParamStore, batch: &Batch,
             lr: cfg.lr,
             timers: &mut timers,
             counter: &mut counter,
+            arena: &arena,
         };
         match driver.forward(&mut ctx)? {
             ForwardOut::TwoPoint { f_plus, f_minus } => {

@@ -67,6 +67,9 @@ impl StepEngine {
                        params: &mut ParamStore, batch: &Batch, step: u64,
                        sub: u32, timers: &mut PhaseTimers,
                        counter: &mut SampleCounter) -> Result<ForwardOut> {
+        let lr = self.sub_lr(step, driver.method());
+        let arena = rt.step_arena(step);
+        let staged0 = rt.stage().stats();
         let mut ctx = StepCtx {
             rt,
             params,
@@ -75,11 +78,15 @@ impl StepEngine {
             seeds: &self.seeds,
             step,
             sub,
-            lr: self.lr_at(step) / self.n_sub() as f32,
+            lr,
             timers,
             counter,
+            arena: &arena,
         };
-        driver.forward(&mut ctx)
+        let out = driver.forward(&mut ctx);
+        let d = rt.stage().stats().since(&staged0);
+        timers.add_upload_bytes(d.upload_bytes, d.reused_bytes);
+        out
     }
 
     /// Fold a forward outcome into `(mean loss, raw kappa)`:
@@ -108,6 +115,11 @@ impl StepEngine {
                       params: &mut ParamStore, batch: &Batch, step: u64,
                       sub: u32, kappa: f32, timers: &mut PhaseTimers,
                       counter: &mut SampleCounter) -> Result<()> {
+        let lr = self.sub_lr(step, driver.method());
+        // same step → same arena epoch: the update half shares the staged
+        // buffers (seed scalar, factor vectors) the forward half uploaded
+        let arena = rt.step_arena(step);
+        let staged0 = rt.stage().stats();
         let mut ctx = StepCtx {
             rt,
             params,
@@ -116,11 +128,15 @@ impl StepEngine {
             seeds: &self.seeds,
             step,
             sub,
-            lr: self.sub_lr(step, driver.method()),
+            lr,
             timers,
             counter,
+            arena: &arena,
         };
-        driver.update(&mut ctx, kappa)
+        let out = driver.update(&mut ctx, kappa);
+        let d = rt.stage().stats().since(&staged0);
+        timers.add_upload_bytes(d.upload_bytes, d.reused_bytes);
+        out
     }
 
     /// One complete local step (all sub-perturbations, forward + update) —

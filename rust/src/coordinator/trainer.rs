@@ -56,6 +56,9 @@ pub struct TrainOutcome {
     pub state_bytes: u64,
     /// non-finite loss steps that were skipped
     pub skipped: u64,
+    /// host→device staging traffic over the run (uploads, reuses,
+    /// residency) — see `runtime::stage`
+    pub staging: crate::runtime::StageStats,
 }
 
 /// Drives one fine-tuning job.
@@ -103,6 +106,7 @@ impl<'a> Trainer<'a> {
         let mut metrics = TrainMetrics::default();
         let mut counter = SampleCounter::default();
         let mut skipped = 0u64;
+        let staged0 = self.rt.stage().stats();
         let wall0 = Instant::now();
 
         for step in 0..steps {
@@ -145,6 +149,7 @@ impl<'a> Trainer<'a> {
             counter,
             state_bytes: driver.state_bytes(),
             skipped,
+            staging: self.rt.stage().stats().since(&staged0),
         })
     }
 }

@@ -115,6 +115,15 @@ fn worker_loop(worker: usize, workers: u32, artifact_dir: &Path,
     let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
     let job = factory(worker, &rt.manifest)
         .with_context(|| format!("worker {worker}: building job"))?;
+    // precompile exactly this method's artifact set (plus the eval head on
+    // the worker that carries it) so the first ticket is pure execution and
+    // round-0 straggling doesn't depend on compile order
+    rt.warmup_method(cfg.method)
+        .with_context(|| format!("worker {worker}: warmup"))?;
+    if job.eval.is_some() {
+        rt.warmup(&["eval_logits"])
+            .with_context(|| format!("worker {worker}: eval warmup"))?;
+    }
     let mut timers = PhaseTimers::default();
     let mut counter = SampleCounter::default();
     // the current step's batch; sub-perturbations and the update phase

@@ -130,6 +130,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let cfg = parse_train_cfg(&args)?;
 
     let rt = Runtime::open_config(config)?;
+    // precompile exactly this method's artifact set (+ the eval head) so
+    // step 0 is pure execution
+    {
+        let t0 = std::time::Instant::now();
+        rt.warmup_method(cfg.method)?;
+        if args.get_usize("eval-n")? > 0 {
+            rt.warmup(&["eval_logits"])?;
+        }
+        println!("precompiled {} artifacts in {:.1}s",
+                 rt.compiled_count(), t0.elapsed().as_secs_f64());
+    }
     let mut params = match args.get("init-from") {
         Some(dir) if !dir.is_empty() => {
             let (p, step) = tezo::runtime::checkpoint::load(
@@ -174,6 +185,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     println!("sampled elements: matrix {} vector {}",
              outcome.counter.matrix_elements, outcome.counter.vector_elements);
+    println!("host->device staging: {} bytes uploaded, {} reused from pool \
+              ({} resident)",
+             outcome.staging.upload_bytes, outcome.staging.reused_bytes,
+             outcome.staging.resident_bytes);
     println!("optimizer state: {} bytes", outcome.state_bytes);
     if outcome.skipped > 0 {
         println!("warning: {} non-finite steps skipped", outcome.skipped);

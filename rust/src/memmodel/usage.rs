@@ -17,11 +17,15 @@ pub struct MemoryBreakdown {
     pub zo_state: u64,
     /// FO-only: backprop activation storage
     pub backprop: u64,
+    /// prepared-call staging-pool residency: batch tensors, tau/scalar
+    /// stagings, kept one extra step for cross-step reuse (runtime::stage)
+    pub staging: u64,
 }
 
 impl MemoryBreakdown {
     pub fn total(&self) -> u64 {
-        self.params + self.activations + self.optimizer_state + self.zo_state + self.backprop
+        self.params + self.activations + self.optimizer_state + self.zo_state
+            + self.backprop + self.staging
     }
 
     pub fn total_gib(&self) -> f64 {
@@ -60,6 +64,27 @@ fn backprop_bytes(l: &ModelLayout, batch: u64) -> u64 {
     batch * s * d * layers * 8 * WEIGHT_BYTES
 }
 
+/// Staging-pool residency for one training step at batch size `batch`:
+/// the three batch tensors (tokens/targets i32 + mask f32, 4 B each on the
+/// wire) held for the current step plus the one-step reuse window, the
+/// per-matrix tau-group vectors of the low-rank methods, and the scalar
+/// knobs. The batch term dominates; the rest is here so the model's
+/// residency matches what `DeviceStage::stats()` reports.
+fn staging_bytes(l: &ModelLayout, batch: u64, method: Method) -> u64 {
+    let s = 512u64.min(l.seq_len as u64);
+    let batch_resident = 3 * batch * s * 4 * 2; // x2: one-step reuse window
+    let nmat = l.n_matrices() as u64;
+    // tau groups staged per step (raw + update-side effective/moment forms)
+    let tau_groups = match method {
+        Method::Tezo | Method::TezoM => 2,
+        Method::TezoAdam => 3,
+        _ => 0,
+    };
+    let tau_resident = tau_groups * nmat * TEZO_RANK * 4 * 2;
+    let scalars = 16 * 4; // seeds + knobs, generously
+    batch_resident + tau_resident + scalars
+}
+
 /// TeZO rank used for memory accounting (the r_max cap of Table 6).
 pub const TEZO_RANK: u64 = 64;
 /// LOZO rank (paper Table 6: r = 8).
@@ -79,6 +104,7 @@ pub fn memory_usage_batch(l: &ModelLayout, method: Method, batch: u64) -> Memory
     let mut b = MemoryBreakdown {
         params: p * WEIGHT_BYTES,
         activations: activation_bytes(l, batch),
+        staging: staging_bytes(l, batch, method),
         ..Default::default()
     };
     b.optimizer_state = method.full_size_state_copies() as u64 * p * STATE_BYTES;
@@ -189,6 +215,25 @@ mod tests {
         let ft = memory_usage(&l, Method::FoAdam).total() as f64;
         let ratio = ft / zs;
         assert!(ratio > 4.0, "ft/zs ratio {ratio}");
+    }
+
+    #[test]
+    fn staging_residency_is_negligible_and_method_ordered() {
+        // the pool holds batch tensors + tau/scalar stagings: well under a
+        // tenth of a percent of the weights at LLM scale, and the tau terms
+        // only appear for the TeZO family
+        let l = llama("7b");
+        for m in [Method::Mezo, Method::Tezo, Method::TezoAdam, Method::FoAdam] {
+            let u = memory_usage(&l, m);
+            assert!(u.staging > 0);
+            assert!((u.staging as f64) < 1e-3 * u.params as f64,
+                    "{:?}: staging {} params {}", m, u.staging, u.params);
+        }
+        let mezo = memory_usage(&l, Method::Mezo).staging;
+        let tezo = memory_usage(&l, Method::Tezo).staging;
+        let tezo_adam = memory_usage(&l, Method::TezoAdam).staging;
+        assert!(mezo < tezo && tezo < tezo_adam,
+                "tau staging should grow with the tau-group count");
     }
 
     #[test]

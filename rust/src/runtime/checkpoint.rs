@@ -10,7 +10,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::jsonx::{self, Value};
 
 use super::manifest::Manifest;
-use super::params::{read_f32_bin, ParamStore};
+use super::params::{f32_le_bytes, read_f32_bin, ParamStore};
 
 /// Save `params` under `dir` (created if needed) with run metadata.
 ///
@@ -56,15 +56,6 @@ pub fn save(dir: &Path, manifest: &Manifest, params: &ParamStore, step: u64)
     // the new json is committed: drop bins of older/aborted saves
     gc_params_dir(&dir.join("params"), &kept);
     Ok(())
-}
-
-/// Bulk little-endian byte image of an f32 slice.
-fn f32_le_bytes(host: &[f32]) -> Vec<u8> {
-    let mut bytes = vec![0u8; host.len() * 4];
-    for (dst, x) in bytes.chunks_exact_mut(4).zip(host) {
-        dst.copy_from_slice(&x.to_le_bytes());
-    }
-    bytes
 }
 
 /// Write `bytes` to `path` via a same-directory temp file + fsync + rename

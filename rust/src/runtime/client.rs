@@ -1,9 +1,13 @@
-//! PJRT client + executable cache.
+//! PJRT client + executable/plan caches + the staging pool.
 //!
 //! One [`Runtime`] per artifact directory. Executables compile lazily on
 //! first use and are cached for the life of the process (XLA:CPU compile of
 //! the bigger step functions takes seconds — the cache is what makes the
-//! steady-state hot loop pure execution).
+//! steady-state hot loop pure execution). [`CallPlan`]s resolve the same
+//! way: once per artifact, cached forever, so steady-state dispatch never
+//! re-walks the manifest. [`Runtime::warmup`] front-loads both for a known
+//! artifact set (see [`Manifest::method_artifacts`]) so first-step latency
+//! does not depend on which artifact happens to run first.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -13,13 +17,20 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::manifest::Manifest;
+use crate::config::Method;
 
-/// Runtime = PJRT CPU client + manifest + compiled-executable cache.
+use super::manifest::Manifest;
+use super::plan::CallPlan;
+use super::stage::{DeviceStage, StepArena};
+
+/// Runtime = PJRT CPU client + manifest + compiled-executable cache +
+/// resolved-plan cache + the persistent device staging pool.
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    plans: RefCell<HashMap<String, Rc<CallPlan>>>,
+    stage: DeviceStage,
     /// cumulative compile seconds (reported by `tezo inspect`)
     compile_secs: RefCell<f64>,
 }
@@ -33,6 +44,8 @@ impl Runtime {
             client,
             manifest,
             cache: RefCell::new(HashMap::new()),
+            plans: RefCell::new(HashMap::new()),
+            stage: DeviceStage::new(),
             compile_secs: RefCell::new(0.0),
         })
     }
@@ -65,12 +78,48 @@ impl Runtime {
         Ok(exe)
     }
 
-    /// Pre-compile a set of artifacts (so the training loop starts hot).
+    /// Get (resolving once if needed) the call plan for `artifact`.
+    pub fn plan(&self, artifact: &str) -> Result<Rc<CallPlan>> {
+        if let Some(plan) = self.plans.borrow().get(artifact) {
+            return Ok(plan.clone());
+        }
+        let meta = self.manifest.artifact(artifact)?;
+        let plan = Rc::new(CallPlan::new(artifact, meta)?);
+        self.plans.borrow_mut().insert(artifact.to_string(), plan.clone());
+        Ok(plan)
+    }
+
+    /// The persistent staging pool.
+    pub fn stage(&self) -> &DeviceStage {
+        &self.stage
+    }
+
+    /// Staging arena scoped to training step `step` (advances the pool's
+    /// eviction horizon).
+    pub fn step_arena(&self, step: u64) -> StepArena<'_> {
+        self.stage.step_arena(&self.client, step)
+    }
+
+    /// Staging arena whose entries stay resident for the life of the
+    /// runtime (eval sets, run-constant tensors).
+    pub fn persistent_arena(&self) -> StepArena<'_> {
+        self.stage.persistent_arena(&self.client)
+    }
+
+    /// Pre-resolve plans and pre-compile executables for a set of
+    /// artifacts (so the training loop starts hot).
     pub fn warmup(&self, artifacts: &[&str]) -> Result<()> {
         for a in artifacts {
+            self.plan(a)?;
             self.executable(a)?;
         }
         Ok(())
+    }
+
+    /// Warm up exactly the artifact set `method` dispatches during
+    /// training (see [`Manifest::method_artifacts`]).
+    pub fn warmup_method(&self, method: Method) -> Result<()> {
+        self.warmup(&self.manifest.method_artifacts(method)?)
     }
 
     pub fn compile_seconds(&self) -> f64 {

@@ -1,14 +1,20 @@
-//! Argument assembly + validated execution of artifacts.
+//! Positional argument assembly + validated execution of artifacts.
 //!
-//! The manifest records every artifact's positional calling convention;
-//! [`CallBuilder`] assembles the argument vector in that order, validating
-//! role/shape/dtype as it goes, then executes and returns the output
-//! buffers (untupled by the patched xla crate — see third_party/xla).
+//! [`CallBuilder`] is the positional convenience API (tests, benches,
+//! one-off analysis calls): arguments are appended in manifest order and
+//! validated as they go. Since the prepared-call refactor it is a thin
+//! layer over [`CallPlan`](super::plan::CallPlan) — every validation rule
+//! and error message comes from the plan, so the positional and named
+//! dispatch paths cannot drift. The training hot loop uses
+//! [`PreparedCall`](super::plan::PreparedCall) instead, which adds
+//! named-slot binding and pooled staging.
 
-use anyhow::{bail, ensure, Context, Result};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
 
 use super::client::Runtime;
-use super::manifest::ArtifactMeta;
+use super::plan::{CallPlan, Dtype};
 
 /// One argument value supplied by the coordinator.
 pub enum ArgValue<'a> {
@@ -27,8 +33,7 @@ pub enum ArgValue<'a> {
 /// Assembles the positional argument list for one artifact call.
 pub struct CallBuilder<'rt> {
     rt: &'rt Runtime,
-    meta: &'rt ArtifactMeta,
-    name: String,
+    plan: Rc<CallPlan>,
     /// staged device buffers for host-supplied args (kept alive here)
     staged: Vec<xla::PjRtBuffer>,
     /// (position, Staged(idx) | Borrowed(ptr))
@@ -40,14 +45,12 @@ enum Slot<'a> {
     Staged(usize),
 }
 
-impl<'rt> Runtime {
-    /// Start building a call to `artifact`.
-    pub fn call(&'rt self, artifact: &str) -> Result<CallBuilder<'rt>> {
-        let meta = self.manifest.artifact(artifact)?;
+impl Runtime {
+    /// Start building a positional call to `artifact`.
+    pub fn call(&self, artifact: &str) -> Result<CallBuilder<'_>> {
         Ok(CallBuilder {
             rt: self,
-            meta,
-            name: artifact.to_string(),
+            plan: self.plan(artifact)?,
             staged: Vec::new(),
             slots: Vec::new(),
         })
@@ -55,54 +58,44 @@ impl<'rt> Runtime {
 }
 
 impl<'rt> CallBuilder<'rt> {
-    fn next_desc(&self) -> Result<&super::manifest::IoDesc> {
-        self.meta.inputs.get(self.slots.len()).ok_or_else(|| {
-            anyhow::anyhow!("{}: too many arguments (expects {})",
-                            self.name, self.meta.inputs.len())
-        })
+    /// Keep an uploaded one-off buffer alive, counting its bytes in the
+    /// runtime's staging stats (so legacy and prepared dispatch are
+    /// measured on the same scale).
+    fn push_staged(&mut self, buf: xla::PjRtBuffer, elems: usize) {
+        self.rt.stage().note_upload((elems * 4) as u64);
+        self.staged.push(buf);
+        self.slots.push(Slot::Staged(self.staged.len() - 1));
     }
 
     /// Append one argument (must match the next manifest slot).
     pub fn arg(mut self, value: ArgValue<'rt>) -> Result<Self> {
-        let desc = self.next_desc()?;
-        let numel: usize = desc.shape.iter().product();
+        let pos = self.slots.len();
+        self.plan.next_slot(pos)?;
         match value {
             ArgValue::Buf(b) => {
                 self.slots.push(Slot::Borrowed(b));
             }
             ArgValue::F32(data) => {
-                ensure!(desc.dtype == "f32", "{}: slot {} ({}) wants {}, got f32",
-                        self.name, self.slots.len(), desc.name, desc.dtype);
-                ensure!(data.len() == numel, "{}: slot {} ({}) wants {} elems, got {}",
-                        self.name, self.slots.len(), desc.name, numel, data.len());
-                let buf = self.rt.client.buffer_from_host_buffer(data, &desc.shape, None)?;
-                self.staged.push(buf);
-                self.slots.push(Slot::Staged(self.staged.len() - 1));
+                self.plan.check_host(pos, Dtype::F32, data.len())?;
+                let buf = self.rt.client.buffer_from_host_buffer(
+                    data, &self.plan.slot(pos).shape, None)?;
+                self.push_staged(buf, data.len());
             }
             ArgValue::I32(data) => {
-                ensure!(desc.dtype == "i32", "{}: slot {} ({}) wants {}, got i32",
-                        self.name, self.slots.len(), desc.name, desc.dtype);
-                ensure!(data.len() == numel, "{}: slot {} ({}) wants {} elems, got {}",
-                        self.name, self.slots.len(), desc.name, numel, data.len());
-                let buf = self.rt.client.buffer_from_host_buffer(data, &desc.shape, None)?;
-                self.staged.push(buf);
-                self.slots.push(Slot::Staged(self.staged.len() - 1));
+                self.plan.check_host(pos, Dtype::I32, data.len())?;
+                let buf = self.rt.client.buffer_from_host_buffer(
+                    data, &self.plan.slot(pos).shape, None)?;
+                self.push_staged(buf, data.len());
             }
             ArgValue::ScalarF32(x) => {
-                ensure!(desc.dtype == "f32" && numel == 1,
-                        "{}: slot {} ({}) is not an f32 scalar", self.name,
-                        self.slots.len(), desc.name);
+                self.plan.check_scalar(pos, Dtype::F32)?;
                 let buf = self.rt.client.buffer_from_host_buffer(&[x], &[], None)?;
-                self.staged.push(buf);
-                self.slots.push(Slot::Staged(self.staged.len() - 1));
+                self.push_staged(buf, 1);
             }
             ArgValue::ScalarU32(x) => {
-                ensure!(desc.dtype == "u32" && numel == 1,
-                        "{}: slot {} ({}) is not a u32 scalar", self.name,
-                        self.slots.len(), desc.name);
+                self.plan.check_scalar(pos, Dtype::U32)?;
                 let buf = self.rt.client.buffer_from_host_buffer(&[x], &[], None)?;
-                self.staged.push(buf);
-                self.slots.push(Slot::Staged(self.staged.len() - 1));
+                self.push_staged(buf, 1);
             }
         }
         Ok(self)
@@ -118,10 +111,8 @@ impl<'rt> CallBuilder<'rt> {
 
     /// Execute; returns the output buffers (replica 0).
     pub fn run(self) -> Result<Vec<xla::PjRtBuffer>> {
-        ensure!(self.slots.len() == self.meta.inputs.len(),
-                "{}: got {} args, artifact expects {}",
-                self.name, self.slots.len(), self.meta.inputs.len());
-        let exe = self.rt.executable(&self.name)?;
+        self.plan.check_arity(self.slots.len())?;
+        let exe = self.rt.executable(&self.plan.name)?;
         let args: Vec<&xla::PjRtBuffer> = self
             .slots
             .iter()
@@ -132,14 +123,12 @@ impl<'rt> CallBuilder<'rt> {
             .collect();
         let mut out = exe
             .execute_b(&args)
-            .with_context(|| format!("executing {}", self.name))?;
+            .with_context(|| format!("executing {}", self.plan.name))?;
         if out.is_empty() {
-            bail!("{}: no replica outputs", self.name);
+            bail!("{}: no replica outputs", self.plan.name);
         }
         let row = out.swap_remove(0);
-        ensure!(row.len() == self.meta.outputs.len(),
-                "{}: got {} outputs, manifest says {} (untuple patch missing?)",
-                self.name, row.len(), self.meta.outputs.len());
+        self.plan.check_outputs(row.len())?;
         Ok(row)
     }
 }

@@ -5,6 +5,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::config::Method;
 use crate::jsonx::{self, Value};
 
 /// Model geometry baked by the AOT pipeline.
@@ -142,6 +143,32 @@ impl Manifest {
             subzo_rank: v.get_usize("subzo_rank")?,
             artifacts,
         })
+    }
+
+    /// The artifacts `method` dispatches during training, in a stable
+    /// order (loss before update, lazy-factor initializers first). This is
+    /// the warmup contract: [`Runtime::warmup_method`] precompiles exactly
+    /// this set, so first-step latency no longer depends on which artifact
+    /// happens to run first. Errors if the manifest is missing any of them.
+    ///
+    /// [`Runtime::warmup_method`]: super::client::Runtime::warmup_method
+    pub fn method_artifacts(&self, method: Method) -> Result<Vec<&'static str>> {
+        let names: &'static [&'static str] = match method {
+            Method::Mezo => &["mezo_loss_pm", "mezo_update_sgd"],
+            Method::MezoM => &["mezo_loss_pm", "mezo_update_m"],
+            Method::MezoAdam => &["mezo_loss_pm", "mezo_update_adam"],
+            Method::Lozo => &["lozo_init_u", "lozo_loss_pm", "lozo_update_sgd"],
+            Method::LozoM => &["lozo_init_u", "lozo_loss_pm", "lozo_update_m"],
+            Method::Subzo => &["subzo_factors", "subzo_loss_pm", "subzo_update"],
+            Method::ZoAdamu => &["adamu_loss_pm", "adamu_update"],
+            Method::Tezo | Method::TezoM => &["tezo_loss_pm", "tezo_update_factor"],
+            Method::TezoAdam => &["tezo_loss_pm", "tezo_update_adam"],
+            Method::FoAdam => &["fo_valgrad", "fo_adam_update"],
+        };
+        for n in names {
+            self.artifact(n)?;
+        }
+        Ok(names.to_vec())
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {

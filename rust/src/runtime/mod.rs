@@ -2,15 +2,22 @@
 //! device-resident parameters.
 //!
 //! * [`manifest`] — typed view of `artifacts/<config>/manifest.json` (the
-//!   calling convention emitted by `python/compile/aot.py`).
-//! * [`client`] — PJRT CPU client + lazy executable cache (HLO text →
+//!   calling convention emitted by `python/compile/aot.py`), including the
+//!   per-method artifact lists the warmup path precompiles.
+//! * [`client`] — PJRT CPU client + lazy executable/plan caches (HLO text →
 //!   `HloModuleProto::from_text_file` → compile; text is the interchange
 //!   format, see DESIGN.md).
 //! * [`params`] — the parameter store: every model weight lives as a
 //!   `PjRtBuffer`; updates swap buffers in place, so the training hot loop
 //!   never copies parameters through the host.
-//! * [`exec`] — argument assembly + typed call wrappers for the artifact
-//!   families (loss_pm, update, eval, grads).
+//! * [`plan`] — prepared calls: per-artifact [`CallPlan`]s resolved once
+//!   (named slots, dtypes, validation) and [`PreparedCall`] named-slot
+//!   binding — the hot-loop dispatch path. See docs/runtime.md.
+//! * [`stage`] — the persistent [`DeviceStage`] pool + step-scoped
+//!   [`StepArena`]s: each host tensor is uploaded at most once per step and
+//!   shared across the calls that consume it.
+//! * [`exec`] — the positional [`CallBuilder`] convenience layer over the
+//!   same plans (tests, benches, one-off calls).
 
 pub mod checkpoint;
 pub mod client;
@@ -18,8 +25,12 @@ pub mod exec;
 pub mod hlo_stats;
 pub mod manifest;
 pub mod params;
+pub mod plan;
+pub mod stage;
 
 pub use client::Runtime;
-pub use exec::ArgValue;
+pub use exec::{ArgValue, CallBuilder};
 pub use manifest::{ArtifactMeta, IoDesc, Manifest, MatrixRank, ParamEntry};
 pub use params::ParamStore;
+pub use plan::{CallPlan, Dtype, PreparedCall};
+pub use stage::{DeviceStage, StageStats, StepArena};

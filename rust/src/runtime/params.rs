@@ -92,9 +92,56 @@ pub fn read_f32_bin(path: &Path, numel: usize) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     ensure!(bytes.len() == numel * 4,
             "{}: {} bytes, expected {}", path.display(), bytes.len(), numel * 4);
-    let mut out = Vec::with_capacity(numel);
-    for chunk in bytes.chunks_exact(4) {
-        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    Ok(f32_from_le_bytes(&bytes))
+}
+
+/// Bulk little-endian bytes → f32 decode (inverse of [`f32_le_bytes`]).
+/// Writes into a pre-sized buffer through a zipped iterator so the loop
+/// carries no per-element capacity/branch work — the multi-hundred-MB
+/// parameter and checkpoint loads go through here.
+pub fn f32_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
+    let mut out = vec![0.0f32; bytes.len() / 4];
+    for (x, src) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *x = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
     }
-    Ok(out)
+    out
+}
+
+/// Bulk little-endian byte image of an f32 slice (the checkpoint-save
+/// path; kept beside its inverse so the formats cannot drift).
+pub fn f32_le_bytes(host: &[f32]) -> Vec<u8> {
+    let mut bytes = vec![0u8; host.len() * 4];
+    for (dst, x) in bytes.chunks_exact_mut(4).zip(host) {
+        dst.copy_from_slice(&x.to_le_bytes());
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn le_bytes_roundtrip_is_exact() {
+        let vals = [0.0f32, -0.0, 1.5, -3.25e-7, f32::MAX, f32::MIN_POSITIVE,
+                    f32::INFINITY, f32::NEG_INFINITY];
+        let bytes = f32_le_bytes(&vals);
+        assert_eq!(bytes.len(), vals.len() * 4);
+        let back = f32_from_le_bytes(&bytes);
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // NaN payloads survive bit-exactly too
+        let nan = f32::from_bits(0x7FC0_1234);
+        assert_eq!(f32_from_le_bytes(&f32_le_bytes(&[nan]))[0].to_bits(),
+                   nan.to_bits());
+    }
+
+    #[test]
+    fn empty_and_truncated_inputs() {
+        assert!(f32_from_le_bytes(&[]).is_empty());
+        // trailing partial word is ignored by chunks_exact (read_f32_bin
+        // guards exact sizes before decoding)
+        assert_eq!(f32_from_le_bytes(&[0, 0, 128, 63, 9]), vec![1.0f32]);
+    }
 }

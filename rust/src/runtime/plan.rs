@@ -1,0 +1,357 @@
+//! Prepared calls: the plan-once dispatch layer.
+//!
+//! A [`CallPlan`] is the per-artifact half of the calling convention,
+//! resolved ONCE from the manifest: named slots mapped to positions, dtype
+//! strings parsed, element counts precomputed, and every validation rule
+//! hoisted out of the training hot loop. Plans are cached by the
+//! [`Runtime`] next to the compiled executables, so a steady-state step is
+//! two hash lookups plus pure binding — no manifest walking, no string
+//! dtype comparisons, no per-slot re-derivation.
+//!
+//! A [`PreparedCall`] binds values against a plan *by name* — `(role,
+//! name)` or `(role, occurrence)` — instead of by hand-ordered position,
+//! which is what lets every optimizer driver state its convention
+//! declaratively and lets host tensors flow through the
+//! [`StepArena`](super::stage::StepArena) so each one is uploaded at most
+//! once per step. The plan is backend-neutral: nothing in it references
+//! PJRT until `run()`.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, ensure, Result};
+
+use super::client::Runtime;
+use super::manifest::ArtifactMeta;
+use super::stage::StepArena;
+
+/// The dtypes the AOT pipeline emits (manifest `io_list` enforces the same
+/// closed set at load time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+            Dtype::U32 => "u32",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+}
+
+/// One input slot of the plan (the resolved form of a manifest `IoDesc`).
+#[derive(Clone, Debug)]
+pub struct PlanSlot {
+    pub role: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// precomputed element count (1 for scalars)
+    pub numel: usize,
+    pub dtype: Dtype,
+}
+
+/// The resolved calling convention of one artifact.
+///
+/// Construction is pure over [`ArtifactMeta`] (no runtime, no device), so
+/// the validation rules are property-testable offline; the error messages
+/// here are THE argument-validation errors of the runtime — the legacy
+/// positional [`CallBuilder`](super::exec::CallBuilder) delegates to these
+/// same checks.
+#[derive(Debug)]
+pub struct CallPlan {
+    /// artifact name (used in every error message)
+    pub name: String,
+    slots: Vec<PlanSlot>,
+    /// role -> positions in slot order (e.g. all `param` or `tau` slots);
+    /// name lookup scans the (small) group, so steady-state binding
+    /// allocates nothing
+    by_role: HashMap<String, Vec<usize>>,
+    n_outputs: usize,
+}
+
+impl CallPlan {
+    /// Resolve `meta` into a plan. Fails on unknown dtypes or duplicate
+    /// `(role, name)` slots — both are manifest bugs worth failing loudly.
+    pub fn new(name: &str, meta: &ArtifactMeta) -> Result<CallPlan> {
+        let mut slots: Vec<PlanSlot> = Vec::with_capacity(meta.inputs.len());
+        let mut by_role: HashMap<String, Vec<usize>> = HashMap::new();
+        for (pos, d) in meta.inputs.iter().enumerate() {
+            let slot = PlanSlot {
+                role: d.role.clone(),
+                name: d.name.clone(),
+                shape: d.shape.clone(),
+                numel: d.shape.iter().product(),
+                dtype: Dtype::parse(&d.dtype)?,
+            };
+            let group = by_role.entry(slot.role.clone()).or_default();
+            ensure!(
+                group.iter().all(|&p| slots[p].name != slot.name),
+                "{name}: duplicate slot {}/{}", slot.role, slot.name
+            );
+            group.push(pos);
+            slots.push(slot);
+        }
+        Ok(CallPlan {
+            name: name.to_string(),
+            slots,
+            by_role,
+            n_outputs: meta.outputs.len(),
+        })
+    }
+
+    /// Number of input slots.
+    pub fn arity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slot(&self, pos: usize) -> &PlanSlot {
+        &self.slots[pos]
+    }
+
+    /// Slot at `pos`, or the legacy too-many-arguments error.
+    pub fn next_slot(&self, pos: usize) -> Result<&PlanSlot> {
+        self.slots.get(pos).ok_or_else(|| {
+            anyhow::anyhow!("{}: too many arguments (expects {})",
+                            self.name, self.slots.len())
+        })
+    }
+
+    /// Position of the `(role, name)` slot (allocation-free: a hash lookup
+    /// on the role plus a scan of that role's group).
+    pub fn position(&self, role: &str, name: &str) -> Result<usize> {
+        self.by_role
+            .get(role)
+            .and_then(|ps| ps.iter().copied().find(|&p| self.slots[p].name == name))
+            .ok_or_else(|| anyhow::anyhow!("{}: no {role}/{name} slot", self.name))
+    }
+
+    /// Positions of every slot with `role`, in convention order (empty when
+    /// the artifact has none).
+    pub fn role_positions(&self, role: &str) -> &[usize] {
+        self.by_role.get(role).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Validate a host tensor against slot `pos` (dtype, then length).
+    pub fn check_host(&self, pos: usize, got: Dtype, len: usize) -> Result<()> {
+        let desc = &self.slots[pos];
+        ensure!(desc.dtype == got, "{}: slot {} ({}) wants {}, got {}",
+                self.name, pos, desc.name, desc.dtype.name(), got.name());
+        ensure!(len == desc.numel, "{}: slot {} ({}) wants {} elems, got {}",
+                self.name, pos, desc.name, desc.numel, len);
+        Ok(())
+    }
+
+    /// Validate that slot `pos` is a scalar of `got`.
+    pub fn check_scalar(&self, pos: usize, got: Dtype) -> Result<()> {
+        let desc = &self.slots[pos];
+        let article = if got == Dtype::U32 { "a" } else { "an" };
+        ensure!(desc.dtype == got && desc.numel == 1,
+                "{}: slot {} ({}) is not {article} {} scalar", self.name, pos,
+                desc.name, got.name());
+        Ok(())
+    }
+
+    /// Validate the bound-argument count before execution.
+    pub fn check_arity(&self, bound: usize) -> Result<()> {
+        ensure!(bound == self.slots.len(),
+                "{}: got {} args, artifact expects {}",
+                self.name, bound, self.slots.len());
+        Ok(())
+    }
+
+    /// Validate the executable's output count against the manifest.
+    pub fn check_outputs(&self, got: usize) -> Result<()> {
+        ensure!(got == self.n_outputs,
+                "{}: got {} outputs, manifest says {} (untuple patch missing?)",
+                self.name, got, self.n_outputs);
+        Ok(())
+    }
+}
+
+/// One bound argument.
+enum BoundSlot<'c> {
+    Empty,
+    /// a caller-owned device buffer (params, factor panels, moment state)
+    Borrowed(&'c xla::PjRtBuffer),
+    /// a pooled staged buffer (host data routed through the arena)
+    Staged(Rc<xla::PjRtBuffer>),
+}
+
+/// A call being bound against a [`CallPlan`].
+///
+/// Obtained from [`Runtime::prepared`]; slots are addressed by name, may be
+/// bound in any order, and each exactly once. `run()` checks completeness
+/// with the same arity error the positional builder used.
+pub struct PreparedCall<'c> {
+    rt: &'c Runtime,
+    plan: Rc<CallPlan>,
+    bound: Vec<BoundSlot<'c>>,
+    n_bound: usize,
+}
+
+impl Runtime {
+    /// Start a named-slot call to `artifact` (plan + executable both come
+    /// from the per-runtime caches; see [`Runtime::warmup`]).
+    pub fn prepared(&self, artifact: &str) -> Result<PreparedCall<'_>> {
+        let plan = self.plan(artifact)?;
+        let mut bound = Vec::with_capacity(plan.arity());
+        bound.resize_with(plan.arity(), || BoundSlot::Empty);
+        Ok(PreparedCall { rt: self, plan, bound, n_bound: 0 })
+    }
+}
+
+impl<'c> PreparedCall<'c> {
+    pub fn plan(&self) -> &CallPlan {
+        &self.plan
+    }
+
+    fn set(&mut self, pos: usize, value: BoundSlot<'c>) -> Result<()> {
+        ensure!(matches!(self.bound[pos], BoundSlot::Empty),
+                "{}: slot {} ({}) bound twice", self.plan.name, pos,
+                self.plan.slot(pos).name);
+        self.bound[pos] = value;
+        self.n_bound += 1;
+        Ok(())
+    }
+
+    /// Bind a caller-owned device buffer to the `(role, name)` slot.
+    pub fn bind_buf(&mut self, role: &str, name: &str,
+                    buf: &'c xla::PjRtBuffer) -> Result<&mut Self> {
+        let pos = self.plan.position(role, name)?;
+        self.set(pos, BoundSlot::Borrowed(buf))?;
+        Ok(self)
+    }
+
+    /// Bind one device buffer per slot of `role`, in convention order —
+    /// e.g. the whole parameter list, or the U factor panels.
+    pub fn bind_bufs<'b: 'c, I>(&mut self, role: &str, bufs: I) -> Result<&mut Self>
+    where
+        I: IntoIterator<Item = &'b xla::PjRtBuffer>,
+    {
+        // clone the Rc (not the position vector) so the plan outlives the
+        // &mut self borrows below without a per-call allocation
+        let plan = Rc::clone(&self.plan);
+        let positions = plan.role_positions(role);
+        let mut n = 0usize;
+        for buf in bufs {
+            ensure!(n < positions.len(), "{}: role {role:?} has {} slots, got more buffers",
+                    plan.name, positions.len());
+            self.set(positions[n], BoundSlot::Borrowed(buf))?;
+            n += 1;
+        }
+        ensure!(n == positions.len(), "{}: role {role:?} has {} slots, got {} buffers",
+                plan.name, positions.len(), n);
+        Ok(self)
+    }
+
+    /// Bind an already-staged pooled buffer to the `(role, name)` slot.
+    pub fn bind_staged(&mut self, role: &str, name: &str,
+                       buf: Rc<xla::PjRtBuffer>) -> Result<&mut Self> {
+        let pos = self.plan.position(role, name)?;
+        self.set(pos, BoundSlot::Staged(buf))?;
+        Ok(self)
+    }
+
+    /// Stage + bind a host f32 tensor to the `(role, name)` slot. The arena
+    /// dedupes the upload: identical content staged earlier this step (or
+    /// persistently) is reused without touching the device.
+    pub fn bind_f32(&mut self, role: &str, name: &str, data: &[f32],
+                    arena: &StepArena) -> Result<&mut Self> {
+        let pos = self.plan.position(role, name)?;
+        self.stage_f32_at(pos, data, arena)
+    }
+
+    /// Stage + bind a host f32 tensor to the `idx`-th slot of `role` (the
+    /// per-matrix factor groups: `tau`, `tau_eff`, `tau_m`, `tau_v`).
+    pub fn bind_nth_f32(&mut self, role: &str, idx: usize, data: &[f32],
+                        arena: &StepArena) -> Result<&mut Self> {
+        let positions = self.plan.role_positions(role);
+        ensure!(idx < positions.len(), "{}: role {role:?} has {} slots, index {idx}",
+                self.plan.name, positions.len());
+        let pos = positions[idx];
+        self.stage_f32_at(pos, data, arena)
+    }
+
+    fn stage_f32_at(&mut self, pos: usize, data: &[f32],
+                    arena: &StepArena) -> Result<&mut Self> {
+        self.plan.check_host(pos, Dtype::F32, data.len())?;
+        let slot = self.plan.slot(pos);
+        let buf = arena.stage_f32(&slot.role, &slot.name, data, &slot.shape)?;
+        self.set(pos, BoundSlot::Staged(buf))?;
+        Ok(self)
+    }
+
+    /// Stage + bind a host i32 tensor to the `(role, name)` slot.
+    pub fn bind_i32(&mut self, role: &str, name: &str, data: &[i32],
+                    arena: &StepArena) -> Result<&mut Self> {
+        let pos = self.plan.position(role, name)?;
+        self.plan.check_host(pos, Dtype::I32, data.len())?;
+        let slot = self.plan.slot(pos);
+        let buf = arena.stage_i32(&slot.role, &slot.name, data, &slot.shape)?;
+        self.set(pos, BoundSlot::Staged(buf))?;
+        Ok(self)
+    }
+
+    /// Stage + bind an f32 scalar (role `scalar`). Run-constant scalars
+    /// (rho) stay resident in the pool for the whole run.
+    pub fn bind_scalar_f32(&mut self, name: &str, value: f32,
+                           arena: &StepArena) -> Result<&mut Self> {
+        let pos = self.plan.position("scalar", name)?;
+        self.plan.check_scalar(pos, Dtype::F32)?;
+        let buf = arena.stage_scalar_f32(name, value)?;
+        self.set(pos, BoundSlot::Staged(buf))?;
+        Ok(self)
+    }
+
+    /// Stage + bind a u32 scalar (the step seeds). The forward and update
+    /// halves of a step share one staged seed buffer.
+    pub fn bind_scalar_u32(&mut self, name: &str, value: u32,
+                           arena: &StepArena) -> Result<&mut Self> {
+        let pos = self.plan.position("scalar", name)?;
+        self.plan.check_scalar(pos, Dtype::U32)?;
+        let buf = arena.stage_scalar_u32(name, value)?;
+        self.set(pos, BoundSlot::Staged(buf))?;
+        Ok(self)
+    }
+
+    /// Execute; returns the output buffers (replica 0). Staged pool buffers
+    /// are kept alive by their `Rc` for the duration of the call.
+    pub fn run(self) -> Result<Vec<xla::PjRtBuffer>> {
+        use anyhow::Context;
+        self.plan.check_arity(self.n_bound)?;
+        let exe = self.rt.executable(&self.plan.name)?;
+        let args: Vec<&xla::PjRtBuffer> = self
+            .bound
+            .iter()
+            .map(|b| match b {
+                BoundSlot::Borrowed(x) => *x,
+                BoundSlot::Staged(rc) => rc.as_ref(),
+                // check_arity + bind-once make Empty unreachable here
+                BoundSlot::Empty => unreachable!("unbound slot after arity check"),
+            })
+            .collect();
+        let mut out = exe
+            .execute_b(&args)
+            .with_context(|| format!("executing {}", self.plan.name))?;
+        if out.is_empty() {
+            bail!("{}: no replica outputs", self.plan.name);
+        }
+        let row = out.swap_remove(0);
+        self.plan.check_outputs(row.len())?;
+        Ok(row)
+    }
+}

@@ -1,0 +1,339 @@
+//! Persistent device staging: the host→device upload pool.
+//!
+//! Every host tensor an artifact call consumes (batch tensors, tau
+//! vectors, scalar knobs) passes through the [`DeviceStage`]: a pool of
+//! device buffers keyed by `(slot class, content fingerprint, length)`.
+//! Staging the same content twice returns the SAME pooled buffer, so
+//!
+//! * the q-SPSA sub-forwards of one step share a single batch upload;
+//! * the paired forward/update calls of a step share the staged step seed;
+//! * run-constant scalars (rho) are uploaded exactly once per run;
+//! * the periodic eval set is uploaded once and reused by every eval pass.
+//!
+//! Lifetimes are explicit: a [`StepArena`] scopes its entries to one
+//! training step (entries survive one extra step so an identical re-stage
+//! — the probe loop, a repeated batch — still hits, then get evicted),
+//! while `persistent` arenas pin entries for the life of the runtime (the
+//! eval set). [`StageStats`] counts every byte uploaded, reused, and
+//! resident, which is what the per-step upload counters in
+//! [`PhaseTimers`](crate::coordinator::metrics::PhaseTimers) and the bench
+//! reports read.
+//!
+//! Reuse is sound because PJRT execution never donates input buffers in
+//! this runtime (see docs/runtime.md, "buffer donation"): a staged buffer
+//! stays valid until the pool drops its last `Rc`.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+/// How long a staged entry lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Epoch {
+    /// pinned for the life of the pool (eval batches)
+    Persistent,
+    /// scoped to training step `s` (+1 step of grace, see `advance_to`)
+    Step(u64),
+}
+
+/// Identity of one staged host tensor: slot class + content fingerprint
+/// (seeded with the dtype tag and the shape dims, so equal-numel tensors
+/// of different shape or dtype can never alias one device buffer). The
+/// fingerprint is only the index — every pool hit is confirmed by a full
+/// content comparison in [`DeviceStage::stage_words`], so reuse is exact,
+/// not probabilistic.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct StageKey {
+    class: String,
+    fp: u64,
+    len: usize,
+}
+
+struct StagedEntry {
+    buf: Rc<xla::PjRtBuffer>,
+    epoch: Cell<Epoch>,
+    bytes: u64,
+    /// the staged content (4-byte words, dtype-tagged bit patterns): pool
+    /// hits byte-compare against this, so a fingerprint collision can
+    /// never substitute one tensor for another — it falls back to an
+    /// unpooled upload instead (bit-identity is load-bearing here)
+    words: Vec<u32>,
+}
+
+/// Cumulative staging counters (all monotone except `resident_bytes`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageStats {
+    /// host→device uploads performed
+    pub uploads: u64,
+    /// bytes actually moved host→device
+    pub upload_bytes: u64,
+    /// stagings satisfied from the pool without an upload
+    pub reuses: u64,
+    /// bytes those reuses would have moved
+    pub reused_bytes: u64,
+    /// bytes currently resident in the pool
+    pub resident_bytes: u64,
+    /// entries dropped by step advancement
+    pub evictions: u64,
+}
+
+impl StageStats {
+    /// Counter deltas since `earlier` (`resident_bytes` stays absolute).
+    pub fn since(&self, earlier: &StageStats) -> StageStats {
+        StageStats {
+            uploads: self.uploads - earlier.uploads,
+            upload_bytes: self.upload_bytes - earlier.upload_bytes,
+            reuses: self.reuses - earlier.reuses,
+            reused_bytes: self.reused_bytes - earlier.reused_bytes,
+            resident_bytes: self.resident_bytes,
+            evictions: self.evictions - earlier.evictions,
+        }
+    }
+}
+
+/// The per-runtime staging pool. Interior-mutable so staging composes with
+/// the shared `&Runtime` the whole coordinator passes around; the PJRT
+/// client stays owned by the runtime and is borrowed per arena.
+#[derive(Default)]
+pub struct DeviceStage {
+    entries: RefCell<HashMap<StageKey, StagedEntry>>,
+    current_step: Cell<Option<u64>>,
+    stats: RefCell<StageStats>,
+}
+
+impl DeviceStage {
+    pub(crate) fn new() -> DeviceStage {
+        DeviceStage::default()
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> StageStats {
+        *self.stats.borrow()
+    }
+
+    /// Count a host→device upload performed OUTSIDE the pool (the legacy
+    /// positional builder's one-off stagings) so upload accounting covers
+    /// every dispatch path.
+    pub(crate) fn note_upload(&self, bytes: u64) {
+        let mut s = self.stats.borrow_mut();
+        s.uploads += 1;
+        s.upload_bytes += bytes;
+    }
+
+    /// Begin (or continue) step `step`: entries staged before `step - 1`
+    /// are evicted. The one-step grace window is what lets content that
+    /// repeats across consecutive steps (a fixed probe batch) keep hitting
+    /// the pool. A backward jump starts a new run: all step-scoped entries
+    /// drop, persistent ones stay.
+    fn advance_to(&self, step: u64) {
+        let cur = self.current_step.get();
+        if cur == Some(step) {
+            return;
+        }
+        let new_run = matches!(cur, Some(c) if step < c);
+        let mut entries = self.entries.borrow_mut();
+        let mut stats = self.stats.borrow_mut();
+        entries.retain(|_, e| {
+            let keep = match e.epoch.get() {
+                Epoch::Persistent => true,
+                Epoch::Step(s) => !new_run && s + 1 >= step,
+            };
+            if !keep {
+                stats.resident_bytes -= e.bytes;
+                stats.evictions += 1;
+            }
+            keep
+        });
+        self.current_step.set(Some(step));
+    }
+
+    fn stage_words(&self, client: &xla::PjRtClient, epoch: Epoch,
+                   class: String, fp: u64,
+                   words: impl Iterator<Item = u32> + Clone, len: usize,
+                   upload: impl FnOnce(&xla::PjRtClient) -> Result<xla::PjRtBuffer>)
+                   -> Result<Rc<xla::PjRtBuffer>> {
+        let bytes = (len * 4) as u64;
+        let key = StageKey { class, fp, len };
+        if let Some(e) = self.entries.borrow().get(&key) {
+            // fingerprint hit: confirm the content really matches before
+            // reusing (a collision must degrade to an extra upload, never
+            // to training on the wrong tensor)
+            if e.words.iter().copied().eq(words.clone()) {
+                // touch: reuse extends the entry to the requesting lifetime
+                match (e.epoch.get(), epoch) {
+                    (Epoch::Persistent, _) => {}
+                    (_, Epoch::Persistent) => e.epoch.set(Epoch::Persistent),
+                    (Epoch::Step(old), Epoch::Step(new)) if new > old => {
+                        e.epoch.set(Epoch::Step(new))
+                    }
+                    _ => {}
+                }
+                let mut s = self.stats.borrow_mut();
+                s.reuses += 1;
+                s.reused_bytes += e.bytes;
+                return Ok(e.buf.clone());
+            }
+            // genuine 64-bit collision: bypass the pool for this staging
+            let buf = Rc::new(upload(client)?);
+            self.note_upload(bytes);
+            return Ok(buf);
+        }
+        // upload outside any RefCell borrow (PJRT may re-enter the pool in
+        // future backends)
+        let buf = Rc::new(upload(client)?);
+        let entry = StagedEntry {
+            buf: buf.clone(),
+            epoch: Cell::new(epoch),
+            bytes,
+            words: words.collect(),
+        };
+        {
+            let mut s = self.stats.borrow_mut();
+            s.uploads += 1;
+            s.upload_bytes += bytes;
+            s.resident_bytes += bytes;
+        }
+        self.entries.borrow_mut().insert(key, entry);
+        Ok(buf)
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over the staging identity: a dtype tag, the shape dims, then
+/// the content as 32-bit words (every staged dtype is 4 bytes). Seeding
+/// with dtype + shape keeps equal-numel tensors of different geometry
+/// from ever sharing a pooled buffer.
+fn fingerprint(dtype: u8, shape: &[usize],
+               words: impl Iterator<Item = u32>) -> u64 {
+    let mut h = FNV_OFFSET;
+    h ^= dtype as u64;
+    h = h.wrapping_mul(FNV_PRIME);
+    for &d in shape {
+        h ^= d as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    for w in words {
+        h ^= w as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A staging handle with a fixed lifetime: step-scoped (one per training
+/// step / sub-phase) or persistent (eval sets). Cheap to construct; all
+/// state lives in the shared [`DeviceStage`] pool.
+pub struct StepArena<'s> {
+    stage: &'s DeviceStage,
+    client: &'s xla::PjRtClient,
+    epoch: Epoch,
+}
+
+impl DeviceStage {
+    /// Arena for step `step`; advances the pool's eviction horizon.
+    pub fn step_arena<'s>(&'s self, client: &'s xla::PjRtClient,
+                          step: u64) -> StepArena<'s> {
+        self.advance_to(step);
+        StepArena { stage: self, client, epoch: Epoch::Step(step) }
+    }
+
+    /// Arena whose entries are pinned for the life of the runtime.
+    pub fn persistent_arena<'s>(&'s self, client: &'s xla::PjRtClient)
+                                -> StepArena<'s> {
+        StepArena { stage: self, client, epoch: Epoch::Persistent }
+    }
+}
+
+impl StepArena<'_> {
+    /// Stage an f32 tensor under `role/name`, reusing an identical staging
+    /// if the pool already holds one.
+    pub fn stage_f32(&self, role: &str, name: &str, data: &[f32],
+                     shape: &[usize]) -> Result<Rc<xla::PjRtBuffer>> {
+        let words = data.iter().map(|x| x.to_bits());
+        let fp = fingerprint(b'f', shape, words.clone());
+        self.stage.stage_words(
+            self.client, self.epoch, format!("{role}.{name}"), fp, words,
+            data.len(),
+            |client| Ok(client.buffer_from_host_buffer(data, shape, None)?),
+        )
+    }
+
+    /// Stage an i32 tensor under `role/name`.
+    pub fn stage_i32(&self, role: &str, name: &str, data: &[i32],
+                     shape: &[usize]) -> Result<Rc<xla::PjRtBuffer>> {
+        let words = data.iter().map(|x| *x as u32);
+        let fp = fingerprint(b'i', shape, words.clone());
+        self.stage.stage_words(
+            self.client, self.epoch, format!("{role}.{name}"), fp, words,
+            data.len(),
+            |client| Ok(client.buffer_from_host_buffer(data, shape, None)?),
+        )
+    }
+
+    /// Stage an f32 scalar keyed by its exact bit pattern — a run-constant
+    /// knob is uploaded once and reused every step thereafter.
+    pub fn stage_scalar_f32(&self, name: &str, value: f32)
+                            -> Result<Rc<xla::PjRtBuffer>> {
+        let words = std::iter::once(value.to_bits());
+        let fp = fingerprint(b'f', &[], words.clone());
+        self.stage.stage_words(
+            self.client, self.epoch, format!("scalar.{name}"), fp, words, 1,
+            |client| Ok(client.buffer_from_host_buffer(&[value], &[], None)?),
+        )
+    }
+
+    /// Stage a u32 scalar (seeds) keyed by value.
+    pub fn stage_scalar_u32(&self, name: &str, value: u32)
+                            -> Result<Rc<xla::PjRtBuffer>> {
+        let words = std::iter::once(value);
+        let fp = fingerprint(b'u', &[], words.clone());
+        self.stage.stage_words(
+            self.client, self.epoch, format!("scalar.{name}"), fp, words, 1,
+            |client| Ok(client.buffer_from_host_buffer(&[value], &[], None)?),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_separates_content_shape_and_dtype() {
+        let a = fingerprint(b'f', &[3], [1u32, 2, 3].into_iter());
+        let b = fingerprint(b'f', &[3], [1u32, 2, 4].into_iter());
+        let c = fingerprint(b'f', &[3], [1u32, 2, 3].into_iter());
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+        // order matters
+        assert_ne!(fingerprint(b'f', &[2], [1u32, 2].into_iter()),
+                   fingerprint(b'f', &[2], [2u32, 1].into_iter()));
+        // equal numel, different geometry: must never alias (a [256,1024]
+        // and a [512,512] staging of identical bytes are distinct buffers)
+        assert_ne!(fingerprint(b'f', &[256, 1024], (0..4u32).cycle().take(64)),
+                   fingerprint(b'f', &[512, 512], (0..4u32).cycle().take(64)));
+        // same bits, different dtype tag: distinct
+        assert_ne!(fingerprint(b'f', &[2], [7u32, 8].into_iter()),
+                   fingerprint(b'i', &[2], [7u32, 8].into_iter()));
+    }
+
+    #[test]
+    fn stats_delta_is_componentwise() {
+        let early = StageStats { uploads: 2, upload_bytes: 100, reuses: 1,
+                                 reused_bytes: 50, resident_bytes: 100,
+                                 evictions: 0 };
+        let late = StageStats { uploads: 5, upload_bytes: 300, reuses: 4,
+                                reused_bytes: 250, resident_bytes: 120,
+                                evictions: 2 };
+        let d = late.since(&early);
+        assert_eq!(d.uploads, 3);
+        assert_eq!(d.upload_bytes, 200);
+        assert_eq!(d.reuses, 3);
+        assert_eq!(d.reused_bytes, 200);
+        assert_eq!(d.resident_bytes, 120, "resident is absolute");
+        assert_eq!(d.evictions, 2);
+    }
+}

@@ -1,0 +1,115 @@
+//! Golden-trace regression: prepared-call training must be BIT-identical
+//! to the recorded seed traces — for the single-process trainer on `tezo`,
+//! `mezo`, and `lozo`, and for the 2-worker seed-synchronized fleet on
+//! `tezo` (so `train` and `train-dp` cannot drift apart either).
+//!
+//! Losses are stored as f64 bit patterns (hex), so any change to dispatch,
+//! staging, seed derivation, or update arithmetic that perturbs a single
+//! ULP fails loudly.
+//!
+//! Recording: `TEZO_RECORD_GOLDEN=1 cargo test --test golden_trace` writes
+//! `tests/golden/loss_traces.json` from the current build — do this once on
+//! a trusted revision and commit the file. The test skips (with a notice)
+//! when the tiny artifacts or the fixture are missing.
+
+use std::path::PathBuf;
+
+use tezo::config::{FleetConfig, Method, TrainConfig};
+use tezo::coordinator::trainer::{DataSource, Trainer};
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::fleet::{task_job_factory, FleetTrainer};
+use tezo::jsonx::{self, Value};
+use tezo::runtime::{ParamStore, Runtime};
+
+const STEPS: usize = 3;
+const SEED: u64 = 1234;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/loss_traces.json")
+}
+
+fn run_single(rt: &Runtime, method: Method) -> Vec<f64> {
+    let mut cfg = TrainConfig::with_preset(method, "tiny");
+    cfg.steps = STEPS;
+    cfg.seed = SEED;
+    let mut params = ParamStore::load(&rt.client, &rt.manifest).unwrap();
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
+                         rt.manifest.config.seq_len, SEED);
+    let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+    Trainer::new(rt, cfg, DataSource::Task(builder))
+        .run(&mut params)
+        .unwrap()
+        .metrics
+        .losses
+}
+
+fn run_dp_tezo(workers: usize) -> Vec<f64> {
+    let mut cfg = TrainConfig::with_preset(Method::Tezo, "tiny");
+    cfg.steps = STEPS;
+    cfg.seed = SEED;
+    let factory = task_job_factory("sst2".to_string(), SEED, 16, 0, None);
+    let dir = tezo::artifacts_root().join("tiny");
+    let mut trainer = FleetTrainer::new(FleetConfig::new(workers), cfg, dir, factory);
+    trainer.run().unwrap().metrics.losses
+}
+
+fn bits(losses: &[f64]) -> Vec<String> {
+    losses.iter().map(|l| format!("{:016x}", l.to_bits())).collect()
+}
+
+fn trace_value(losses: &[f64]) -> Value {
+    Value::arr(bits(losses).into_iter().map(Value::str).collect())
+}
+
+#[test]
+fn training_losses_match_recorded_golden_traces() {
+    let dir = tezo::artifacts_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::open(&dir).expect("open runtime");
+    let traces: Vec<(&str, Vec<f64>)> = vec![
+        ("tezo", run_single(&rt, Method::Tezo)),
+        ("mezo", run_single(&rt, Method::Mezo)),
+        ("lozo", run_single(&rt, Method::Lozo)),
+        ("tezo_dp2", run_dp_tezo(2)),
+    ];
+    for (name, t) in &traces {
+        assert_eq!(t.len(), STEPS, "{name}: wrong trace length");
+        assert!(t.iter().all(|l| l.is_finite()), "{name}: non-finite loss");
+    }
+
+    let path = golden_path();
+    if std::env::var_os("TEZO_RECORD_GOLDEN").is_some() {
+        let doc = Value::obj(
+            traces.iter().map(|(n, t)| (*n, trace_value(t))).collect());
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, jsonx::to_string_pretty(&doc)).unwrap();
+        eprintln!("recorded golden traces -> {}", path.display());
+        return;
+    }
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("skipping: no golden fixture at {} (record one with \
+                   TEZO_RECORD_GOLDEN=1 on a trusted revision)", path.display());
+        return;
+    };
+    let doc = jsonx::parse(&text).expect("parse golden fixture");
+    for (name, t) in &traces {
+        let want: Vec<String> = doc
+            .get(*name)
+            .unwrap_or_else(|_| panic!("fixture missing trace {name:?}"))
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(bits(t), want,
+                   "{name}: losses diverged from the recorded golden trace \
+                    (bit-exact comparison)");
+    }
+}
+
+// (the fixture-free workers=1 == single-process parity check lives in
+// integration_fleet.rs::one_worker_fleet_matches_plain_trainer_bitwise)
