@@ -1,0 +1,149 @@
+"""Forward-form benchmark: materialize vs implicit two-point loss.
+
+Produces the BENCH_PR5.json snapshot: per config, the three hlo_stats temp
+metrics for both compiled forms (computed with compile/hlo_stats.py, the
+build-time mirror of rust/src/runtime/hlo_stats.rs), and the paired
+wall-clock of the jitted two-point forward on XLA:CPU (the same HLO the
+Rust PJRT runtime executes; `cargo bench --bench bench_walltime`
+re-measures the walltime side through the actual prepared-call runtime
+and writes its own snapshot to out/BENCH_PR5.json).
+
+Walltime pairs are interleaved and the MIN is reported (shared-machine
+noise is one-sided); parity drift |f_materialize - f_implicit| is recorded
+for both outputs.
+
+Usage:
+    python bench_forward_forms.py --configs tiny,tiny_jnp,small \
+        --stats-configs tiny,small,medium --out ../BENCH_PR5.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import zo_steps as zs
+from compile.aot import rank_schedule, to_hlo_text
+from compile.configs import get_config
+from compile.hlo_stats import stats as hlo_stats
+from compile.model import flatten_params, init_params
+
+
+def _example_args(cfg, ranks, seed=5):
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(seed)
+    b, s, v = cfg.batch, cfg.seq_len, cfg.vocab
+    tokens = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    mask = jnp.asarray((rng.random((b, s)) < 0.3).astype(np.float32))
+    mats = cfg.matrix_params()
+    us = [jnp.asarray(rng.normal(size=(m, ranks[n])), jnp.float32)
+          for n, (m, _) in mats]
+    vs = [jnp.asarray(rng.normal(size=(nn, ranks[n])), jnp.float32)
+          for n, (_, nn) in mats]
+    taus = [jnp.asarray(rng.normal(size=(ranks[n],)), jnp.float32)
+            for n, _ in mats]
+    return list(flatten_params(cfg, params)) + us + vs + taus + \
+        [tokens, targets, mask, jnp.uint32(7), jnp.float32(1e-3)]
+
+
+def _ranks(cfg):
+    params = init_params(cfg, seed=0)
+    return rank_schedule(cfg, {k: np.asarray(v) for k, v in params.items()})
+
+
+def bench_walltime(cfg_name: str, pairs: int):
+    cfg = get_config(cfg_name)
+    ranks = _ranks(cfg)
+    args = _example_args(cfg, ranks)
+    jm = jax.jit(zs.build_tezo_loss_pm(cfg, ranks)[0])
+    ji = jax.jit(zs.build_tezo_loss_pm_implicit(cfg, ranks)[0])
+    rm, ri = jm(*args), ji(*args)
+    jax.block_until_ready(rm)
+    jax.block_until_ready(ri)
+    drift = max(abs(float(rm[0]) - float(ri[0])),
+                abs(float(rm[1]) - float(ri[1])))
+    tm, ti = [], []
+    for _ in range(pairs):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jm(*args))
+        tm.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(ji(*args))
+        ti.append(time.perf_counter() - t0)
+    m, i = min(tm), min(ti)
+    return {"materialize_forward_ms": round(m * 1e3, 3),
+            "implicit_forward_ms": round(i * 1e3, 3),
+            "implicit_speedup": round(m / i, 3),
+            "pairs": pairs,
+            "parity_drift": drift}
+
+
+def bench_stats(cfg_name: str):
+    cfg = get_config(cfg_name)
+    ranks = _ranks(cfg)
+    lozo_rank = max(2, min(8, cfg.r_max))
+    out = {}
+    for name, (fn, ex, _, _) in {
+        "tezo_loss_pm": zs.build_tezo_loss_pm(cfg, ranks),
+        "tezo_loss_pm_implicit": zs.build_tezo_loss_pm_implicit(cfg, ranks),
+        "lozo_loss_pm": zs.build_lozo_loss_pm(cfg, lozo_rank),
+        "lozo_loss_pm_implicit": zs.build_lozo_loss_pm_implicit(cfg, lozo_rank),
+    }.items():
+        out[name] = hlo_stats(to_hlo_text(fn, ex))
+    for fam in ("tezo", "lozo"):
+        mat, imp = out[f"{fam}_loss_pm"], out[f"{fam}_loss_pm_implicit"]
+        for k in ("peak_param_temp_bytes", "param_temp_total_bytes"):
+            base = mat[k]
+            imp_k = imp[k]
+            out[f"{fam}_reduction_{k}"] = \
+                round(1.0 - imp_k / base, 4) if base else None
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--configs", default="tiny,tiny_jnp,small",
+                    help="configs to measure walltime on (tiny = CLI default)")
+    ap.add_argument("--stats-configs", default="tiny,small,medium",
+                    help="configs to compute hlo temp stats on")
+    ap.add_argument("--pairs", type=int, default=40)
+    ap.add_argument("--out", default="../BENCH_PR5.json")
+    args = ap.parse_args()
+
+    doc = {
+        "snapshot": "PR5 implicit factor-form two-point forward",
+        "harness": f"python-jax-{jax.__version__}-cpu (same XLA:CPU the Rust "
+                   "PJRT runtime compiles; rerun via rust: cargo bench "
+                   "--bench bench_walltime, which writes out/BENCH_PR5.json)",
+        "metrics_note": "peak_param_temp_bytes / param_temp_total_bytes are "
+                        "the hlo_stats liveness metrics over parameter-shaped "
+                        "temporaries (the materialized W+/-rhoZ copies); "
+                        "peak_temp_bytes is the full-stream peak, dominated "
+                        "by activation temps both forms share. Walltime is "
+                        "the min over interleaved pairs.",
+        "hlo_temp_stats": {},
+        "walltime": {},
+    }
+    for c in [c.strip() for c in args.stats_configs.split(",") if c.strip()]:
+        print(f"[stats] {c} ...")
+        doc["hlo_temp_stats"][c] = bench_stats(c)
+    for c in [c.strip() for c in args.configs.split(",") if c.strip()]:
+        pairs = args.pairs if "tiny" in c else max(8, args.pairs // 4)
+        print(f"[walltime] {c} ({pairs} pairs) ...")
+        doc["walltime"][c] = bench_walltime(c, pairs)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"-> {args.out}")
+    for c, w in doc["walltime"].items():
+        print(f"  {c}: {w['materialize_forward_ms']} -> "
+              f"{w['implicit_forward_ms']} ms ({w['implicit_speedup']}x)")
+
+
+if __name__ == "__main__":
+    main()

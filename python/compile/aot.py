@@ -99,10 +99,12 @@ def artifact_builders(cfg: ModelConfig, ranks: Dict[str, int],
         "mezo_update_m": zs.build_mezo_update_m(cfg),
         "mezo_update_adam": zs.build_mezo_update_adam(cfg),
         "tezo_loss_pm": zs.build_tezo_loss_pm(cfg, ranks),
+        "tezo_loss_pm_implicit": zs.build_tezo_loss_pm_implicit(cfg, ranks),
         "tezo_update_factor": zs.build_tezo_update_factor(cfg, ranks),
         "tezo_update_adam": zs.build_tezo_update_adam(cfg, ranks),
         "lozo_init_u": zs.build_lozo_init_u(cfg, lozo_rank),
         "lozo_loss_pm": zs.build_lozo_loss_pm(cfg, lozo_rank),
+        "lozo_loss_pm_implicit": zs.build_lozo_loss_pm_implicit(cfg, lozo_rank),
         "lozo_update_sgd": zs.build_lozo_update_sgd(cfg, lozo_rank),
         "lozo_update_m": zs.build_lozo_update_m(cfg, lozo_rank),
         "subzo_factors": zs.build_subzo_factors(cfg, subzo_rank),
@@ -111,6 +113,24 @@ def artifact_builders(cfg: ModelConfig, ranks: Dict[str, int],
         "adamu_loss_pm": zs.build_adamu_loss_pm(cfg),
         "adamu_update": zs.build_adamu_update(cfg),
     }
+
+
+def forward_form(artifact_name: str):
+    """Manifest ``forward_form`` tag for two-point loss artifacts.
+
+    ``materialize``: the artifact builds dense ``W +/- rho Z`` copies before
+    the forward. ``implicit``: the rank-r correction is folded into the
+    matmuls (sign-batched; see model.loss_pm_fn). The tag is descriptive
+    metadata — `tezo inspect` prints it and tests assert it round-trips;
+    the runtime's ``forward_form`` knob resolves artifacts BY NAME
+    (``Manifest::loss_artifact``), with the ``*_loss_pm_implicit`` suffix
+    as the naming contract. Non-loss artifacts carry no tag.
+    """
+    if artifact_name.endswith("_loss_pm_implicit"):
+        return "implicit"
+    if artifact_name.endswith("_loss_pm"):
+        return "materialize"
+    return None
 
 
 # Per-shape standalone kernel artifacts for the L1 microbenches (Fig 3b /
@@ -169,6 +189,9 @@ def build_config(cfg_name: str, out_root: str, seed: int = 0,
         sha = _write(os.path.join(out_dir, f"{name}.hlo.txt"), text)
         artifacts[name] = {"file": f"{name}.hlo.txt", "sha256_16": sha,
                            "inputs": in_desc, "outputs": out_desc}
+        form = forward_form(name)
+        if form is not None:
+            artifacts[name]["forward_form"] = form
         print(f"  [{cfg.name}] {name}: {len(in_desc)} in / {len(out_desc)} out "
               f"({time.time() - t:.1f}s)")
 

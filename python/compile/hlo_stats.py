@@ -1,0 +1,171 @@
+"""Build-time mirror of the Rust HLO-text analyzer (rust/src/runtime/hlo_stats.rs).
+
+Same per-computation liveness scan over the SSA instruction stream:
+allocate each non-parameter result at its definition, free it after its
+last use; the maximum live set is the static peak-temporary footprint.
+The AOT pipeline uses this to report the materialize-vs-implicit peak-temp
+reduction at build time (python/bench_forward_forms.py emits BENCH_PR5.json
+from it); the Rust side computes the identical number at run time for
+`tezo inspect --hlo` and the forward_forms test.
+
+Keep the two implementations in lockstep: the acceptance numbers are
+stated on this metric.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4, "i32": 4,
+    "f16": 2, "bf16": 2, "s16": 2, "u16": 2,
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+}
+
+_IDENT = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789.-_")
+
+
+def _shape_bytes(shape_part: str) -> int:
+    """Total bytes of every array shape in a result type like
+    ``f32[64,256]{1,0}`` or ``(f32[2], u32[])``."""
+    total = 0
+    for m in re.finditer(r"([a-z]+[0-9]*)\[([0-9,\s]*)\]", shape_part):
+        dt, dims = m.group(1), m.group(2)
+        elems = 1
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                elems *= int(d)
+        total += elems * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _parse_operands(after_shape: str) -> List[str]:
+    """Identifiers inside the first top-level paren group after the op."""
+    open_i = after_shape.find("(")
+    if open_i < 0:
+        return []
+    depth = 0
+    end = len(after_shape)
+    for i in range(open_i, len(after_shape)):
+        c = after_shape[i]
+        if c in "({":
+            depth += 1
+        elif c in ")}":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = after_shape[open_i + 1:end]
+    out, depth, start = [], 0, 0
+    for i in range(len(inner) + 1):
+        top_comma = i == len(inner) or (inner[i] == "," and depth == 0)
+        if i < len(inner):
+            if inner[i] in "({[":
+                depth += 1
+            elif inner[i] in ")}]":
+                depth = max(0, depth - 1)
+        if top_comma:
+            tok = inner[start:i].strip().rsplit(" ", 1)[-1].lstrip("%")
+            ident = ""
+            for c in tok:
+                if c in _IDENT:
+                    ident += c
+                else:
+                    break
+            if ident and ident == tok:
+                out.append(ident)
+            start = i + 1
+    return out
+
+
+def _liveness_peak(comp: List[Tuple[str, int, bool, List[str]]]) -> int:
+    if not comp:
+        return 0
+    index = {name: i for i, (name, _, _, _) in enumerate(comp)}
+    last_use: Dict[int, int] = {}
+    for i, (_, _, _, operands) in enumerate(comp):
+        for op in operands:
+            j = index.get(op)
+            if j is not None:
+                last_use[j] = i
+    frees: Dict[int, List[int]] = {}
+    for j, i in last_use.items():
+        frees.setdefault(i, []).append(j)
+    live = peak = 0
+    for i, (_, nbytes, is_param, _) in enumerate(comp):
+        if not is_param:
+            live += nbytes
+            peak = max(peak, live)
+        for j in frees.get(i, []):
+            if not comp[j][2] and j != i:
+                live -= comp[j][1]
+    return peak
+
+
+def _computations(text: str):
+    """Instruction streams per computation:
+    ``(name, bytes, is_param, operands, shape)`` tuples."""
+    comp: List[Tuple[str, int, bool, List[str], str]] = []
+    for line in text.splitlines():
+        t = line.lstrip()
+        if t.startswith("}"):
+            if comp:
+                yield comp
+            comp = []
+            continue
+        eq = t.find(" = ")
+        if eq < 0:
+            continue
+        lhs = t[:eq]
+        if lhs.startswith("ROOT "):
+            lhs = lhs[len("ROOT "):]
+        lhs = lhs.lstrip("%")
+        if not lhs or any(c not in _IDENT for c in lhs):
+            continue
+        rest = t[eq + 3:]
+        sp = rest.find(" ")
+        if sp < 0:
+            continue
+        shape_part, after_shape = rest[:sp], rest[sp + 1:]
+        op = after_shape.split("(")[0].strip()
+        if not op:
+            continue
+        comp.append((lhs, _shape_bytes(shape_part), op == "parameter",
+                     _parse_operands(after_shape),
+                     shape_part.split("{")[0]))
+    if comp:
+        yield comp
+
+
+def peak_temp_bytes(text: str) -> int:
+    """Max per-computation liveness peak over an HLO module text."""
+    return max((_liveness_peak([c[:4] for c in comp])
+                for comp in _computations(text)), default=0)
+
+
+def stats(text: str) -> Dict[str, int]:
+    """All three temp metrics, mirroring Rust ``HloStats``:
+
+    * ``peak_temp_bytes`` — full liveness peak (every value);
+    * ``peak_param_temp_bytes`` — liveness peak over parameter-shaped
+      values only (the materialized perturbed-weight copies);
+    * ``param_temp_total_bytes`` — total parameter-shaped temp allocation
+      per call (the weight-copy traffic of one two-point evaluation).
+    """
+    out = {"peak_temp_bytes": 0, "peak_param_temp_bytes": 0,
+           "param_temp_total_bytes": 0}
+    for comp in _computations(text):
+        out["peak_temp_bytes"] = max(out["peak_temp_bytes"],
+                                     _liveness_peak([c[:4] for c in comp]))
+        pshapes = {c[4] for c in comp if c[2] and "," in c[4]}
+        scan = [(name, b if shape in pshapes else 0, is_param, ops)
+                for (name, b, is_param, ops, shape) in comp]
+        out["peak_param_temp_bytes"] = max(out["peak_param_temp_bytes"],
+                                           _liveness_peak(scan))
+        out["param_temp_total_bytes"] += sum(
+            b for (_, b, is_param, _, shape) in comp
+            if not is_param and shape in pshapes)
+    return out

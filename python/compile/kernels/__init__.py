@@ -6,5 +6,6 @@ from . import ref  # noqa: F401
 from .attention import attention  # noqa: F401
 from .axpy import axpy_perturb  # noqa: F401
 from .cross_entropy import cross_entropy  # noqa: F401
+from .lowrank_matmul import lowrank_matmul  # noqa: F401
 from .tezo_perturb import tezo_perturb  # noqa: F401
 from .tezo_update import tezo_adam_update, tezo_sgd_update  # noqa: F401

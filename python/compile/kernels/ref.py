@@ -53,6 +53,15 @@ def axpy_perturb(w, z, alpha):
     return w + alpha * z
 
 
+def lowrank_matmul(x, w, u, v, tau):
+    """Sign-batched implicit perturbed matmul (the factor-form forward's
+    core contraction): ``y[b] = x[b] @ W + ((x[b] @ U) * tau[b]) @ V^T``.
+
+    x: (2, m, k); w: (k, n); u: (k, r); v: (n, r); tau: (2, r) -> (2, m, n).
+    """
+    return x @ w + ((x @ u) * tau[:, None, :]) @ v.T
+
+
 # ---------------------------------------------------------------------------
 # Transformer forward-path kernels
 # ---------------------------------------------------------------------------

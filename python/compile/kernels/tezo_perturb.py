@@ -36,11 +36,21 @@ def _perturb_kernel(w_ref, u_ref, v_ref, tau_ref, rho_ref, o_ref):
     o_ref[...] = w_ref[...] + rho * z.astype(w_ref.dtype)
 
 
-def _pick_block(dim: int, target: int) -> int:
-    """Largest divisor of ``dim`` that is <= target (keeps the grid exact)."""
+def _pick_block(dim: int, target: int, floor: int = 16) -> int:
+    """Largest divisor of ``dim`` that is <= target (keeps the grid exact).
+
+    Degenerate-tiling guard: dims with no useful divisor (primes, or
+    near-primes like 2p) would fall through to 1-wide blocks — a grid of
+    ``dim`` single-lane programs. If the best divisor lands below ``floor``
+    we give up on tiling that axis and take the whole dimension as one
+    block: grid 1, still exact, and the (bm, bn) tile stays rectangular
+    instead of degenerating into a stripe.
+    """
     b = min(dim, target)
     while dim % b != 0:
         b -= 1
+    if b < min(floor, dim):
+        return dim
     return b
 
 

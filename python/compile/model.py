@@ -134,6 +134,152 @@ def eval_logits_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Implicit (factor-form) two-point forward
+# ---------------------------------------------------------------------------
+#
+# The materialized two-point path builds two full dense copies of every
+# matrix weight (`W + rho Z` and `W - rho Z`) before the forward even starts
+# — O(d) temp memory and 4x weight-sized read/write traffic per step. When
+# the perturbation is rank-r (`Z = U diag(tau) V^T`, TeZO Eq. 3; `Z = U V^T`,
+# LOZO), the correction folds into the matmul itself:
+#
+#     x @ (W + s Z) = x @ W + ((x @ U) * (s tau)) @ V^T
+#
+# which reads W once and adds only O((m+n) r) work. The +/- branches ride a
+# *leading sign axis of 2*: activations are (2, B, S, D), each dense `x @ W`
+# is a single dot whose W operand is read once for both branches, and the
+# per-branch signs live in the tiny (2, r) tau stacks. 1D layernorm params
+# stay densely seed-perturbed, stacked as (2, D) pairs.
+#
+# Attention folds the sign axis into its batch dimension (one call for both
+# branches — it has no weights, so nothing is re-read), and the
+# cross-entropy reduction runs per branch off the shared logits tensor, so
+# the softmax temporaries stay single-branch-sized.
+#
+# The implicit path always lowers through the fused-jnp kernels (ref.*),
+# regardless of ``cfg.use_pallas``: interpret-mode Pallas adds per-call
+# overhead that this batched lowering exists to avoid, and the implicit
+# forward contains no perturbation kernels at all (that is the point). The
+# L1 Pallas composition stays exercised by the materialized artifacts —
+# still selectable via ``forward_form`` — and the TPU mapping of the fused
+# contraction lives in kernels/lowrank_matmul.py with its own oracle tests.
+
+# Per-matrix low-rank correction: u (k, r), v (n, r), tau_pm (2, r) where
+# tau_pm already folds the per-branch sign and rho: [rho*tau, -rho*tau].
+LowRankPM = Dict[str, Tuple[jax.Array, jax.Array, jax.Array]]
+
+
+def pm_matmul(x: jax.Array, w: jax.Array, corr) -> jax.Array:
+    """Sign-batched perturbed matmul ``x @ (W +/- rho Z)`` in factor form.
+
+    x: (2, ..., k) with the leading sign axis; w: (k, n); corr: None or
+    ``(u, v, tau_pm)``. W is read by exactly one dot for both branches.
+    """
+    y = x @ w
+    if corr is not None:
+        u, v, tau_pm = corr
+        t = tau_pm.reshape((2,) + (1,) * (x.ndim - 2) + (tau_pm.shape[-1],))
+        y = y + ((x @ u) * t) @ v.T
+    return y
+
+
+def _pm_ln(x: jax.Array, g_pm: jax.Array, b_pm: jax.Array) -> jax.Array:
+    """Layer norm with per-branch (2, D) perturbed gain/bias stacks."""
+    return _layer_norm(x, g_pm[:, None, None, :], b_pm[:, None, None, :])
+
+
+def _pm_attention(cfg: ModelConfig, q, k, v, mask):
+    """Attention over sign-batched (2, B, S, D) q/k/v: the sign axis folds
+    into the kernel's batch dimension (2B), so one call serves both
+    branches. Attention has no weights — nothing is read twice."""
+    two, b, s, d = q.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    attn_fn = ref.attention  # fused-jnp lowering (see module comment above)
+    qf = q.reshape(2 * b, s, h, dh).transpose(0, 2, 1, 3)
+    kf = k.reshape(2 * b, s, h, dh).transpose(0, 2, 1, 3)
+    vf = v.reshape(2 * b, s, h, dh).transpose(0, 2, 1, 3)
+    o = attn_fn(qf, kf, vf, mask)
+    return o.transpose(0, 2, 1, 3).reshape(2, b, s, d)
+
+
+def _pm_block(cfg: ModelConfig, params: Params, corr: LowRankPM,
+              vec_pm: Params, i: int, x: jax.Array,
+              mask: jax.Array) -> jax.Array:
+    p = f"block{i}."
+    attn_in = _pm_ln(x, vec_pm[p + "ln1.g"], vec_pm[p + "ln1.b"])
+    q = pm_matmul(attn_in, params[p + "attn.wq"], corr.get(p + "attn.wq"))
+    k = pm_matmul(attn_in, params[p + "attn.wk"], corr.get(p + "attn.wk"))
+    v = pm_matmul(attn_in, params[p + "attn.wv"], corr.get(p + "attn.wv"))
+    o = _pm_attention(cfg, q, k, v, mask)
+    x = x + pm_matmul(o, params[p + "attn.wo"], corr.get(p + "attn.wo"))
+    ffn_in = _pm_ln(x, vec_pm[p + "ln2.g"], vec_pm[p + "ln2.b"])
+    hdd = jax.nn.gelu(pm_matmul(ffn_in, params[p + "ffn.w1"],
+                                corr.get(p + "ffn.w1")))
+    return x + pm_matmul(hdd, params[p + "ffn.w2"], corr.get(p + "ffn.w2"))
+
+
+def _pm_body(cfg: ModelConfig, params: Params, corr: LowRankPM,
+             vec_pm: Params, tokens: jax.Array) -> jax.Array:
+    """Sign-batched transformer body: tokens (B, S) -> x (2, B, S, D)."""
+    b, s = tokens.shape
+    tok_w = params["embed.tok"]
+    x = tok_w[tokens][None]  # (1, B, S, D); broadcasts to 2 below
+    c = corr.get("embed.tok")
+    if c is not None:
+        u, v, tau_pm = c
+        # Z[tokens] = (U[tokens] * tau) @ V^T — the embedding gather only
+        # touches the (B*S, r) slice of U, never a dense (V, D) copy
+        x = x + ((u[tokens][None] * tau_pm[:, None, None, :]) @ v.T)
+    pos = params["embed.pos"][None, None, :s, :]
+    cp = corr.get("embed.pos")
+    if cp is not None:
+        u, v, tau_pm = cp
+        pos = pos + ((u[None, :s] * tau_pm[:, None, :]) @ v.T)[:, None, :, :]
+    x = x + pos
+    x = jnp.broadcast_to(x, (2, b, s, cfg.d_model))
+    mask = _causal_mask(s)
+    for i in range(cfg.n_layers):
+        x = _pm_block(cfg, params, corr, vec_pm, i, x, mask)
+    return _pm_ln(x, vec_pm["final_ln.g"], vec_pm["final_ln.b"])
+
+
+def _pm_head(cfg: ModelConfig, params: Params, corr: LowRankPM,
+             x: jax.Array) -> jax.Array:
+    """Sign-batched logits (2, B, S, V): the head weight — the single
+    largest matrix — is read by one dot for both branches, like every other
+    matmul in the body."""
+    if cfg.tie_lm_head:
+        w = params["embed.tok"]
+        logits = x @ w.T
+        c = corr.get("embed.tok")
+        if c is not None:
+            u, v, tau_pm = c
+            # (U diag(tau) V^T)^T = V diag(tau) U^T
+            logits = logits + ((x @ v) * tau_pm[:, None, None, :]) @ u.T
+        return logits
+    return pm_matmul(x, params["lm_head"], corr.get("lm_head"))
+
+
+def loss_pm_fn(cfg: ModelConfig, params: Params, corr: LowRankPM,
+               vec_pm: Params, tokens: jax.Array, targets: jax.Array,
+               loss_mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Fused two-point loss ``(f(W + rho Z), f(W - rho Z))`` in factor form.
+
+    corr maps matrix names to ``(u, v, tau_pm)`` with tau_pm (2, r) already
+    folding sign*rho; vec_pm maps every 1D param name to its (2, D)
+    perturbed stack. Matrices absent from corr pass through unperturbed.
+    The cross-entropy reduction runs per branch off the shared logits
+    tensor, keeping the softmax temporaries single-branch-sized.
+    """
+    x = _pm_body(cfg, params, corr, vec_pm, tokens)
+    logits = _pm_head(cfg, params, corr, x)
+    ce_fn = ref.cross_entropy  # fused-jnp lowering (see module comment above)
+    f_plus = ce_fn(logits[0], targets, loss_mask)
+    f_minus = ce_fn(logits[1], targets, loss_mask)
+    return f_plus, f_minus
+
+
+# ---------------------------------------------------------------------------
 # Perturbation builder shared by the ZO step functions (zo_steps.py)
 # ---------------------------------------------------------------------------
 

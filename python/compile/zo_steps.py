@@ -44,7 +44,7 @@ from . import kernels
 from .configs import ModelConfig
 from .kernels import ref
 from .model import (Params, dense_normal_like, eval_logits_fn, loss_fn,
-                    unflatten_params)
+                    loss_pm_fn, unflatten_params)
 
 # ---------------------------------------------------------------------------
 # descriptor helpers
@@ -414,6 +414,45 @@ def build_tezo_loss_pm(cfg: ModelConfig, ranks: Dict[str, int]):
         [_desc("scalar", "f_plus", (), "f32"), _desc("scalar", "f_minus", (), "f32")]
 
 
+def _pm_vec_params(cfg: ModelConfig, params: Params, seed, rho) -> Params:
+    """(2, D) perturbed stacks ``[p + rho z, p - rho z]`` for every 1D param
+    — the same seed-folded draws the materialized path and the update use."""
+    vec_z = _vector_normals(cfg, seed)
+    out = {}
+    for name, _ in cfg.vector_params():
+        p, z = params[name], vec_z[name]
+        out[name] = jnp.stack([p + rho * z, p - rho * z])
+    return out
+
+
+def build_tezo_loss_pm_implicit(cfg: ModelConfig, ranks: Dict[str, int]):
+    """Implicit (factor-form) TeZO two-point loss — identical calling
+    convention to ``tezo_loss_pm``, but the rank-r perturbation is folded
+    into the matmuls instead of materializing ``W +/- rho Z`` (see
+    model.loss_pm_fn; manifest ``forward_form: implicit``)."""
+    p_args, p_desc = _param_inputs(cfg)
+    f_args, f_desc = _factor_inputs(cfg, ranks)
+    b_args, b_desc = _batch_inputs(cfg)
+    s_seed, d_seed = _scalar("seed", U32)
+    s_rho, d_rho = _scalar("rho")
+    n = len(p_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us, vs, (taus,), rest = _split_factors(cfg, args[n:], 1)
+        tokens, targets, mask, seed, rho = rest
+        corr = {}
+        for name, _ in cfg.matrix_params():
+            tau_pm = jnp.stack([rho * taus[name], -rho * taus[name]])
+            corr[name] = (us[name], vs[name], tau_pm)
+        vec_pm = _pm_vec_params(cfg, params, seed, rho)
+        return loss_pm_fn(cfg, params, corr, vec_pm, tokens, targets, mask)
+
+    return fn, p_args + f_args + b_args + [s_seed, s_rho], \
+        p_desc + f_desc + b_desc + [d_seed, d_rho], \
+        [_desc("scalar", "f_plus", (), "f32"), _desc("scalar", "f_minus", (), "f32")]
+
+
 def build_tezo_update_factor(cfg: ModelConfig, ranks: Dict[str, int]):
     """Shared TeZO / TeZO-m update: ``W -= U diag(tau_eff) V^T``.
 
@@ -547,6 +586,38 @@ def build_lozo_loss_pm(cfg: ModelConfig, rank: int):
         f_plus = _loss(cfg, perturbed(rho), *args[n + k:n + k + 3])
         f_minus = _loss(cfg, perturbed(-rho), *args[n + k:n + k + 3])
         return f_plus, f_minus
+
+    return fn, p_args + u_args + b_args + [s_seed, s_rho], \
+        p_desc + u_desc + b_desc + [d_seed, d_rho], \
+        [_desc("scalar", "f_plus", (), "f32"), _desc("scalar", "f_minus", (), "f32")]
+
+
+def build_lozo_loss_pm_implicit(cfg: ModelConfig, rank: int):
+    """Implicit (factor-form) LOZO two-point loss — same calling convention
+    as ``lozo_loss_pm``. ``Z = U V_t^T`` is ``U diag(tau) V_t^T`` with
+    tau = 1, so the sign-batched correction is just ``tau_pm = [rho, -rho]``
+    broadcast over the rank (manifest ``forward_form: implicit``)."""
+    p_args, p_desc = _param_inputs(cfg)
+    u_args = [_sds((m, rank)) for _, (m, n) in cfg.matrix_params()]
+    u_desc = [_desc("factor_u", n, (m, rank), "f32")
+              for n, (m, _) in cfg.matrix_params()]
+    b_args, b_desc = _batch_inputs(cfg)
+    s_seed, d_seed = _scalar("seed", U32)
+    s_rho, d_rho = _scalar("rho")
+    n = len(p_args)
+    k = len(u_args)
+
+    def fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        us = {nm: a for (nm, _), a in zip(cfg.matrix_params(), args[n:n + k])}
+        tokens, targets, mask, seed, rho = args[n + k:]
+        v_t = _lozo_v(cfg, seed, rank)
+        ones = jnp.ones((rank,), F32)
+        tau_pm = jnp.stack([rho * ones, -rho * ones])
+        corr = {name: (us[name], v_t[name], tau_pm)
+                for name, _ in cfg.matrix_params()}
+        vec_pm = _pm_vec_params(cfg, params, seed, rho)
+        return loss_pm_fn(cfg, params, corr, vec_pm, tokens, targets, mask)
 
     return fn, p_args + u_args + b_args + [s_seed, s_rho], \
         p_desc + u_desc + b_desc + [d_seed, d_rho], \

@@ -1,0 +1,117 @@
+"""Cross-form parity: the implicit (factor-form) two-point loss must match
+the materialized one to float tolerance on the tiny config.
+
+The implicit artifacts reassociate the perturbed matmuls
+(``x @ (W + rho Z)`` -> ``x @ W + ((x @ U) * rho tau) @ V^T``), so the two
+forms are not bit-identical — this suite bounds the drift at 1e-4 on |f+|
+and |f-|, across perturbation seeds standing in for every TeZO-family
+driver (TeZO / TeZO-m / TeZO-Adam share one loss artifact; only the tau
+content differs) and for LOZO.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import zo_steps as zs
+from compile.aot import forward_form, rank_schedule
+from compile.configs import get_config
+from compile.model import flatten_params, init_params
+
+CFG = get_config("tiny")
+TOL = 1e-4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, seed=0)
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    ranks = rank_schedule(CFG, np_params)
+    rng = np.random.default_rng(11)
+    b, s, v = CFG.batch, CFG.seq_len, CFG.vocab
+    tokens = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    mask = jnp.asarray((rng.random((b, s)) < 0.3).astype(np.float32))
+    return params, ranks, (tokens, targets, mask)
+
+
+def _flat(params):
+    return list(flatten_params(CFG, params))
+
+
+def _tezo_factor_args(ranks, seed):
+    """U/V panels + taus the way a driver would draw them, flattened in the
+    artifact convention order."""
+    rng = np.random.default_rng(seed)
+    mats = CFG.matrix_params()
+    us = [jnp.asarray(rng.normal(size=(m, ranks[n])), jnp.float32)
+          for n, (m, _) in mats]
+    vs = [jnp.asarray(rng.normal(size=(nn, ranks[n])), jnp.float32)
+          for n, (_, nn) in mats]
+    taus = [jnp.asarray(rng.normal(size=(ranks[n],)), jnp.float32)
+            for n, _ in mats]
+    return us + vs + taus
+
+
+# one perturbation seed per TeZO-family driver: the loss artifact is shared;
+# only the tau vectors (raw, momentum-accumulated, Adam-normalized) differ,
+# and all of them are just rank-r vectors — distinct seeds cover the space
+TEZO_SEEDS = [("tezo", 3), ("tezo-m", 17), ("tezo-adam", 29)]
+
+
+@pytest.mark.parametrize("label,seed", TEZO_SEEDS)
+def test_tezo_cross_form_parity(setup, label, seed):
+    params, ranks, batch = setup
+    mat_fn, _, mat_in, _ = zs.build_tezo_loss_pm(CFG, ranks)
+    imp_fn, _, imp_in, _ = zs.build_tezo_loss_pm_implicit(CFG, ranks)
+    # identical calling convention: the Rust side swaps artifacts by name
+    assert [(d["role"], d["name"], d["shape"], d["dtype"]) for d in mat_in] \
+        == [(d["role"], d["name"], d["shape"], d["dtype"]) for d in imp_in]
+    args = _flat(params) + _tezo_factor_args(ranks, seed) + list(batch) \
+        + [jnp.uint32(seed), jnp.float32(1e-2)]
+    fp_m, fm_m = mat_fn(*args)
+    fp_i, fm_i = imp_fn(*args)
+    assert abs(float(fp_m) - float(fp_i)) <= TOL, \
+        f"{label}: f+ drift {abs(float(fp_m) - float(fp_i))}"
+    assert abs(float(fm_m) - float(fm_i)) <= TOL, \
+        f"{label}: f- drift {abs(float(fm_m) - float(fm_i))}"
+
+
+def test_tezo_implicit_sign_symmetry(setup):
+    """Swapping the sign of rho must swap the two outputs — the sign-batched
+    tau stacks are the only place the branch sign lives."""
+    params, ranks, batch = setup
+    fn, _, _, _ = zs.build_tezo_loss_pm_implicit(CFG, ranks)
+    args = _flat(params) + _tezo_factor_args(ranks, 7) + list(batch)
+    fp, fm = fn(*args, jnp.uint32(7), jnp.float32(1e-3))
+    fp2, fm2 = fn(*args, jnp.uint32(7), jnp.float32(-1e-3))
+    np.testing.assert_allclose(np.asarray(fp), np.asarray(fm2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fm), np.asarray(fp2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("seed", [13, 41])
+def test_lozo_cross_form_parity(setup, seed):
+    params, _, batch = setup
+    rank = 4
+    mat_fn, _, mat_in, _ = zs.build_lozo_loss_pm(CFG, rank)
+    imp_fn, _, imp_in, _ = zs.build_lozo_loss_pm_implicit(CFG, rank)
+    assert [(d["role"], d["name"], d["shape"], d["dtype"]) for d in mat_in] \
+        == [(d["role"], d["name"], d["shape"], d["dtype"]) for d in imp_in]
+    ifn, _, _, _ = zs.build_lozo_init_u(CFG, rank)
+    us = ifn(jnp.uint32(1))
+    args = _flat(params) + list(us) + list(batch) \
+        + [jnp.uint32(seed), jnp.float32(1e-2)]
+    fp_m, fm_m = mat_fn(*args)
+    fp_i, fm_i = imp_fn(*args)
+    assert abs(float(fp_m) - float(fp_i)) <= TOL
+    assert abs(float(fm_m) - float(fm_i)) <= TOL
+
+
+def test_forward_form_tags():
+    assert forward_form("tezo_loss_pm") == "materialize"
+    assert forward_form("tezo_loss_pm_implicit") == "implicit"
+    assert forward_form("lozo_loss_pm") == "materialize"
+    assert forward_form("lozo_loss_pm_implicit") == "implicit"
+    assert forward_form("adamu_loss_pm") == "materialize"
+    assert forward_form("tezo_update_factor") is None
+    assert forward_form("fwd_loss") is None

@@ -1,0 +1,73 @@
+"""compile/hlo_stats.py is the build-time mirror of the Rust analyzer
+(rust/src/runtime/hlo_stats.rs). These cases are copied verbatim from the
+Rust unit tests — if one side changes behavior, both suites must move."""
+
+from compile.hlo_stats import peak_temp_bytes, stats
+
+LIVENESS = """
+ENTRY main {
+  %p0 = f32[1000]{0} parameter(0)
+  %t1 = f32[1000]{0} add(%p0, %p0)
+  %s1 = f32[] reduce(%t1, %p0), dimensions={0}
+  %t2 = f32[1000]{0} multiply(%p0, %p0)
+  %s2 = f32[] reduce(%t2, %p0), dimensions={0}
+  ROOT %out = f32[] add(%s1, %s2)
+}
+"""
+
+LIVENESS_BOTH = """
+ENTRY main {
+  %p0 = f32[1000]{0} parameter(0)
+  %t1 = f32[1000]{0} add(%p0, %p0)
+  %t2 = f32[1000]{0} multiply(%p0, %p0)
+  ROOT %out = f32[1000]{0} add(%t1, %t2)
+}
+"""
+
+PARAM_SHAPED = """
+ENTRY main {
+  %w = f32[64,256]{1,0} parameter(0)
+  %b = f32[64]{0} parameter(1)
+  %wp = f32[64,256]{1,0} add(%w, %w)
+  %bp = f32[64]{0} add(%b, %b)
+  %wp2 = f32[64,256]{1,0} multiply(%wp, %wp)
+  ROOT %s = f32[] reduce(%wp2, %bp), dimensions={0,1}
+}
+"""
+
+
+def test_liveness_peak_frees_dead_temps():
+    # t1 dies at its last use (%s1): high-water mark is t2 + two scalars
+    assert peak_temp_bytes(LIVENESS) == 4008
+
+
+def test_liveness_peak_counts_simultaneously_live_temps():
+    assert peak_temp_bytes(LIVENESS_BOTH) == 12000
+
+
+def test_param_shaped_temps_are_classified():
+    s = stats(PARAM_SHAPED)
+    assert s["param_temp_total_bytes"] == 2 * 64 * 256 * 4
+    assert s["peak_param_temp_bytes"] == 2 * 64 * 256 * 4
+    assert s["peak_temp_bytes"] >= s["peak_param_temp_bytes"]
+
+
+def test_no_param_shaped_temps_when_params_are_1d():
+    s = stats(LIVENESS)
+    assert s["param_temp_total_bytes"] == 0
+    assert s["peak_param_temp_bytes"] == 0
+
+
+def test_parameters_are_not_temps():
+    sample = """
+ENTRY main {
+  %p0 = f32[64,256]{1,0} parameter(0)
+  %p1 = f32[256,64]{1,0} parameter(1)
+  %dot = f32[64,64]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}
+  %rng = u32[2]{0} rng-bit-generator(%p0), algorithm=rng_default
+  ROOT %t = (f32[64,64]{1,0}) tuple(%dot)
+}
+"""
+    p = peak_temp_bytes(sample)
+    assert p >= 64 * 64 * 4
+    assert p < 2 * 64 * 256 * 4

@@ -147,3 +147,78 @@ def test_tezo_perturb_plus_minus_roundtrip():
     w1 = kernels.tezo_perturb(w, u, v, tau, jnp.float32(1e-3))
     w2 = kernels.tezo_perturb(w1, u, v, tau, jnp.float32(-1e-3))
     np.testing.assert_allclose(w2, w, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sign-batched low-rank matmul (implicit forward building block)
+# ---------------------------------------------------------------------------
+
+@given(m=dims, k=dims, n=dims, r=ranks, rho=scalars, seed=seeds)
+def test_lowrank_matmul_matches_ref(m, k, n, r, rho, seed):
+    rng = _np_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(k, r)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, r)), jnp.float32)
+    t = rng.normal(size=(r,)).astype(np.float32)
+    tau = jnp.asarray(np.stack([rho * t, -rho * t]))
+    got = kernels.lowrank_matmul(x, w, u, v, tau)
+    want = ref.lowrank_matmul(x, w, u, v, tau)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_lowrank_matmul_zero_tau_is_plain_matmul():
+    rng = _np_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 16, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 24)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(24, 4)), jnp.float32)
+    tau = jnp.zeros((2, 4), jnp.float32)
+    got = kernels.lowrank_matmul(x, w, u, v, tau)
+    np.testing.assert_allclose(got, x @ w, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# _pick_block degenerate-tiling guard
+# ---------------------------------------------------------------------------
+
+def test_pick_block_divisible_dims_unchanged():
+    from compile.kernels.tezo_perturb import _pick_block
+    assert _pick_block(512, 256) == 256
+    assert _pick_block(96, 256) == 96
+    assert _pick_block(768, 256) == 256
+    assert _pick_block(48, 16) == 16
+
+
+def test_pick_block_prime_dims_fall_back_to_whole_dim():
+    """Primes (and 2p-style dims) have no divisor above the floor below the
+    target; the guard takes the whole dim as one block instead of a 1-wide
+    (or 2-wide) stripe grid."""
+    from compile.kernels.tezo_perturb import _pick_block
+    assert _pick_block(509, 256) == 509        # prime
+    assert _pick_block(2 * 509, 256) == 1018   # best divisor would be 2
+    assert _pick_block(257, 256) == 257        # prime just above target
+    # tiny dims below the floor are their own (exact) block
+    assert _pick_block(5, 256) == 5
+    assert _pick_block(1, 256) == 1
+
+
+def test_pick_block_floor_is_respected_when_divisors_exist():
+    from compile.kernels.tezo_perturb import _pick_block
+    # 272 = 2^4 * 17: largest divisor <= 256 is 136, well above the floor
+    assert _pick_block(272, 256) == 136
+    # 34 = 2 * 17 with floor 16: best divisor 2 < 16 -> whole dim
+    assert _pick_block(34, 16) == 34
+
+
+def test_tezo_perturb_prime_dims_still_exact():
+    """End-to-end through the kernel: prime dims route through the guard."""
+    rng = _np_rng(23)
+    m, n, r = 509, 13, 3
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, r)), jnp.float32)
+    tau = jnp.asarray(rng.normal(size=(r,)), jnp.float32)
+    got = kernels.tezo_perturb(w, u, v, tau, jnp.float32(0.5))
+    want = ref.tezo_perturb(w, u, v, tau, 0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -11,10 +11,13 @@
 
 use std::time::Instant;
 
-use tezo::benchkit::{fmt_time, Report};
-use tezo::config::{Method, TrainConfig};
+use tezo::benchkit::{fmt_time, write_json_value, Report};
+use tezo::config::{ForwardForm, Method, TrainConfig};
+use tezo::coordinator::metrics::Phase;
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::jsonx::Value;
+use tezo::runtime::hlo_stats::HloStats;
 use tezo::runtime::{ParamStore, Runtime};
 
 const METHODS: [Method; 10] = [
@@ -31,6 +34,7 @@ fn main() {
     let configs = std::env::var("TEZO_BENCH_CONFIGS").unwrap_or_else(|_| {
         if fast { "tiny,tiny_jnp".into() } else { "tiny,tiny_jnp,small,medium".into() }
     });
+    let mut form_entries: Vec<(String, Value)> = Vec::new();
     for config in configs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let dir = tezo::artifacts_root().join(config);
         if !dir.join("manifest.json").exists() {
@@ -38,7 +42,86 @@ fn main() {
             continue;
         }
         bench_config(config, steps);
+        if let Some(v) = bench_forward_forms(config, steps) {
+            form_entries.push((config.to_string(), v));
+        }
     }
+    if !form_entries.is_empty() {
+        // the perf-trajectory snapshot (committed as BENCH_PR5.json at the
+        // repo root; python/bench_forward_forms.py emits the same shape
+        // from the build-time side)
+        let doc = Value::obj(vec![
+            ("snapshot", Value::str("forward-form walltime + hlo temp stats")),
+            ("configs", Value::obj(form_entries.iter()
+                .map(|(k, v)| (k.as_str(), v.clone()))
+                .collect())),
+        ]);
+        let path = std::path::PathBuf::from("out/BENCH_PR5.json");
+        match write_json_value(&path, &doc) {
+            Ok(()) => println!("forward-form snapshot -> {}", path.display()),
+            Err(e) => println!("(snapshot write failed: {e})"),
+        }
+    }
+}
+
+/// Implicit vs materialized forward: train `tezo` under both forms and
+/// compare the forward-phase seconds; pair with the static per-artifact
+/// temp metrics from `hlo_stats`. Returns the JSON entry for the snapshot,
+/// or None when the config predates the implicit artifacts.
+fn bench_forward_forms(config: &str, steps: usize) -> Option<Value> {
+    let rt = Runtime::open(&tezo::artifacts_root().join(config)).expect("runtime");
+    rt.manifest.artifact("tezo_loss_pm_implicit").ok()?;
+    let mut rep = Report::new(
+        &format!("Forward forms — tezo two-point loss ({config})"),
+        &["fwd ms/step", "ms/step", "peak param temp B", "param temp B/call"],
+    );
+    let mut fields: Vec<(&str, Value)> = Vec::new();
+    let mut fwd_ms = [0f64; 2];
+    for (slot, form) in [ForwardForm::Materialize, ForwardForm::Implicit]
+        .into_iter()
+        .enumerate()
+    {
+        let mut cfg = TrainConfig::with_preset(Method::Tezo, config);
+        cfg.steps = steps;
+        cfg.forward_form = form;
+        let mut params = ParamStore::load(&rt.client, &rt.manifest).expect("params");
+        let tok = Tokenizer::new(rt.manifest.config.vocab);
+        let task = Task::new(tasks::spec_by_name("rte").unwrap(), tok,
+                             rt.manifest.config.seq_len, 0);
+        let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+        rt.warmup_method(Method::Tezo, form).expect("warmup");
+        let mut trainer = Trainer::new(&rt, cfg, DataSource::Task(builder));
+        let outcome = trainer.run(&mut params).expect("train");
+        let fwd = outcome.metrics.timers.seconds(Phase::Forward)
+            / steps as f64 * 1e3;
+        fwd_ms[slot] = fwd;
+        let ms = outcome.metrics.wall_seconds / steps as f64 * 1e3;
+        let artifact = rt.manifest.loss_artifact(Method::Tezo, form);
+        let meta = rt.manifest.artifact(artifact).expect("meta");
+        let stats = HloStats::from_file(&rt.manifest.dir.join(&meta.file))
+            .expect("hlo stats");
+        rep.add_row(form.name(), vec![
+            format!("{fwd:.1}"),
+            format!("{ms:.1}"),
+            format!("{}", stats.peak_param_temp_bytes),
+            format!("{}", stats.param_temp_total_bytes),
+        ]);
+        fields.push((if slot == 0 { "materialize" } else { "implicit" },
+            Value::obj(vec![
+                ("forward_ms_per_step", Value::f(fwd)),
+                ("ms_per_step", Value::f(ms)),
+                ("artifact", Value::str(artifact)),
+                ("peak_temp_bytes", Value::i(stats.peak_temp_bytes as i64)),
+                ("peak_param_temp_bytes",
+                 Value::i(stats.peak_param_temp_bytes as i64)),
+                ("param_temp_total_bytes",
+                 Value::i(stats.param_temp_total_bytes as i64)),
+            ])));
+    }
+    fields.push(("implicit_forward_speedup",
+                 Value::f(fwd_ms[0] / fwd_ms[1].max(1e-9))));
+    rep.print();
+    Some(Value::obj(fields))
 }
 
 fn bench_config(config: &str, steps: usize) {

@@ -202,6 +202,18 @@ impl Report {
     }
 }
 
+/// Write any jsonx [`Value`](crate::jsonx::Value) to `path`, creating
+/// parent directories — the JSON emitter behind the perf-trajectory
+/// snapshots (`bench_walltime` writes out/BENCH_PR5.json through it).
+pub fn write_json_value(path: &std::path::Path,
+                        v: &crate::jsonx::Value) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, crate::jsonx::to_string_pretty(v))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,6 +232,24 @@ mod tests {
         });
         assert!(s.iters.len() >= 5);
         assert!(s.median() >= 0.0);
+    }
+
+    #[test]
+    fn json_value_roundtrips_through_disk() {
+        use crate::jsonx::Value;
+        let doc = Value::obj(vec![
+            ("snapshot", Value::str("s")),
+            ("n", Value::i(3)),
+        ]);
+        let path = std::env::temp_dir()
+            .join(format!("tezo_benchkit_{}", std::process::id()))
+            .join("snap.json");
+        write_json_value(&path, &doc).unwrap();
+        let v = crate::jsonx::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(v.get_str("snapshot").unwrap(), "s");
+        assert_eq!(v.get("n").unwrap().as_i64().unwrap(), 3);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

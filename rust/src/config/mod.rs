@@ -87,6 +87,45 @@ impl Method {
     }
 }
 
+/// Which compiled form of the two-point loss forward a run dispatches.
+///
+/// * `Implicit` (default): the factor-form artifact (`*_loss_pm_implicit`)
+///   — the rank-r perturbation is folded into the matmuls, sign-batched on
+///   a leading axis of 2, so no dense `W +/- rho Z` copies materialize and
+///   each weight is read once for the +/- pair.
+/// * `Materialize`: the legacy artifact (`*_loss_pm`) that builds two full
+///   perturbed weight sets before the forward. Still needed as the
+///   reference for cross-form parity, and it is what the *update* path
+///   necessarily does (the update must write dense weights anyway).
+///
+/// Methods without an implicit artifact (dense-Z MeZO family, SubZO,
+/// ZO-AdaMU, the FO reference) ignore the knob; so do artifact dirs built
+/// before the implicit artifacts existed (the manifest lookup falls back).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ForwardForm {
+    Materialize,
+    Implicit,
+}
+
+impl ForwardForm {
+    pub const ALL: [ForwardForm; 2] = [ForwardForm::Materialize, ForwardForm::Implicit];
+
+    pub fn parse(s: &str) -> Result<ForwardForm> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "implicit" => ForwardForm::Implicit,
+            "materialize" | "materialized" | "dense" => ForwardForm::Materialize,
+            other => bail!("unknown forward form {other:?} (implicit|materialize)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ForwardForm::Materialize => "materialize",
+            ForwardForm::Implicit => "implicit",
+        }
+    }
+}
+
 /// Learning-rate schedule over the run.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LrSchedule {
@@ -154,6 +193,9 @@ pub struct TrainConfig {
     /// (paper's baselines use q=1). Supported by the stateless SGD-form
     /// methods (mezo/lozo/subzo/tezo); momentum/Adam variants require q=1.
     pub n_perturb: usize,
+    /// Which compiled two-point forward the low-rank methods dispatch
+    /// (implicit factor-form vs legacy materialized; see [`ForwardForm`]).
+    pub forward_form: ForwardForm,
 }
 
 impl Default for TrainConfig {
@@ -174,6 +216,7 @@ impl Default for TrainConfig {
             lr_schedule: LrSchedule::Constant,
             kappa_clip: 0.0,
             n_perturb: 1,
+            forward_form: ForwardForm::Implicit,
         }
     }
 }
@@ -319,6 +362,18 @@ mod tests {
         fo.method = Method::FoAdam;
         assert!(FleetConfig::new(2).validate(&fo).is_err(),
                 "first-order methods cannot ride the scalar-sync fleet");
+    }
+
+    #[test]
+    fn forward_form_parse_and_default() {
+        for f in ForwardForm::ALL {
+            assert_eq!(ForwardForm::parse(f.name()).unwrap(), f);
+        }
+        assert_eq!(ForwardForm::parse("materialized").unwrap(),
+                   ForwardForm::Materialize);
+        assert!(ForwardForm::parse("nope").is_err());
+        // implicit is the default: the factor-form forward is the hot path
+        assert_eq!(TrainConfig::default().forward_form, ForwardForm::Implicit);
     }
 
     #[test]

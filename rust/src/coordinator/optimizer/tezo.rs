@@ -62,18 +62,25 @@ impl Factors {
         Ok(Factors { ranks, us, vs, init_draws, factor_elems })
     }
 
-    /// Draw the tau vectors for one (step, sub) perturbation (host; r_l
-    /// per matrix).
-    fn draw_taus(&self, master: &SeedSchedule, perturb_index: u64) -> Vec<Vec<f32>> {
+    /// One zeroed tau-shaped buffer set (r_l floats per matrix) — the
+    /// drivers preallocate these once and refill them in place every
+    /// sub-step instead of allocating fresh `Vec<Vec<f32>>`s in the hot
+    /// loop.
+    fn tau_scratch(&self) -> Vec<Vec<f32>> {
+        self.ranks.iter().map(|&r| vec![0.0f32; r]).collect()
+    }
+
+    /// Draw the tau vectors for one (step, sub) perturbation into `out`
+    /// (host; r_l per matrix; `out` must be `tau_scratch()`-shaped).
+    fn draw_taus_into(&self, master: &SeedSchedule, perturb_index: u64,
+                      out: &mut [Vec<f32>]) {
         let base = master.seed64(Stream::Perturb, perturb_index);
-        self.ranks
-            .iter()
-            .enumerate()
-            .map(|(i, &r)| {
-                let mut gen = normal_rng(SplitMix64::mix(base, 0x7A0 + i as u64));
-                (0..r).map(|_| gen.next_f32()).collect()
-            })
-            .collect()
+        for (i, tau) in out.iter_mut().enumerate() {
+            let mut gen = normal_rng(SplitMix64::mix(base, 0x7A0 + i as u64));
+            for x in tau.iter_mut() {
+                *x = gen.next_f32();
+            }
+        }
     }
 
     fn tau_draw_count(&self) -> u64 {
@@ -82,13 +89,19 @@ impl Factors {
 }
 
 /// Fused two-point forward shared by all TeZO variants.
+///
+/// `cfg.forward_form` selects the artifact: the implicit factor-form one
+/// (default) folds the rank-r perturbation into the matmuls sign-batched,
+/// the materialized one builds dense `W +/- rho Z` copies. Both share one
+/// calling convention, so only the name differs here.
 fn tezo_forward(ctx: &mut StepCtx, factors: &Factors, taus: &[Vec<f32>])
                 -> Result<ForwardOut> {
     let seed = ctx.step_seed();
     ctx.counter.add_matrix(factors.tau_draw_count());
     ctx.counter.add_vector(vector_elems(ctx.rt));
     let t0 = Instant::now();
-    let mut call = ctx.rt.prepared("tezo_loss_pm")?;
+    let artifact = ctx.rt.manifest.loss_artifact(ctx.cfg.method, ctx.cfg.forward_form);
+    let mut call = ctx.rt.prepared(artifact)?;
     call.bind_bufs("param", ctx.params.bufs())?;
     call.bind_bufs("factor_u", &factors.us)?;
     call.bind_bufs("factor_v", &factors.vs)?;
@@ -133,15 +146,20 @@ fn tezo_update_factor(ctx: &mut StepCtx, factors: &Factors,
 
 pub struct Tezo {
     factors: Factors,
-    /// taus drawn in forward, reused in update (must match exactly)
+    /// taus drawn in forward, reused in update (must match exactly);
+    /// preallocated once, refilled in place per sub-step
     pending_taus: Vec<Vec<f32>>,
+    /// scratch for the update's scaled taus (same shape, same lifetime)
+    tau_eff: Vec<Vec<f32>>,
     counted_init: bool,
 }
 
 impl Tezo {
     pub fn new(rt: &Runtime, seeds: &SeedSchedule) -> Result<Self> {
         let factors = Factors::init(rt, seeds)?;
-        Ok(Self { factors, pending_taus: Vec::new(), counted_init: false })
+        let pending_taus = factors.tau_scratch();
+        let tau_eff = factors.tau_scratch();
+        Ok(Self { factors, pending_taus, tau_eff, counted_init: false })
     }
 }
 
@@ -158,8 +176,9 @@ impl ZoOptimizer for Tezo {
         }
         let idx = ctx.perturb_index();
         let seeds = ctx.seeds;
-        self.pending_taus = ctx.timers.time(Phase::Sampling, || {
-            self.factors.draw_taus(seeds, idx)
+        let (factors, pending) = (&self.factors, &mut self.pending_taus);
+        ctx.timers.time(Phase::Sampling, || {
+            factors.draw_taus_into(seeds, idx, pending);
         });
         tezo_forward(ctx, &self.factors, &self.pending_taus)
     }
@@ -169,16 +188,16 @@ impl ZoOptimizer for Tezo {
         // 1/r_l keeps the SGD-form step scale comparable to MeZO's (without
         // it the effective lr is r_l times larger and the shared Table-6
         // presets diverge).
-        let tau_effs: Vec<Vec<f32>> = self
-            .pending_taus
-            .iter()
+        for ((eff, tau), &r) in self.tau_eff.iter_mut()
+            .zip(self.pending_taus.iter())
             .zip(self.factors.ranks.iter())
-            .map(|(tau, &r)| {
-                let scale = ctx.lr * kappa / r as f32;
-                tau.iter().map(|&t| scale * t).collect()
-            })
-            .collect();
-        tezo_update_factor(ctx, &self.factors, &tau_effs, ctx.lr * kappa)
+        {
+            let scale = ctx.lr * kappa / r as f32;
+            for (e, &t) in eff.iter_mut().zip(tau.iter()) {
+                *e = scale * t;
+            }
+        }
+        tezo_update_factor(ctx, &self.factors, &self.tau_eff, ctx.lr * kappa)
     }
 
     fn state_bytes(&self) -> u64 {
@@ -195,14 +214,18 @@ pub struct TezoM {
     pending_taus: Vec<Vec<f32>>,
     /// tau_M per matrix — THE momentum state (r floats per layer)
     tau_m: Vec<Vec<f32>>,
+    /// scratch for the update's lr-scaled momentum (refilled in place)
+    tau_eff: Vec<Vec<f32>>,
     counted_init: bool,
 }
 
 impl TezoM {
     pub fn new(rt: &Runtime, seeds: &SeedSchedule) -> Result<Self> {
         let factors = Factors::init(rt, seeds)?;
-        let tau_m = factors.ranks.iter().map(|&r| vec![0.0f32; r]).collect();
-        Ok(Self { factors, pending_taus: Vec::new(), tau_m, counted_init: false })
+        let pending_taus = factors.tau_scratch();
+        let tau_m = factors.tau_scratch();
+        let tau_eff = factors.tau_scratch();
+        Ok(Self { factors, pending_taus, tau_m, tau_eff, counted_init: false })
     }
 }
 
@@ -219,8 +242,9 @@ impl ZoOptimizer for TezoM {
         }
         let idx = ctx.perturb_index();
         let seeds = ctx.seeds;
-        self.pending_taus = ctx.timers.time(Phase::Sampling, || {
-            self.factors.draw_taus(seeds, idx)
+        let (factors, pending) = (&self.factors, &mut self.pending_taus);
+        ctx.timers.time(Phase::Sampling, || {
+            factors.draw_taus_into(seeds, idx, pending);
         });
         tezo_forward(ctx, &self.factors, &self.pending_taus)
     }
@@ -229,10 +253,12 @@ impl ZoOptimizer for TezoM {
         let b1 = ctx.cfg.beta1;
         // tau_M <- b1 tau_M + (1-b1) (kappa/r) tau   (O(r) host work; the
         // 1/r is the Theorem-1 unbiasedness factor, see Tezo::update)
+        let (tau_m, pending, ranks) =
+            (&mut self.tau_m, &self.pending_taus, &self.factors.ranks);
         ctx.timers.time(Phase::Host, || {
-            for ((m, tau), &r) in self.tau_m.iter_mut()
-                .zip(self.pending_taus.iter())
-                .zip(self.factors.ranks.iter())
+            for ((m, tau), &r) in tau_m.iter_mut()
+                .zip(pending.iter())
+                .zip(ranks.iter())
             {
                 let kr = kappa / r as f32;
                 for (mm, &t) in m.iter_mut().zip(tau.iter()) {
@@ -241,12 +267,12 @@ impl ZoOptimizer for TezoM {
             }
         });
         let lr = ctx.lr;
-        let tau_effs: Vec<Vec<f32>> = self
-            .tau_m
-            .iter()
-            .map(|m| m.iter().map(|&t| lr * t).collect())
-            .collect();
-        tezo_update_factor(ctx, &self.factors, &tau_effs, lr * kappa)
+        for (eff, m) in self.tau_eff.iter_mut().zip(self.tau_m.iter()) {
+            for (e, &t) in eff.iter_mut().zip(m.iter()) {
+                *e = lr * t;
+            }
+        }
+        tezo_update_factor(ctx, &self.factors, &self.tau_eff, lr * kappa)
     }
 
     fn state_bytes(&self) -> u64 {
@@ -264,6 +290,10 @@ pub struct TezoAdam {
     pending_taus: Vec<Vec<f32>>,
     tau_m: Vec<Vec<f32>>,
     tau_v: Vec<Vec<f32>>,
+    /// bias-corrected views handed to the artifact — scratch, refilled in
+    /// place each step (the moments above are the real state)
+    tau_m_hat: Vec<Vec<f32>>,
+    tau_v_hat: Vec<Vec<f32>>,
     t: u64,
     counted_init: bool,
 }
@@ -271,9 +301,13 @@ pub struct TezoAdam {
 impl TezoAdam {
     pub fn new(rt: &Runtime, seeds: &SeedSchedule) -> Result<Self> {
         let factors = Factors::init(rt, seeds)?;
-        let tau_m: Vec<Vec<f32>> = factors.ranks.iter().map(|&r| vec![0.0f32; r]).collect();
-        let tau_v = tau_m.clone();
-        Ok(Self { factors, pending_taus: Vec::new(), tau_m, tau_v, t: 0, counted_init: false })
+        let pending_taus = factors.tau_scratch();
+        let tau_m = factors.tau_scratch();
+        let tau_v = factors.tau_scratch();
+        let tau_m_hat = factors.tau_scratch();
+        let tau_v_hat = factors.tau_scratch();
+        Ok(Self { factors, pending_taus, tau_m, tau_v, tau_m_hat, tau_v_hat,
+                  t: 0, counted_init: false })
     }
 }
 
@@ -290,8 +324,9 @@ impl ZoOptimizer for TezoAdam {
         }
         let idx = ctx.perturb_index();
         let seeds = ctx.seeds;
-        self.pending_taus = ctx.timers.time(Phase::Sampling, || {
-            self.factors.draw_taus(seeds, idx)
+        let (factors, pending) = (&self.factors, &mut self.pending_taus);
+        ctx.timers.time(Phase::Sampling, || {
+            factors.draw_taus_into(seeds, idx, pending);
         });
         tezo_forward(ctx, &self.factors, &self.pending_taus)
     }
@@ -300,9 +335,11 @@ impl ZoOptimizer for TezoAdam {
         self.t += 1;
         let (b1, b2) = (ctx.cfg.beta1, ctx.cfg.beta2);
         // O(r) host accumulation of both moments in tau space
+        let (tau_m, tau_v, pending) =
+            (&mut self.tau_m, &mut self.tau_v, &self.pending_taus);
         ctx.timers.time(Phase::Host, || {
-            for ((m, v), tau) in self.tau_m.iter_mut().zip(self.tau_v.iter_mut())
-                .zip(self.pending_taus.iter())
+            for ((m, v), tau) in tau_m.iter_mut().zip(tau_v.iter_mut())
+                .zip(pending.iter())
             {
                 for i in 0..tau.len() {
                     m[i] = b1 * m[i] + (1.0 - b1) * kappa * tau[i];
@@ -311,22 +348,24 @@ impl ZoOptimizer for TezoAdam {
             }
         });
         // bias correction commutes with the linear reconstruction, so the
-        // corrected vectors are what the artifact receives
+        // corrected vectors are what the artifact receives (scratch buffers,
+        // refilled in place — no hot-loop allocation)
         let (bc1, bc2) = if ctx.cfg.bias_correction {
             (1.0 - b1.powi(self.t as i32), 1.0 - b2.powi(self.t as i32))
         } else {
             (1.0, 1.0)
         };
-        let tau_m_hat: Vec<Vec<f32>> = self
-            .tau_m
-            .iter()
-            .map(|m| m.iter().map(|&x| x / bc1.max(1e-12)).collect())
-            .collect();
-        let tau_v_hat: Vec<Vec<f32>> = self
-            .tau_v
-            .iter()
-            .map(|v| v.iter().map(|&x| (x / bc2.max(1e-12)).max(0.0)).collect())
-            .collect();
+        for (hat, m) in self.tau_m_hat.iter_mut().zip(self.tau_m.iter()) {
+            for (h, &x) in hat.iter_mut().zip(m.iter()) {
+                *h = x / bc1.max(1e-12);
+            }
+        }
+        for (hat, v) in self.tau_v_hat.iter_mut().zip(self.tau_v.iter()) {
+            for (h, &x) in hat.iter_mut().zip(v.iter()) {
+                *h = (x / bc2.max(1e-12)).max(0.0);
+            }
+        }
+        let (tau_m_hat, tau_v_hat) = (&self.tau_m_hat, &self.tau_v_hat);
 
         let seed = ctx.step_seed();
         let t0 = Instant::now();

@@ -118,7 +118,7 @@ fn worker_loop(worker: usize, workers: u32, artifact_dir: &Path,
     // precompile exactly this method's artifact set (plus the eval head on
     // the worker that carries it) so the first ticket is pure execution and
     // round-0 straggling doesn't depend on compile order
-    rt.warmup_method(cfg.method)
+    rt.warmup_method(cfg.method, cfg.forward_form)
         .with_context(|| format!("worker {worker}: warmup"))?;
     if job.eval.is_some() {
         rt.warmup(&["eval_logits"])

@@ -13,7 +13,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use tezo::clix::{self, ArgSpec};
-use tezo::config::{search_space, FleetConfig, Method, TrainConfig};
+use tezo::config::{search_space, FleetConfig, ForwardForm, Method, TrainConfig};
 use tezo::coordinator::rank;
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
@@ -90,6 +90,7 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     ArgSpec::opt("lr-schedule", "constant", "constant|linear|cosine"),
     ArgSpec::opt("kappa-clip", "0", "clip |kappa| at this value (0 = off)"),
     ArgSpec::opt("n-perturb", "1", "q-SPSA perturbations per step (SGD-form only)"),
+    ArgSpec::opt("forward-form", "implicit", "two-point loss form: implicit|materialize (low-rank methods)"),
     ArgSpec::opt("save-to", "", "write a parameter checkpoint here at the end"),
     ArgSpec::opt("init-from", "", "initialize parameters from this checkpoint"),
     ArgSpec::switch("quiet", "suppress per-step output"),
@@ -115,6 +116,7 @@ fn parse_train_cfg(args: &clix::Args) -> Result<TrainConfig> {
     cfg.lr_schedule = tezo::config::LrSchedule::parse(args.get_str("lr-schedule")?)?;
     cfg.kappa_clip = args.get_f32("kappa-clip")?;
     cfg.n_perturb = args.get_usize("n-perturb")?;
+    cfg.forward_form = ForwardForm::parse(args.get_str("forward-form")?)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -134,7 +136,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     // step 0 is pure execution
     {
         let t0 = std::time::Instant::now();
-        rt.warmup_method(cfg.method)?;
+        rt.warmup_method(cfg.method, cfg.forward_form)?;
         if args.get_usize("eval-n")? > 0 {
             rt.warmup(&["eval_logits"])?;
         }
@@ -230,6 +232,7 @@ const TRAIN_DP_SPECS: &[ArgSpec] = &[
     ArgSpec::opt("lr-schedule", "constant", "constant|linear|cosine"),
     ArgSpec::opt("kappa-clip", "0", "clip |kappa| at this value (0 = off)"),
     ArgSpec::opt("n-perturb", "1", "q-SPSA perturbations per step (SGD-form only)"),
+    ArgSpec::opt("forward-form", "implicit", "two-point loss form: implicit|materialize (low-rank methods)"),
     ArgSpec::opt("save-to", "", "worker 0 writes a checkpoint here at the end"),
     ArgSpec::switch("quiet", "suppress per-step output"),
     ArgSpec::switch("help", "show help"),
@@ -444,7 +447,7 @@ fn run_cell(rt: &Runtime, config: &str, method: Method, tname: &str,
 // ---------------------------------------------------------------------------
 
 const MEM_SPECS: &[ArgSpec] = &[
-    ArgSpec::opt("table", "7", "which artifact: 7|9|fig1c|all"),
+    ArgSpec::opt("table", "7", "which artifact: 7|9|fig1c|forms|all"),
     ArgSpec::switch("help", "show help"),
 ];
 
@@ -458,10 +461,12 @@ fn cmd_memory(argv: &[String]) -> Result<()> {
         "7" => tables::table7().print(),
         "9" => tables::table9().print(),
         "fig1c" => tables::fig1c().print(),
+        "forms" => tables::forward_forms().print(),
         "all" => {
             tables::table7().print();
             tables::table9().print();
             tables::fig1c().print();
+            tables::forward_forms().print();
         }
         other => bail!("unknown table {other:?}"),
     }
@@ -602,6 +607,13 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
             println!("instructions: {}", stats.instructions);
             println!("largest tensor: {} ({} elements)",
                      stats.largest_shape, stats.largest_tensor);
+            println!("peak temp bytes: {} (all values)", stats.peak_temp_bytes);
+            println!("peak param-shaped temp bytes: {} (perturbed-weight \
+                      copies; total {} per call)",
+                     stats.peak_param_temp_bytes, stats.param_temp_total_bytes);
+            if let Some(form) = &meta.forward_form {
+                println!("forward form: {form}");
+            }
             for (op, n) in stats.top_ops(20) {
                 println!("  {op:32} {n}");
             }

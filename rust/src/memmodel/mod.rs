@@ -19,4 +19,5 @@ pub mod tables;
 pub mod usage;
 
 pub use layout::{llama, opt, ModelLayout};
-pub use usage::{memory_usage, MemoryBreakdown};
+pub use usage::{forward_transient_bytes, memory_usage, memory_usage_form,
+                MemoryBreakdown};

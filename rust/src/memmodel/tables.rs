@@ -4,12 +4,14 @@
 //!   every method row of the paper's Table 7 (also Fig 3a at 13B/7B).
 //! * [`table9`] — FO ft / ft-LoRA / ft-prefix vs ZO rows (OPT-6.7B/13B).
 //! * [`fig1c`] — the Fig 1(c) bar data (OPT-13B, method x {params, state}).
+//! * [`forward_forms`] — materialize vs implicit two-point transients per
+//!   low-rank method (the PR5 `forward_form` knob).
 
 use crate::benchkit::Report;
-use crate::config::Method;
+use crate::config::{ForwardForm, Method};
 
 use super::layout::{llama, opt};
-use super::usage::{self, memory_usage, zero_shot};
+use super::usage::{self, memory_usage, memory_usage_form, zero_shot};
 
 const T7_METHODS: [Method; 9] = [
     Method::Mezo, Method::Subzo, Method::Lozo, Method::Tezo,
@@ -99,6 +101,35 @@ pub fn fig1c() -> Report {
     rep
 }
 
+/// Forward-form comparison: the transient perturbed-weight copies the
+/// materialized two-point loss allocates vs the implicit factor-form one,
+/// per low-rank method, at the Fig 1(c) scales.
+pub fn forward_forms() -> Report {
+    let mut rep = Report::new(
+        "Forward forms — two-point transients (materialize vs implicit)",
+        &["transient (mat)", "transient (impl)", "total (mat)",
+          "total (impl)", "saved"],
+    );
+    // only the methods whose implicit artifact actually exists — SubZO is
+    // low-rank too but always runs its materialized loss (no implicit
+    // artifact; `loss_artifact` falls back), so a row here would advertise
+    // savings no knob can deliver
+    let methods = [Method::Tezo, Method::TezoM, Method::TezoAdam,
+                   Method::Lozo, Method::LozoM];
+    for l in [opt("13b"), llama("7b")] {
+        for m in methods {
+            let mat = memory_usage_form(&l, m, 16, ForwardForm::Materialize);
+            let imp = memory_usage_form(&l, m, 16, ForwardForm::Implicit);
+            let saved = mat.total().saturating_sub(imp.total());
+            rep.add_row(&format!("{} {}", l.name, m.name()), vec![
+                gib(mat.transient), gib(imp.transient),
+                gib(mat.total()), gib(imp.total()), gib(saved),
+            ]);
+        }
+    }
+    rep
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +139,7 @@ mod tests {
         let _ = table7();
         let _ = table9();
         let _ = fig1c();
+        let _ = forward_forms();
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::Method;
+use crate::config::{ForwardForm, Method};
 
 use super::manifest::Manifest;
 use super::plan::CallPlan;
@@ -117,9 +117,9 @@ impl Runtime {
     }
 
     /// Warm up exactly the artifact set `method` dispatches during
-    /// training (see [`Manifest::method_artifacts`]).
-    pub fn warmup_method(&self, method: Method) -> Result<()> {
-        self.warmup(&self.manifest.method_artifacts(method)?)
+    /// training under `form` (see [`Manifest::method_artifacts`]).
+    pub fn warmup_method(&self, method: Method, form: ForwardForm) -> Result<()> {
+        self.warmup(&self.manifest.method_artifacts(method, form)?)
     }
 
     pub fn compile_seconds(&self) -> f64 {

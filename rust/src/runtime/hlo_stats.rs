@@ -5,13 +5,31 @@
 //! * op-kind histogram (how many rng ops per step, dots, fusions, ...);
 //! * the largest intermediate tensor (did a full m x n Z materialize more
 //!   than necessary?);
-//! * total parameter-shaped temporaries.
+//! * **peak temp bytes**: a per-computation liveness scan over the SSA
+//!   instruction stream — allocate each non-parameter result at its
+//!   definition, free it after its last use — whose maximum live set is the
+//!   static peak-temporary footprint. Reported in two flavors:
+//!   - `peak_temp_bytes`: every value. Dominated by the forward's own
+//!     activation stream (softmax/gelu regions), which both forward forms
+//!     share — and, in unoptimized text, by broadcast constants XLA later
+//!     fuses away. A coarse upper bound.
+//!   - `peak_param_temp_bytes` / `param_temp_total_bytes`: only values
+//!     whose result shape matches a (>= 2-D) parameter shape of the same
+//!     computation — i.e. materialized perturbed-weight copies and other
+//!     weight-shaped machinery. This is the number the implicit
+//!     (factor-form) forward is measured by: the materialized `*_loss_pm`
+//!     artifacts build dense `W +/- rho Z` copies (4x matrix-param bytes of
+//!     temp allocation per two-point call), the `*_loss_pm_implicit` ones
+//!     never do.
 //!
-//! `tezo inspect --hlo <artifact>` prints this; the integration tests use
-//! [`HloStats::count`] to assert the single-RNG-per-step and fused-update
-//! properties.
+//! `tezo inspect --hlo <artifact>` prints all of this; the integration
+//! tests use [`HloStats::count`] to assert the single-RNG-per-step and
+//! fused-update properties and `tests/forward_forms.rs` asserts the
+//! param-shaped temp reduction. BENCH_PR5.json records the cross-form
+//! numbers (python/bench_forward_forms.py computes them with the mirrored
+//! implementation in python/compile/hlo_stats.py — keep both in lockstep).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -27,14 +45,41 @@ pub struct HloStats {
     pub largest_tensor: u64,
     /// shape string of that tensor
     pub largest_shape: String,
+    /// liveness-scan peak bytes of non-parameter values, max over the
+    /// module's computations (the entry computation dominates in practice)
+    pub peak_temp_bytes: u64,
+    /// liveness-scan peak counting only parameter-shaped values (perturbed
+    /// weight copies and other weight-shaped temporaries)
+    pub peak_param_temp_bytes: u64,
+    /// total bytes of parameter-shaped temporaries allocated per call —
+    /// the weight-copy allocation traffic of one two-point evaluation
+    pub param_temp_total_bytes: u64,
+}
+
+/// One instruction as seen by the liveness scan.
+struct ScanInst {
+    bytes: u64,
+    is_param: bool,
+    operands: Vec<String>,
+    /// result type without layout (e.g. `f32[64,256]`), for the
+    /// parameter-shaped classification; empty for tuple results
+    shape: String,
 }
 
 impl HloStats {
     /// Parse HLO text.
     pub fn parse(text: &str) -> HloStats {
         let mut stats = HloStats::default();
+        // current computation body for the liveness scan: SSA defs in order
+        let mut comp: Vec<(String, ScanInst)> = Vec::new();
         for line in text.lines() {
             let t = line.trim_start();
+            if t.starts_with('}') {
+                // computation ends: fold its liveness peaks into the module's
+                stats.fold_computation(&comp);
+                comp.clear();
+                continue;
+            }
             // instruction lines look like (xla_extension 0.5.1 text form):
             //   name.N = f32[64,256]{1,0} op-name(...)
             // optionally prefixed by ROOT or % in other dialects
@@ -58,14 +103,48 @@ impl HloStats {
             }
             stats.instructions += 1;
             *stats.ops.entry(op.to_string()).or_insert(0) += 1;
+            let mut bytes = 0u64;
             for (elems, shape) in parse_shapes(shape_part) {
+                bytes += elems * dtype_bytes(&shape);
                 if elems > stats.largest_tensor {
                     stats.largest_tensor = elems;
                     stats.largest_shape = shape;
                 }
             }
+            comp.push((lhs.to_string(), ScanInst {
+                bytes,
+                is_param: op == "parameter",
+                operands: parse_operands(after_shape),
+                shape: shape_part.split('{').next().unwrap_or("").to_string(),
+            }));
         }
+        stats.fold_computation(&comp); // unterminated trailing body, if any
         stats
+    }
+
+    /// Fold one computation's liveness peaks into the module stats.
+    fn fold_computation(&mut self, comp: &[(String, ScanInst)]) {
+        if comp.is_empty() {
+            return;
+        }
+        self.peak_temp_bytes = self.peak_temp_bytes.max(liveness_peak(comp, |_| true));
+        // parameter shapes (>= 2-D) of this computation classify which
+        // temporaries are weight-shaped
+        let param_shapes: std::collections::HashSet<&str> = comp
+            .iter()
+            .filter(|(_, i)| i.is_param && i.shape.contains(','))
+            .map(|(_, i)| i.shape.as_str())
+            .collect();
+        let is_param_shaped =
+            |inst: &ScanInst| param_shapes.contains(inst.shape.as_str());
+        self.peak_param_temp_bytes = self
+            .peak_param_temp_bytes
+            .max(liveness_peak(comp, is_param_shaped));
+        self.param_temp_total_bytes += comp
+            .iter()
+            .filter(|(_, i)| !i.is_param && is_param_shaped(i))
+            .map(|(_, i)| i.bytes)
+            .sum::<u64>();
     }
 
     /// Load + parse an artifact file.
@@ -93,6 +172,120 @@ impl HloStats {
         v.truncate(k);
         v
     }
+}
+
+/// Byte width of the dtype prefix of a shape string like `f32[64,256]`.
+fn dtype_bytes(shape: &str) -> u64 {
+    let dt = shape.split('[').next().unwrap_or("");
+    match dt {
+        "f64" | "s64" | "u64" | "c64" => 8,
+        "f32" | "s32" | "u32" | "i32" => 4,
+        "f16" | "bf16" | "s16" | "u16" => 2,
+        "pred" | "s8" | "u8" | "s4" | "u4" => 1,
+        _ => 4,
+    }
+}
+
+/// Operand names of one instruction: the identifiers inside the first
+/// top-level parenthesis group after the op name (attributes like
+/// `kind=kLoop, calls=%fused` sit outside it and are ignored; literal
+/// constants inside it do not resolve against the def map, so they drop out
+/// of the liveness scan naturally).
+fn parse_operands(after_shape: &str) -> Vec<String> {
+    let Some(open) = after_shape.find('(') else { return Vec::new() };
+    let bytes = after_shape.as_bytes();
+    let mut depth = 0usize;
+    let mut end = after_shape.len();
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' | b'{' => depth += 1,
+            b')' | b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = i;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let inner = &after_shape[open + 1..end.min(after_shape.len())];
+    let mut out = Vec::new();
+    let mut d = 0usize;
+    let mut start = 0usize;
+    let ib = inner.as_bytes();
+    for i in 0..=inner.len() {
+        let top_comma = i == inner.len()
+            || (ib[i] == b',' && d == 0);
+        if i < inner.len() {
+            match ib[i] {
+                b'(' | b'{' | b'[' => d += 1,
+                b')' | b'}' | b']' => d = d.saturating_sub(1),
+                _ => {}
+            }
+        }
+        if top_comma {
+            // tolerate typed operands ("f32[2]{0} %x"): the name is the
+            // last whitespace-separated piece
+            let tok = inner[start..i].trim();
+            let tok = tok.rsplit(' ').next().unwrap_or(tok).trim_start_matches('%');
+            let ident: String = tok
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || ".-_".contains(*c))
+                .collect();
+            if !ident.is_empty() && ident == tok {
+                out.push(ident);
+            }
+            start = i + 1;
+        }
+    }
+    out
+}
+
+/// Peak live bytes over one computation's SSA stream, restricted to
+/// non-parameter values satisfying `counts`: allocate each such result at
+/// its definition, free it after the instruction that uses it last. Values
+/// never used (the root) stay live to the end — they are the computation's
+/// output.
+fn liveness_peak(comp: &[(String, ScanInst)], counts: impl Fn(&ScanInst) -> bool) -> u64 {
+    if comp.is_empty() {
+        return 0;
+    }
+    let index: HashMap<&str, usize> = comp
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| (name.as_str(), i))
+        .collect();
+    // def index -> instruction index of its last use
+    let mut last_use: Vec<Option<usize>> = vec![None; comp.len()];
+    for (i, (_, inst)) in comp.iter().enumerate() {
+        for op in &inst.operands {
+            if let Some(&j) = index.get(op.as_str()) {
+                last_use[j] = Some(i);
+            }
+        }
+    }
+    // frees[i] = defs whose last use is instruction i
+    let mut frees: Vec<Vec<usize>> = vec![Vec::new(); comp.len()];
+    for (j, lu) in last_use.iter().enumerate() {
+        if let Some(i) = lu {
+            frees[*i].push(j);
+        }
+    }
+    let mut live = 0u64;
+    let mut peak = 0u64;
+    for (i, (_, inst)) in comp.iter().enumerate() {
+        if !inst.is_param && counts(inst) {
+            live += inst.bytes;
+            peak = peak.max(live);
+        }
+        for &j in &frees[i] {
+            if !comp[j].1.is_param && counts(&comp[j].1) && j != i {
+                live = live.saturating_sub(comp[j].1.bytes);
+            }
+        }
+    }
+    peak
 }
 
 /// Extract (element_count, shape_string) for every array shape in a result
@@ -158,5 +351,106 @@ ENTRY main {
         let shapes = parse_shapes("(f32[2,3], u32[])");
         assert_eq!(shapes[0].0, 6);
         assert_eq!(shapes[1].0, 1);
+    }
+
+    #[test]
+    fn dtype_widths() {
+        assert_eq!(dtype_bytes("f32[4]"), 4);
+        assert_eq!(dtype_bytes("f64[4]"), 8);
+        assert_eq!(dtype_bytes("bf16[4]"), 2);
+        assert_eq!(dtype_bytes("pred[4]"), 1);
+    }
+
+    #[test]
+    fn operand_parsing_ignores_attributes_and_literals() {
+        let ops = parse_operands("dot(%a.1, %b.2), lhs_contracting_dims={1}");
+        assert_eq!(ops, vec!["a.1", "b.2"]);
+        let ops = parse_operands("fusion(%x), kind=kLoop, calls=%fused_computation");
+        assert_eq!(ops, vec!["x"]);
+        let ops = parse_operands("constant(0.5)");
+        assert_eq!(ops, vec!["0.5"]); // drops out against the def map
+        let ops = parse_operands("add(f32[2]{0} %p, f32[2]{0} %q)");
+        assert_eq!(ops, vec!["p", "q"]);
+    }
+
+    // A module where a big temp dies immediately (t1) and a same-sized temp
+    // is defined later: peak must be ONE big temp + the small live values,
+    // not two big temps — that is exactly the materialized-vs-implicit
+    // distinction the scan exists to measure.
+    const LIVENESS: &str = r#"
+ENTRY main {
+  %p0 = f32[1000]{0} parameter(0)
+  %t1 = f32[1000]{0} add(%p0, %p0)
+  %s1 = f32[] reduce(%t1, %p0), dimensions={0}
+  %t2 = f32[1000]{0} multiply(%p0, %p0)
+  %s2 = f32[] reduce(%t2, %p0), dimensions={0}
+  ROOT %out = f32[] add(%s1, %s2)
+}
+"#;
+
+    #[test]
+    fn liveness_peak_frees_dead_temps() {
+        let s = HloStats::parse(LIVENESS);
+        // t1 dies at its last use (%s1), so t2 never coexists with it: the
+        // high-water mark is t2 + the two scalars (4008 B), not 2 x 4000 B
+        assert_eq!(s.peak_temp_bytes, 4008);
+    }
+
+    const LIVENESS_BOTH: &str = r#"
+ENTRY main {
+  %p0 = f32[1000]{0} parameter(0)
+  %t1 = f32[1000]{0} add(%p0, %p0)
+  %t2 = f32[1000]{0} multiply(%p0, %p0)
+  ROOT %out = f32[1000]{0} add(%t1, %t2)
+}
+"#;
+
+    #[test]
+    fn liveness_peak_counts_simultaneously_live_temps() {
+        let s = HloStats::parse(LIVENESS_BOTH);
+        // t1, t2, out all live at the root: 3 x 4000 B
+        assert_eq!(s.peak_temp_bytes, 12000);
+    }
+
+    // A (64,256)-shaped parameter exists, so the (64,256) add is a
+    // parameter-shaped temp (a "perturbed weight copy"); the (64,)-shaped
+    // add is not.
+    const PARAM_SHAPED: &str = r#"
+ENTRY main {
+  %w = f32[64,256]{1,0} parameter(0)
+  %b = f32[64]{0} parameter(1)
+  %wp = f32[64,256]{1,0} add(%w, %w)
+  %bp = f32[64]{0} add(%b, %b)
+  %wp2 = f32[64,256]{1,0} multiply(%wp, %wp)
+  ROOT %s = f32[] reduce(%wp2, %bp), dimensions={0,1}
+}
+"#;
+
+    #[test]
+    fn param_shaped_temps_are_classified() {
+        let s = HloStats::parse(PARAM_SHAPED);
+        // wp + wp2 are weight-shaped temps; wp dies when wp2 is made, but
+        // both are briefly live at %wp2
+        assert_eq!(s.param_temp_total_bytes, 2 * 64 * 256 * 4);
+        assert_eq!(s.peak_param_temp_bytes, 2 * 64 * 256 * 4);
+        // the 1-D add never counts
+        assert!(s.peak_temp_bytes >= s.peak_param_temp_bytes);
+    }
+
+    #[test]
+    fn no_param_shaped_temps_in_liveness_sample() {
+        // LIVENESS's params are 1-D: nothing classifies as weight-shaped
+        let s = HloStats::parse(LIVENESS);
+        assert_eq!(s.param_temp_total_bytes, 0);
+        assert_eq!(s.peak_param_temp_bytes, 0);
+    }
+
+    #[test]
+    fn parameters_are_not_temps() {
+        let s = HloStats::parse(SAMPLE);
+        // SAMPLE's temps: dot 64*64*4 + rng 2*4 + tuple 64*64*4
+        assert!(s.peak_temp_bytes >= 64 * 64 * 4);
+        assert!(s.peak_temp_bytes < 2 * 64 * 256 * 4,
+                "parameter buffers must not count: {}", s.peak_temp_bytes);
     }
 }

@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::Method;
+use crate::config::{ForwardForm, Method};
 use crate::jsonx::{self, Value};
 
 /// Model geometry baked by the AOT pipeline.
@@ -68,6 +68,9 @@ pub struct ArtifactMeta {
     pub file: String,
     pub inputs: Vec<IoDesc>,
     pub outputs: Vec<IoDesc>,
+    /// `"materialize"` / `"implicit"` for two-point loss artifacts (which
+    /// compiled forward form this file encodes); `None` for everything else.
+    pub forward_form: Option<String>,
 }
 
 /// The whole manifest.
@@ -132,6 +135,11 @@ impl Manifest {
                 file: a.get_str("file")?.to_string(),
                 inputs: io_list(a.get("inputs")?)?,
                 outputs: io_list(a.get("outputs")?)?,
+                // optional: manifests from before the implicit forward
+                // (and non-loss artifacts) carry no tag
+                forward_form: a.get("forward_form").ok()
+                    .and_then(|v| v.as_str().ok())
+                    .map(str::to_string),
             });
         }
         Ok(Manifest {
@@ -145,30 +153,60 @@ impl Manifest {
         })
     }
 
-    /// The artifacts `method` dispatches during training, in a stable
-    /// order (loss before update, lazy-factor initializers first). This is
-    /// the warmup contract: [`Runtime::warmup_method`] precompiles exactly
-    /// this set, so first-step latency no longer depends on which artifact
-    /// happens to run first. Errors if the manifest is missing any of them.
+    /// The two-point loss artifact `method` dispatches under `form`.
+    ///
+    /// Only the low-rank families (TeZO, LOZO) ship an implicit factor-form
+    /// artifact; everything else resolves to its materialized loss
+    /// regardless of `form`. Requesting `Implicit` against a manifest built
+    /// before the implicit artifacts existed falls back to the materialized
+    /// name (the knob selects among what the manifest *has*), so old
+    /// artifact dirs keep working with the new default.
+    pub fn loss_artifact(&self, method: Method, form: ForwardForm) -> &'static str {
+        let (materialized, implicit): (&'static str, Option<&'static str>) = match method {
+            Method::Tezo | Method::TezoM | Method::TezoAdam => {
+                ("tezo_loss_pm", Some("tezo_loss_pm_implicit"))
+            }
+            Method::Lozo | Method::LozoM => {
+                ("lozo_loss_pm", Some("lozo_loss_pm_implicit"))
+            }
+            Method::Mezo | Method::MezoM | Method::MezoAdam => ("mezo_loss_pm", None),
+            Method::Subzo => ("subzo_loss_pm", None),
+            Method::ZoAdamu => ("adamu_loss_pm", None),
+            Method::FoAdam => ("fo_valgrad", None),
+        };
+        match (form, implicit) {
+            (ForwardForm::Implicit, Some(name)) if self.artifacts.contains_key(name) => name,
+            _ => materialized,
+        }
+    }
+
+    /// The artifacts `method` dispatches during training under `form`, in a
+    /// stable order (loss before update, lazy-factor initializers first).
+    /// This is the warmup contract: [`Runtime::warmup_method`] precompiles
+    /// exactly this set, so first-step latency no longer depends on which
+    /// artifact happens to run first. Errors if the manifest is missing any
+    /// of them.
     ///
     /// [`Runtime::warmup_method`]: super::client::Runtime::warmup_method
-    pub fn method_artifacts(&self, method: Method) -> Result<Vec<&'static str>> {
-        let names: &'static [&'static str] = match method {
-            Method::Mezo => &["mezo_loss_pm", "mezo_update_sgd"],
-            Method::MezoM => &["mezo_loss_pm", "mezo_update_m"],
-            Method::MezoAdam => &["mezo_loss_pm", "mezo_update_adam"],
-            Method::Lozo => &["lozo_init_u", "lozo_loss_pm", "lozo_update_sgd"],
-            Method::LozoM => &["lozo_init_u", "lozo_loss_pm", "lozo_update_m"],
-            Method::Subzo => &["subzo_factors", "subzo_loss_pm", "subzo_update"],
-            Method::ZoAdamu => &["adamu_loss_pm", "adamu_update"],
-            Method::Tezo | Method::TezoM => &["tezo_loss_pm", "tezo_update_factor"],
-            Method::TezoAdam => &["tezo_loss_pm", "tezo_update_adam"],
-            Method::FoAdam => &["fo_valgrad", "fo_adam_update"],
+    pub fn method_artifacts(&self, method: Method,
+                            form: ForwardForm) -> Result<Vec<&'static str>> {
+        let loss = self.loss_artifact(method, form);
+        let names: Vec<&'static str> = match method {
+            Method::Mezo => vec![loss, "mezo_update_sgd"],
+            Method::MezoM => vec![loss, "mezo_update_m"],
+            Method::MezoAdam => vec![loss, "mezo_update_adam"],
+            Method::Lozo => vec!["lozo_init_u", loss, "lozo_update_sgd"],
+            Method::LozoM => vec!["lozo_init_u", loss, "lozo_update_m"],
+            Method::Subzo => vec!["subzo_factors", loss, "subzo_update"],
+            Method::ZoAdamu => vec![loss, "adamu_update"],
+            Method::Tezo | Method::TezoM => vec![loss, "tezo_update_factor"],
+            Method::TezoAdam => vec![loss, "tezo_update_adam"],
+            Method::FoAdam => vec![loss, "fo_adam_update"],
         };
-        for n in names {
+        for n in &names {
             self.artifact(n)?;
         }
-        Ok(names.to_vec())
+        Ok(names)
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {

@@ -1,0 +1,238 @@
+//! Cross-form contract for the implicit (factor-form) two-point loss:
+//!
+//! * parity: `|f_implicit - f_materialized| <= 1e-4` on the tiny config,
+//!   across perturbation seeds standing in for every TeZO-family driver
+//!   (they share one loss artifact — only the tau content differs) and for
+//!   LOZO;
+//! * memory: the implicit artifact's parameter-shaped temp metrics
+//!   (`hlo_stats`) are >= 40% below the materialized one's — statically,
+//!   no execution needed;
+//! * resolution: `Manifest::loss_artifact` honors the `forward_form` knob
+//!   and falls back to materialize for methods (or manifests) without an
+//!   implicit artifact.
+//!
+//! Needs `make artifacts` (tiny); tests skip with a notice otherwise.
+
+use tezo::config::{ForwardForm, Method};
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::runtime::exec::scalar_f32;
+use tezo::runtime::hlo_stats::HloStats;
+use tezo::runtime::{ArgValue, ParamStore, Runtime};
+
+const TOL: f32 = 1e-4;
+
+fn open_tiny() -> Option<(Runtime, ParamStore)> {
+    let dir = tezo::artifacts_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::open(&dir).expect("open runtime");
+    let params = ParamStore::load(&rt.client, &rt.manifest).expect("load params");
+    Some((rt, params))
+}
+
+fn tiny_batch(rt: &Runtime) -> tezo::data::Batch {
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
+                         rt.manifest.config.seq_len, 0);
+    BatchBuilder::new(task, rt.manifest.config.batch, 16).train_batch(0, 0)
+}
+
+/// Run one tezo loss artifact with host-supplied factors.
+fn run_tezo(rt: &Runtime, params: &ParamStore, artifact: &str, seed: u32,
+            us: &[Vec<f32>], vs: &[Vec<f32>], taus: &[Vec<f32>]) -> (f32, f32) {
+    let b = tiny_batch(rt);
+    let mut call = rt.call(artifact).unwrap().bufs(params.bufs()).unwrap();
+    for u in us {
+        call = call.arg(ArgValue::F32(u)).unwrap();
+    }
+    for v in vs {
+        call = call.arg(ArgValue::F32(v)).unwrap();
+    }
+    for t in taus {
+        call = call.arg(ArgValue::F32(t)).unwrap();
+    }
+    let out = call
+        .arg(ArgValue::I32(&b.tokens)).unwrap()
+        .arg(ArgValue::I32(&b.targets)).unwrap()
+        .arg(ArgValue::F32(&b.mask)).unwrap()
+        .arg(ArgValue::ScalarU32(seed)).unwrap()
+        .arg(ArgValue::ScalarF32(1e-2)).unwrap()
+        .run().unwrap();
+    (scalar_f32(&out[0]).unwrap(), scalar_f32(&out[1]).unwrap())
+}
+
+#[test]
+fn tezo_cross_form_parity_within_tolerance() {
+    let Some((rt, params)) = open_tiny() else { return };
+    if rt.manifest.artifact("tezo_loss_pm_implicit").is_err() {
+        eprintln!("skipping: manifest predates tezo_loss_pm_implicit");
+        return;
+    }
+    let mats = rt.manifest.matrix_params();
+    let (us, vs): (Vec<Vec<f32>>, Vec<Vec<f32>>) = mats
+        .iter()
+        .map(|p| {
+            let r = rt.manifest.rank_of(&p.name).unwrap();
+            (tezo::rngx::normal_vec(1, p.shape[0] * r),
+             tezo::rngx::normal_vec(2, p.shape[1] * r))
+        })
+        .unzip();
+    // one seed per TeZO-family driver: the artifact is shared, only the
+    // tau vectors (raw / momentum / Adam-normalized) differ, and all are
+    // rank-r vectors — distinct draws cover the space
+    for (label, seed) in [("tezo", 11u32), ("tezo-m", 23), ("tezo-adam", 37)] {
+        let taus: Vec<Vec<f32>> = mats
+            .iter()
+            .enumerate()
+            .map(|(i, p)| tezo::rngx::normal_vec(
+                seed as u64 * 100 + i as u64,
+                rt.manifest.rank_of(&p.name).unwrap()))
+            .collect();
+        let (fp_m, fm_m) = run_tezo(&rt, &params, "tezo_loss_pm", seed,
+                                    &us, &vs, &taus);
+        let (fp_i, fm_i) = run_tezo(&rt, &params, "tezo_loss_pm_implicit",
+                                    seed, &us, &vs, &taus);
+        assert!((fp_m - fp_i).abs() <= TOL,
+                "{label}: f+ drift {} (mat {fp_m}, imp {fp_i})",
+                (fp_m - fp_i).abs());
+        assert!((fm_m - fm_i).abs() <= TOL,
+                "{label}: f- drift {} (mat {fm_m}, imp {fm_i})",
+                (fm_m - fm_i).abs());
+        // the two-point difference is the quantity kappa is made of
+        assert!(((fp_m - fm_m) - (fp_i - fm_i)).abs() <= TOL, "{label}: delta");
+    }
+}
+
+#[test]
+fn lozo_cross_form_parity_within_tolerance() {
+    let Some((rt, params)) = open_tiny() else { return };
+    if rt.manifest.artifact("lozo_loss_pm_implicit").is_err() {
+        eprintln!("skipping: manifest predates lozo_loss_pm_implicit");
+        return;
+    }
+    // U panels from the artifact initializer, exactly like the driver
+    let us = rt
+        .call("lozo_init_u").unwrap()
+        .arg(ArgValue::ScalarU32(1)).unwrap()
+        .run().unwrap();
+    let b = tiny_batch(&rt);
+    let run = |artifact: &str| -> (f32, f32) {
+        let mut call = rt.call(artifact).unwrap().bufs(params.bufs()).unwrap();
+        for u in &us {
+            call = call.arg(ArgValue::Buf(u)).unwrap();
+        }
+        let out = call
+            .arg(ArgValue::I32(&b.tokens)).unwrap()
+            .arg(ArgValue::I32(&b.targets)).unwrap()
+            .arg(ArgValue::F32(&b.mask)).unwrap()
+            .arg(ArgValue::ScalarU32(13)).unwrap()
+            .arg(ArgValue::ScalarF32(1e-2)).unwrap()
+            .run().unwrap();
+        (scalar_f32(&out[0]).unwrap(), scalar_f32(&out[1]).unwrap())
+    };
+    let (fp_m, fm_m) = run("lozo_loss_pm");
+    let (fp_i, fm_i) = run("lozo_loss_pm_implicit");
+    assert!((fp_m - fp_i).abs() <= TOL, "f+ drift {}", (fp_m - fp_i).abs());
+    assert!((fm_m - fm_i).abs() <= TOL, "f- drift {}", (fm_m - fm_i).abs());
+}
+
+#[test]
+fn implicit_artifact_drops_param_shaped_temps() {
+    let Some((rt, _)) = open_tiny() else { return };
+    for fam in ["tezo", "lozo"] {
+        let (mat, imp) = (format!("{fam}_loss_pm"),
+                          format!("{fam}_loss_pm_implicit"));
+        if rt.manifest.artifact(&imp).is_err() {
+            eprintln!("skipping: manifest predates {imp}");
+            return;
+        }
+        let stats_of = |name: &str| {
+            let meta = rt.manifest.artifact(name).unwrap();
+            HloStats::from_file(&rt.manifest.dir.join(&meta.file)).unwrap()
+        };
+        let m = stats_of(&mat);
+        let i = stats_of(&imp);
+        // acceptance: >= 40% below on the perturbed-weight temp metrics
+        assert!(i.peak_param_temp_bytes as f64
+                    <= 0.6 * m.peak_param_temp_bytes as f64,
+                "{fam}: peak param temps {} vs {}",
+                i.peak_param_temp_bytes, m.peak_param_temp_bytes);
+        assert!(i.param_temp_total_bytes as f64
+                    <= 0.6 * m.param_temp_total_bytes as f64,
+                "{fam}: param temp traffic {} vs {}",
+                i.param_temp_total_bytes, m.param_temp_total_bytes);
+    }
+}
+
+#[test]
+fn manifest_resolves_forward_forms() {
+    let Some((rt, _)) = open_tiny() else { return };
+    let man = &rt.manifest;
+    if man.artifact("tezo_loss_pm_implicit").is_err() {
+        eprintln!("skipping: manifest predates the implicit artifacts");
+        return;
+    }
+    for m in [Method::Tezo, Method::TezoM, Method::TezoAdam] {
+        assert_eq!(man.loss_artifact(m, ForwardForm::Implicit),
+                   "tezo_loss_pm_implicit");
+        assert_eq!(man.loss_artifact(m, ForwardForm::Materialize),
+                   "tezo_loss_pm");
+    }
+    for m in [Method::Lozo, Method::LozoM] {
+        assert_eq!(man.loss_artifact(m, ForwardForm::Implicit),
+                   "lozo_loss_pm_implicit");
+        assert_eq!(man.loss_artifact(m, ForwardForm::Materialize),
+                   "lozo_loss_pm");
+    }
+    // dense-Z methods ignore the knob
+    assert_eq!(man.loss_artifact(Method::Mezo, ForwardForm::Implicit),
+               "mezo_loss_pm");
+    assert_eq!(man.loss_artifact(Method::Subzo, ForwardForm::Implicit),
+               "subzo_loss_pm");
+    // manifest tags round-trip
+    assert_eq!(man.artifact("tezo_loss_pm_implicit").unwrap()
+                   .forward_form.as_deref(), Some("implicit"));
+    assert_eq!(man.artifact("tezo_loss_pm").unwrap()
+                   .forward_form.as_deref(), Some("materialize"));
+    // warmup of both forms' sets resolves + compiles
+    rt.warmup_method(Method::Tezo, ForwardForm::Implicit).unwrap();
+    rt.warmup_method(Method::Tezo, ForwardForm::Materialize).unwrap();
+}
+
+#[test]
+fn implicit_and_materialized_training_converge_similarly() {
+    // One short tezo run per form: losses track within the two-point
+    // tolerance accumulated over a few steps (forms are swappable without
+    // retuning).
+    use tezo::config::TrainConfig;
+    use tezo::coordinator::trainer::{DataSource, Trainer};
+    let Some((rt, _)) = open_tiny() else { return };
+    if rt.manifest.artifact("tezo_loss_pm_implicit").is_err() {
+        eprintln!("skipping: manifest predates tezo_loss_pm_implicit");
+        return;
+    }
+    let run = |form: ForwardForm| -> Vec<f64> {
+        let mut cfg = TrainConfig::with_preset(Method::Tezo, "tiny");
+        cfg.steps = 4;
+        cfg.seed = 99;
+        cfg.forward_form = form;
+        let mut params = ParamStore::load(&rt.client, &rt.manifest).unwrap();
+        let tok = Tokenizer::new(rt.manifest.config.vocab);
+        let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
+                             rt.manifest.config.seq_len, 99);
+        let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+        Trainer::new(&rt, cfg, DataSource::Task(builder))
+            .run(&mut params)
+            .unwrap()
+            .metrics
+            .losses
+    };
+    let mat = run(ForwardForm::Materialize);
+    let imp = run(ForwardForm::Implicit);
+    assert_eq!(mat.len(), imp.len());
+    for (a, b) in mat.iter().zip(imp.iter()) {
+        assert!((a - b).abs() < 5e-3, "loss drift {} vs {}", a, b);
+    }
+}

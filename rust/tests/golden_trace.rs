@@ -14,7 +14,7 @@
 
 use std::path::PathBuf;
 
-use tezo::config::{FleetConfig, Method, TrainConfig};
+use tezo::config::{FleetConfig, ForwardForm, Method, TrainConfig};
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
 use tezo::fleet::{task_job_factory, FleetTrainer};
@@ -29,9 +29,14 @@ fn golden_path() -> PathBuf {
 }
 
 fn run_single(rt: &Runtime, method: Method) -> Vec<f64> {
+    run_single_form(rt, method, ForwardForm::Implicit)
+}
+
+fn run_single_form(rt: &Runtime, method: Method, form: ForwardForm) -> Vec<f64> {
     let mut cfg = TrainConfig::with_preset(method, "tiny");
     cfg.steps = STEPS;
     cfg.seed = SEED;
+    cfg.forward_form = form;
     let mut params = ParamStore::load(&rt.client, &rt.manifest).unwrap();
     let tok = Tokenizer::new(rt.manifest.config.vocab);
     let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
@@ -70,8 +75,14 @@ fn training_losses_match_recorded_golden_traces() {
         return;
     }
     let rt = Runtime::open(&dir).expect("open runtime");
+    // `tezo`/`lozo` run the default (implicit) forward; the `_materialize`
+    // trace pins the legacy form so `--forward-form materialize` stays
+    // bit-reproducible too (the two forms reassociate float math and are
+    // NOT bit-identical to each other — forward_forms.rs bounds the drift)
     let traces: Vec<(&str, Vec<f64>)> = vec![
         ("tezo", run_single(&rt, Method::Tezo)),
+        ("tezo_materialize",
+         run_single_form(&rt, Method::Tezo, ForwardForm::Materialize)),
         ("mezo", run_single(&rt, Method::Mezo)),
         ("lozo", run_single(&rt, Method::Lozo)),
         ("tezo_dp2", run_dp_tezo(2)),

@@ -39,6 +39,7 @@ fn random_meta(g: &mut tezo::proplite::Gen) -> ArtifactMeta {
         file: "synthetic.hlo".to_string(),
         inputs,
         outputs: vec![desc("scalar", "out", vec![], "f32")],
+        forward_form: None,
     }
 }
 
@@ -167,6 +168,7 @@ fn duplicate_slots_and_bad_dtypes_are_rejected_at_plan_time() {
             desc("tensor", "w", vec![2, 2], "f32"),
         ],
         outputs: vec![],
+        forward_form: None,
     };
     assert!(CallPlan::new("art", &dup).is_err(), "duplicate (role, name)");
 
@@ -174,6 +176,7 @@ fn duplicate_slots_and_bad_dtypes_are_rejected_at_plan_time() {
         file: "x.hlo".to_string(),
         inputs: vec![desc("tensor", "w", vec![2], "f64")],
         outputs: vec![],
+        forward_form: None,
     };
     assert!(CallPlan::new("art", &bad).is_err(), "unknown dtype");
 }
@@ -187,6 +190,7 @@ fn output_count_check_matches_the_legacy_error() {
             desc("scalar", "f_plus", vec![], "f32"),
             desc("scalar", "f_minus", vec![], "f32"),
         ],
+        forward_form: None,
     };
     let plan = CallPlan::new("loss", &meta).unwrap();
     assert!(plan.check_outputs(2).is_ok());
