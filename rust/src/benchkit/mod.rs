@@ -38,7 +38,7 @@ impl Sample {
     pub fn outliers(&self) -> usize {
         let med = self.median();
         let mut devs: Vec<f64> = self.iters.iter().map(|&x| (x - med).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(f64::total_cmp);
         let mad = stats::median(&devs).max(1e-12);
         self.iters.iter().filter(|&&x| (x - med).abs() > 5.0 * 1.4826 * mad).count()
     }

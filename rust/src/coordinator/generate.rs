@@ -23,9 +23,9 @@ pub fn greedy_generate(rt: &Runtime, params: &ParamStore,
     let s = rt.manifest.config.seq_len;
     ensure!(!prompts.is_empty() && prompts.len() <= b,
             "need 1..={b} prompt rows, got {}", prompts.len());
-    let min_len = prompts.iter().map(|p| p.len()).min().unwrap();
+    let min_len = prompts.iter().map(|p| p.len()).min().unwrap_or(0);
     ensure!(min_len >= 1, "prompts must be non-empty");
-    let max_len = prompts.iter().map(|p| p.len()).max().unwrap();
+    let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
     ensure!(max_len + new_tokens <= s,
             "prompt ({max_len}) + new_tokens ({new_tokens}) exceeds seq_len {s}");
 

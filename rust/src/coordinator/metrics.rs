@@ -52,7 +52,10 @@ pub struct PhaseTimers {
 
 impl PhaseTimers {
     fn slot(phase: Phase) -> usize {
-        Phase::ALL.iter().position(|p| *p == phase).unwrap()
+        Phase::ALL
+            .iter()
+            .position(|p| *p == phase)
+            .unwrap_or(Phase::ALL.len() - 1)
     }
 
     /// Time a closure under `phase`.

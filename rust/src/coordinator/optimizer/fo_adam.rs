@@ -10,7 +10,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Method;
 use crate::coordinator::metrics::Phase;
-use crate::runtime::exec::scalar_f32;
+use crate::runtime::exec::scalar_first;
 use crate::runtime::Runtime;
 
 use super::{bind_batch, param_elems, zeros_like_params, ForwardOut, StepCtx,
@@ -49,7 +49,7 @@ impl ZoOptimizer for FoAdam {
         ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let mut out = ctx.timers.time(Phase::Forward, || call.run())?;
         let grads = out.split_off(1);
-        let loss = scalar_f32(&out[0])?;
+        let loss = scalar_first(&out)?;
         self.grads = Some(grads);
         Ok(ForwardOut::Loss(loss))
     }

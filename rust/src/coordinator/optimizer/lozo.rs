@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::metrics::Phase;
 use crate::coordinator::seeds::SeedSchedule;
-use crate::runtime::exec::scalar_f32;
+use crate::runtime::exec::scalar_pair;
 use crate::runtime::{Runtime, StepArena};
 
 use super::{bind_batch, vector_elems, zeros_buf, ForwardOut, StepCtx, ZoOptimizer};
@@ -31,6 +31,7 @@ impl LazyU {
     fn init(rt: &Runtime, _cfg: &TrainConfig, _seeds: &SeedSchedule) -> Result<LazyU> {
         let rank = rt.manifest.lozo_rank;
         let mats = rt.manifest.matrix_params();
+        debug_assert!(mats.iter().all(|p| p.shape.len() == 2));
         let m_sum: u64 = mats.iter().map(|p| p.shape[0] as u64).sum();
         let n_sum: u64 = mats.iter().map(|p| p.shape[1] as u64).sum();
         // the first maybe_refresh (step 0) performs the initial draw so the
@@ -78,10 +79,8 @@ fn lozo_forward(ctx: &mut StepCtx, lazy: &LazyU) -> Result<ForwardOut> {
     call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
     ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
     let out = ctx.timers.time(Phase::Forward, || call.run())?;
-    Ok(ForwardOut::TwoPoint {
-        f_plus: scalar_f32(&out[0])?,
-        f_minus: scalar_f32(&out[1])?,
-    })
+    let (f_plus, f_minus) = scalar_pair(&out)?;
+    Ok(ForwardOut::TwoPoint { f_plus, f_minus })
 }
 
 /// Plain LOZO.
@@ -142,6 +141,7 @@ impl LozoM {
         let mut s = Vec::new();
         let mut elems = 0u64;
         for p in rt.manifest.matrix_params() {
+            debug_assert!(p.shape.len() == 2);
             let n = p.shape[1];
             s.push(zeros_buf(rt, &[n, rank])?);
             elems += (n * rank) as u64;

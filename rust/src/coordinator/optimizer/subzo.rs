@@ -9,7 +9,7 @@ use anyhow::Result;
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::metrics::Phase;
 use crate::coordinator::seeds::SeedSchedule;
-use crate::runtime::exec::scalar_f32;
+use crate::runtime::exec::scalar_pair;
 use crate::runtime::{Runtime, StepArena};
 
 use super::{bind_batch, vector_elems, ForwardOut, StepCtx, ZoOptimizer};
@@ -95,10 +95,8 @@ impl ZoOptimizer for Subzo {
         call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
         ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let out = ctx.timers.time(Phase::Forward, || call.run())?;
-        Ok(ForwardOut::TwoPoint {
-            f_plus: scalar_f32(&out[0])?,
-            f_minus: scalar_f32(&out[1])?,
-        })
+        let (f_plus, f_minus) = scalar_pair(&out)?;
+        Ok(ForwardOut::TwoPoint { f_plus, f_minus })
     }
 
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {

@@ -15,7 +15,7 @@ use crate::config::Method;
 use crate::coordinator::metrics::Phase;
 use crate::coordinator::seeds::{SeedSchedule, Stream};
 use crate::rngx::{normal_rng, SplitMix64};
-use crate::runtime::exec::scalar_f32;
+use crate::runtime::exec::scalar_pair;
 use crate::runtime::Runtime;
 
 use super::{bind_batch, vector_elems, ForwardOut, StepCtx, ZoOptimizer};
@@ -113,10 +113,8 @@ fn tezo_forward(ctx: &mut StepCtx, factors: &Factors, taus: &[Vec<f32>])
     call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
     ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
     let out = ctx.timers.time(Phase::Forward, || call.run())?;
-    Ok(ForwardOut::TwoPoint {
-        f_plus: scalar_f32(&out[0])?,
-        f_minus: scalar_f32(&out[1])?,
-    })
+    let (f_plus, f_minus) = scalar_pair(&out)?;
+    Ok(ForwardOut::TwoPoint { f_plus, f_minus })
 }
 
 /// Factor-form update: `W -= U diag(tau_eff) V^T` + dense 1D SGD.

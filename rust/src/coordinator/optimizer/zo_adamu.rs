@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::config::Method;
 use crate::coordinator::metrics::Phase;
-use crate::runtime::exec::scalar_f32;
+use crate::runtime::exec::scalar_pair;
 use crate::runtime::Runtime;
 
 use super::{bind_batch, matrix_elems, param_elems, vector_elems, zeros_like_params,
@@ -53,10 +53,8 @@ impl ZoOptimizer for ZoAdamu {
         call.bind_scalar_f32("alpha", ctx.cfg.adamu_alpha, ctx.arena)?;
         ctx.timers.add(Phase::Dispatch, t0.elapsed().as_secs_f64());
         let out = ctx.timers.time(Phase::Forward, || call.run())?;
-        Ok(ForwardOut::TwoPoint {
-            f_plus: scalar_f32(&out[0])?,
-            f_minus: scalar_f32(&out[1])?,
-        })
+        let (f_plus, f_minus) = scalar_pair(&out)?;
+        Ok(ForwardOut::TwoPoint { f_plus, f_minus })
     }
 
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {

@@ -182,8 +182,11 @@ fn drive(engine: &StepEngine, workers: usize, cmd_txs: &[Sender<Command>],
             fleet.comm.on_results(workers as u64);
             fleet.record_forward_round(&fwd_times);
 
-            let pairs: Vec<(f32, f32)> =
-                slots.into_iter().map(|s| s.unwrap()).collect();
+            let pairs: Vec<(f32, f32)> = slots
+                .into_iter()
+                .enumerate()
+                .map(|(w, s)| s.ok_or_else(|| anyhow::anyhow!("no result slot for worker {w}")))
+                .collect::<Result<_>>()?;
             let (f_plus, f_minus) = aggregate_two_point(&pairs);
             let (loss, kappa_raw) =
                 engine.combine(&ForwardOut::TwoPoint { f_plus, f_minus });
@@ -253,8 +256,11 @@ fn drive(engine: &StepEngine, workers: usize, cmd_txs: &[Sender<Command>],
             other => bail!("unexpected event during shutdown: {other:?}"),
         }
     }
-    let workers_out: Vec<WorkerReport> =
-        reports.into_iter().map(|r| r.unwrap()).collect();
+    let workers_out: Vec<WorkerReport> = reports
+        .into_iter()
+        .enumerate()
+        .map(|(w, r)| r.ok_or_else(|| anyhow::anyhow!("no shutdown report from worker {w}")))
+        .collect::<Result<_>>()?;
     metrics.wall_seconds = wall0.elapsed().as_secs_f64();
     let state_bytes = workers_out.first().map(|r| r.state_bytes).unwrap_or(0);
     Ok(FleetOutcome {

@@ -144,7 +144,9 @@ fn worker_loop(worker: usize, workers: u32, artifact_dir: &Path,
                                         || job.data.batch(dseed, t.step));
                     current = Some((t.step, b));
                 }
-                let (_, batch) = current.as_ref().unwrap();
+                let Some((_, batch)) = current.as_ref() else {
+                    bail!("worker {worker}: no batch staged for step {}", t.step);
+                };
                 let t0 = Instant::now();
                 let fwd = engine.forward_sub(&rt, &mut *driver, &mut params,
                                              batch, t.step, t.sub,

@@ -38,7 +38,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<()> {
+    fn expect_byte(&mut self, c: u8) -> Result<()> {
         let got = self.bump()?;
         if got != c {
             bail!("expected {:?} at byte {}, got {:?}", c as char, self.i - 1, got as char);
@@ -60,7 +60,8 @@ impl<'a> Parser<'a> {
     }
 
     fn literal(&mut self, word: &str, v: Value) -> Result<Value> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
+        let rest = self.b.get(self.i..).unwrap_or(&[]);
+        if rest.starts_with(word.as_bytes()) {
             self.i += word.len();
             Ok(v)
         } else {
@@ -69,7 +70,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -80,7 +81,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let val = self.value()?;
             out.push((key, val));
@@ -94,7 +95,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Value> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -114,7 +115,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             let c = self.bump()?;
@@ -133,8 +134,8 @@ impl<'a> Parser<'a> {
                         let cp = self.hex4()?;
                         if (0xD800..0xDC00).contains(&cp) {
                             // surrogate pair
-                            self.expect(b'\\')?;
-                            self.expect(b'u')?;
+                            self.expect_byte(b'\\')?;
+                            self.expect_byte(b'u')?;
                             let lo = self.hex4()?;
                             if !(0xDC00..0xE000).contains(&lo) {
                                 bail!("invalid low surrogate");
@@ -209,7 +210,12 @@ impl<'a> Parser<'a> {
                 bail!("missing exponent digits");
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let bytes = self
+            .b
+            .get(start..self.i)
+            .ok_or_else(|| anyhow!("number span out of range at byte {start}"))?;
+        let text =
+            std::str::from_utf8(bytes).map_err(|_| anyhow!("non-ASCII number at byte {start}"))?;
         if text.is_empty() || text == "-" {
             bail!("invalid number at byte {start}");
         }

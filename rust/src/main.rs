@@ -430,7 +430,8 @@ fn run_cell(rt: &Runtime, config: &str, method: Method, tname: &str,
     let mut cfg = TrainConfig::with_preset(method, config);
     cfg.steps = steps;
     let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
-    let spec = tasks::spec_by_name(tname).unwrap();
+    let spec = tasks::spec_by_name(tname)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {tname:?}"))?;
     let tok = Tokenizer::new(rt.manifest.config.vocab);
     let task = Task::new(spec, tok, rt.manifest.config.seq_len, cfg.seed);
     let label_tokens = task.label_tokens();
@@ -521,8 +522,10 @@ fn cmd_probe_variance(argv: &[String]) -> Result<()> {
     let rt = Runtime::open_config(args.get_str("config")?)?;
     let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
     let tok = Tokenizer::new(rt.manifest.config.vocab);
-    let task = Task::new(tasks::spec_by_name(args.get_str("task")?).unwrap(), tok,
-                         rt.manifest.config.seq_len, 0);
+    let tname = args.get_str("task")?;
+    let spec = tasks::spec_by_name(tname)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {tname:?}"))?;
+    let task = Task::new(spec, tok, rt.manifest.config.seq_len, 0);
     let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
     let batch = builder.train_batch(0, 0);
     let k = args.get_usize("samples")?;

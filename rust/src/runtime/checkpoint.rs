@@ -115,7 +115,8 @@ pub fn load(dir: &Path, client: &xla::PjRtClient, manifest: &Manifest)
     ensure!(doc.get_str("config")? == manifest.config.name,
             "checkpoint is for config {:?}, runtime is {:?}",
             doc.get_str("config")?, manifest.config.name);
-    let step = doc.get("step")?.as_i64()? as u64;
+    let step = u64::try_from(doc.get("step")?.as_i64()?)
+        .map_err(|_| anyhow::anyhow!("checkpoint step is negative"))?;
     let entries = doc.get("params")?.as_array()?;
     ensure!(entries.len() == manifest.params.len(),
             "checkpoint has {} params, manifest {}", entries.len(),

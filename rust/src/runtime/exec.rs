@@ -139,6 +139,19 @@ pub fn scalar_f32(buf: &xla::PjRtBuffer) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
 }
 
+/// Read the first output as a scalar f32, checking it exists.
+pub fn scalar_first(out: &[xla::PjRtBuffer]) -> Result<f32> {
+    scalar_f32(out.first().ok_or_else(|| anyhow::anyhow!("no output buffers"))?)
+}
+
+/// Read the leading `(f+, f-)` two-point loss pair, checking arity.
+pub fn scalar_pair(out: &[xla::PjRtBuffer]) -> Result<(f32, f32)> {
+    match out {
+        [p, m, ..] => Ok((scalar_f32(p)?, scalar_f32(m)?)),
+        _ => bail!("expected a (f+, f-) output pair, got {} buffer(s)", out.len()),
+    }
+}
+
 /// Read an f32 tensor output to host.
 pub fn to_vec_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
     let lit = buf.to_literal_sync()?;

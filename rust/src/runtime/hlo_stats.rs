@@ -84,13 +84,14 @@ impl HloStats {
             //   name.N = f32[64,256]{1,0} op-name(...)
             // optionally prefixed by ROOT or % in other dialects
             let Some(eq) = t.find(" = ") else { continue };
-            let lhs = t[..eq].trim_start_matches("ROOT ").trim_start_matches('%');
+            let lhs = t.get(..eq).unwrap_or("")
+                .trim_start_matches("ROOT ").trim_start_matches('%');
             if lhs.is_empty()
                 || !lhs.chars().all(|c| c.is_alphanumeric() || ".-_".contains(c))
             {
                 continue;
             }
-            let rest = &t[eq + 3..];
+            let Some(rest) = t.get(eq + 3..) else { continue };
             // result type, e.g. f32[64,256]{1,0} or (f32[..], f32[..])
             let (shape_part, after_shape) = match rest.find(' ') {
                 Some(sp) => (&rest[..sp], &rest[sp + 1..]),

@@ -43,6 +43,7 @@ impl ParamStore {
 
     /// Buffer of parameter `i` (manifest order).
     pub fn buf(&self, i: usize) -> &xla::PjRtBuffer {
+        debug_assert!(i < self.bufs.len(), "param index {i} out of range");
         &self.bufs[i]
     }
 
@@ -69,7 +70,11 @@ impl ParamStore {
 
     /// Host copy of one parameter (analysis path).
     pub fn fetch(&self, i: usize) -> Result<Vec<f32>> {
-        let lit = self.bufs[i].to_literal_sync()?;
+        let buf = self
+            .bufs
+            .get(i)
+            .ok_or_else(|| anyhow::anyhow!("param index {i} out of range"))?;
+        let lit = buf.to_literal_sync()?;
         Ok(lit.to_vec::<f32>()?)
     }
 

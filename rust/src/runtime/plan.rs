@@ -119,6 +119,7 @@ impl CallPlan {
     }
 
     pub fn slot(&self, pos: usize) -> &PlanSlot {
+        debug_assert!(pos < self.slots.len(), "slot {pos} out of range");
         &self.slots[pos]
     }
 
@@ -334,16 +335,19 @@ impl<'c> PreparedCall<'c> {
         use anyhow::Context;
         self.plan.check_arity(self.n_bound)?;
         let exe = self.rt.executable(&self.plan.name)?;
-        let args: Vec<&xla::PjRtBuffer> = self
-            .bound
-            .iter()
-            .map(|b| match b {
-                BoundSlot::Borrowed(x) => *x,
-                BoundSlot::Staged(rc) => rc.as_ref(),
-                // check_arity + bind-once make Empty unreachable here
-                BoundSlot::Empty => unreachable!("unbound slot after arity check"),
-            })
-            .collect();
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.bound.len());
+        for (pos, b) in self.bound.iter().enumerate() {
+            match b {
+                BoundSlot::Borrowed(x) => args.push(*x),
+                BoundSlot::Staged(rc) => args.push(rc.as_ref()),
+                // check_arity + bind-once should make this impossible, but a
+                // plan bug must fail the call, not abort the run
+                BoundSlot::Empty => bail!(
+                    "{}: slot {pos} unbound after arity check (plan bug)",
+                    self.plan.name
+                ),
+            }
+        }
         let mut out = exe
             .execute_b(&args)
             .with_context(|| format!("executing {}", self.plan.name))?;

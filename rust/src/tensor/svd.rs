@@ -58,7 +58,7 @@ pub fn symmetric_eigenvalues(a: &Matrix, sweeps: usize) -> Vec<f64> {
         }
     }
     let mut eig: Vec<f64> = (0..n).map(|i| m[idx(i, i)]).collect();
-    eig.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    eig.sort_by(|a, b| b.total_cmp(a));
     eig
 }
 

@@ -1,0 +1,112 @@
+//! Ordering-determinism properties of the fleet aggregation path.
+//!
+//! The coordinator receives two-point results in thread-scheduling order
+//! but slots them by worker index before reducing (see
+//! `fleet/protocol.rs::aggregate_two_point` and the audit notes in
+//! docs/invariants.md). These properties pin the contract: the global
+//! measurement — and therefore the broadcast kappa — must be *bitwise*
+//! invariant to arrival order, and a single-worker fleet must reproduce
+//! that worker's own measurement exactly.
+
+use tezo::fleet::metrics::FleetMetrics;
+use tezo::fleet::protocol::aggregate_two_point;
+use tezo::proplite::{self, prop_assert, Gen};
+
+/// Fisher–Yates permutation of `0..n` driven by the property generator.
+fn arrival_order(g: &mut Gen, n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = g.usize_in(0..i + 1);
+        idx.swap(i, j);
+    }
+    idx
+}
+
+#[test]
+fn slotted_aggregation_is_permutation_invariant() {
+    proplite::run(60, |g| {
+        let w = g.usize_in(1..33);
+        let results: Vec<(f32, f32)> = (0..w)
+            .map(|_| (g.f32_in(-10.0..10.0), g.f32_in(-10.0..10.0)))
+            .collect();
+        let baseline = aggregate_two_point(&results);
+
+        // out-of-order arrival: slot each event by worker index, then
+        // reduce in index order — exactly what the coordinator does
+        let mut slots: Vec<Option<(f32, f32)>> = vec![None; w];
+        for &wi in &arrival_order(g, w) {
+            slots[wi] = Some(results[wi]);
+        }
+        let slotted: Vec<(f32, f32)> =
+            slots.into_iter().map(|s| s.expect("every worker reported")).collect();
+        let agg = aggregate_two_point(&slotted);
+
+        prop_assert(
+            baseline.0.to_bits() == agg.0.to_bits()
+                && baseline.1.to_bits() == agg.1.to_bits(),
+            &format!("aggregate drifted under arrival permutation: \
+                      {baseline:?} vs {agg:?}"),
+        )
+    });
+}
+
+#[test]
+fn broadcast_kappa_is_permutation_invariant() {
+    proplite::run(60, |g| {
+        let w = g.usize_in(2..17);
+        let rho = g.f32_in(1e-4..1e-1);
+        let results: Vec<(f32, f32)> = (0..w)
+            .map(|_| (g.f32_in(0.0..8.0), g.f32_in(0.0..8.0)))
+            .collect();
+        let kappa = |rs: &[(f32, f32)]| {
+            let (fp, fm) = aggregate_two_point(rs);
+            (fp - fm) / (2.0 * rho)
+        };
+        let baseline = kappa(&results);
+        let mut slots = vec![(0.0f32, 0.0f32); w];
+        for &wi in &arrival_order(g, w) {
+            slots[wi] = results[wi];
+        }
+        prop_assert(
+            baseline.to_bits() == kappa(&slots).to_bits(),
+            "broadcast kappa must not depend on result arrival order",
+        )
+    });
+}
+
+#[test]
+fn single_worker_aggregate_is_bit_identical() {
+    proplite::run(60, |g| {
+        let pair = (g.f32_in(-100.0..100.0), g.f32_in(-100.0..100.0));
+        let agg = aggregate_two_point(&[pair]);
+        prop_assert(
+            agg.0.to_bits() == pair.0.to_bits()
+                && agg.1.to_bits() == pair.1.to_bits(),
+            "W=1 fleet must reproduce the worker's own measurement bitwise",
+        )
+    });
+}
+
+#[test]
+fn non_finite_measurements_poison_the_aggregate() {
+    // a NaN from any replica must surface in the global measurement (the
+    // coordinator then broadcasts Skip to every replica together)
+    proplite::run(40, |g| {
+        let w = g.usize_in(1..9);
+        let mut results: Vec<(f32, f32)> =
+            (0..w).map(|_| (g.f32_in(-1.0..1.0), g.f32_in(-1.0..1.0))).collect();
+        results[g.usize_in(0..w)].0 = f32::NAN;
+        let (fp, _) = aggregate_two_point(&results);
+        prop_assert(!fp.is_finite(), "NaN measurement vanished in aggregation")
+    });
+}
+
+#[test]
+fn metrics_rows_stay_in_worker_order() {
+    let mut m = FleetMetrics::new(3);
+    m.record_forward_round(&[0.5, 0.1, 0.9]);
+    m.record_update_round(&[0.2, 0.3, 0.1]);
+    let rows = m.per_worker();
+    let ids: Vec<usize> = rows.iter().map(|&(w, _, _)| w).collect();
+    assert_eq!(ids, vec![0, 1, 2], "reporting rows must be worker-ordered");
+}

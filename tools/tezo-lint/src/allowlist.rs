@@ -1,0 +1,110 @@
+//! The allowlist baseline: per-entry-justified suppressions.
+//!
+//! Format (`lint/allowlist.txt`), one entry per line:
+//!
+//! ```text
+//! TZ-PANIC002  rust/src/runtime/plan.rs  slot positions proven in-bounds by construction
+//! ```
+//!
+//! i.e. `CODE  PATH-SUBSTRING  JUSTIFICATION`, whitespace-separated with
+//! the justification running to end of line. `#` starts a comment. The
+//! policy (docs/invariants.md): the file must be empty, or every entry
+//! must carry a justification AND match at least one current finding —
+//! entries without a justification and entries that no longer match
+//! anything are themselves findings (`TZ-ALLOW001`), so the baseline can
+//! only shrink honestly.
+
+use crate::findings::{Code, Finding};
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub code: String,
+    pub path_substring: String,
+    pub justification: String,
+    pub line: u32,
+}
+
+/// Parse the allowlist text. Never fails: malformed lines become
+/// zero-justification entries, which the stale-entry check then flags.
+pub fn parse(text: &str) -> Vec<Entry> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(3, char::is_whitespace);
+        let code = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").trim().to_string();
+        let justification = parts.next().unwrap_or("").trim().to_string();
+        out.push(Entry {
+            code,
+            path_substring: path,
+            justification,
+            line: (i + 1) as u32,
+        });
+    }
+    out
+}
+
+/// Apply `entries` to `findings`: matching findings are marked
+/// `allowlisted`; unjustified or non-matching entries append
+/// `TZ-ALLOW001` findings against the allowlist file itself.
+pub fn apply(entries: &[Entry], allowlist_path: &str, findings: &mut Vec<Finding>) {
+    for e in entries {
+        let mut matched = false;
+        for f in findings.iter_mut() {
+            if f.code.as_str() == e.code && f.file.contains(&e.path_substring) {
+                f.allowlisted = true;
+                matched = true;
+            }
+        }
+        if e.justification.split_whitespace().count() < 3 {
+            findings.push(Finding::new(
+                Code::AllowlistStale,
+                allowlist_path,
+                e.line,
+                format!("entry `{} {}` lacks a justification (≥3 words required)",
+                        e.code, e.path_substring),
+            ));
+        } else if !matched {
+            findings.push(Finding::new(
+                Code::AllowlistStale,
+                allowlist_path,
+                e.line,
+                format!("stale entry: no current {} finding matches path `{}` — delete it",
+                        e.code, e.path_substring),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_skips_comments_and_splits_fields() {
+        let es = parse("# header\nTZ-PANIC001 src/a.rs proven safe by arity check\n\n");
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].code, "TZ-PANIC001");
+        assert_eq!(es[0].path_substring, "src/a.rs");
+        assert!(es[0].justification.starts_with("proven"));
+    }
+
+    #[test]
+    fn apply_marks_matches_and_flags_stale() {
+        let mut fs = vec![Finding::new(Code::PanicHotPath, "rust/src/a.rs", 5,
+                                       "unwrap".into())];
+        let es = parse(
+            "TZ-PANIC001 src/a.rs checked by caller before dispatch\n\
+             TZ-PANIC001 src/missing.rs justified but matches nothing\n\
+             TZ-DET001 src/a.rs bad",
+        );
+        apply(&es, "lint/allowlist.txt", &mut fs);
+        assert!(fs[0].allowlisted);
+        let stale: Vec<_> =
+            fs.iter().filter(|f| f.code == Code::AllowlistStale).collect();
+        assert_eq!(stale.len(), 2, "one stale path + one missing justification");
+    }
+}

@@ -1,0 +1,183 @@
+//! Finding model, rule codes, and report rendering (text + JSON).
+//!
+//! The JSON writer is hand-rolled (this crate is zero-dependency by
+//! design); the emitted shape is stable and machine-readable so CI and
+//! later sessions can diff `out/lint_report.json` across commits.
+
+use std::fmt::Write as _;
+
+/// Stable rule identifiers. Every code is documented in
+/// `docs/invariants.md`; adding a code there is part of adding it here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Code {
+    /// ambient randomness source (`rand`, `getrandom`, `OsRng`, entropy)
+    RngAmbient,
+    /// wall-clock time source (`SystemTime`, `UNIX_EPOCH`)
+    RngWallClock,
+    /// monotonic time flowing into seed/hash/numeric state
+    RngTimeSeed,
+    /// hash-ordered iteration feeding accumulation or protocol emission
+    DetHashOrder,
+    /// float sort via `partial_cmp().unwrap()` instead of `total_cmp`
+    DetPartialSort,
+    /// `unwrap`/`expect`/`panic!`-family in a hot-path module
+    PanicHotPath,
+    /// unguarded identifier indexing in a hot-path module
+    IndexHotPath,
+    /// artifact name not present in any committed manifest
+    ArtUnknownName,
+    /// bound `(role, name, dtype)` slot absent from the manifest contract
+    ArtSlotMismatch,
+    /// manifest artifact never referenced from the Rust sources
+    ArtUnreferenced,
+    /// loss artifact missing/with unknown `forward_form` tag
+    ArtForwardForm,
+    /// allowlist entry that matches nothing (stale) or has no justification
+    AllowlistStale,
+}
+
+impl Code {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::RngAmbient => "TZ-RNG001",
+            Code::RngWallClock => "TZ-RNG002",
+            Code::RngTimeSeed => "TZ-RNG003",
+            Code::DetHashOrder => "TZ-DET001",
+            Code::DetPartialSort => "TZ-DET002",
+            Code::PanicHotPath => "TZ-PANIC001",
+            Code::IndexHotPath => "TZ-PANIC002",
+            Code::ArtUnknownName => "TZ-ART001",
+            Code::ArtSlotMismatch => "TZ-ART002",
+            Code::ArtUnreferenced => "TZ-ART003",
+            Code::ArtForwardForm => "TZ-ART004",
+            Code::AllowlistStale => "TZ-ALLOW001",
+        }
+    }
+
+    pub const ALL: [Code; 12] = [
+        Code::RngAmbient,
+        Code::RngWallClock,
+        Code::RngTimeSeed,
+        Code::DetHashOrder,
+        Code::DetPartialSort,
+        Code::PanicHotPath,
+        Code::IndexHotPath,
+        Code::ArtUnknownName,
+        Code::ArtSlotMismatch,
+        Code::ArtUnreferenced,
+        Code::ArtForwardForm,
+        Code::AllowlistStale,
+    ];
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub code: Code,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    /// set by the allowlist pass; allowlisted findings never fail the run
+    pub allowlisted: bool,
+}
+
+impl Finding {
+    pub fn new(code: Code, file: &str, line: u32, message: String) -> Finding {
+        Finding { code, file, line, message, allowlisted: false }
+    }
+}
+
+/// Render findings as compiler-style text lines.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        let suffix = if f.allowlisted { "  [allowlisted]" } else { "" };
+        let _ = writeln!(out, "{}: {}:{}: {}{}", f.code.as_str(), f.file, f.line,
+                         f.message, suffix);
+    }
+    out
+}
+
+/// Render the machine-readable report (see docs/invariants.md#report).
+pub fn render_json(findings: &[Finding], mode: &str, deny_all: bool) -> String {
+    let active = findings.iter().filter(|f| !f.allowlisted).count();
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, " \"tool\": \"tezo-lint\",");
+    let _ = writeln!(out, " \"version\": {},", json_str(env!("CARGO_PKG_VERSION")));
+    let _ = writeln!(out, " \"mode\": {},", json_str(mode));
+    let _ = writeln!(out, " \"deny_all\": {},", deny_all);
+    let _ = writeln!(out, " \"clean\": {},", active == 0);
+    out.push_str(" \"counts\": {\n");
+    for (i, code) in Code::ALL.iter().enumerate() {
+        let n = findings.iter().filter(|f| f.code == *code).count();
+        let comma = if i + 1 == Code::ALL.len() { "" } else { "," };
+        let _ = writeln!(out, "  {}: {}{}", json_str(code.as_str()), n, comma);
+    }
+    out.push_str(" },\n");
+    out.push_str(" \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        let comma = if i + 1 == findings.len() { "" } else { "," };
+        out.push_str("\n  {");
+        let _ = write!(out, "\"code\": {}, ", json_str(f.code.as_str()));
+        let _ = write!(out, "\"file\": {}, ", json_str(&f.file));
+        let _ = write!(out, "\"line\": {}, ", f.line);
+        let _ = write!(out, "\"allowlisted\": {}, ", f.allowlisted);
+        let _ = write!(out, "\"message\": {}", json_str(&f.message));
+        out.push('}');
+        out.push_str(comma);
+    }
+    out.push_str("\n ]\n}\n");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique() {
+        let mut names: Vec<&str> = Code::ALL.iter().map(|c| c.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Code::ALL.len());
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let fs = vec![
+            Finding::new(Code::PanicHotPath, "a.rs", 3, "x.unwrap()".into()),
+            Finding {
+                allowlisted: true,
+                ..Finding::new(Code::IndexHotPath, "b.rs", 9, "v[\"k\"]".into())
+            },
+        ];
+        let json = render_json(&fs, "code", true);
+        assert!(json.contains("\"TZ-PANIC001\": 1"));
+        assert!(json.contains("\"clean\": false"));
+        assert!(json.contains("\\\"k\\\""));
+        // one active finding: PanicHotPath (the other is allowlisted)
+        let clean = render_json(&fs[1..], "code", true);
+        assert!(clean.contains("\"clean\": true"));
+    }
+}

@@ -1,0 +1,348 @@
+//! A minimal Rust lexer: identifiers, literals, punctuation, with line
+//! numbers, comments and whitespace stripped.
+//!
+//! This is NOT a full Rust grammar — it is exactly the token stream the
+//! rule passes need: idents and string literals are preserved verbatim,
+//! char literals are distinguished from lifetimes, raw/byte strings are
+//! consumed as single tokens, and nested block comments are skipped. Every
+//! rule in `rules/` works on this stream plus balanced-delimiter scanning.
+
+/// One lexed token.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub kind: Kind,
+    /// identifier text, string-literal *contents* (unescaped only for
+    /// simple escapes), or the punctuation character as a 1-char string
+    pub text: String,
+    /// 1-based source line
+    pub line: u32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// identifier or keyword (`fn`, `for`, `HashMap`, ...)
+    Ident,
+    /// `'a` in `&'a str` (distinguished from char literals)
+    Lifetime,
+    /// string literal (including raw/byte forms); `text` is the contents
+    Str,
+    /// char or byte literal; `text` is the raw source slice
+    Char,
+    /// numeric literal
+    Num,
+    /// single punctuation character (`{`, `}`, `.`, `!`, `=`, ...)
+    Punct,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == 1
+            && self.text.as_bytes()[0] as char == c
+    }
+}
+
+/// Lex `src` into tokens. Unterminated constructs are tolerated (the rest
+/// of the file becomes one token) — a linter must never panic on its input.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Vec<Token> {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'r' | b'b' if self.raw_string_ahead() => self.raw_string(),
+                b'b' if self.peek(1) == Some(b'"') => {
+                    self.i += 1;
+                    self.string();
+                }
+                b'b' if self.peek(1) == Some(b'\'') => {
+                    self.i += 1;
+                    self.char_lit();
+                }
+                b'"' => self.string(),
+                b'\'' => self.quote(),
+                c if c == b'_' || c.is_ascii_alphabetic() => self.ident(),
+                c if c.is_ascii_digit() => self.number(),
+                _ => {
+                    self.push(Kind::Punct, (c as char).to_string());
+                    self.i += 1;
+                }
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, off: usize) -> Option<u8> {
+        self.b.get(self.i + off).copied()
+    }
+
+    fn push(&mut self, kind: Kind, text: String) {
+        self.out.push(Token { kind, text, line: self.line });
+    }
+
+    fn line_comment(&mut self) {
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+    }
+
+    fn block_comment(&mut self) {
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            match self.b[self.i] {
+                b'\n' => self.line += 1,
+                b'/' if self.peek(1) == Some(b'*') => {
+                    depth += 1;
+                    self.i += 1;
+                }
+                b'*' if self.peek(1) == Some(b'/') => {
+                    depth -= 1;
+                    self.i += 1;
+                }
+                _ => {}
+            }
+            self.i += 1;
+        }
+    }
+
+    /// `r"..."`, `r#"..."#`, `br"..."` ahead at the cursor?
+    fn raw_string_ahead(&self) -> bool {
+        let mut j = self.i;
+        if self.b[j] == b'b' {
+            j += 1;
+        }
+        if self.b.get(j) != Some(&b'r') {
+            return false;
+        }
+        j += 1;
+        while self.b.get(j) == Some(&b'#') {
+            j += 1;
+        }
+        self.b.get(j) == Some(&b'"')
+    }
+
+    fn raw_string(&mut self) {
+        if self.b[self.i] == b'b' {
+            self.i += 1;
+        }
+        self.i += 1; // 'r'
+        let mut hashes = 0usize;
+        while self.peek(0) == Some(b'#') {
+            hashes += 1;
+            self.i += 1;
+        }
+        self.i += 1; // opening quote
+        let start = self.i;
+        loop {
+            match self.peek(0) {
+                None => break,
+                Some(b'\n') => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                Some(b'"') => {
+                    // need `hashes` trailing '#'
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if self.peek(1 + k) != Some(b'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        break;
+                    }
+                    self.i += 1;
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i.min(self.b.len())])
+            .into_owned();
+        self.push(Kind::Str, text);
+        self.i += 1 + hashes; // closing quote + hashes (saturates at EOF)
+    }
+
+    fn string(&mut self) {
+        self.i += 1; // opening quote
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    // keep escapes simple: unescape the common ones, pass
+                    // everything else through verbatim
+                    match self.peek(1) {
+                        Some(b'n') => text.push('\n'),
+                        Some(b't') => text.push('\t'),
+                        Some(b'r') => text.push('\r'),
+                        Some(b'"') => text.push('"'),
+                        Some(b'\\') => text.push('\\'),
+                        Some(other) => {
+                            text.push('\\');
+                            text.push(other as char);
+                        }
+                        None => break,
+                    }
+                    self.i += 2;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    text.push('\n');
+                    self.i += 1;
+                }
+                _ => {
+                    text.push(c as char);
+                    self.i += 1;
+                }
+            }
+        }
+        self.i += 1; // closing quote
+        self.push(Kind::Str, text);
+    }
+
+    fn char_lit(&mut self) {
+        // at the opening quote of a char/byte literal
+        let start = self.i;
+        self.i += 1;
+        if self.peek(0) == Some(b'\\') {
+            self.i += 2;
+        } else {
+            self.i += 1;
+        }
+        // multi-byte UTF-8 chars: advance to the closing quote
+        while self.i < self.b.len() && self.b[self.i] != b'\'' {
+            self.i += 1;
+        }
+        self.i += 1;
+        let text = String::from_utf8_lossy(&self.b[start..self.i.min(self.b.len())])
+            .into_owned();
+        self.push(Kind::Char, text);
+    }
+
+    /// `'` is either a lifetime (`'a`, `'static`) or a char literal.
+    fn quote(&mut self) {
+        // lifetime: 'ident NOT followed by a closing quote
+        let mut j = self.i + 1;
+        while j < self.b.len()
+            && (self.b[j] == b'_' || self.b[j].is_ascii_alphanumeric())
+        {
+            j += 1;
+        }
+        let is_lifetime = j > self.i + 1 && self.b.get(j) != Some(&b'\'');
+        if is_lifetime {
+            let text = String::from_utf8_lossy(&self.b[self.i + 1..j]).into_owned();
+            self.push(Kind::Lifetime, text);
+            self.i = j;
+        } else {
+            self.char_lit();
+        }
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len()
+            && (self.b[self.i] == b'_' || self.b[self.i].is_ascii_alphanumeric())
+        {
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.push(Kind::Ident, text);
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len()
+            && (self.b[self.i] == b'_'
+                || self.b[self.i] == b'.'
+                || self.b[self.i].is_ascii_alphanumeric())
+        {
+            // `0..10` range punctuation must not be eaten by the number
+            if self.b[self.i] == b'.' && self.peek(1) == Some(b'.') {
+                break;
+            }
+            // `.method()` on a literal: stop before an alphabetic method name
+            if self.b[self.i] == b'.'
+                && self.peek(1).is_some_and(|c| c.is_ascii_alphabetic() || c == b'_')
+                && !self.b[start..self.i].contains(&b'x')
+            {
+                break;
+            }
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.push(Kind::Num, text);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_lines() {
+        let ts = lex("fn main() {\n  let x = 1;\n}");
+        assert!(ts[0].is_ident("fn"));
+        assert!(ts[1].is_ident("main"));
+        assert!(ts[2].is_punct('('));
+        let x = ts.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!(x.line, 2);
+    }
+
+    #[test]
+    fn strings_chars_lifetimes() {
+        let ts = kinds(r#"let s = "a\nb"; let c = 'x'; fn f<'a>(v: &'a str) {}"#);
+        assert!(ts.contains(&(Kind::Str, "a\nb".to_string())));
+        assert!(ts.contains(&(Kind::Char, "'x'".to_string())));
+        assert!(ts.contains(&(Kind::Lifetime, "a".to_string())));
+    }
+
+    #[test]
+    fn raw_strings_and_comments() {
+        let ts = kinds("// skip\n/* also /* nested */ skip */ let r = r#\"raw \"q\" text\"#;");
+        assert!(ts.contains(&(Kind::Str, "raw \"q\" text".to_string())));
+        assert!(!ts.iter().any(|(_, s)| s.contains("skip")));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        let ts = kinds("for i in 0..10 { x1.max(2.5); 1.0f64; }");
+        assert!(ts.contains(&(Kind::Num, "0".to_string())));
+        assert!(ts.contains(&(Kind::Num, "10".to_string())));
+        assert!(ts.contains(&(Kind::Num, "2.5".to_string())));
+        assert!(ts.contains(&(Kind::Num, "1.0f64".to_string())));
+        assert!(ts.contains(&(Kind::Ident, "max".to_string())));
+    }
+
+    #[test]
+    fn never_panics_on_garbage() {
+        for bad in ["\"unterminated", "r#\"open", "'", "/* open", "b'"] {
+            let _ = lex(bad);
+        }
+    }
+}

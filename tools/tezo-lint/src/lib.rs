@@ -1,0 +1,160 @@
+//! tezo-lint: static enforcement of the workspace invariants that the
+//! type system cannot see — seed determinism, panic-free hot paths, and
+//! the driver/manifest artifact contract. See `docs/invariants.md` for
+//! the rule catalogue and `lint/allowlist.txt` for the (empty) baseline.
+//!
+//! Zero dependencies by design: this crate must build and run where the
+//! PJRT toolchain does not, so CI can gate on invariants before the heavy
+//! `tezo` build.
+
+pub mod allowlist;
+pub mod findings;
+pub mod lexer;
+pub mod manifestx;
+pub mod rules;
+pub mod source;
+
+use findings::{Code, Finding};
+use manifestx::ManifestContracts;
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// Directories (repo-relative) scanned for Rust sources. `tools/` is
+/// excluded: the linter's own fixtures intentionally violate every rule.
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+const MANIFEST_GLOB_DIR: &str = "artifacts";
+
+pub struct Config {
+    /// repository root (defaults to cwd)
+    pub root: PathBuf,
+    /// allowlist file, repo-relative
+    pub allowlist: String,
+    /// report file, repo-relative (written unless empty)
+    pub report: String,
+}
+
+impl Config {
+    pub fn new(root: PathBuf) -> Config {
+        Config {
+            root,
+            allowlist: "lint/allowlist.txt".into(),
+            report: "out/lint_report.json".into(),
+        }
+    }
+}
+
+/// Load every `.rs` file under the scan roots, sorted for deterministic
+/// finding order. Unreadable files are reported, not panicked on.
+pub fn load_sources(cfg: &Config) -> Result<Vec<SourceFile>, String> {
+    let mut paths = Vec::new();
+    for rootdir in SCAN_ROOTS {
+        let dir = cfg.root.join(rootdir);
+        if dir.is_dir() {
+            walk_rs(&dir, &mut paths)?;
+        }
+    }
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for p in paths {
+        let src = std::fs::read_to_string(&p)
+            .map_err(|e| format!("read {}: {e}", p.display()))?;
+        out.push(SourceFile::new(rel(&cfg.root, &p), &src));
+    }
+    Ok(out)
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("walk {}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("walk {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Load every `artifacts/*/manifest.json`, sorted by path.
+pub fn load_manifests(cfg: &Config) -> Result<Vec<ManifestContracts>, String> {
+    let dir = cfg.root.join(MANIFEST_GLOB_DIR);
+    let mut paths = Vec::new();
+    if dir.is_dir() {
+        let rd = std::fs::read_dir(&dir).map_err(|e| format!("walk {}: {e}", dir.display()))?;
+        for entry in rd {
+            let entry = entry.map_err(|e| format!("walk {}: {e}", dir.display()))?;
+            let m = entry.path().join("manifest.json");
+            if m.is_file() {
+                paths.push(m);
+            }
+        }
+    }
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for p in paths {
+        let src = std::fs::read_to_string(&p)
+            .map_err(|e| format!("read {}: {e}", p.display()))?;
+        out.push(
+            ManifestContracts::from_json(&rel(&cfg.root, &p), &src)
+                .map_err(|e| format!("parse {}: {e}", p.display()))?,
+        );
+    }
+    Ok(out)
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Code rules (RNG/time, determinism, panic-free hot paths) over the
+/// given sources.
+pub fn run_code_lint(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        rules::rng_time::check(f, &mut out);
+        rules::determinism::check(f, &mut out);
+        rules::panics::check(f, &mut out);
+    }
+    out
+}
+
+/// Artifact-contract rules over sources + manifests.
+pub fn run_artifact_lint(files: &[SourceFile], manifests: &[ManifestContracts])
+                         -> Vec<Finding> {
+    let mut out = Vec::new();
+    rules::artifacts::check(files, manifests, &mut out);
+    out
+}
+
+/// Apply the allowlist baseline (missing file = empty baseline), then
+/// sort findings by (file, line, code) for stable reports.
+pub fn finalize(cfg: &Config, mut findings: Vec<Finding>) -> Vec<Finding> {
+    let path = cfg.root.join(&cfg.allowlist);
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        let entries = allowlist::parse(&text);
+        allowlist::apply(&entries, &cfg.allowlist, &mut findings);
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.code).cmp(&(b.file.as_str(), b.line, b.code))
+    });
+    findings
+}
+
+/// True if the run should fail: any non-allowlisted finding. TZ-ART003 is
+/// advisory (warn) and never fails the run.
+pub fn has_errors(findings: &[Finding]) -> bool {
+    findings
+        .iter()
+        .any(|f| !f.allowlisted && f.code != Code::ArtUnreferenced)
+}

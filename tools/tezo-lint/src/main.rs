@@ -1,0 +1,113 @@
+//! CLI for tezo-lint.
+//!
+//! ```text
+//! tezo-lint [MODE] [--root DIR] [--deny-all] [--report PATH] [--allowlist PATH]
+//!
+//! MODE: code      RNG/time, determinism, panic-free hot paths
+//!       artifact  driver literals vs artifacts/*/manifest.json
+//!       all       both (default)
+//! ```
+//!
+//! Exit codes: 0 clean (or warnings only), 1 findings, 2 usage/IO error.
+//! A JSON report is always written (default `out/lint_report.json`).
+//!
+//! Cargo aliases (.cargo/config.toml): `cargo tezo-lint` runs `all`
+//! with `--deny-all`; `cargo artifact-lint` runs the artifact mode.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use tezo_lint::{findings, finalize, has_errors, load_manifests, load_sources, Config};
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(clean) => {
+            if clean {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("tezo-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<bool, String> {
+    let mut mode = "all".to_string();
+    let mut cfg = Config::new(PathBuf::from("."));
+    let mut deny_all = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "code" | "artifact" | "all" => mode = a,
+            "--deny-all" => deny_all = true,
+            "--root" => cfg.root = PathBuf::from(take(&mut args, "--root")?),
+            "--report" => cfg.report = take(&mut args, "--report")?,
+            "--allowlist" => cfg.allowlist = take(&mut args, "--allowlist")?,
+            "--help" | "-h" => {
+                println!("usage: tezo-lint [code|artifact|all] [--root DIR] \
+                          [--deny-all] [--report PATH] [--allowlist PATH]");
+                return Ok(true);
+            }
+            other => return Err(format!("unknown argument `{other}` (--help)")),
+        }
+    }
+
+    let files = load_sources(&cfg)?;
+    if files.is_empty() {
+        return Err(format!("no Rust sources under {}", cfg.root.display()));
+    }
+
+    let mut found = Vec::new();
+    if mode == "code" || mode == "all" {
+        found.extend(tezo_lint::run_code_lint(&files));
+    }
+    if mode == "artifact" || mode == "all" {
+        let manifests = load_manifests(&cfg)?;
+        if manifests.is_empty() {
+            return Err("no artifacts/*/manifest.json found".into());
+        }
+        found.extend(tezo_lint::run_artifact_lint(&files, &manifests));
+    }
+    let found = finalize(&cfg, found);
+
+    print!("{}", findings::render_text(&found));
+    let active = found.iter().filter(|f| !f.allowlisted).count();
+    eprintln!(
+        "tezo-lint[{mode}]: {} file(s), {} finding(s) ({} allowlisted)",
+        files.len(),
+        found.len(),
+        found.len() - active,
+    );
+
+    if !cfg.report.is_empty() {
+        let report_path = cfg.root.join(&cfg.report);
+        if let Some(dir) = report_path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        }
+        std::fs::write(&report_path, findings::render_json(&found, &mode, deny_all))
+            .map_err(|e| format!("write {}: {e}", report_path.display()))?;
+    }
+
+    // without --deny-all, advisory severities don't fail the run; with it,
+    // anything non-allowlisted does (TZ-ART003 stays advisory either way)
+    let fail = if deny_all {
+        has_errors(&found)
+    } else {
+        found.iter().any(|f| {
+            !f.allowlisted
+                && !matches!(f.code,
+                             findings::Code::ArtUnreferenced
+                             | findings::Code::IndexHotPath)
+        })
+    };
+    Ok(!fail)
+}
+
+fn take(args: &mut impl Iterator<Item = String>, flag: &str) -> Result<String, String> {
+    args.next().ok_or_else(|| format!("{flag} requires a value"))
+}

@@ -1,0 +1,339 @@
+//! Minimal JSON reader + the manifest slot model for `artifact-lint`.
+//!
+//! tezo-lint cannot depend on the `tezo` crate (that would pull in the
+//! PJRT toolchain), so it carries its own small recursive-descent JSON
+//! parser — enough for `artifacts/*/manifest.json`, which is machine
+//! written and well-formed. Parse errors are reported, never panicked on.
+
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------- JSON --
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// BTreeMap: manifest key order is irrelevant and iteration must be
+    /// deterministic (the lint holds itself to its own TZ-DET001 rule)
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse_json(src: &str) -> Result<Json, String> {
+    let b = src.as_bytes();
+    let mut p = P { b, i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != b.len() {
+        return Err(format!("trailing bytes at offset {}", p.i));
+    }
+    Ok(v)
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.b.get(self.i) {
+            Some(b'{') => self.obj(),
+            Some(b'[') => self.arr(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(_) => self.num(),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("expected `{word}` at offset {}", self.i))
+        }
+    }
+
+    fn num(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while matches!(self.b.get(self.i),
+                       Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')) {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| "non-utf8 number".to_string())?;
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number `{s}` at offset {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.i += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    let esc = self.b.get(self.i + 1).copied();
+                    match esc {
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'u') => {
+                            let hex = self.b.get(self.i + 2..self.i + 6)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .and_then(char::from_u32)
+                                .ok_or("bad \\u escape")?;
+                            out.push(hex);
+                            self.i += 4;
+                        }
+                        _ => return Err("bad escape".into()),
+                    }
+                    self.i += 2;
+                }
+                Some(&c) => {
+                    // pass UTF-8 bytes through; manifests are ASCII anyway
+                    out.push(c as char);
+                    self.i += 1;
+                }
+            }
+        }
+    }
+
+    fn arr(&mut self) -> Result<Json, String> {
+        self.i += 1;
+        let mut out = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("expected `,` or `]` at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn obj(&mut self) -> Result<Json, String> {
+        self.i += 1;
+        let mut out = BTreeMap::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            if self.b.get(self.i) != Some(&b'"') {
+                return Err(format!("expected key at offset {}", self.i));
+            }
+            let key = self.string()?;
+            self.ws();
+            if self.b.get(self.i) != Some(&b':') {
+                return Err(format!("expected `:` at offset {}", self.i));
+            }
+            self.i += 1;
+            self.ws();
+            out.insert(key, self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("expected `,` or `}}` at offset {}", self.i)),
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- manifests --
+
+/// One `(role, name, dtype)` slot of an artifact's I/O contract.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Slot {
+    pub role: String,
+    pub name: String,
+    pub dtype: String,
+}
+
+/// One executable artifact's contract, as committed in a manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactContract {
+    pub name: String,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+    pub forward_form: Option<String>,
+}
+
+impl ArtifactContract {
+    pub fn has_input(&self, role: &str, name: &str) -> bool {
+        self.inputs.iter().any(|s| s.role == role && s.name == name)
+    }
+
+    pub fn input_dtype(&self, role: &str, name: &str) -> Option<&str> {
+        self.inputs
+            .iter()
+            .find(|s| s.role == role && s.name == name)
+            .map(|s| s.dtype.as_str())
+    }
+
+    /// Does this artifact take any input of the given role?
+    pub fn has_input_role(&self, role: &str) -> bool {
+        self.inputs.iter().any(|s| s.role == role)
+    }
+}
+
+/// The artifact-contract view of one `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ManifestContracts {
+    /// manifest path as shown in findings
+    pub path: String,
+    /// keyed by artifact name; BTreeMap for deterministic iteration
+    pub artifacts: BTreeMap<String, ArtifactContract>,
+}
+
+impl ManifestContracts {
+    pub fn from_json(path: &str, src: &str) -> Result<ManifestContracts, String> {
+        let doc = parse_json(src)?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or("manifest has no `artifacts` object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in arts {
+            artifacts.insert(
+                name.clone(),
+                ArtifactContract {
+                    name: name.clone(),
+                    inputs: slots(entry.get("inputs"))?,
+                    outputs: slots(entry.get("outputs"))?,
+                    forward_form: entry
+                        .get("forward_form")
+                        .and_then(Json::as_str)
+                        .map(str::to_string),
+                },
+            );
+        }
+        Ok(ManifestContracts { path: path.to_string(), artifacts })
+    }
+}
+
+fn slots(v: Option<&Json>) -> Result<Vec<Slot>, String> {
+    let arr = v.and_then(Json::as_arr).ok_or("artifact entry missing io list")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for s in arr {
+        let field = |k: &str| -> Result<String, String> {
+            s.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("io slot missing `{k}`"))
+        };
+        out.push(Slot { role: field("role")?, name: field("name")?, dtype: field("dtype")? });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "config": {"name": "t"},
+      "artifacts": {
+        "mezo_loss_pm": {
+          "file": "mezo_loss_pm.hlo.txt",
+          "forward_form": "materialize",
+          "inputs": [
+            {"role": "param", "name": "w", "shape": [2, 2], "dtype": "f32"},
+            {"role": "scalar", "name": "seed", "shape": [], "dtype": "u32"}
+          ],
+          "outputs": [
+            {"role": "scalar", "name": "loss_pair", "shape": [2], "dtype": "f32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest_contracts() {
+        let m = ManifestContracts::from_json("m.json", MINI).unwrap();
+        let a = &m.artifacts["mezo_loss_pm"];
+        assert!(a.has_input("scalar", "seed"));
+        assert_eq!(a.input_dtype("scalar", "seed"), Some("u32"));
+        assert_eq!(a.forward_form.as_deref(), Some("materialize"));
+        assert_eq!(a.outputs.len(), 1);
+    }
+
+    #[test]
+    fn json_scalars_and_errors() {
+        assert_eq!(parse_json("[1, -2.5e1, true, null]").unwrap(),
+                   Json::Arr(vec![Json::Num(1.0), Json::Num(-25.0),
+                                  Json::Bool(true), Json::Null]));
+        assert!(parse_json("{\"a\": }").is_err());
+        assert!(parse_json("{\"a\": 1} x").is_err());
+        assert_eq!(parse_json("\"a\\u0041b\"").unwrap(),
+                   Json::Str("aAb".into()));
+    }
+}

@@ -1,0 +1,396 @@
+//! Artifact contract checks (TZ-ART001..004): driver code vs committed
+//! manifests.
+//!
+//! Drivers reference executables by name (`rt.prepared("mezo_loss_pm")`)
+//! and bind I/O by `(role, name)` string literals. A typo — or a manifest
+//! regenerated with a renamed slot — compiles fine and fails at runtime,
+//! possibly hours into a fleet run. These rules cross-check every literal
+//! against `artifacts/*/manifest.json` at lint time:
+//!
+//! * TZ-ART001 — artifact name literal not present in any manifest.
+//! * TZ-ART002 — a bound `(role, name, dtype)` slot missing from the
+//!   contract. When the enclosing `prepared("X")` names the artifact, the
+//!   binding is checked against X in every manifest that defines X; when
+//!   the artifact is dynamic (`prepared(artifact)`), the binding is
+//!   checked against the union of all manifests' slots.
+//! * TZ-ART003 (warn) — a manifest artifact no source literal references.
+//! * TZ-ART004 — `*_loss_pm*` artifacts must carry `forward_form` of
+//!   `materialize` or `implicit` (the warmup planner dispatches on it).
+
+use crate::findings::{Code, Finding};
+use crate::lexer::{Kind, Token};
+use crate::manifestx::ManifestContracts;
+use crate::source::{matching_close, SourceFile};
+use std::collections::BTreeSet;
+
+/// How each binding method consumes its leading string-literal args.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum BindShape {
+    /// `(role, name, ...)` with an exact dtype requirement (None = any)
+    RoleName(Option<&'static str>),
+    /// `(role, ...)` — role must exist in the contract
+    RoleOnly,
+    /// `(name, ...)` — slot is `("scalar", name)` with the given dtype
+    ScalarNamed(&'static str),
+}
+
+const BINDERS: &[(&str, BindShape)] = &[
+    ("bind_buf", BindShape::RoleName(None)),
+    ("bind_staged", BindShape::RoleName(None)),
+    ("bind_f32", BindShape::RoleName(Some("f32"))),
+    ("bind_i32", BindShape::RoleName(Some("i32"))),
+    ("bind_bufs", BindShape::RoleOnly),
+    ("bind_nth_f32", BindShape::RoleOnly),
+    ("bind_scalar_f32", BindShape::ScalarNamed("f32")),
+    ("bind_scalar_u32", BindShape::ScalarNamed("u32")),
+];
+
+pub const VALID_FORWARD_FORMS: &[&str] = &["materialize", "implicit"];
+
+/// Full artifact pass over the file set + manifests.
+pub fn check(files: &[SourceFile], manifests: &[ManifestContracts],
+             out: &mut Vec<Finding>) {
+    let known: BTreeSet<&str> = manifests
+        .iter()
+        .flat_map(|m| m.artifacts.keys())
+        .map(String::as_str)
+        .collect();
+    let mut referenced: BTreeSet<String> = BTreeSet::new();
+
+    for file in files {
+        check_file(file, manifests, &known, &mut referenced, out);
+        // any string literal equal to an artifact name counts as a
+        // reference (e.g. the loss_artifact dispatch table in manifest.rs)
+        for t in &file.tokens {
+            if t.kind == Kind::Str && known.contains(t.text.as_str()) {
+                referenced.insert(t.text.clone());
+            }
+        }
+    }
+
+    for m in manifests {
+        for (name, art) in &m.artifacts {
+            if !referenced.contains(name) {
+                out.push(Finding::new(
+                    Code::ArtUnreferenced,
+                    &m.path,
+                    0,
+                    format!("artifact `{name}` is not referenced by any \
+                             source literal — dead contract?"),
+                ));
+            }
+            let is_loss = name.contains("_loss_pm");
+            match art.forward_form.as_deref() {
+                None if is_loss => out.push(Finding::new(
+                    Code::ArtForwardForm,
+                    &m.path,
+                    0,
+                    format!("loss artifact `{name}` has no `forward_form` \
+                             (expected one of {VALID_FORWARD_FORMS:?})"),
+                )),
+                Some(f) if !VALID_FORWARD_FORMS.contains(&f) => {
+                    out.push(Finding::new(
+                        Code::ArtForwardForm,
+                        &m.path,
+                        0,
+                        format!("artifact `{name}` has unknown forward_form \
+                                 `{f}` (expected one of {VALID_FORWARD_FORMS:?})"),
+                    ))
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// The artifact context a binding call resolves against.
+enum Ctx {
+    /// `prepared("name")` — check against that artifact, per manifest
+    Literal(String),
+    /// `prepared(expr)` or no prepared in scope — union check
+    Dynamic,
+}
+
+fn check_file(file: &SourceFile, manifests: &[ManifestContracts],
+              known: &BTreeSet<&str>, referenced: &mut BTreeSet<String>,
+              out: &mut Vec<Finding>) {
+    let ts = &file.tokens;
+    let mut ctx = Ctx::Dynamic;
+    // the prepared() context is per-function: past this token index the
+    // context resets to Dynamic
+    let mut ctx_end = 0usize;
+    for i in 0..ts.len() {
+        if i > ctx_end {
+            ctx = Ctx::Dynamic;
+            ctx_end = usize::MAX;
+        }
+        if file.masked[i] || ts[i].kind != Kind::Ident {
+            continue;
+        }
+        let name = ts[i].text.as_str();
+
+        if name == "prepared" && ts.get(i + 1).is_some_and(|t| t.is_punct('(')) {
+            ctx_end = file.enclosing_fn(i).map_or(usize::MAX, |(_, end)| end);
+            ctx = match first_literal_arg(ts, i + 1) {
+                Some(lit) => {
+                    referenced.insert(lit.text.clone());
+                    if !known.contains(lit.text.as_str()) {
+                        out.push(Finding::new(
+                            Code::ArtUnknownName,
+                            &file.path,
+                            lit.line,
+                            format!("artifact `{}` not found in any committed \
+                                     manifest", lit.text),
+                        ));
+                    }
+                    Ctx::Literal(lit.text.clone())
+                }
+                None => Ctx::Dynamic,
+            };
+            continue;
+        }
+
+        if name == "warmup" && ts.get(i + 1).is_some_and(|t| t.is_punct('(')) {
+            let close = matching_close(ts, i + 1);
+            for t in &ts[i + 1..close] {
+                if t.kind == Kind::Str {
+                    referenced.insert(t.text.clone());
+                    if !known.contains(t.text.as_str()) {
+                        out.push(Finding::new(
+                            Code::ArtUnknownName,
+                            &file.path,
+                            t.line,
+                            format!("warmup artifact `{}` not found in any \
+                                     committed manifest", t.text),
+                        ));
+                    }
+                }
+            }
+            continue;
+        }
+
+        let Some((_, shape)) = BINDERS.iter().find(|(b, _)| *b == name) else {
+            continue;
+        };
+        if !ts.get(i + 1).is_some_and(|t| t.is_punct('(')) {
+            continue;
+        }
+        // `pub fn bind_*` definitions have ident (not literal) args and
+        // fall out of literal extraction naturally
+        let close = matching_close(ts, i + 1);
+        let lits = leading_literal_args(&ts[i + 2..close]);
+        let slot = match shape {
+            BindShape::RoleName(dtype) => match (lits.first(), lits.get(1)) {
+                (Some(role), Some(n)) => {
+                    Some((role.text.clone(), Some(n.text.clone()), *dtype, n.line))
+                }
+                _ => None,
+            },
+            BindShape::RoleOnly => lits
+                .first()
+                .map(|role| (role.text.clone(), None, None, role.line)),
+            BindShape::ScalarNamed(dtype) => lits.first().map(|n| {
+                ("scalar".to_string(), Some(n.text.clone()), Some(*dtype), n.line)
+            }),
+        };
+        let Some((role, slot_name, dtype, line)) = slot else { continue };
+        check_slot(&ctx, manifests, &file.path, name, &role,
+                   slot_name.as_deref(), dtype, line, out);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_slot(ctx: &Ctx, manifests: &[ManifestContracts], file: &str,
+              binder: &str, role: &str, slot_name: Option<&str>,
+              dtype: Option<&str>, line: u32, out: &mut Vec<Finding>) {
+    let mut checked_any = false;
+    match ctx {
+        Ctx::Literal(artifact) => {
+            for m in manifests {
+                let Some(art) = m.artifacts.get(artifact) else { continue };
+                checked_any = true;
+                let ok = match slot_name {
+                    Some(n) => {
+                        art.has_input(role, n)
+                            && dtype.map_or(true, |d| art.input_dtype(role, n) == Some(d))
+                    }
+                    None => art.has_input_role(role),
+                };
+                if !ok {
+                    out.push(Finding::new(
+                        Code::ArtSlotMismatch,
+                        file,
+                        line,
+                        format!("{binder}: slot ({role}, {}{}) not in \
+                                 `{artifact}` inputs of {}",
+                                slot_name.unwrap_or("*"),
+                                dtype.map(|d| format!(", {d}")).unwrap_or_default(),
+                                m.path),
+                    ));
+                }
+            }
+            // an unknown artifact already produced TZ-ART001; don't cascade
+            let _ = checked_any;
+        }
+        Ctx::Dynamic => {
+            let ok = manifests.iter().any(|m| {
+                m.artifacts.values().any(|art| match slot_name {
+                    Some(n) => {
+                        art.has_input(role, n)
+                            && dtype.map_or(true, |d| art.input_dtype(role, n) == Some(d))
+                    }
+                    None => art.has_input_role(role),
+                })
+            });
+            if !manifests.is_empty() && !ok {
+                out.push(Finding::new(
+                    Code::ArtSlotMismatch,
+                    file,
+                    line,
+                    format!("{binder}: slot ({role}, {}{}) not in any \
+                             artifact of any committed manifest",
+                            slot_name.unwrap_or("*"),
+                            dtype.map(|d| format!(", {d}")).unwrap_or_default()),
+                ));
+            }
+        }
+    }
+}
+
+/// The first string literal inside a balanced `( ... )` group, if the
+/// argument expression starts with one (i.e. a literal call, not a
+/// variable).
+fn first_literal_arg(ts: &[Token], open: usize) -> Option<&Token> {
+    let close = matching_close(ts, open);
+    ts[open + 1..close].iter().find(|t| t.kind == Kind::Str)
+}
+
+/// Leading comma-separated args (depth 0) that are string literals; stops
+/// at the first non-literal argument.
+fn leading_literal_args(arg_tokens: &[Token]) -> Vec<&Token> {
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut arg_start = true;
+    for t in arg_tokens {
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth -= 1;
+        } else if depth == 0 && t.is_punct(',') {
+            arg_start = true;
+            continue;
+        } else if depth == 0 && arg_start {
+            if t.kind == Kind::Str {
+                out.push(t);
+                arg_start = false;
+            } else {
+                break; // first non-literal argument ends the prefix
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "artifacts": {
+        "mezo_loss_pm": {
+          "file": "m.hlo.txt",
+          "forward_form": "materialize",
+          "inputs": [
+            {"role": "param", "name": "w", "shape": [2], "dtype": "f32"},
+            {"role": "batch", "name": "tokens", "shape": [4], "dtype": "i32"},
+            {"role": "scalar", "name": "seed", "shape": [], "dtype": "u32"},
+            {"role": "scalar", "name": "rho", "shape": [], "dtype": "f32"}
+          ],
+          "outputs": [
+            {"role": "scalar", "name": "loss_pair", "shape": [2], "dtype": "f32"}
+          ]
+        }
+      }
+    }"#;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        let files = vec![SourceFile::new("rust/src/d.rs".into(), src)];
+        let ms = vec![ManifestContracts::from_json("m.json", MANIFEST).unwrap()];
+        let mut out = Vec::new();
+        check(&files, &ms, &mut out);
+        out
+    }
+
+    #[test]
+    fn clean_driver_passes() {
+        let fs = lint(
+            "fn f(rt: &Rt) -> Result<()> { \
+             let mut call = rt.prepared(\"mezo_loss_pm\")?; \
+             call.bind_bufs(\"param\", bufs)?; \
+             call.bind_i32(\"batch\", \"tokens\", &toks, a)?; \
+             call.bind_scalar_u32(\"seed\", s, a)?; \
+             call.bind_scalar_f32(\"rho\", r, a)?; Ok(()) }",
+        );
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn unknown_artifact_and_bad_slot() {
+        let fs = lint(
+            "fn f(rt: &Rt) { let c = rt.prepared(\"mezo_loss\"); \
+             let mut c2 = rt.prepared(\"mezo_loss_pm\"); \
+             c2.bind_scalar_f32(\"learning_rate\", x, a); }",
+        );
+        assert!(fs.iter().any(|f| f.code == Code::ArtUnknownName));
+        assert!(fs.iter().any(|f| f.code == Code::ArtSlotMismatch
+                                  && f.message.contains("learning_rate")));
+    }
+
+    #[test]
+    fn dtype_mismatch_is_flagged() {
+        let fs = lint(
+            "fn f(c: &mut Call) { let mut c = rt.prepared(\"mezo_loss_pm\"); \
+             c.bind_scalar_f32(\"seed\", x, a); }",
+        );
+        assert!(fs.iter().any(|f| f.code == Code::ArtSlotMismatch));
+    }
+
+    #[test]
+    fn dynamic_context_uses_union() {
+        // helper without prepared() in scope: union check
+        let ok = lint("fn bind_batch(c: &mut Call) { \
+                       c.bind_i32(\"batch\", \"tokens\", t, a); }");
+        assert!(ok.is_empty(), "{ok:?}");
+        let bad = lint("fn bind_batch(c: &mut Call) { \
+                        c.bind_i32(\"batch\", \"tokns\", t, a); }");
+        assert!(bad.iter().any(|f| f.code == Code::ArtSlotMismatch));
+    }
+
+    #[test]
+    fn unreferenced_artifact_warns() {
+        let fs = lint("fn f() {}");
+        assert!(fs.iter().any(|f| f.code == Code::ArtUnreferenced
+                                  && f.message.contains("mezo_loss_pm")));
+    }
+
+    #[test]
+    fn forward_form_required_on_loss_artifacts() {
+        let m = r#"{"artifacts": {"x_loss_pm": {"file": "x",
+                    "inputs": [], "outputs": []}}}"#;
+        let ms = vec![ManifestContracts::from_json("m.json", m).unwrap()];
+        let files = vec![SourceFile::new("d.rs".into(),
+                                         "fn f() { rt.prepared(\"x_loss_pm\"); }")];
+        let mut out = Vec::new();
+        check(&files, &ms, &mut out);
+        assert!(out.iter().any(|f| f.code == Code::ArtForwardForm));
+    }
+
+    #[test]
+    fn warmup_names_are_checked() {
+        let fs = lint("fn f(rt: &Rt) { rt.warmup(&[\"mezo_loss_pm\", \"nope\"]); }");
+        assert!(fs.iter().any(|f| f.code == Code::ArtUnknownName
+                                  && f.message.contains("nope")));
+        assert!(!fs.iter().any(|f| f.message.contains("mezo_loss_pm")
+                                   && f.code == Code::ArtUnknownName));
+    }
+}

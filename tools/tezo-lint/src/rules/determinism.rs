@@ -1,0 +1,229 @@
+//! Ordering determinism (TZ-DET001..002).
+//!
+//! Floating-point reduction is not associative, and the fleet protocol
+//! must emit byte-identical streams across runs, so iteration order is
+//! part of correctness here — the paper's seed-sync scheme only works if
+//! every worker reduces in the same order.
+//!
+//! * TZ-DET001 — a `for` loop over a `HashMap`/`HashSet` (hash order!)
+//!   whose body accumulates (`+=`, `push`, `extend`, ...) or emits
+//!   (`send`, `write`, ...). Iterate a `Vec`/`BTreeMap` or sort first.
+//! * TZ-DET002 — float ordering via `partial_cmp(..).unwrap()` inside a
+//!   sort/min/max statement: panics on NaN and under-defines the order;
+//!   use `f32::total_cmp`/`f64::total_cmp`.
+
+use crate::findings::{Code, Finding};
+use crate::lexer::Kind;
+use crate::rules::statement_around;
+use crate::source::{matching_close, SourceFile};
+
+const HASH_TYPES: &[&str] = &["HashMap", "HashSet"];
+
+/// Identifiers whose call in a loop body means "order-sensitive effect".
+const ACCUMULATORS: &[&str] = &[
+    "push", "push_str", "extend", "send", "write", "writeln", "write_all",
+    "emit", "append",
+];
+
+const ORDER_FNS: &[&str] = &[
+    "sort_by", "sort_unstable_by", "sort_by_key", "min_by", "max_by",
+    "binary_search_by",
+];
+
+pub fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    let hash_vars = hash_typed_vars(file);
+    check_hash_order(file, &hash_vars, out);
+    check_partial_sort(file, out);
+}
+
+/// Names bound to a `HashMap`/`HashSet` in this file: `let [mut] NAME =
+/// HashMap::…` / `let [mut] NAME: HashMap<…>` / `NAME: HashMap<…>` fields.
+fn hash_typed_vars(file: &SourceFile) -> Vec<String> {
+    let mut vars = Vec::new();
+    for (i, t) in file.tokens.iter().enumerate() {
+        if !(t.kind == Kind::Ident && HASH_TYPES.contains(&t.text.as_str())) {
+            continue;
+        }
+        // scan back past path segments (`std :: collections ::`) and the
+        // `=`/`:` binder to the bound identifier
+        let mut j = i;
+        while j >= 2 && file.tokens[j - 1].is_punct(':') && file.tokens[j - 2].is_punct(':') {
+            j -= 2;
+            if j > 0 && file.tokens[j - 1].kind == Kind::Ident {
+                j -= 1;
+            }
+        }
+        // skip reference/mutability qualifiers: `m: &mut HashMap<..>`
+        while j > 0
+            && (file.tokens[j - 1].is_punct('&')
+                || file.tokens[j - 1].is_ident("mut")
+                || file.tokens[j - 1].kind == Kind::Lifetime)
+        {
+            j -= 1;
+        }
+        if j == 0 {
+            continue;
+        }
+        let binder = &file.tokens[j - 1];
+        if (binder.is_punct('=') || binder.is_punct(':')) && j >= 2 {
+            let name = &file.tokens[j - 2];
+            if name.kind == Kind::Ident {
+                vars.push(name.text.clone());
+            }
+        }
+    }
+    vars.sort_unstable();
+    vars.dedup();
+    vars
+}
+
+fn check_hash_order(file: &SourceFile, hash_vars: &[String], out: &mut Vec<Finding>) {
+    let ts = &file.tokens;
+    for (i, t) in ts.iter().enumerate() {
+        if file.masked[i] || !t.is_ident("for") {
+            continue;
+        }
+        // header: `for PAT in EXPR {` — find `in`, then the body `{` at
+        // bracket depth 0
+        let Some(in_pos) = (i..ts.len().min(i + 40)).find(|&k| ts[k].is_ident("in"))
+        else {
+            continue;
+        };
+        let mut k = in_pos + 1;
+        let mut body_open = None;
+        while k < ts.len() {
+            if ts[k].is_punct('(') || ts[k].is_punct('[') {
+                k = matching_close(ts, k) + 1;
+                continue;
+            }
+            if ts[k].is_punct('{') {
+                body_open = Some(k);
+                break;
+            }
+            if ts[k].is_punct(';') {
+                break;
+            }
+            k += 1;
+        }
+        let Some(open) = body_open else { continue };
+
+        let expr = &ts[in_pos + 1..open];
+        let over_hash = expr.iter().any(|e| {
+            e.kind == Kind::Ident
+                && (HASH_TYPES.contains(&e.text.as_str())
+                    || hash_vars.iter().any(|v| v == &e.text))
+        });
+        if !over_hash {
+            continue;
+        }
+        // an explicit sort in the iterated expression restores determinism
+        if expr.iter().any(|e| e.kind == Kind::Ident && e.text.starts_with("sort")) {
+            continue;
+        }
+
+        let close = matching_close(ts, open);
+        let body = &ts[open..=close];
+        let accumulates = body.windows(2).any(|w| w[0].is_punct('+') && w[1].is_punct('='))
+            || body.iter().any(|b| {
+                b.kind == Kind::Ident && ACCUMULATORS.contains(&b.text.as_str())
+            });
+        if accumulates {
+            out.push(Finding::new(
+                Code::DetHashOrder,
+                &file.path,
+                t.line,
+                "hash-ordered iteration feeds accumulation/emission — order \
+                 is nondeterministic; use a Vec/BTreeMap or sort keys first"
+                    .into(),
+            ));
+        }
+    }
+}
+
+fn check_partial_sort(file: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.masked[i] || !t.is_ident("partial_cmp") {
+            continue;
+        }
+        let (lo, hi) = statement_around(&file.tokens, i);
+        let stmt = &file.tokens[lo..=hi];
+        let in_order_fn = stmt
+            .iter()
+            .any(|s| s.kind == Kind::Ident && ORDER_FNS.contains(&s.text.as_str()));
+        let unwraps = file.tokens[i..=hi].iter().any(|s| s.is_ident("unwrap"));
+        if in_order_fn && unwraps {
+            out.push(Finding::new(
+                Code::DetPartialSort,
+                &file.path,
+                t.line,
+                "float ordering via partial_cmp().unwrap() — panics on NaN \
+                 and under-defines the order; use total_cmp"
+                    .into(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(src: &str) -> Vec<Finding> {
+        let f = SourceFile::new("rust/src/x.rs".into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_hash_iteration_with_accumulation() {
+        let fs = findings(
+            "fn f() { let mut m: HashMap<u32, f32> = HashMap::new(); \
+             let mut total = 0.0; \
+             for (_, v) in m.iter() { total += v; } }",
+        );
+        assert_eq!(fs.iter().filter(|f| f.code == Code::DetHashOrder).count(), 1);
+    }
+
+    #[test]
+    fn vec_iteration_is_fine() {
+        let fs = findings(
+            "fn f(v: &[f32]) { let mut t = 0.0; for x in v { t += x; } }",
+        );
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn lookup_only_hash_use_is_fine() {
+        let fs = findings(
+            "fn f() { let mut m = std::collections::HashMap::new(); \
+             m.insert(1, 2); let x = m.get(&1); }",
+        );
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn sorted_keys_are_fine() {
+        let fs = findings(
+            "fn f(m: &HashMap<u32, f32>) { let mut ks: Vec<_> = m.keys().collect(); \
+             ks.sort(); let mut t = 0.0; \
+             for k in ks.iter() { t += m[k]; } }",
+        );
+        assert!(fs.iter().all(|f| f.code != Code::DetHashOrder));
+    }
+
+    #[test]
+    fn flags_partial_cmp_sort() {
+        let fs = findings(
+            "fn f(v: &mut Vec<f32>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }",
+        );
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].code, Code::DetPartialSort);
+    }
+
+    #[test]
+    fn total_cmp_sort_is_fine() {
+        let fs = findings("fn f(v: &mut Vec<f32>) { v.sort_by(f32::total_cmp); }");
+        assert!(fs.is_empty());
+    }
+}

@@ -1,0 +1,58 @@
+//! Rule passes. Each pass walks the token stream of one `SourceFile`
+//! (or, for the artifact rules, the whole file set plus the committed
+//! manifests) and appends `Finding`s. Test-masked tokens are never
+//! flagged — test code is allowed to unwrap, index, and hash freely.
+
+pub mod artifacts;
+pub mod determinism;
+pub mod panics;
+pub mod rng_time;
+
+use crate::lexer::Token;
+
+/// Token range of the statement containing index `i`: from just after the
+/// previous `;`/`{`/`}` through the next `;` (or block edge). Used by
+/// co-occurrence heuristics ("X and Y in the same statement").
+pub fn statement_around(tokens: &[Token], i: usize) -> (usize, usize) {
+    let mut lo = i;
+    while lo > 0 {
+        let t = &tokens[lo - 1];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            break;
+        }
+        lo -= 1;
+    }
+    let mut hi = i;
+    while hi + 1 < tokens.len() {
+        let t = &tokens[hi + 1];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            break;
+        }
+        hi += 1;
+    }
+    (lo, hi)
+}
+
+/// Is the token at `i` a method call `.name(`? (preceded by `.`, followed
+/// by `(`) — distinguishes `x.unwrap()` from a fn named `unwrap`.
+pub fn is_method_call(tokens: &[Token], i: usize) -> bool {
+    i > 0
+        && tokens[i - 1].is_punct('.')
+        && tokens.get(i + 1).is_some_and(|t| t.is_punct('('))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn statement_bounds() {
+        let ts = lex("a(); let x = b.c(d); e();");
+        let c = ts.iter().position(|t| t.is_ident("c")).unwrap();
+        let (lo, hi) = statement_around(&ts, c);
+        assert!(ts[lo].is_ident("let"));
+        assert!(ts[hi].is_punct(')'));
+        assert!(is_method_call(&ts, c));
+    }
+}

@@ -1,0 +1,160 @@
+//! Panic-free hot paths (TZ-PANIC001..002).
+//!
+//! The runtime, step engine, optimizer drivers, fleet, and the jsonx
+//! substrate sit on the training hot path: a panic there aborts a
+//! multi-hour run (or, in the fleet, poisons a worker and desyncs the
+//! seed schedule). These modules must surface failures as `Result` and
+//! let the coordinator decide.
+//!
+//! * TZ-PANIC001 — `.unwrap()` / `.expect(..)` / `panic!` / `unreachable!`
+//!   / `todo!` / `unimplemented!` in a hot-path module (test code exempt).
+//! * TZ-PANIC002 — identifier indexing (`xs[i]`, `&b[a..c]`) in a
+//!   hot-path function with no visible bounds discipline — no
+//!   `len`/`get`/`enumerate`/`zip`/`assert`-family identifier anywhere in
+//!   the enclosing function. Indexing under a checked invariant is fine;
+//!   the check just has to be in view.
+
+use crate::findings::{Code, Finding};
+use crate::lexer::Kind;
+use crate::rules::is_method_call;
+use crate::source::SourceFile;
+
+/// Method calls that panic on Err/None.
+const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+
+/// Diverging macros (identifier must be followed by `!`).
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Seeing any of these identifiers in the enclosing function counts as
+/// bounds discipline for TZ-PANIC002.
+const GUARD_IDENTS: &[&str] = &[
+    "ensure", "assert", "assert_eq", "assert_ne", "debug_assert",
+    "debug_assert_eq", "debug_assert_ne", "len", "get", "get_mut",
+    "enumerate", "zip",
+];
+
+/// Is `path` on the training hot path? (repo-relative, `/`-separated)
+pub fn is_hot_path(path: &str) -> bool {
+    const HOT: &[&str] = &[
+        "rust/src/runtime/",
+        "rust/src/coordinator/step.rs",
+        "rust/src/coordinator/optimizer/",
+        "rust/src/fleet/",
+        "rust/src/jsonx/",
+    ];
+    HOT.iter().any(|h| path.contains(h))
+}
+
+pub fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !is_hot_path(&file.path) {
+        return;
+    }
+    let ts = &file.tokens;
+    for (i, t) in ts.iter().enumerate() {
+        if file.masked[i] || t.kind != Kind::Ident {
+            // unguarded indexing: `ident [` outside test code
+            if !file.masked[i]
+                && t.is_punct('[')
+                && i > 0
+                && ts[i - 1].kind == Kind::Ident
+                && file.enclosing_fn(i).is_some()
+                && !file.fn_contains_ident(i, GUARD_IDENTS)
+            {
+                out.push(Finding::new(
+                    Code::IndexHotPath,
+                    &file.path,
+                    t.line,
+                    format!("unguarded indexing of `{}` in a hot-path fn with \
+                             no visible bounds check — use .get() or add the \
+                             invariant as a debug_assert", ts[i - 1].text),
+                ));
+            }
+            continue;
+        }
+        let name = t.text.as_str();
+        if PANIC_METHODS.contains(&name) && is_method_call(ts, i) {
+            out.push(Finding::new(
+                Code::PanicHotPath,
+                &file.path,
+                t.line,
+                format!(".{name}() on the hot path — return a typed error \
+                         (anyhow::Result + context) instead"),
+            ));
+        } else if PANIC_MACROS.contains(&name)
+            && ts.get(i + 1).is_some_and(|n| n.is_punct('!'))
+        {
+            out.push(Finding::new(
+                Code::PanicHotPath,
+                &file.path,
+                t.line,
+                format!("{name}! on the hot path — surface the failure as an \
+                         error; the coordinator decides whether to abort"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::new(path.into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_unwrap_and_macros_in_hot_path() {
+        let fs = findings(
+            "rust/src/runtime/plan.rs",
+            "fn f() { x.unwrap(); y.expect(\"m\"); unreachable!(\"slot\"); }",
+        );
+        assert_eq!(fs.iter().filter(|f| f.code == Code::PanicHotPath).count(), 3);
+    }
+
+    #[test]
+    fn cold_paths_are_not_checked() {
+        let fs = findings("rust/src/main.rs", "fn f() { x.unwrap(); v[0]; }");
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn std_panic_module_is_not_a_macro() {
+        let fs = findings("rust/src/fleet/worker.rs",
+                          "fn f() { std::panic::catch_unwind(|| 1); }");
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn unguarded_indexing_flagged_guarded_ok() {
+        let bad = findings("rust/src/fleet/protocol.rs",
+                           "fn f(v: &[f32], i: usize) -> f32 { v[i] }");
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].code, Code::IndexHotPath);
+
+        let good = findings(
+            "rust/src/fleet/protocol.rs",
+            "fn f(v: &[f32], i: usize) -> f32 { \
+             debug_assert!(i < v.len()); v[i] }",
+        );
+        assert!(good.is_empty());
+    }
+
+    #[test]
+    fn tests_inside_hot_modules_are_exempt() {
+        let fs = findings(
+            "rust/src/jsonx/parse.rs",
+            "#[cfg(test)]\nmod tests { fn t() { x.unwrap(); v[0]; } }",
+        );
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let fs = findings("rust/src/runtime/client.rs",
+                          "fn f() { x.unwrap_or(0); }");
+        assert!(fs.is_empty());
+    }
+}

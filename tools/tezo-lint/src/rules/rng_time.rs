@@ -1,0 +1,152 @@
+//! RNG / time discipline (TZ-RNG001..003).
+//!
+//! The training stack is seed-deterministic end to end: every stochastic
+//! quantity derives from `rngx` streams keyed by the run seed, and the
+//! fleet protocol syncs scalar seeds, not tensors. Ambient entropy or
+//! wall-clock values flowing into numeric state silently break replay and
+//! worker agreement, so they are banned statically:
+//!
+//! * TZ-RNG001 — ambient randomness identifiers (`rand`, `getrandom`,
+//!   `OsRng`, `thread_rng`, `from_entropy`, `RandomState`, ...) anywhere
+//!   outside `rngx/` (the one module allowed to define randomness).
+//! * TZ-RNG002 — wall-clock sources (`SystemTime`, `UNIX_EPOCH`) outside
+//!   `benchkit` and metrics modules (which may timestamp reports).
+//! * TZ-RNG003 — a monotonic-clock reading (`elapsed`, `as_nanos`, ...)
+//!   in the same statement as a seed/RNG/hash sink. Timing for metrics is
+//!   fine; timing entropy feeding numeric state is not.
+
+use crate::findings::{Code, Finding};
+use crate::rules::statement_around;
+use crate::source::SourceFile;
+
+const AMBIENT: &[&str] = &[
+    "rand", "random", "getrandom", "OsRng", "SmallRng", "StdRng",
+    "ThreadRng", "thread_rng", "from_entropy", "RandomState",
+];
+
+const WALL_CLOCK: &[&str] = &["SystemTime", "UNIX_EPOCH"];
+
+/// Monotonic-clock readings that yield numbers.
+const CLOCK_READS: &[&str] = &[
+    "as_nanos", "as_micros", "subsec_nanos", "subsec_micros", "elapsed",
+];
+
+/// Identifiers that mark numeric/seed state sinks.
+const SEED_SINKS: &[&str] = &["seed", "seeds", "rng", "hash", "entropy"];
+
+/// Does `path` identify the module that is allowed to define randomness?
+fn in_rngx(path: &str) -> bool {
+    path.contains("/rngx/") || path.ends_with("/rngx.rs")
+}
+
+/// Timing/reporting modules may read wall-clock time.
+fn in_timing_module(path: &str) -> bool {
+    path.contains("/benchkit/") || path.contains("metrics")
+}
+
+pub fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    let ambient_ok = in_rngx(&file.path);
+    let wall_ok = in_rngx(&file.path) || in_timing_module(&file.path);
+
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.masked[i] || t.kind != crate::lexer::Kind::Ident {
+            continue;
+        }
+        let name = t.text.as_str();
+
+        if !ambient_ok && AMBIENT.contains(&name) {
+            out.push(Finding::new(
+                Code::RngAmbient,
+                &file.path,
+                t.line,
+                format!("ambient randomness `{name}` outside rngx/ — derive \
+                         from the run seed via rngx streams instead"),
+            ));
+            continue;
+        }
+
+        if !wall_ok && WALL_CLOCK.contains(&name) {
+            out.push(Finding::new(
+                Code::RngWallClock,
+                &file.path,
+                t.line,
+                format!("wall-clock source `{name}` outside benchkit/metrics \
+                         — wall time must never reach numeric state"),
+            ));
+            continue;
+        }
+
+        if CLOCK_READS.contains(&name) {
+            let (lo, hi) = statement_around(&file.tokens, i);
+            let sink = file.tokens[lo..=hi].iter().find(|s| {
+                s.kind == crate::lexer::Kind::Ident
+                    && SEED_SINKS.iter().any(|k| {
+                        let id = s.text.to_ascii_lowercase();
+                        id == *k || id.starts_with(&format!("{k}_"))
+                            || id.ends_with(&format!("_{k}"))
+                    })
+            });
+            if let Some(s) = sink {
+                out.push(Finding::new(
+                    Code::RngTimeSeed,
+                    &file.path,
+                    t.line,
+                    format!("clock reading `{name}` flows into `{}` — time \
+                             must not seed numeric state", s.text),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::new(path.into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_ambient_rng_outside_rngx() {
+        let fs = findings("rust/src/coordinator/step.rs",
+                          "fn f() { let r = rand::thread_rng(); }");
+        assert_eq!(fs.len(), 2); // `rand` + `thread_rng`
+        assert!(fs.iter().all(|f| f.code == Code::RngAmbient));
+    }
+
+    #[test]
+    fn rngx_is_exempt() {
+        assert!(findings("rust/src/rngx/mod.rs", "fn f() { OsRng; }").is_empty());
+    }
+
+    #[test]
+    fn flags_wall_clock_and_time_seed() {
+        let fs = findings(
+            "rust/src/fleet/worker.rs",
+            "fn f() { let t = SystemTime::now(); \
+             let seed = start.elapsed().as_nanos() as u64; }",
+        );
+        assert!(fs.iter().any(|f| f.code == Code::RngWallClock));
+        assert!(fs.iter().any(|f| f.code == Code::RngTimeSeed));
+    }
+
+    #[test]
+    fn pure_timing_is_fine() {
+        let fs = findings(
+            "rust/src/fleet/coordinator.rs",
+            "fn f() { let dt = start.elapsed().as_secs_f64(); record(dt); }",
+        );
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn test_code_is_masked() {
+        let fs = findings("rust/src/coordinator/step.rs",
+                          "#[test]\nfn t() { let r = thread_rng(); }");
+        assert!(fs.is_empty());
+    }
+}

@@ -1,0 +1,207 @@
+//! Source-file model shared by every rule: the token stream plus
+//! structural annotations — which tokens are test-only code, which
+//! function body a token belongs to, and balanced-delimiter scanning.
+
+use crate::lexer::{lex, Kind, Token};
+
+/// One analyzed Rust file.
+pub struct SourceFile {
+    /// path as reported in findings (repo-relative where possible)
+    pub path: String,
+    pub tokens: Vec<Token>,
+    /// `masked[i]` — token i is inside `#[cfg(test)]` / `#[test]` code
+    pub masked: Vec<bool>,
+    /// body token ranges (open-brace..=close-brace) of every `fn`
+    pub fn_bodies: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn new(path: String, src: &str) -> SourceFile {
+        let tokens = lex(src);
+        let masked = mask_test_regions(&tokens);
+        let fn_bodies = find_fn_bodies(&tokens);
+        SourceFile { path, tokens, masked, fn_bodies }
+    }
+
+    /// Body range of the innermost function containing token `i`.
+    pub fn enclosing_fn(&self, i: usize) -> Option<(usize, usize)> {
+        self.fn_bodies
+            .iter()
+            .filter(|(a, b)| *a <= i && i <= *b)
+            .min_by_key(|(a, b)| b - a)
+            .copied()
+    }
+
+    /// Does the innermost function around token `i` contain any of the
+    /// given identifier tokens? (Used for "bounds-awareness" heuristics.)
+    pub fn fn_contains_ident(&self, i: usize, names: &[&str]) -> bool {
+        let Some((a, b)) = self.enclosing_fn(i) else { return false };
+        self.tokens[a..=b]
+            .iter()
+            .any(|t| t.kind == Kind::Ident && names.contains(&t.text.as_str()))
+    }
+}
+
+/// Index of the delimiter that closes the one at `open` (`tokens[open]`
+/// must be `(`, `[` or `{`). Returns the last token on imbalance.
+pub fn matching_close(tokens: &[Token], open: usize) -> usize {
+    let (o, c) = match tokens[open].text.as_str() {
+        "(" => ('(', ')'),
+        "[" => ('[', ']'),
+        _ => ('{', '}'),
+    };
+    let mut depth = 0i64;
+    for (j, t) in tokens.iter().enumerate().skip(open) {
+        if t.is_punct(o) {
+            depth += 1;
+        } else if t.is_punct(c) {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    tokens.len().saturating_sub(1)
+}
+
+/// Mark every token inside test-only regions:
+/// * `#[cfg(test)]` followed by `mod name { ... }` — the whole module;
+/// * `#[test]` / `#[should_panic]` attributes — the following `fn` body
+///   (plus the attribute itself).
+fn mask_test_regions(tokens: &[Token]) -> Vec<bool> {
+    let mut masked = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if tokens[i].is_punct('#') && i + 1 < tokens.len() && tokens[i + 1].is_punct('[') {
+            let close = matching_close(tokens, i + 1);
+            let attr: Vec<&str> = tokens[i + 2..close]
+                .iter()
+                .filter(|t| t.kind == Kind::Ident)
+                .map(|t| t.text.as_str())
+                .collect();
+            let is_cfg_test = attr.first() == Some(&"cfg") && attr.contains(&"test");
+            let is_test_attr = attr.first() == Some(&"test")
+                || attr.first() == Some(&"should_panic");
+            if is_cfg_test || is_test_attr {
+                // mask from the attribute through the end of the item it
+                // decorates (the next brace-balanced block)
+                if let Some(open) = next_item_open_brace(tokens, close + 1) {
+                    let end = matching_close(tokens, open);
+                    for m in masked.iter_mut().take(end + 1).skip(i) {
+                        *m = true;
+                    }
+                    i = end + 1;
+                    continue;
+                }
+            }
+            i = close + 1;
+            continue;
+        }
+        i += 1;
+    }
+    masked
+}
+
+/// First `{` that opens the decorated item's body, skipping over further
+/// attributes and the item header (which may contain `(..)` parameter
+/// lists but no bare `{`).
+fn next_item_open_brace(tokens: &[Token], from: usize) -> Option<usize> {
+    let mut i = from;
+    while i < tokens.len() {
+        let t = &tokens[i];
+        if t.is_punct('#') && i + 1 < tokens.len() && tokens[i + 1].is_punct('[') {
+            i = matching_close(tokens, i + 1) + 1;
+            continue;
+        }
+        if t.is_punct('(') || t.is_punct('[') {
+            i = matching_close(tokens, i) + 1;
+            continue;
+        }
+        if t.is_punct('{') {
+            return Some(i);
+        }
+        if t.is_punct(';') {
+            return None; // item without a body (e.g. `mod foo;`)
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Body ranges of every `fn item` (including closures is unnecessary: the
+/// heuristics only need "somewhere in this function").
+fn find_fn_bodies(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if tokens[i].is_ident("fn") {
+            // scan forward to the body's `{`, skipping the signature;
+            // `where` clauses and generics contain no bare `{`
+            let mut j = i + 1;
+            while j < tokens.len() {
+                if tokens[j].is_punct('(') || tokens[j].is_punct('[') {
+                    j = matching_close(tokens, j) + 1;
+                    continue;
+                }
+                if tokens[j].is_punct('{') {
+                    out.push((j, matching_close(tokens, j)));
+                    break;
+                }
+                if tokens[j].is_punct(';') {
+                    break; // trait method declaration without a body
+                }
+                j += 1;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_cfg_test_modules() {
+        let src = "fn live() { a.unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n fn t() { b.unwrap(); }\n}";
+        let f = SourceFile::new("x.rs".into(), src);
+        let unmasked: Vec<&str> = f
+            .tokens
+            .iter()
+            .zip(&f.masked)
+            .filter(|(_, m)| !**m)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(unmasked.contains(&"live"));
+        assert!(!unmasked.contains(&"b"));
+    }
+
+    #[test]
+    fn masks_test_fns_only() {
+        let src = "#[test]\nfn t() { x.unwrap(); }\nfn live() { y(); }";
+        let f = SourceFile::new("x.rs".into(), src);
+        let live: Vec<&str> = f
+            .tokens
+            .iter()
+            .zip(&f.masked)
+            .filter(|(_, m)| !**m)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(!live.contains(&"unwrap"));
+        assert!(live.contains(&"live"));
+    }
+
+    #[test]
+    fn fn_bodies_and_enclosing() {
+        let src = "fn a(x: usize) { inner(); }\nfn b() { other(); }";
+        let f = SourceFile::new("x.rs".into(), src);
+        assert_eq!(f.fn_bodies.len(), 2);
+        let inner = f.tokens.iter().position(|t| t.is_ident("inner")).unwrap();
+        let (lo, hi) = f.enclosing_fn(inner).unwrap();
+        assert!(lo < inner && inner < hi);
+        assert!(f.fn_contains_ident(inner, &["inner"]));
+        assert!(!f.fn_contains_ident(inner, &["other"]));
+    }
+}

@@ -1,0 +1,100 @@
+//! Fixture tests: each finding class demonstrated on a known-bad snippet
+//! with exact counts and codes, and known-good snippets staying clean.
+//! The fixtures are plain text to the linter (they are never compiled),
+//! loaded under synthetic paths so hot-path classification is explicit.
+
+use tezo_lint::findings::{Code, Finding};
+use tezo_lint::manifestx::ManifestContracts;
+use tezo_lint::rules;
+use tezo_lint::source::SourceFile;
+
+fn code_lint(path: &str, src: &str) -> Vec<Finding> {
+    let f = SourceFile::new(path.into(), src);
+    let mut out = Vec::new();
+    rules::rng_time::check(&f, &mut out);
+    rules::determinism::check(&f, &mut out);
+    rules::panics::check(&f, &mut out);
+    out
+}
+
+fn count(fs: &[Finding], code: Code) -> usize {
+    fs.iter().filter(|f| f.code == code).count()
+}
+
+#[test]
+fn bad_rng_fixture_exact_counts() {
+    // non-hot path: only the RNG rules should fire
+    let fs = code_lint("rust/src/tensor/fixture_rng.rs",
+                       include_str!("fixtures/bad_rng.rs"));
+    assert_eq!(count(&fs, Code::RngAmbient), 2, "{fs:?}");
+    assert_eq!(count(&fs, Code::RngWallClock), 2, "{fs:?}");
+    assert_eq!(count(&fs, Code::RngTimeSeed), 2, "{fs:?}");
+    assert_eq!(fs.len(), 6, "{fs:?}");
+}
+
+#[test]
+fn bad_hash_order_fixture_exact_counts() {
+    let fs = code_lint("rust/src/tensor/fixture_hash.rs",
+                       include_str!("fixtures/bad_hash_order.rs"));
+    assert_eq!(count(&fs, Code::DetHashOrder), 1, "{fs:?}");
+    assert_eq!(count(&fs, Code::DetPartialSort), 1, "{fs:?}");
+    assert_eq!(fs.len(), 2, "{fs:?}");
+}
+
+#[test]
+fn hot_bad_panics_fixture_exact_counts() {
+    let fs = code_lint("rust/src/runtime/fixture_panics.rs",
+                       include_str!("fixtures/hot_bad_panics.rs"));
+    assert_eq!(count(&fs, Code::PanicHotPath), 4, "{fs:?}");
+    assert_eq!(count(&fs, Code::IndexHotPath), 1, "{fs:?}");
+    assert_eq!(fs.len(), 5, "{fs:?}");
+}
+
+#[test]
+fn hot_path_classification_gates_panic_rules() {
+    // the same panicking fixture on a cold path yields zero findings
+    let fs = code_lint("rust/src/tensor/fixture_panics.rs",
+                       include_str!("fixtures/hot_bad_panics.rs"));
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    let fs = code_lint("rust/src/rngx/fixture_good.rs",
+                       include_str!("fixtures/good_rngx.rs"));
+    assert!(fs.is_empty(), "{fs:?}");
+    let fs = code_lint("rust/src/runtime/fixture_good.rs",
+                       include_str!("fixtures/good_hot_guarded.rs"));
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+fn artifact_lint(manifest_json: &str) -> Vec<Finding> {
+    let files = vec![SourceFile::new(
+        "rust/src/coordinator/optimizer/fixture_driver.rs".into(),
+        include_str!("fixtures/driver_bind.rs"),
+    )];
+    let ms = vec![ManifestContracts::from_json("fixtures/manifest.json",
+                                               manifest_json)
+        .expect("fixture manifest parses")];
+    let mut out = Vec::new();
+    rules::artifacts::check(&files, &ms, &mut out);
+    out
+}
+
+#[test]
+fn driver_matches_committed_manifest() {
+    let fs = artifact_lint(include_str!("fixtures/manifest_ok.json"));
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn seeded_manifest_slot_rename_is_caught() {
+    // manifest regenerated with `scalar/seed` renamed to `scalar/seed_lo`:
+    // the driver's bind_scalar_u32("seed", ..) must be flagged
+    let fs = artifact_lint(include_str!("fixtures/manifest_renamed.json"));
+    let mismatches: Vec<_> =
+        fs.iter().filter(|f| f.code == Code::ArtSlotMismatch).collect();
+    assert_eq!(mismatches.len(), 1, "{fs:?}");
+    assert!(mismatches[0].message.contains("seed"), "{fs:?}");
+    assert!(mismatches[0].file.contains("fixture_driver.rs"));
+}

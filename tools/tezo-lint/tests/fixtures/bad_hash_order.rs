@@ -1,0 +1,25 @@
+// Fixture: ordering-determinism violations.
+
+use std::collections::HashMap;
+
+fn hash_order_sum(m: &HashMap<u32, f32>) -> f32 {
+    let mut total = 0.0;
+    for (_, v) in m.iter() {
+        total += v; // TZ-DET001: hash order feeds float accumulation
+    }
+    total
+}
+
+fn nan_unsafe_sort(v: &mut Vec<f32>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap()); // TZ-DET002
+}
+
+fn sorted_emission(m: &HashMap<u32, f32>) -> f32 {
+    let mut keys: Vec<u32> = m.keys().copied().collect();
+    keys.sort_unstable();
+    let mut total = 0.0;
+    for k in keys {
+        total += m[&k]; // fine: iteration order fixed by the sort
+    }
+    total
+}

@@ -1,0 +1,25 @@
+// Fixture: RNG/time discipline violations. Never compiled — parsed by
+// the lint fixture tests, which assert the exact finding counts.
+
+fn ambient_entropy() -> u64 {
+    let mut r = rand::thread_rng(); // TZ-RNG001 x2 (`rand`, `thread_rng`)
+    r.next_u64()
+}
+
+fn wall_clock_id() -> u64 {
+    let t = SystemTime::now(); // TZ-RNG002
+    t.duration_since(UNIX_EPOCH).unwrap().as_secs() // TZ-RNG002 (UNIX_EPOCH)
+}
+
+fn time_seeded() -> u64 {
+    let start = Instant::now();
+    work();
+    let seed = start.elapsed().as_nanos() as u64; // TZ-RNG003 x2
+    seed
+}
+
+fn honest_timing() -> f64 {
+    let start = Instant::now();
+    work();
+    start.elapsed().as_secs_f64() // fine: no seed sink in the statement
+}

@@ -1,0 +1,13 @@
+// Fixture: a driver forward pass in the repo's prepared-call idiom.
+// Checked against manifest_ok.json (clean) and manifest_renamed.json
+// (seed slot renamed → TZ-ART002).
+
+fn forward(ctx: &mut Ctx, seed: u32) -> Result<(f32, f32)> {
+    let mut call = ctx.rt.prepared("mezo_loss_pm")?;
+    call.bind_bufs("param", ctx.params.bufs())?;
+    call.bind_i32("batch", "tokens", &ctx.batch.tokens, ctx.arena)?;
+    call.bind_scalar_u32("seed", seed, ctx.arena)?;
+    call.bind_scalar_f32("rho", ctx.cfg.rho, ctx.arena)?;
+    let out = call.run()?;
+    Ok((out[0], out[1]))
+}

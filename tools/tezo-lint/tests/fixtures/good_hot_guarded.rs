@@ -1,0 +1,22 @@
+// Fixture: hot-path code with visible bounds discipline and typed
+// errors — zero findings expected under a runtime/ path.
+
+fn checked_sum(v: &[f32], n: usize) -> Result<f32, String> {
+    if n > v.len() {
+        return Err(format!("n {n} exceeds {}", v.len()));
+    }
+    let mut total = 0.0f64;
+    for x in &v[..n] {
+        total += *x as f64;
+    }
+    Ok(total as f32)
+}
+
+fn paired(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert!(a.len() == b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn lookup(v: &[f32], i: usize) -> Option<f32> {
+    v.get(i).copied()
+}

@@ -1,0 +1,15 @@
+// Fixture: clean seed-deterministic code — zero findings expected even
+// under a hot-path location.
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+fn stream_seed(run_seed: u64, stream: u64) -> u64 {
+    let mut s = run_seed ^ stream.wrapping_mul(0xd1342543de82ef95);
+    splitmix(&mut s)
+}

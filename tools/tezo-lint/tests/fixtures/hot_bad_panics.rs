@@ -1,0 +1,27 @@
+// Fixture: hot-path panic violations (lint tests load this under a
+// runtime/ path so the hot-path rules apply).
+
+fn unwraps(x: Option<u32>, y: Result<u32, ()>) -> u32 {
+    x.unwrap() + y.expect("y must be set") // TZ-PANIC001 x2
+}
+
+fn diverging(kind: u8) -> u32 {
+    match kind {
+        0 => panic!("bad kind"),     // TZ-PANIC001
+        1 => unreachable!("no path"), // TZ-PANIC001
+        _ => 0,
+    }
+}
+
+fn unguarded(v: &[f32], i: usize) -> f32 {
+    v[i] // TZ-PANIC002: no len/get/assert discipline in this fn
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let v = vec![1.0f32];
+        assert_eq!(v[0], Some(1.0f32).unwrap()); // exempt: test code
+    }
+}

@@ -1,0 +1,52 @@
+//! The committed workspace must be clean under `--deny-all`: every
+//! finding either fixed or carried in `lint/allowlist.txt` with a
+//! justification. This is the same check CI's invariants job runs via
+//! `cargo tezo-lint`; keeping it as a test means `cargo test
+//! --manifest-path tools/tezo-lint/Cargo.toml` catches a regression
+//! before the workflow does.
+
+use tezo_lint::{finalize, findings, has_errors, load_manifests, load_sources,
+                run_artifact_lint, run_code_lint, Config};
+
+fn repo_root() -> std::path::PathBuf {
+    // tools/tezo-lint -> repo root
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    dir.canonicalize().unwrap_or(dir)
+}
+
+#[test]
+fn workspace_is_clean_under_deny_all() {
+    let cfg = Config::new(repo_root());
+    let files = load_sources(&cfg).expect("load sources");
+    assert!(
+        files.iter().any(|f| f.path.starts_with("rust/src")),
+        "scan roots resolved no rust/src files — repo root detection broke"
+    );
+    let manifests = load_manifests(&cfg).expect("load manifests");
+    assert!(!manifests.is_empty(), "no artifacts/*/manifest.json found");
+
+    let mut all = run_code_lint(&files);
+    all.extend(run_artifact_lint(&files, &manifests));
+    let all = finalize(&cfg, all);
+
+    if has_errors(&all) {
+        panic!(
+            "workspace not clean under --deny-all:\n{}",
+            findings::render_text(&all)
+        );
+    }
+}
+
+#[test]
+fn artifact_lint_alone_is_clean() {
+    let cfg = Config::new(repo_root());
+    let files = load_sources(&cfg).expect("load sources");
+    let manifests = load_manifests(&cfg).expect("load manifests");
+    let arts = finalize(&cfg, run_artifact_lint(&files, &manifests));
+    if has_errors(&arts) {
+        panic!(
+            "artifact contract drift:\n{}",
+            findings::render_text(&arts)
+        );
+    }
+}
