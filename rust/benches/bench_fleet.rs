@@ -9,12 +9,13 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use tezo::benchkit::{bench, fmt_time, BenchOpts, Report};
+use tezo::benchkit::{bench, fmt_time, write_json_value, BenchOpts, Report};
 use tezo::config::{FleetConfig, Method, TrainConfig};
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
 use tezo::fleet::protocol::{aggregate_two_point, Command, Event, Ticket};
 use tezo::fleet::{task_job_factory, FleetTrainer};
+use tezo::jsonx::Value;
 use tezo::memmodel::comm;
 use tezo::runtime::{Manifest, ParamStore, Runtime};
 
@@ -51,7 +52,9 @@ fn protocol_round_trip(rep: &mut Report, opts: BenchOpts, workers: usize) {
                         });
                     }
                     Command::Stop => return,
-                    Command::Eval { .. } => {}
+                    Command::Eval { .. }
+                    | Command::Checkpoint { .. }
+                    | Command::CatchUp(_) => {}
                 }
             }
         }));
@@ -141,6 +144,43 @@ fn fleet_scaling(rep: &mut Report, dir: &std::path::Path, steps: usize) {
     }
 }
 
+/// Wire bytes per step x worker count: the logical scalar-ticket payload
+/// (what `CommStats::total_bytes` counts) vs the framed bytes the TCP
+/// transport actually moves (length prefix + tag + result metadata; what
+/// `CommStats::total_wire_bytes` counts). Both are per-worker-linear and
+/// model-size-independent — the row pins the framing overhead ratio into
+/// the perf trajectory.
+fn wire_bytes_table() -> Value {
+    let mut rep = Report::new(
+        "wire bytes per step (q=1 perturbation)",
+        &["logical B", "framed B", "overhead", "vs all-reduce (1M params)"],
+    );
+    let mut rows: Vec<Value> = Vec::new();
+    for workers in [1u64, 2, 4, 8] {
+        let logical = comm::zo_scalar_step_bytes(workers, 1);
+        let framed = comm::zo_scalar_step_wire_bytes(workers, 1);
+        let allreduce = comm::gradient_allreduce_step_bytes(1_000_000, workers);
+        rep.add_row(&format!("W={workers}"), vec![
+            format!("{logical}"),
+            format!("{framed}"),
+            format!("{:.2}x", framed as f64 / logical.max(1) as f64),
+            format!("{:.1e}x", allreduce as f64 / framed.max(1) as f64),
+        ]);
+        rows.push(Value::obj(vec![
+            ("workers", Value::i(workers as i64)),
+            ("logical_bytes_per_step", Value::i(logical as i64)),
+            ("framed_bytes_per_step", Value::i(framed as i64)),
+        ]));
+    }
+    rep.print();
+    rep.write_csv(std::path::Path::new("out/fleet_wire_bytes.csv")).ok();
+    Value::obj(vec![
+        ("per_worker_count", Value::arr(rows)),
+        ("frame_header_bytes", Value::i(comm::FRAME_HEADER_BYTES as i64)),
+        ("result_meta_bytes", Value::i(comm::RESULT_META_BYTES as i64)),
+    ])
+}
+
 fn main() {
     let opts = BenchOpts::from_env();
     let mut rep = Report::new(
@@ -152,6 +192,17 @@ fn main() {
     }
     rep.print();
     rep.write_csv(std::path::Path::new("out/fleet_protocol_bench.csv")).ok();
+
+    let wire = wire_bytes_table();
+    let doc = Value::obj(vec![
+        ("snapshot", Value::str("fleet wire bytes: logical vs framed")),
+        ("wire_bytes", wire),
+    ]);
+    let path = std::path::PathBuf::from("out/BENCH_PR7.json");
+    match write_json_value(&path, &doc) {
+        Ok(()) => println!("wire-bytes snapshot -> {}", path.display()),
+        Err(e) => println!("(snapshot write failed: {e})"),
+    }
 
     let dir = tezo::artifacts_root().join("tiny");
     if dir.join("manifest.json").exists() {

@@ -163,7 +163,10 @@ impl LrSchedule {
 }
 
 /// Run-time training configuration (one fine-tuning job).
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` because the fleet's TCP handshake ships the whole config to
+/// joining workers and tests assert the round trip is lossless.
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     pub method: Method,
     pub steps: usize,
@@ -245,6 +248,19 @@ impl TrainConfig {
     }
 }
 
+/// What the coordinator does about workers that miss a round deadline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StragglerPolicy {
+    /// wait indefinitely for every live worker (the original semantics;
+    /// straggling is *measured* via the critical-path spread but never
+    /// acted on)
+    Wait,
+    /// after `timeout_ms` without the round completing, kick the workers
+    /// that have not answered and broadcast a lockstep skip for the round
+    /// (replicas stay bit-identical; the step's loss is recorded as NaN)
+    DropSkip { timeout_ms: u64 },
+}
+
 /// Data-parallel fleet configuration (the seed-synchronized ZO fleet of
 /// [`crate::fleet`]; see docs/fleet.md).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -252,17 +268,31 @@ pub struct FleetConfig {
     /// worker replicas; each owns a private runtime + parameter replica and
     /// one disjoint data shard
     pub workers: usize,
+    /// round-deadline policy (default: wait forever, as before)
+    pub straggler: StragglerPolicy,
+    /// publish a step checkpoint every N completed steps so rejoining
+    /// workers can catch up from it instead of replaying the whole run
+    /// (0 = no intermediate checkpoints; the catch-up log is never pruned)
+    pub checkpoint_every: usize,
+    /// how many worker deaths the run tolerates before aborting
+    /// (0 = the original fail-fast behavior)
+    pub max_restarts: usize,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        Self { workers: 1 }
+        Self {
+            workers: 1,
+            straggler: StragglerPolicy::Wait,
+            checkpoint_every: 0,
+            max_restarts: 0,
+        }
     }
 }
 
 impl FleetConfig {
     pub fn new(workers: usize) -> Self {
-        Self { workers }
+        Self { workers, ..Self::default() }
     }
 
     /// Validate against the training config the fleet will replicate.
@@ -275,6 +305,20 @@ impl FleetConfig {
                    gradient-sized all-reduce, which the scalar-sync fleet \
                    exists to avoid",
                   train.method.name());
+        }
+        if self.max_restarts > 0 || self.checkpoint_every > 0 {
+            // catch-up replay rebuilds a rejoining replica from
+            // (perturb_seed, kappa) scalars alone; that is only exact for
+            // methods whose update is a pure function of those scalars —
+            // momentum/Adam variants carry state the log does not capture
+            let ok = matches!(train.method,
+                Method::Mezo | Method::Lozo | Method::Subzo | Method::Tezo);
+            if !ok {
+                bail!("fleet fault tolerance (max_restarts/checkpoint_every) \
+                       requires a stateless SGD-form method \
+                       (mezo|lozo|subzo|tezo): {} keeps optimizer state the \
+                       catch-up log cannot replay", train.method.name());
+            }
         }
         Ok(())
     }
@@ -362,6 +406,16 @@ mod tests {
         fo.method = Method::FoAdam;
         assert!(FleetConfig::new(2).validate(&fo).is_err(),
                 "first-order methods cannot ride the scalar-sync fleet");
+        // fault tolerance needs an exactly replayable (stateless) method
+        let mut stateful = TrainConfig::default();
+        stateful.method = Method::TezoAdam;
+        let mut ft = FleetConfig::new(2);
+        ft.max_restarts = 1;
+        assert!(ft.validate(&stateful).is_err());
+        assert!(ft.validate(&TrainConfig::default()).is_ok());
+        let mut ck = FleetConfig::new(2);
+        ck.checkpoint_every = 10;
+        assert!(ck.validate(&stateful).is_err());
     }
 
     #[test]

@@ -94,6 +94,18 @@ impl PhaseTimers {
         self.upload_reused_bytes
     }
 
+    /// Raw field tuple for serialization (the fleet wire codec ships the
+    /// per-worker report over TCP): `(secs, counts, upload, reused)`.
+    pub fn parts(&self) -> ([f64; 5], [u64; 5], u64, u64) {
+        (self.secs, self.counts, self.upload_bytes, self.upload_reused_bytes)
+    }
+
+    /// Rebuild from [`Self::parts`] output (wire decode).
+    pub fn from_parts(secs: [f64; 5], counts: [u64; 5], upload_bytes: u64,
+                      upload_reused_bytes: u64) -> Self {
+        Self { secs, counts, upload_bytes, upload_reused_bytes }
+    }
+
     pub fn seconds(&self, phase: Phase) -> f64 {
         self.secs[Self::slot(phase)]
     }

@@ -10,40 +10,86 @@
 //! locally through [`StepEngine::update_sub`], so parameter replicas never
 //! diverge (checked by the workers' seed cross-check and by the
 //! fleet determinism tests).
+//!
+//! [`StepEngine::update_sub`]: crate::coordinator::step::StepEngine::update_sub
+//!
+//! # Fault tolerance
+//!
+//! The drive loop speaks to an abstract [`Hub`] (in-process loopback or
+//! TCP) and treats membership as dynamic. The invariant that buys bitwise
+//! reproducibility: **a round never aggregates over fewer than N shards**.
+//! If a worker dies mid-round the round *stalls* — the departure is charged
+//! to the restart budget, a replacement (re)joins, converges via the
+//! catch-up protocol (last published checkpoint + the (seed, kappa) log),
+//! and answers the re-sent ticket — so the N-slot aggregation, and
+//! therefore the whole trajectory, is bit-identical to an uninterrupted
+//! run (asserted by `tests/chaos_fleet.rs`). The only deliberately
+//! non-bitwise path is [`StragglerPolicy::DropSkip`], which abandons a
+//! round in lockstep instead of waiting for it.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::config::{FleetConfig, TrainConfig};
+use crate::config::{FleetConfig, StragglerPolicy, TrainConfig};
 use crate::coordinator::metrics::TrainMetrics;
 use crate::coordinator::optimizer::ForwardOut;
 use crate::coordinator::step::StepEngine;
 
 use super::metrics::FleetMetrics;
-use super::protocol::{aggregate_two_point, Command, Event, Ticket, WorkerReport};
-use super::worker::{self, JobFactory};
+use super::protocol::{aggregate_two_point, CatchUp, Command, Event, LogEntry,
+                      Ticket, WorkerReport};
+use super::tcp::{AckInfo, TcpHub};
+use super::transport::{Hub, HubEvent, LoopbackHub};
+use super::wire::JobSpec;
+use super::worker::{self, JobFactory, ReplicaFactory};
+
+/// How often gather loops wake up to re-check round state and deadlines.
+const POLL_QUANTUM: Duration = Duration::from_millis(200);
+/// With zero live workers mid-run, how long to wait for a (re)join before
+/// declaring the fleet dead.
+const DEAD_FLEET_STALL: Duration = Duration::from_secs(60);
+
+/// Which wire the fleet runs on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// in-process worker threads over channels (the default; bit-identical
+    /// to TCP by the parity tests)
+    Loopback,
+    /// bind this address and wait for `workers` remote `tezo train-dp
+    /// --connect` processes to dial in
+    TcpListen(String),
+}
+
+/// Coordinator-side chaos hook: called at each step boundary with the step
+/// about to run; every returned slot is forcibly disconnected first. The
+/// departures are charged to the restart budget like real crashes.
+pub type KillPlan = Box<dyn FnMut(u64) -> Vec<usize> + Send>;
 
 /// Result of one fleet run.
 pub struct FleetOutcome {
     /// global loss curve / evals / wall time (same shape as a single-process
     /// [`TrainOutcome`](crate::coordinator::trainer::TrainOutcome))
     pub metrics: TrainMetrics,
-    /// fleet-only accounting: per-worker phases, stragglers, comm bytes
+    /// fleet-only accounting: per-worker phases, stragglers, comm bytes,
+    /// fault-tolerance counters
     pub fleet: FleetMetrics,
-    /// end-of-run per-worker reports (worker order)
+    /// end-of-run per-worker reports (worker order; a worker that died
+    /// without reporting gets a default-valued report)
     pub workers: Vec<WorkerReport>,
     /// non-finite steps skipped in lockstep
     pub skipped: u64,
     /// optimizer state bytes of one replica
     pub state_bytes: u64,
+    /// the full (seed, kappa) update trace — what a rejoiner would replay;
+    /// the chaos tests compare it bitwise against the single-process oracle
+    pub trace: Vec<LogEntry>,
 }
 
-/// Seed-synchronized data-parallel trainer: N worker threads, each with a
+/// Seed-synchronized data-parallel trainer: N worker replicas, each with a
 /// private runtime + parameter replica and a disjoint data shard, driven by
-/// scalar tickets from this coordinator.
+/// scalar tickets from this coordinator over loopback channels or TCP.
 pub struct FleetTrainer {
     pub fleet: FleetConfig,
     pub cfg: TrainConfig,
@@ -55,12 +101,60 @@ pub struct FleetTrainer {
     pub job_factory: Box<JobFactory>,
     /// optional per-step observer (step, global loss)
     pub on_step: Option<Box<dyn FnMut(u64, f64) + Send>>,
+    /// which wire the fleet runs on (default: loopback threads)
+    pub transport: Transport,
+    /// job description shipped to TCP workers in the handshake
+    pub job_spec: JobSpec,
+    /// where step checkpoints are published (loopback workers; TCP workers
+    /// pass their own `--checkpoint-dir`)
+    pub checkpoint_dir: Option<PathBuf>,
+    /// chaos hook: slots to kill at each step boundary
+    pub kill_plan: Option<KillPlan>,
+    /// test injection: replace the PJRT-backed replica with a custom one
+    /// (loopback only; see `fleet::sim`)
+    pub replica_factory: Option<Box<ReplicaFactory>>,
 }
 
 impl FleetTrainer {
     pub fn new(fleet: FleetConfig, cfg: TrainConfig, artifact_dir: PathBuf,
                job_factory: Box<JobFactory>) -> Self {
-        Self { fleet, cfg, artifact_dir, job_factory, on_step: None }
+        Self {
+            fleet,
+            cfg,
+            artifact_dir,
+            job_factory,
+            on_step: None,
+            transport: Transport::Loopback,
+            job_spec: JobSpec::default(),
+            checkpoint_dir: None,
+            kill_plan: None,
+            replica_factory: None,
+        }
+    }
+
+    pub fn with_transport(mut self, transport: Transport) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    pub fn with_job_spec(mut self, job_spec: JobSpec) -> Self {
+        self.job_spec = job_spec;
+        self
+    }
+
+    pub fn with_checkpoint_dir(mut self, dir: PathBuf) -> Self {
+        self.checkpoint_dir = Some(dir);
+        self
+    }
+
+    pub fn with_kill_plan(mut self, plan: KillPlan) -> Self {
+        self.kill_plan = Some(plan);
+        self
+    }
+
+    pub fn with_replica_factory(mut self, make: Box<ReplicaFactory>) -> Self {
+        self.replica_factory = Some(make);
+        self
     }
 
     /// Run the configured number of steps across the fleet.
@@ -69,83 +163,574 @@ impl FleetTrainer {
         self.fleet.validate(&self.cfg)?;
         let workers = self.fleet.workers;
         let engine = StepEngine::new(self.cfg.clone());
+        let fleet_cfg = self.fleet;
         let mut on_step = self.on_step.take();
+        let mut kill_plan = self.kill_plan.take();
         let factory: &JobFactory = &*self.job_factory;
+        let custom: Option<&ReplicaFactory> = self.replica_factory.as_deref();
         let dir = self.artifact_dir.clone();
         let cfg = self.cfg.clone();
+        let seed = cfg.seed;
+        let checkpoint_dir = self.checkpoint_dir.clone();
 
-        std::thread::scope(|scope| {
-            let (etx, erx) = mpsc::channel::<Event>();
-            let mut cmd_txs: Vec<Sender<Command>> = Vec::with_capacity(workers);
-            for w in 0..workers {
-                let (ctx, crx) = mpsc::channel::<Command>();
-                cmd_txs.push(ctx);
-                let etx = etx.clone();
-                let dir = dir.clone();
-                let cfg = cfg.clone();
-                scope.spawn(move || {
-                    worker::run_worker(w, workers as u32, &dir, &cfg, factory,
-                                       crx, etx)
-                });
+        match self.transport.clone() {
+            Transport::Loopback => std::thread::scope(|scope| {
+                let (mut hub, hub_tx) = LoopbackHub::new(workers);
+                // spawner doubles as the crash-restart path: every `Left`
+                // within the restart budget respawns the slot's thread,
+                // which rejoins and catches up before taking tickets
+                let mut spawn_worker = |w: usize| {
+                    let hub_tx = hub_tx.clone();
+                    match custom {
+                        Some(make) => {
+                            scope.spawn(move || {
+                                worker::run_custom_loopback(
+                                    w, workers as u32, seed, make, hub_tx);
+                            });
+                        }
+                        None => {
+                            let dir = dir.clone();
+                            let cfg = cfg.clone();
+                            let ckpt = checkpoint_dir.clone();
+                            scope.spawn(move || {
+                                worker::run_worker_loopback(
+                                    w, workers as u32, &dir, &cfg, factory,
+                                    hub_tx, ckpt);
+                            });
+                        }
+                    }
+                };
+                for w in 0..workers {
+                    spawn_worker(w);
+                }
+                let out = drive(&engine, &fleet_cfg, &mut hub, &mut on_step,
+                                &mut spawn_worker, &mut kill_plan);
+                // dropping the hub drops every command sender: workers
+                // unblock, see a closed link, and exit so the scope can
+                // join instead of hanging on error paths
+                drop(hub);
+                out
+            }),
+            Transport::TcpListen(addr) => {
+                let ack = AckInfo { cfg: cfg.clone(),
+                                    job: self.job_spec.clone() };
+                let mut hub = TcpHub::listen(&addr, workers, ack)?;
+                // TCP workers own their reconnect loop; a departed slot is
+                // refilled by the worker process dialing back in
+                let mut no_respawn = |_w: usize| {};
+                drive(&engine, &fleet_cfg, &mut hub, &mut on_step,
+                      &mut no_respawn, &mut kill_plan)
             }
-            drop(etx); // the coordinator only receives
-            let out = drive(&engine, workers, &cmd_txs, &erx, &mut on_step);
-            // on error, dropping the command channels unblocks every worker
-            // so the scope can join instead of hanging
-            drop(cmd_txs);
-            out
-        })
-    }
-}
-
-/// Broadcast a command to every worker.
-fn broadcast(cmd_txs: &[Sender<Command>], cmd: Command) -> Result<()> {
-    for tx in cmd_txs {
-        tx.send(cmd).map_err(|_| anyhow!("a worker exited early"))?;
-    }
-    Ok(())
-}
-
-fn recv(erx: &Receiver<Event>) -> Result<Event> {
-    erx.recv().map_err(|_| anyhow!("all workers exited before reporting"))
-}
-
-/// Collect one `Applied` ack per worker for (step, sub).
-fn collect_acks(erx: &Receiver<Event>, workers: usize, step: u64, sub: u32)
-                -> Result<Vec<f64>> {
-    let mut times = vec![0.0f64; workers];
-    let mut seen = vec![false; workers];
-    for _ in 0..workers {
-        match recv(erx)? {
-            Event::Applied { worker, step: s, sub: sb, update_secs } => {
-                ensure!(s == step && sb == sub,
-                        "ack for ({s},{sb}) during ({step},{sub})");
-                ensure!(!seen[worker], "duplicate ack from worker {worker}");
-                seen[worker] = true;
-                times[worker] = update_secs;
-            }
-            Event::Failed { worker, error } => {
-                bail!("worker {worker} failed: {error}")
-            }
-            other => bail!("unexpected event during ack wait: {other:?}"),
         }
     }
-    Ok(times)
+}
+
+/// Drive-loop state: membership, the catch-up log, and fleet accounting.
+struct Drive<'a> {
+    fc: &'a FleetConfig,
+    hub: &'a mut dyn Hub,
+    /// loopback crash-restart hook (no-op for TCP)
+    respawn: &'a mut dyn FnMut(usize),
+    alive: Vec<bool>,
+    /// initial staffing complete; joins after this are rejoins and get the
+    /// catch-up protocol
+    staffed: bool,
+    /// departures charged to the restart budget
+    deaths: usize,
+    /// departures we caused via straggler kicks (not charged)
+    pending_drops: usize,
+    last_failure: Option<String>,
+    last_event: Instant,
+    /// prunable catch-up log (entries since the last published checkpoint)
+    log: Vec<LogEntry>,
+    /// full run trace (never pruned; returned in [`FleetOutcome`])
+    trace: Vec<LogEntry>,
+    last_checkpoint: Option<u64>,
+    fleet: FleetMetrics,
+}
+
+impl Drive<'_> {
+    fn workers(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Once any departure or drop has happened, late events from the old
+    /// incarnation of a slot are legitimate and get discarded; in a
+    /// fault-free run they indicate a protocol bug and abort.
+    fn lenient(&self) -> bool {
+        self.deaths > 0 || self.fleet.drops > 0
+    }
+
+    fn stale(&mut self, ev: Event, ctx: &str) -> Result<()> {
+        if self.lenient() {
+            self.fleet.stale_events += 1;
+            Ok(())
+        } else {
+            bail!("unexpected event during {ctx}: {ev:?}")
+        }
+    }
+
+    /// Send, treating a down link as a pending departure: the authoritative
+    /// [`HubEvent::Left`] is still in flight and does the budget/respawn
+    /// accounting; marking the slot dead here just stops resend spinning.
+    fn try_send(&mut self, w: usize, cmd: &Command) -> bool {
+        match self.hub.send(w, cmd) {
+            Ok(()) => true,
+            Err(_) => {
+                if let Some(a) = self.alive.get_mut(w) {
+                    *a = false;
+                }
+                false
+            }
+        }
+    }
+
+    fn poll_next(&mut self) -> Result<Option<HubEvent>> {
+        let ev = self.hub.poll(POLL_QUANTUM)?;
+        if ev.is_some() {
+            self.last_event = Instant::now();
+        } else if self.staffed
+            && !self.alive.iter().any(|&a| a)
+            && self.last_event.elapsed() > DEAD_FLEET_STALL
+        {
+            match &self.last_failure {
+                Some(e) => bail!("every worker is gone and none rejoined \
+                                  within {}s (last failure: {e})",
+                                 DEAD_FLEET_STALL.as_secs()),
+                None => bail!("every worker is gone and none rejoined \
+                               within {}s", DEAD_FLEET_STALL.as_secs()),
+            }
+        }
+        Ok(ev)
+    }
+
+    fn on_joined(&mut self, w: usize) -> Result<()> {
+        ensure!(w < self.alive.len(), "join for unknown slot {w}");
+        self.alive[w] = true;
+        if self.staffed {
+            // a rejoin: converge the fresh replica on the fleet's current
+            // parameters before it sees any ticket (per-link ordering
+            // guarantees the CatchUp precedes the next Forward)
+            self.fleet.rejoins += 1;
+            let cmd = Command::CatchUp(CatchUp {
+                checkpoint_step: self.last_checkpoint,
+                entries: self.log.clone(),
+            });
+            self.try_send(w, &cmd);
+        }
+        Ok(())
+    }
+
+    fn on_left(&mut self, w: usize) -> Result<()> {
+        ensure!(w < self.alive.len(), "departure of unknown slot {w}");
+        self.alive[w] = false;
+        if self.pending_drops > 0 {
+            // a deliberate straggler kick, already counted in fleet.drops —
+            // it does not consume the crash-restart budget
+            self.pending_drops -= 1;
+        } else {
+            self.deaths += 1;
+            if self.deaths > self.fc.max_restarts {
+                match &self.last_failure {
+                    Some(e) => bail!("worker {w} failed: {e}"),
+                    None => bail!("worker {w} left the fleet and the restart \
+                                   budget ({}) is exhausted",
+                                  self.fc.max_restarts),
+                }
+            }
+        }
+        (self.respawn)(w);
+        Ok(())
+    }
+
+    fn on_failed(&mut self, w: usize, error: String) -> Result<()> {
+        if self.fc.max_restarts == 0 {
+            // the original fail-fast semantics
+            bail!("worker {w} failed: {error}");
+        }
+        // tolerate it: the matching Left does the accounting, and the error
+        // text is kept for the eventual budget-exhausted report
+        self.last_failure = Some(error);
+        Ok(())
+    }
+
+    /// Wait for every slot to be claimed (loopback threads were just
+    /// spawned; TCP workers dial in on their own schedule).
+    fn staff(&mut self) -> Result<()> {
+        while !self.alive.iter().all(|&a| a) {
+            match self.poll_next()? {
+                None => {}
+                Some(HubEvent::Joined(w)) => self.on_joined(w)?,
+                Some(HubEvent::Left(w)) => self.on_left(w)?,
+                Some(HubEvent::Msg(_, Event::Failed { worker, error })) => {
+                    self.on_failed(worker, error)?;
+                }
+                Some(HubEvent::Msg(_, ev)) => self.stale(ev, "staffing")?,
+            }
+        }
+        self.staffed = true;
+        Ok(())
+    }
+
+    /// One forward round: a full N-slot gather of two-point results for
+    /// `ticket`. Stalls through departures (the rejoin + catch-up + resend
+    /// path refills the missing slot), so `Some` always carries exactly N
+    /// measurements — the bitwise-identity invariant. `None` means the
+    /// DropSkip straggler policy abandoned the round.
+    fn forward_round(&mut self, ticket: Ticket)
+                     -> Result<Option<(Vec<(f32, f32)>, Vec<f64>)>> {
+        let n = self.workers();
+        let mut slots: Vec<Option<(f32, f32)>> = vec![None; n];
+        let mut sent = vec![false; n];
+        let mut times = vec![0.0f64; n];
+        let t0 = Instant::now();
+        loop {
+            // (re)send to every live worker that has neither an outstanding
+            // ticket nor a result — a rejoiner gets exactly one resend, so a
+            // duplicate result below is a hard protocol violation
+            for w in 0..n {
+                if self.alive[w] && !sent[w] && slots[w].is_none()
+                    && self.try_send(w, &Command::Forward(ticket))
+                {
+                    sent[w] = true;
+                    self.fleet.comm.on_tickets(1);
+                }
+            }
+            if slots.iter().all(|s| s.is_some()) {
+                let pairs = slots.iter().filter_map(|s| *s).collect();
+                return Ok(Some((pairs, times)));
+            }
+            match self.poll_next()? {
+                None => {
+                    if let StragglerPolicy::DropSkip { timeout_ms } =
+                        self.fc.straggler
+                    {
+                        // only a *relative* straggler is dropped: if nobody
+                        // answered, the fleet is uniformly slow and we wait
+                        let some_answered = slots.iter().any(|s| s.is_some());
+                        if some_answered
+                            && t0.elapsed() >= Duration::from_millis(timeout_ms)
+                        {
+                            for w in 0..n {
+                                if slots[w].is_none() && self.alive[w] {
+                                    self.hub.kick(w);
+                                    self.alive[w] = false;
+                                    self.fleet.drops += 1;
+                                    self.pending_drops += 1;
+                                }
+                            }
+                            return Ok(None);
+                        }
+                    }
+                }
+                Some(HubEvent::Joined(w)) => self.on_joined(w)?,
+                Some(HubEvent::Left(w)) => {
+                    self.on_left(w)?;
+                    // the replacement needs its own ticket
+                    if let Some(s) = sent.get_mut(w) {
+                        *s = false;
+                    }
+                }
+                Some(HubEvent::Msg(from, ev)) => match ev {
+                    Event::TwoPoint { worker, step, sub, f_plus, f_minus,
+                                      forward_secs }
+                        if worker == from && step == ticket.step
+                            && sub == ticket.sub =>
+                    {
+                        ensure!(worker < n,
+                                "result from unknown worker {worker}");
+                        ensure!(slots[worker].is_none(),
+                                "duplicate result from worker {worker}");
+                        slots[worker] = Some((f_plus, f_minus));
+                        times[worker] = forward_secs;
+                        self.fleet.comm.on_results(1);
+                    }
+                    Event::Failed { worker, error } => {
+                        self.on_failed(worker, error)?;
+                    }
+                    other => self.stale(other, "forward wait")?,
+                },
+            }
+        }
+    }
+
+    /// Broadcast the round's outcome (Apply with the aggregated kappa, or a
+    /// lockstep Skip) and gather acks from the workers it reached. The log
+    /// entry is appended *before* the gather, so a worker joining mid-wait
+    /// receives a catch-up log that already covers this round.
+    fn ack_round(&mut self, ticket: Ticket, kappa: Option<f32>)
+                 -> Result<Vec<f64>> {
+        let entry = LogEntry {
+            step: ticket.step,
+            sub: ticket.sub,
+            perturb_seed: ticket.perturb_seed,
+            kappa,
+        };
+        self.log.push(entry);
+        self.trace.push(entry);
+        let n = self.workers();
+        let cmd = match kappa {
+            Some(k) => Command::Apply { ticket, kappa: k },
+            None => Command::Skip { ticket },
+        };
+        let mut expect = vec![false; n];
+        for w in 0..n {
+            if self.alive[w] && self.try_send(w, &cmd) {
+                expect[w] = true;
+                self.fleet.comm.on_broadcasts(1);
+            }
+        }
+        let mut got = vec![false; n];
+        let mut times = vec![0.0f64; n];
+        while expect.iter().zip(got.iter()).any(|(&e, &g)| e && !g) {
+            match self.poll_next()? {
+                None => {}
+                // not added to the ack set: its catch-up replay (which
+                // includes this entry) is the acknowledgement
+                Some(HubEvent::Joined(w)) => self.on_joined(w)?,
+                Some(HubEvent::Left(w)) => {
+                    self.on_left(w)?;
+                    if let Some(e) = expect.get_mut(w) {
+                        *e = false;
+                    }
+                }
+                Some(HubEvent::Msg(from, ev)) => match ev {
+                    Event::Applied { worker, step, sub, update_secs } => {
+                        if worker == from && worker < n
+                            && step == ticket.step && sub == ticket.sub
+                            && expect[worker] && !got[worker]
+                        {
+                            got[worker] = true;
+                            times[worker] = update_secs;
+                        } else {
+                            self.stale(Event::Applied { worker, step, sub,
+                                                        update_secs },
+                                       "ack wait")?;
+                        }
+                    }
+                    Event::Failed { worker, error } => {
+                        self.on_failed(worker, error)?;
+                    }
+                    other => self.stale(other, "ack wait")?,
+                },
+            }
+        }
+        Ok(times)
+    }
+
+    /// Publish a step checkpoint (`step_done` = completed-step count) to
+    /// the lowest live slot, retargeting on departure. On success the
+    /// catch-up log is pruned to entries the checkpoint does not cover.
+    fn checkpoint_round(&mut self, step_done: u64) -> Result<()> {
+        'retry: loop {
+            let Some(target) = self.alive.iter().position(|&a| a) else {
+                self.pump_membership("checkpoint")?;
+                continue;
+            };
+            if !self.try_send(target, &Command::Checkpoint { step: step_done })
+            {
+                continue;
+            }
+            loop {
+                match self.poll_next()? {
+                    None => {}
+                    Some(HubEvent::Joined(w)) => self.on_joined(w)?,
+                    Some(HubEvent::Left(w)) => {
+                        self.on_left(w)?;
+                        if w == target {
+                            continue 'retry;
+                        }
+                    }
+                    Some(HubEvent::Msg(from, ev)) => match ev {
+                        Event::CheckpointDone { worker, step }
+                            if worker == from && worker == target
+                                && step == step_done =>
+                        {
+                            self.last_checkpoint = Some(step_done);
+                            self.log.retain(|e| e.step >= step_done);
+                            self.fleet.checkpoints += 1;
+                            return Ok(());
+                        }
+                        Event::Failed { worker, error } => {
+                            self.on_failed(worker, error)?;
+                        }
+                        other => self.stale(other, "checkpoint wait")?,
+                    },
+                }
+            }
+        }
+    }
+
+    /// Held-out eval on the lowest live slot (worker 0 in a healthy fleet —
+    /// it is the one carrying the eval set), retargeting on departure.
+    /// `None` when the answering replica has no eval set.
+    fn eval_round(&mut self, step: u64) -> Result<Option<f64>> {
+        'retry: loop {
+            let Some(target) = self.alive.iter().position(|&a| a) else {
+                self.pump_membership("eval")?;
+                continue;
+            };
+            if !self.try_send(target, &Command::Eval { step }) {
+                continue;
+            }
+            loop {
+                match self.poll_next()? {
+                    None => {}
+                    Some(HubEvent::Joined(w)) => self.on_joined(w)?,
+                    Some(HubEvent::Left(w)) => {
+                        self.on_left(w)?;
+                        if w == target {
+                            continue 'retry;
+                        }
+                    }
+                    Some(HubEvent::Msg(from, ev)) => match ev {
+                        Event::EvalDone { worker, step: s, accuracy }
+                            if worker == from && worker == target
+                                && s == step =>
+                        {
+                            return Ok(if accuracy.is_nan() {
+                                None
+                            } else {
+                                Some(accuracy)
+                            });
+                        }
+                        Event::Failed { worker, error } => {
+                            self.on_failed(worker, error)?;
+                        }
+                        other => self.stale(other, "eval wait")?,
+                    },
+                }
+            }
+        }
+    }
+
+    /// One poll iteration processing only membership/failure events — used
+    /// while waiting for *any* live worker to appear.
+    fn pump_membership(&mut self, ctx: &str) -> Result<()> {
+        match self.poll_next()? {
+            None => Ok(()),
+            Some(HubEvent::Joined(w)) => self.on_joined(w),
+            Some(HubEvent::Left(w)) => self.on_left(w),
+            Some(HubEvent::Msg(_, Event::Failed { worker, error })) => {
+                self.on_failed(worker, error)
+            }
+            Some(HubEvent::Msg(_, ev)) => self.stale(ev, ctx),
+        }
+    }
+
+    /// Stop the fleet and gather final reports, tolerating deaths: a worker
+    /// that exits cleanly reports first and its departure is expected; one
+    /// that dies before reporting gets a default report synthesized.
+    fn shutdown(&mut self) -> Result<Vec<WorkerReport>> {
+        let n = self.workers();
+        let mut expect = vec![false; n];
+        for w in 0..n {
+            if self.alive[w] && self.try_send(w, &Command::Stop) {
+                expect[w] = true;
+            }
+        }
+        let mut reports: Vec<Option<WorkerReport>> =
+            (0..n).map(|_| None).collect();
+        while expect
+            .iter()
+            .zip(reports.iter())
+            .any(|(&e, r)| e && r.is_none())
+        {
+            match self.hub.poll(POLL_QUANTUM)? {
+                None => {}
+                Some(HubEvent::Joined(w)) => {
+                    // too late to put it to work
+                    self.hub.kick(w);
+                }
+                Some(HubEvent::Left(w)) => {
+                    // expected for clean exits (the report precedes the
+                    // departure); for a pre-report death, give up on the
+                    // report. Never charged to the restart budget.
+                    if let Some(a) = self.alive.get_mut(w) {
+                        *a = false;
+                    }
+                    let reported =
+                        matches!(reports.get(w), Some(Some(_)));
+                    if !reported {
+                        if let Some(e) = expect.get_mut(w) {
+                            *e = false;
+                        }
+                    }
+                }
+                Some(HubEvent::Msg(from, ev)) => match ev {
+                    Event::Report(r) => {
+                        let w = r.worker;
+                        ensure!(w == from && w < n,
+                                "report from unknown worker {w}");
+                        ensure!(reports[w].is_none(),
+                                "duplicate report from {w}");
+                        reports[w] = Some(*r);
+                    }
+                    Event::Failed { worker, error } => {
+                        if self.fc.max_restarts == 0 {
+                            bail!("worker {worker} failed during shutdown: \
+                                   {error}");
+                        }
+                        self.last_failure = Some(error);
+                    }
+                    other => self.stale(other, "shutdown")?,
+                },
+            }
+        }
+        Ok(reports
+            .into_iter()
+            .enumerate()
+            .map(|(w, r)| {
+                r.unwrap_or_else(|| WorkerReport {
+                    worker: w,
+                    timers: Default::default(),
+                    counter: Default::default(),
+                    state_bytes: 0,
+                })
+            })
+            .collect())
+    }
 }
 
 /// The synchronous drive loop (runs on the coordinator thread).
-fn drive(engine: &StepEngine, workers: usize, cmd_txs: &[Sender<Command>],
-         erx: &Receiver<Event>,
-         on_step: &mut Option<Box<dyn FnMut(u64, f64) + Send>>)
+fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
+         on_step: &mut Option<Box<dyn FnMut(u64, f64) + Send>>,
+         respawn: &mut dyn FnMut(usize),
+         kill_plan: &mut Option<KillPlan>)
          -> Result<FleetOutcome> {
+    let workers = fc.workers;
     let steps = engine.cfg.steps as u64;
     let q = engine.n_sub();
+    let mut d = Drive {
+        fc,
+        hub,
+        respawn,
+        alive: vec![false; workers],
+        staffed: false,
+        deaths: 0,
+        pending_drops: 0,
+        last_failure: None,
+        last_event: Instant::now(),
+        log: Vec::new(),
+        trace: Vec::new(),
+        last_checkpoint: None,
+        fleet: FleetMetrics::new(workers),
+    };
     let mut metrics = TrainMetrics::default();
-    let mut fleet = FleetMetrics::new(workers);
     let mut skipped = 0u64;
     let wall0 = Instant::now();
+    d.staff()?;
 
     for step in 0..steps {
+        if let Some(kill) = kill_plan.as_mut() {
+            for w in kill(step) {
+                // chaos injection: the Left arrives through the normal poll
+                // path and is charged to the restart budget like a crash
+                if d.alive.get(w).copied().unwrap_or(false) {
+                    d.hub.kick(w);
+                }
+            }
+        }
         let mut loss_acc = 0.0f64;
         let mut early: Option<f64> = None;
         for sub in 0..q {
@@ -154,56 +739,28 @@ fn drive(engine: &StepEngine, workers: usize, cmd_txs: &[Sender<Command>],
                 sub,
                 perturb_seed: engine.seeds.perturb_seed(step, sub),
             };
-            broadcast(cmd_txs, Command::Forward(ticket))?;
-            fleet.comm.on_tickets(workers as u64);
-
-            // slot results by worker index: aggregation order is fixed no
-            // matter which replica answers first
-            let mut slots: Vec<Option<(f32, f32)>> = vec![None; workers];
-            let mut fwd_times = vec![0.0f64; workers];
-            for _ in 0..workers {
-                match recv(erx)? {
-                    Event::TwoPoint { worker, step: s, sub: sb, f_plus,
-                                      f_minus, forward_secs } => {
-                        ensure!(s == step && sb == sub,
-                                "result for ({s},{sb}) during ({step},{sub})");
-                        ensure!(slots[worker].is_none(),
-                                "duplicate result from worker {worker}");
-                        slots[worker] = Some((f_plus, f_minus));
-                        fwd_times[worker] = forward_secs;
-                    }
-                    Event::Failed { worker, error } => {
-                        bail!("worker {worker} failed: {error}")
-                    }
-                    other => bail!("unexpected event during forward wait: \
-                                    {other:?}"),
-                }
-            }
-            fleet.comm.on_results(workers as u64);
-            fleet.record_forward_round(&fwd_times);
-
-            let pairs: Vec<(f32, f32)> = slots
-                .into_iter()
-                .enumerate()
-                .map(|(w, s)| s.ok_or_else(|| anyhow::anyhow!("no result slot for worker {w}")))
-                .collect::<Result<_>>()?;
+            let Some((pairs, fwd_times)) = d.forward_round(ticket)? else {
+                // the straggler policy abandoned the round: the surviving
+                // workers skip in lockstep and the step records NaN
+                d.fleet.degraded_rounds += 1;
+                d.ack_round(ticket, None)?;
+                early = Some(f64::NAN);
+                break;
+            };
+            d.fleet.record_forward_round(&fwd_times);
             let (f_plus, f_minus) = aggregate_two_point(&pairs);
             let (loss, kappa_raw) =
                 engine.combine(&ForwardOut::TwoPoint { f_plus, f_minus });
             if !loss.is_finite() || !kappa_raw.is_finite() {
                 // lockstep skip: every replica must skip together or the
                 // parameter replicas diverge
-                broadcast(cmd_txs, Command::Skip { ticket })?;
-                fleet.comm.on_broadcasts(workers as u64);
-                collect_acks(erx, workers, step, sub)?;
+                d.ack_round(ticket, None)?;
                 early = Some(loss);
                 break;
             }
             let kappa = engine.clip_kappa(kappa_raw);
-            broadcast(cmd_txs, Command::Apply { ticket, kappa })?;
-            fleet.comm.on_broadcasts(workers as u64);
-            let upd_times = collect_acks(erx, workers, step, sub)?;
-            fleet.record_update_round(&upd_times);
+            let upd_times = d.ack_round(ticket, Some(kappa))?;
+            d.fleet.record_update_round(&upd_times);
             loss_acc += loss;
         }
         // same semantics as the single-process engine: a non-finite
@@ -222,70 +779,44 @@ fn drive(engine: &StepEngine, workers: usize, cmd_txs: &[Sender<Command>],
         if let Some(cb) = on_step.as_mut() {
             cb(step, loss);
         }
+        if fc.checkpoint_every > 0
+            && (step + 1) % fc.checkpoint_every as u64 == 0
+        {
+            d.checkpoint_round(step + 1)?;
+        }
         if engine.cfg.eval_every > 0
             && (step + 1) % engine.cfg.eval_every as u64 == 0
         {
-            if let Some(acc) = run_eval(cmd_txs, erx, step + 1)? {
+            if let Some(acc) = d.eval_round(step + 1)? {
                 metrics.evals.push((step + 1, acc));
             }
         }
     }
     // final eval, unless the periodic hook already scored the last step
-    // (worker 0 answers NaN when it carries no eval set, which matches a
-    // Trainer without `with_eval`)
+    // (the answering replica returns NaN when it carries no eval set, which
+    // matches a Trainer without `with_eval`)
     let evaled_at_end = engine.cfg.eval_every > 0
         && steps % engine.cfg.eval_every as u64 == 0;
     if !evaled_at_end {
-        if let Some(acc) = run_eval(cmd_txs, erx, steps)? {
+        if let Some(acc) = d.eval_round(steps)? {
             metrics.evals.push((steps, acc));
         }
     }
 
-    broadcast(cmd_txs, Command::Stop)?;
-    let mut reports: Vec<Option<WorkerReport>> = (0..workers).map(|_| None).collect();
-    for _ in 0..workers {
-        match recv(erx)? {
-            Event::Report(r) => {
-                let w = r.worker;
-                ensure!(reports[w].is_none(), "duplicate report from {w}");
-                reports[w] = Some(*r);
-            }
-            Event::Failed { worker, error } => {
-                bail!("worker {worker} failed during shutdown: {error}")
-            }
-            other => bail!("unexpected event during shutdown: {other:?}"),
-        }
-    }
-    let workers_out: Vec<WorkerReport> = reports
-        .into_iter()
-        .enumerate()
-        .map(|(w, r)| r.ok_or_else(|| anyhow::anyhow!("no shutdown report from worker {w}")))
-        .collect::<Result<_>>()?;
+    let workers_out = d.shutdown()?;
+    let ws = d.hub.wire();
+    d.fleet.comm.wire_down = ws.bytes_down;
+    d.fleet.comm.wire_up = ws.bytes_up;
+    d.fleet.comm.frames_down = ws.frames_down;
+    d.fleet.comm.frames_up = ws.frames_up;
     metrics.wall_seconds = wall0.elapsed().as_secs_f64();
     let state_bytes = workers_out.first().map(|r| r.state_bytes).unwrap_or(0);
     Ok(FleetOutcome {
         metrics,
-        fleet,
+        fleet: d.fleet,
         workers: workers_out,
         skipped,
         state_bytes,
+        trace: d.trace,
     })
-}
-
-/// Ask worker 0 for a held-out eval; `None` when it has no eval set.
-fn run_eval(cmd_txs: &[Sender<Command>], erx: &Receiver<Event>, step: u64)
-            -> Result<Option<f64>> {
-    cmd_txs[0]
-        .send(Command::Eval { step })
-        .map_err(|_| anyhow!("worker 0 exited early"))?;
-    match recv(erx)? {
-        Event::EvalDone { step: s, accuracy, .. } => {
-            ensure!(s == step, "eval for step {s} during step {step}");
-            Ok(if accuracy.is_nan() { None } else { Some(accuracy) })
-        }
-        Event::Failed { worker, error } => {
-            bail!("worker {worker} failed during eval: {error}")
-        }
-        other => bail!("unexpected event during eval: {other:?}"),
-    }
 }

@@ -27,6 +27,23 @@ pub struct FleetMetrics {
     /// sum over rounds of (max - min) forward time
     pub spread_secs: f64,
     pub comm: CommStats,
+    /// workers that (re)joined after the initial staffing — crash restarts
+    /// and elastic rejoins both land here; each one replayed the catch-up
+    /// log before taking tickets
+    pub rejoins: u64,
+    /// stragglers kicked by [`StragglerPolicy::DropSkip`]
+    ///
+    /// [`StragglerPolicy::DropSkip`]: crate::config::StragglerPolicy
+    pub drops: u64,
+    /// rounds abandoned by the straggler policy (skipped in lockstep, loss
+    /// recorded as NaN — these are the rounds that break oracle bitwise
+    /// parity, which is why the default policy is Wait)
+    pub degraded_rounds: u64,
+    /// late events from departed workers, discarded (buffered results that
+    /// arrived after the round moved on)
+    pub stale_events: u64,
+    /// step checkpoints published for catch-up
+    pub checkpoints: u64,
 }
 
 impl FleetMetrics {

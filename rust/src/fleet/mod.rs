@@ -12,23 +12,45 @@
 //!
 //! Layout:
 //! * [`protocol`] — ticket/result/ack message types, scalar aggregation,
-//!   logical wire accounting;
-//! * [`worker`] — one replica: private runtime + params, ticket loop;
-//! * [`coordinator`] — [`FleetTrainer`]: broadcast, aggregate, lockstep;
-//! * [`metrics`] — per-worker phase totals, straggler stats, comm bytes.
+//!   the catch-up log, logical wire accounting;
+//! * [`wire`] — the length-prefixed binary codec (explicit tags, LE
+//!   fields, bit-exact floats) every message crosses a real wire in;
+//! * [`transport`] — the [`Hub`]/[`Link`] abstraction plus the in-process
+//!   loopback transport;
+//! * [`tcp`] — the TCP transport: listener/dialer, read timeouts, bounded
+//!   reconnect with exponential backoff;
+//! * [`worker`] — one replica: the transport-agnostic serve loop, the
+//!   PJRT-backed [`EngineReplica`], catch-up replay;
+//! * [`coordinator`] — [`FleetTrainer`]: broadcast, aggregate, lockstep,
+//!   and the fault-tolerant membership machinery;
+//! * [`sim`] — artifact-free deterministic replica + single-process oracle
+//!   for the chaos/parity test battery;
+//! * [`metrics`] — per-worker phase totals, straggler stats, comm bytes,
+//!   fault counters.
 //!
 //! The single-step arithmetic is *not* re-implemented: workers call the
 //! same [`StepEngine`](crate::coordinator::step::StepEngine) the plain
 //! [`Trainer`](crate::coordinator::trainer::Trainer) uses, which is what
 //! makes a 1-worker fleet bit-identical to single-process training (the
 //! `integration_fleet` tests assert this).
+//!
+//! [`Hub`]: transport::Hub
+//! [`Link`]: transport::Link
+//! [`EngineReplica`]: worker::EngineReplica
 
 pub mod coordinator;
 pub mod metrics;
 pub mod protocol;
+pub mod sim;
+pub mod tcp;
+pub mod transport;
+pub mod wire;
 pub mod worker;
 
-pub use coordinator::{FleetOutcome, FleetTrainer};
+pub use coordinator::{FleetOutcome, FleetTrainer, KillPlan, Transport};
 pub use metrics::FleetMetrics;
-pub use protocol::{CommStats, WorkerReport};
-pub use worker::{task_job_factory, JobFactory, WorkerJob};
+pub use protocol::{CatchUp, CommStats, LogEntry, WorkerReport};
+pub use transport::{Hub, HubEvent, Link, WireStats};
+pub use wire::JobSpec;
+pub use worker::{task_job_factory, JobFactory, Replica, ReplicaFactory,
+                 ServeEnd, WorkerJob};

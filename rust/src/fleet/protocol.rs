@@ -26,7 +26,10 @@ pub struct Ticket {
 }
 
 /// Coordinator -> worker commands.
-#[derive(Clone, Copy, Debug)]
+///
+/// `PartialEq` (and the loss of `Copy` to the catch-up log) because the
+/// wire codec's round-trip tests compare decoded commands structurally.
+#[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     /// run the fused two-point forward for this ticket
     Forward(Ticket),
@@ -35,10 +38,41 @@ pub enum Command {
     /// skip this ticket's update (non-finite global measurement); every
     /// replica skips together, so parameters stay bit-identical
     Skip { ticket: Ticket },
-    /// run the held-out eval hook (sent to worker 0 only)
+    /// run the held-out eval hook (sent to one worker only)
     Eval { step: u64 },
     /// finish: send the final [`WorkerReport`] and exit
     Stop,
+    /// publish a step checkpoint for step `step` (sent to one worker; the
+    /// coordinator prunes its catch-up log on the CheckpointDone reply)
+    Checkpoint { step: u64 },
+    /// first command to a (re)joining worker: replay history and converge
+    /// on the fleet's current parameters before taking tickets
+    CatchUp(CatchUp),
+}
+
+/// Deterministic catch-up instructions for a (re)joining worker: load the
+/// published checkpoint (if any), then replay the logged tail of updates.
+/// Replay is exact because an update is fully determined by
+/// (perturb_seed, kappa) — the replica regenerates z from the seed, just
+/// like live steps do.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CatchUp {
+    /// completed-step count of the checkpoint to load (`None`: fresh start
+    /// from the artifact's initial parameters)
+    pub checkpoint_step: Option<u64>,
+    /// update log from that point to now, in step order
+    pub entries: Vec<LogEntry>,
+}
+
+/// One logged (step, sub) outcome: the seed that generated the
+/// perturbation and the aggregated kappa that was applied (`None` = the
+/// round was skipped in lockstep).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogEntry {
+    pub step: u64,
+    pub sub: u32,
+    pub perturb_seed: u32,
+    pub kappa: Option<f32>,
 }
 
 /// Worker -> coordinator events.
@@ -63,10 +97,13 @@ pub enum Event {
     },
     /// eval accuracy (NaN when the worker carries no eval set)
     EvalDone { worker: usize, step: u64, accuracy: f64 },
-    /// terminal worker failure; the coordinator aborts the fleet
+    /// terminal worker failure; the coordinator aborts the fleet (or, with
+    /// a restart budget, counts it against the budget)
     Failed { worker: usize, error: String },
     /// final per-worker report (response to [`Command::Stop`])
     Report(Box<WorkerReport>),
+    /// checkpoint published (response to [`Command::Checkpoint`])
+    CheckpointDone { worker: usize, step: u64 },
 }
 
 /// End-of-run report from one worker replica.
@@ -107,6 +144,16 @@ pub struct CommStats {
     pub bytes_down: u64,
     /// workers -> coordinator payload bytes
     pub bytes_up: u64,
+    /// framed coordinator -> worker bytes actually put on the wire (frame
+    /// headers + handshakes + catch-up traffic included); loopback runs
+    /// tally the identical encoding without copying it
+    pub wire_down: u64,
+    /// framed worker -> coordinator bytes
+    pub wire_up: u64,
+    /// frames sent coordinator -> workers
+    pub frames_down: u64,
+    /// frames received from workers
+    pub frames_up: u64,
 }
 
 impl CommStats {
@@ -127,6 +174,11 @@ impl CommStats {
 
     pub fn total_bytes(&self) -> u64 {
         self.bytes_down + self.bytes_up
+    }
+
+    /// Framed bytes actually moved (0 until a transport reports in).
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.wire_down + self.wire_up
     }
 }
 

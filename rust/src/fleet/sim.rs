@@ -1,0 +1,340 @@
+//! Artifact-free simulation replica for transport and fault-tolerance
+//! tests.
+//!
+//! A deterministic toy model stands in for the PJRT runtime: parameters
+//! are a small vector initialized from the fleet's own seed schedule, each
+//! worker's "data shard" is a per-(step, shard) target vector, the loss is
+//! the mean squared distance to that target, and the ZO update is
+//! `p -= lr * kappa * z` with `z` regenerated from the ticket's
+//! perturbation seed — the same resampling contract the real engine obeys.
+//! Everything (losses, kappas, updates) is a pure function of the seed
+//! schedule, so [`run_oracle`] can replay the exact single-process
+//! trajectory the fleet must reproduce *bitwise*, which is what the chaos
+//! and loopback-vs-TCP parity tests assert.
+//!
+//! The measurement/update arithmetic lives in free functions shared by
+//! [`SimReplica`] and [`run_oracle`]; bitwise agreement is by construction,
+//! not by accident of two parallel implementations.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::optimizer::ForwardOut;
+use crate::coordinator::seeds::Stream;
+use crate::coordinator::step::StepEngine;
+use crate::rngx;
+
+use super::protocol::{aggregate_two_point, LogEntry};
+use super::worker::{Replica, ReplicaReport};
+
+/// Initial parameters: derived from the `FactorInit` stream so two fleets
+/// with the same master seed start bit-identical.
+pub fn init_params(engine: &StepEngine, dim: usize) -> Vec<f32> {
+    rngx::normal_vec(engine.seeds.seed64(Stream::FactorInit, 0), dim)
+}
+
+/// The ticket's perturbation direction, regenerated from its seed.
+fn sim_z(engine: &StepEngine, step: u64, sub: u32, dim: usize) -> Vec<f32> {
+    rngx::normal_vec(engine.seeds.perturb_seed(step, sub) as u64, dim)
+}
+
+/// Worker `shard`'s target vector for `step` (its "data batch").
+fn shard_target(engine: &StepEngine, step: u64, shard: u32, shards: u32,
+                dim: usize) -> Vec<f32> {
+    rngx::normal_vec(engine.seeds.shard_data_seed(step, shard, shards), dim)
+}
+
+/// Mean squared distance of `params ± rho z` to `target`, f64-accumulated
+/// exactly once per sign — the sim's fused two-point forward.
+fn two_point(params: &[f32], z: &[f32], target: &[f32], rho: f32)
+             -> (f32, f32) {
+    let n = params.len().max(1) as f64;
+    let mut plus = 0.0f64;
+    let mut minus = 0.0f64;
+    for ((&p, &zi), &t) in params.iter().zip(z.iter()).zip(target.iter()) {
+        let dp = (p + rho * zi) - t;
+        let dm = (p - rho * zi) - t;
+        plus += (dp as f64) * (dp as f64);
+        minus += (dm as f64) * (dm as f64);
+    }
+    ((plus / n) as f32, (minus / n) as f32)
+}
+
+/// The replayable ZO update: `p -= lr * kappa * z`, elementwise in f32.
+fn apply_update(params: &mut [f32], z: &[f32], lr: f32, kappa: f32) {
+    for (p, &zi) in params.iter_mut().zip(z.iter()) {
+        *p -= lr * kappa * zi;
+    }
+}
+
+/// Per-sub learning rate (mirrors `StepEngine::sub_lr` for ZO methods).
+fn sub_lr(engine: &StepEngine, step: u64) -> f32 {
+    engine.lr_at(step) / engine.n_sub() as f32
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint file format (step u64 LE + params f32 LE)
+// ---------------------------------------------------------------------------
+
+fn params_bytes(step: u64, params: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(8 + params.len() * 4);
+    bytes.extend_from_slice(&step.to_le_bytes());
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    bytes
+}
+
+/// Read a sim checkpoint / final-params file: `(step, params)`.
+pub fn read_sim_params(path: &Path) -> Result<(u64, Vec<f32>)> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let Some(head) = bytes.get(..8) else {
+        bail!("{}: shorter than the step header", path.display());
+    };
+    let mut b = [0u8; 8];
+    b.copy_from_slice(head);
+    let step = u64::from_le_bytes(b);
+    let body = bytes.get(8..).unwrap_or(&[]);
+    ensure!(body.len() % 4 == 0, "{}: truncated f32 payload", path.display());
+    let params = body
+        .chunks_exact(4)
+        .map(|c| {
+            let mut f = [0u8; 4];
+            f.copy_from_slice(c);
+            f32::from_le_bytes(f)
+        })
+        .collect();
+    Ok((step, params))
+}
+
+fn write_sim_params(path: &Path, step: u64, params: &[f32]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    // temp + rename: a reader (rejoining worker) never sees a half write
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, params_bytes(step, params))
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("committing {}", path.display()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// the replica
+// ---------------------------------------------------------------------------
+
+/// Deterministic toy replica. Drop-in for [`EngineReplica`] in the serve
+/// loop; needs no artifacts, runs a step in microseconds, and can inject
+/// crashes at chosen (step, sub) boundaries.
+///
+/// [`EngineReplica`]: super::worker::EngineReplica
+pub struct SimReplica {
+    worker: usize,
+    workers: u32,
+    dim: usize,
+    engine: StepEngine,
+    params: Vec<f32>,
+    checkpoint_path: Option<PathBuf>,
+    save_to: Option<PathBuf>,
+    /// fail the forward of these (step, sub) tickets — a protocol-level
+    /// crash the coordinator's fault handling must absorb
+    die_at: Vec<(u64, u32)>,
+}
+
+impl SimReplica {
+    pub fn new(worker: usize, workers: u32, cfg: &TrainConfig, dim: usize)
+               -> Self {
+        let engine = StepEngine::new(cfg.clone());
+        let params = init_params(&engine, dim);
+        Self {
+            worker,
+            workers,
+            dim,
+            engine,
+            params,
+            checkpoint_path: None,
+            save_to: None,
+            die_at: Vec::new(),
+        }
+    }
+
+    /// File step checkpoints are published to / loaded from.
+    pub fn with_checkpoint_path(mut self, path: PathBuf) -> Self {
+        self.checkpoint_path = Some(path);
+        self
+    }
+
+    /// Write final parameters here on Stop (any worker — the parity tests
+    /// compare per-worker finals across transports).
+    pub fn with_save_to(mut self, path: PathBuf) -> Self {
+        self.save_to = Some(path);
+        self
+    }
+
+    /// Inject crashes: the forward of each listed (step, sub) fails.
+    pub fn with_die_at(mut self, plan: Vec<(u64, u32)>) -> Self {
+        self.die_at = plan;
+        self
+    }
+}
+
+impl Replica for SimReplica {
+    fn forward(&mut self, step: u64, sub: u32) -> Result<(f32, f32)> {
+        if self.die_at.contains(&(step, sub)) {
+            bail!("sim worker {}: injected crash at step {step} sub {sub}",
+                  self.worker);
+        }
+        let z = sim_z(&self.engine, step, sub, self.dim);
+        let target = shard_target(&self.engine, step, self.worker as u32,
+                                  self.workers, self.dim);
+        Ok(two_point(&self.params, &z, &target, self.engine.cfg.rho))
+    }
+
+    fn apply(&mut self, step: u64, sub: u32, kappa: f32) -> Result<()> {
+        let z = sim_z(&self.engine, step, sub, self.dim);
+        apply_update(&mut self.params, &z, sub_lr(&self.engine, step), kappa);
+        Ok(())
+    }
+
+    fn eval(&mut self) -> Result<f64> {
+        Ok(f64::NAN)
+    }
+
+    fn save_checkpoint(&mut self, step: u64) -> Result<()> {
+        let Some(path) = &self.checkpoint_path else {
+            bail!("sim worker {}: Checkpoint command but no checkpoint path",
+                  self.worker);
+        };
+        write_sim_params(path, step, &self.params)
+    }
+
+    fn load_checkpoint(&mut self, expect_step: u64) -> Result<()> {
+        let Some(path) = &self.checkpoint_path else {
+            bail!("sim worker {}: CatchUp names a checkpoint but no \
+                   checkpoint path", self.worker);
+        };
+        let (step, params) = read_sim_params(path)?;
+        ensure!(step == expect_step,
+                "sim checkpoint {} is for step {step}, coordinator expected \
+                 {expect_step}", path.display());
+        ensure!(params.len() == self.dim,
+                "sim checkpoint {} holds {} params, replica has {}",
+                path.display(), params.len(), self.dim);
+        self.params = params;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<ReplicaReport> {
+        if let Some(path) = &self.save_to {
+            write_sim_params(path, self.engine.cfg.steps as u64, &self.params)?;
+        }
+        Ok(ReplicaReport::default())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the oracle
+// ---------------------------------------------------------------------------
+
+/// What the uninterrupted single-process run of the sim model produces.
+pub struct OracleOut {
+    pub params: Vec<f32>,
+    /// the (seed, kappa) trace — the fleet's log must match it bitwise
+    pub trace: Vec<LogEntry>,
+    pub losses: Vec<f64>,
+}
+
+/// Replay the exact trajectory a fault-free fleet of `workers` sim
+/// replicas follows: per (step, sub), every shard's two-point measurement,
+/// the slotted aggregation, combine/clip through the *same* [`StepEngine`]
+/// the coordinator uses, then the shared update. The chaos tests compare
+/// interrupted fleet runs against this bitwise.
+pub fn run_oracle(cfg: &TrainConfig, workers: u32, dim: usize) -> OracleOut {
+    let engine = StepEngine::new(cfg.clone());
+    let mut params = init_params(&engine, dim);
+    let mut trace = Vec::new();
+    let mut losses = Vec::new();
+    let q = engine.n_sub();
+    for step in 0..cfg.steps as u64 {
+        let mut loss_acc = 0.0f64;
+        let mut early: Option<f64> = None;
+        for sub in 0..q {
+            let seed = engine.seeds.perturb_seed(step, sub);
+            let z = sim_z(&engine, step, sub, dim);
+            let pairs: Vec<(f32, f32)> = (0..workers)
+                .map(|w| {
+                    let target = shard_target(&engine, step, w, workers, dim);
+                    two_point(&params, &z, &target, engine.cfg.rho)
+                })
+                .collect();
+            let (f_plus, f_minus) = aggregate_two_point(&pairs);
+            let (loss, kappa_raw) =
+                engine.combine(&ForwardOut::TwoPoint { f_plus, f_minus });
+            if !loss.is_finite() || !kappa_raw.is_finite() {
+                trace.push(LogEntry { step, sub, perturb_seed: seed, kappa: None });
+                early = Some(loss);
+                break;
+            }
+            let kappa = engine.clip_kappa(kappa_raw);
+            apply_update(&mut params, &z, sub_lr(&engine, step), kappa);
+            trace.push(LogEntry { step, sub, perturb_seed: seed, kappa: Some(kappa) });
+            loss_acc += loss;
+        }
+        losses.push(match early {
+            Some(l) => l,
+            None => loss_acc / q as f64,
+        });
+    }
+    OracleOut { params, trace, losses }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_is_deterministic_and_seed_sensitive() {
+        let cfg = TrainConfig { steps: 5, lr: 0.05, seed: 11,
+                                ..TrainConfig::default() };
+        let a = run_oracle(&cfg, 2, 16);
+        let b = run_oracle(&cfg, 2, 16);
+        assert_eq!(a.params.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+                   b.params.iter().map(|p| p.to_bits()).collect::<Vec<_>>());
+        assert_eq!(a.trace, b.trace);
+        let other = TrainConfig { seed: 12, ..cfg };
+        let c = run_oracle(&other, 2, 16);
+        assert_ne!(a.params.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+                   c.params.iter().map(|p| p.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn oracle_actually_trains() {
+        let cfg = TrainConfig { steps: 40, lr: 0.1, seed: 3,
+                                ..TrainConfig::default() };
+        let out = run_oracle(&cfg, 1, 16);
+        assert_eq!(out.losses.len(), 40);
+        assert_eq!(out.trace.len(), 40);
+        let first = out.losses.first().copied().unwrap_or(f64::NAN);
+        let last = out.losses.last().copied().unwrap_or(f64::NAN);
+        assert!(last < first,
+                "sim loss should fall: first {first:.4}, last {last:.4}");
+    }
+
+    #[test]
+    fn sim_checkpoint_round_trips() {
+        let dir = std::env::temp_dir().join("tezo_sim_ckpt_test");
+        let path = dir.join("sim.ckpt");
+        let params = vec![1.0f32, -2.5, f32::MIN_POSITIVE];
+        write_sim_params(&path, 7, &params).unwrap();
+        let (step, back) = read_sim_params(&path).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(back.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+                   params.iter().map(|p| p.to_bits()).collect::<Vec<_>>());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,541 @@
+//! TCP transport: the fleet ticket protocol over real sockets.
+//!
+//! Coordinator side ([`TcpHub`]): a listener thread admits workers via the
+//! Hello/HelloAck handshake of [`super::wire`], assigns slots, and spawns
+//! one reader thread per connection; departures (EOF, decode failure,
+//! straggler kick) surface through the same membership events the loopback
+//! transport emits, so the coordinator's fault handling is
+//! transport-agnostic. Worker side ([`dial`]/[`TcpLink`]): a dialer with
+//! bounded exponential backoff and read timeouts, returning the
+//! [`JoinInfo`] (slot, fleet width, full [`TrainConfig`], job spec) the
+//! coordinator shipped in the handshake — a TCP worker needs no local
+//! configuration beyond the address and the artifact directory.
+//!
+//! Ordering guarantees the fault tolerance leans on: the HelloAck is the
+//! first frame on every connection (written before the write half is
+//! published to the coordinator), and a slot's `Left` event is queued
+//! under the connection table lock *before* the slot becomes claimable —
+//! so the coordinator can never observe a rejoin before the departure.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::TrainConfig;
+
+use super::protocol::{Command, Event};
+use super::transport::{Hub, HubEvent, Link, WireStats};
+use super::wire::{self, Hello, HelloAck, JobSpec, SLOT_REJECTED};
+
+/// Read-timeout quantum for non-blocking polls (worker links, handshakes).
+const POLL_QUANTUM: Duration = Duration::from_millis(250);
+/// Once a frame has started, it must finish within this budget — a
+/// mid-frame stall desynchronizes the stream and cannot be resumed.
+const STALL_BUDGET: Duration = Duration::from_secs(30);
+/// A connection must complete its handshake within this budget.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+enum FrameRead {
+    Frame(Vec<u8>),
+    Eof,
+    /// read timed out before the first header byte (stream still in sync)
+    Idle,
+}
+
+/// Finish reading `buf`; read timeouts are retried under [`STALL_BUDGET`].
+fn read_exact_stalling(stream: &mut TcpStream, buf: &mut [u8]) -> Result<()> {
+    let start = Instant::now();
+    let mut got = 0usize;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => bail!("connection closed mid-frame ({got}/{} bytes)", buf.len()),
+            Ok(n) => got += n,
+            Err(e) if is_timeout(&e) => {
+                if start.elapsed() > STALL_BUDGET {
+                    bail!("mid-frame stall exceeded {STALL_BUDGET:?}");
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading frame"),
+        }
+    }
+    Ok(())
+}
+
+/// Read one full frame (length prefix included, as the codec expects).
+/// With a read timeout configured on `stream`, an idle boundary returns
+/// [`FrameRead::Idle`]; without one, the call blocks until data or EOF.
+fn read_frame_step(stream: &mut TcpStream) -> Result<FrameRead> {
+    let mut head = [0u8; 4];
+    let got = match stream.read(&mut head) {
+        Ok(0) => return Ok(FrameRead::Eof),
+        Ok(n) => n,
+        Err(e) if is_timeout(&e) => return Ok(FrameRead::Idle),
+        Err(e) if e.kind() == ErrorKind::Interrupted => return Ok(FrameRead::Idle),
+        Err(e) => return Err(e).context("reading frame header"),
+    };
+    read_exact_stalling(stream, &mut head[got..])?;
+    let len = u32::from_le_bytes(head) as usize;
+    if len > wire::MAX_FRAME {
+        bail!(wire::WireError::Oversize { len: len as u64 });
+    }
+    let mut frame = vec![0u8; 4 + len];
+    frame[..4].copy_from_slice(&head);
+    read_exact_stalling(stream, &mut frame[4..])?;
+    Ok(FrameRead::Frame(frame))
+}
+
+/// Read one frame within `deadline`, treating idle polls as waiting.
+fn read_frame_deadline(stream: &mut TcpStream, deadline: Duration) -> Result<Vec<u8>> {
+    let start = Instant::now();
+    loop {
+        match read_frame_step(stream)? {
+            FrameRead::Frame(f) => return Ok(f),
+            FrameRead::Eof => bail!("connection closed during handshake"),
+            FrameRead::Idle => {
+                if start.elapsed() > deadline {
+                    bail!("handshake timed out after {deadline:?}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator side
+// ---------------------------------------------------------------------------
+
+/// What the coordinator ships to every admitted worker in the HelloAck.
+#[derive(Clone)]
+pub struct AckInfo {
+    pub cfg: TrainConfig,
+    pub job: JobSpec,
+}
+
+struct Conns {
+    /// write halves, by slot (the reader thread owns the read half)
+    write: Vec<Option<TcpStream>>,
+    /// slot claims; a claim outlives the write half until the reader
+    /// thread finishes tearing the connection down
+    claimed: Vec<bool>,
+}
+
+impl Conns {
+    fn claim(&mut self, requested: u32) -> Option<usize> {
+        if requested != u32::MAX {
+            let w = requested as usize;
+            return match self.claimed.get_mut(w) {
+                Some(c) if !*c => {
+                    *c = true;
+                    Some(w)
+                }
+                _ => None,
+            };
+        }
+        for (w, c) in self.claimed.iter_mut().enumerate() {
+            if !*c {
+                *c = true;
+                return Some(w);
+            }
+        }
+        None
+    }
+
+    fn release(&mut self, slot: usize) {
+        if let Some(c) = self.claimed.get_mut(slot) {
+            *c = false;
+        }
+    }
+}
+
+struct HubShared {
+    conns: Mutex<Conns>,
+    shutdown: AtomicBool,
+    frames_down: AtomicU64,
+    bytes_down: AtomicU64,
+    frames_up: AtomicU64,
+    bytes_up: AtomicU64,
+}
+
+impl HubShared {
+    fn lock(&self) -> Result<MutexGuard<'_, Conns>> {
+        self.conns.lock().map_err(|_| anyhow!("connection table poisoned"))
+    }
+
+    fn count_down(&self, bytes: u64) {
+        self.frames_down.fetch_add(1, Ordering::Relaxed);
+        self.bytes_down.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn count_up(&self, bytes: u64) {
+        self.frames_up.fetch_add(1, Ordering::Relaxed);
+        self.bytes_up.fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Coordinator-side TCP endpoint: listener + per-connection readers.
+pub struct TcpHub {
+    shared: Arc<HubShared>,
+    rx: Receiver<HubEvent>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl TcpHub {
+    /// Bind `addr` and start admitting workers. `ack` is shipped to every
+    /// admitted worker; slots are assigned first-free (or as requested).
+    pub fn listen(addr: &str, workers: usize, ack: AckInfo) -> Result<TcpHub> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let (tx, rx) = mpsc::channel();
+        let shared = Arc::new(HubShared {
+            conns: Mutex::new(Conns {
+                write: (0..workers).map(|_| None).collect(),
+                claimed: vec![false; workers],
+            }),
+            shutdown: AtomicBool::new(false),
+            frames_down: AtomicU64::new(0),
+            bytes_down: AtomicU64::new(0),
+            frames_up: AtomicU64::new(0),
+            bytes_up: AtomicU64::new(0),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared, tx, ack, workers))
+        };
+        Ok(TcpHub { shared, rx, accept: Some(accept), workers })
+    }
+
+    /// The local address the listener bound (for `--listen 127.0.0.1:0`).
+    pub fn local_addr_of(listener: &TcpListener) -> Result<String> {
+        Ok(listener.local_addr()?.to_string())
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<HubShared>, tx: Sender<HubEvent>,
+               ack: AckInfo, workers: usize) {
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // handshake failures only cost this one connection
+                let _ = admit(stream, &shared, &tx, &ack, workers);
+            }
+            Err(ref e) if is_timeout(e) => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn admit(mut stream: TcpStream, shared: &Arc<HubShared>, tx: &Sender<HubEvent>,
+         ack: &AckInfo, workers: usize) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL_QUANTUM)).ok();
+    let frame = read_frame_deadline(&mut stream, HANDSHAKE_TIMEOUT)?;
+    shared.count_up(frame.len() as u64);
+    let hello: Hello = wire::decode_hello(&frame)?;
+
+    let slot = shared.lock()?.claim(hello.requested_slot);
+    let Some(slot) = slot else {
+        // fleet full (or the requested slot is taken): reject politely
+        let rej = wire::encode_hello_ack(&HelloAck {
+            slot: SLOT_REJECTED,
+            workers: workers as u32,
+            cfg: ack.cfg.clone(),
+            job: ack.job.clone(),
+        });
+        let _ = stream.write_all(&rej);
+        return Ok(());
+    };
+
+    // the ack must be the first frame on the stream: write it *before*
+    // publishing the write half, or a coordinator command could interleave
+    let ackf = wire::encode_hello_ack(&HelloAck {
+        slot: slot as u32,
+        workers: workers as u32,
+        cfg: ack.cfg.clone(),
+        job: ack.job.clone(),
+    });
+    if stream.write_all(&ackf).is_err() {
+        shared.lock()?.release(slot);
+        return Ok(());
+    }
+    shared.count_down(ackf.len() as u64);
+
+    let read_half = stream.try_clone().context("cloning connection")?;
+    read_half.set_read_timeout(None).ok(); // readers block; EOF/shutdown unblocks
+    {
+        let mut c = shared.lock()?;
+        if let Some(w) = c.write.get_mut(slot) {
+            *w = Some(stream);
+        }
+        let _ = tx.send(HubEvent::Joined(slot));
+    }
+    let shared = shared.clone();
+    let tx = tx.clone();
+    std::thread::spawn(move || reader_loop(read_half, slot, shared, tx));
+    Ok(())
+}
+
+fn reader_loop(mut stream: TcpStream, slot: usize, shared: Arc<HubShared>,
+               tx: Sender<HubEvent>) {
+    loop {
+        match read_frame_step(&mut stream) {
+            Ok(FrameRead::Frame(f)) => match wire::decode_event(&f) {
+                Ok(ev) => {
+                    shared.count_up(f.len() as u64);
+                    if tx.send(HubEvent::Msg(slot, ev)).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    // a corrupt stream cannot be resumed: surface it, then
+                    // tear the connection down
+                    let _ = tx.send(HubEvent::Msg(slot, Event::Failed {
+                        worker: slot,
+                        error: format!("wire decode: {e}"),
+                    }));
+                    break;
+                }
+            },
+            Ok(FrameRead::Idle) => {} // blocking mode: spurious wakeup
+            Ok(FrameRead::Eof) | Err(_) => break,
+        }
+    }
+    // teardown under the lock: the Left event is queued before the slot
+    // becomes claimable, so a rejoin can never be observed first
+    if let Ok(mut c) = shared.conns.lock() {
+        if let Some(w) = c.write.get_mut(slot) {
+            if let Some(s) = w.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        c.release(slot);
+        let _ = tx.send(HubEvent::Left(slot));
+    }
+}
+
+impl Hub for TcpHub {
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn poll(&mut self, timeout: Duration) -> Result<Option<HubEvent>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => Ok(Some(ev)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("tcp hub acceptor thread died")
+            }
+        }
+    }
+
+    fn send(&mut self, worker: usize, cmd: &Command) -> Result<()> {
+        let frame = wire::encode_command(cmd);
+        let mut c = self.shared.lock()?;
+        let Some(slot) = c.write.get_mut(worker) else {
+            bail!("no such worker slot {worker}");
+        };
+        let Some(stream) = slot.as_mut() else {
+            bail!("worker {worker} is not connected");
+        };
+        if stream.write_all(&frame).is_err() {
+            // leave teardown (Left event, claim release) to the reader
+            let _ = stream.shutdown(Shutdown::Both);
+            bail!("worker {worker}: connection lost mid-send");
+        }
+        drop(c);
+        self.shared.count_down(frame.len() as u64);
+        Ok(())
+    }
+
+    fn kick(&mut self, worker: usize) {
+        if let Ok(c) = self.shared.conns.lock() {
+            if let Some(Some(s)) = c.write.get(worker) {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    fn wire(&self) -> WireStats {
+        WireStats {
+            frames_down: self.shared.frames_down.load(Ordering::Relaxed),
+            bytes_down: self.shared.bytes_down.load(Ordering::Relaxed),
+            frames_up: self.shared.frames_up.load(Ordering::Relaxed),
+            bytes_up: self.shared.bytes_up.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for TcpHub {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        if let Ok(mut c) = self.shared.conns.lock() {
+            for w in c.write.iter_mut() {
+                if let Some(s) = w.take() {
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+            }
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// Bounded reconnect policy for a TCP worker.
+#[derive(Clone, Copy, Debug)]
+pub struct Reconnect {
+    /// connection attempts per dial (exponential backoff between them)
+    pub attempts: u32,
+    pub base_delay: Duration,
+    pub max_delay: Duration,
+}
+
+impl Default for Reconnect {
+    fn default() -> Self {
+        Self {
+            attempts: 10,
+            base_delay: Duration::from_millis(100),
+            max_delay: Duration::from_secs(5),
+        }
+    }
+}
+
+fn backoff_delay(rc: Reconnect, attempt: u32) -> Duration {
+    let shift = attempt.saturating_sub(1).min(16);
+    let ms = (rc.base_delay.as_millis() as u64).saturating_mul(1u64 << shift);
+    Duration::from_millis(ms).min(rc.max_delay)
+}
+
+/// Everything the handshake told this worker about its place in the fleet.
+#[derive(Clone, Debug)]
+pub struct JoinInfo {
+    pub slot: usize,
+    pub workers: u32,
+    pub cfg: TrainConfig,
+    pub job: JobSpec,
+}
+
+/// Worker side of one TCP connection.
+pub struct TcpLink {
+    stream: TcpStream,
+    /// how long `recv` tolerates an idle (but open) link before failing
+    pub idle_timeout: Duration,
+}
+
+impl Link for TcpLink {
+    fn recv(&mut self) -> Result<Option<Command>> {
+        let idle0 = Instant::now();
+        loop {
+            match read_frame_step(&mut self.stream)? {
+                FrameRead::Frame(f) => return Ok(Some(wire::decode_command(&f)?)),
+                FrameRead::Eof => return Ok(None),
+                FrameRead::Idle => {
+                    if idle0.elapsed() > self.idle_timeout {
+                        bail!("coordinator link idle for {:?}", self.idle_timeout);
+                    }
+                }
+            }
+        }
+    }
+
+    fn send(&mut self, ev: &Event) -> Result<()> {
+        let frame = wire::encode_event(ev);
+        self.stream
+            .write_all(&frame)
+            .context("sending event to the coordinator")
+    }
+}
+
+fn try_dial(addr: &str, requested_slot: Option<usize>) -> Result<(TcpLink, JoinInfo)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL_QUANTUM)).context("read timeout")?;
+    let hello = Hello {
+        requested_slot: match requested_slot {
+            Some(w) => w as u32,
+            None => u32::MAX,
+        },
+    };
+    stream.write_all(&wire::encode_hello(&hello)).context("sending hello")?;
+    let frame = read_frame_deadline(&mut stream, HANDSHAKE_TIMEOUT)?;
+    let ack = wire::decode_hello_ack(&frame)?;
+    if ack.slot == SLOT_REJECTED {
+        bail!("coordinator rejected the join (fleet full or slot taken)");
+    }
+    Ok((
+        TcpLink { stream, idle_timeout: Duration::from_secs(600) },
+        JoinInfo {
+            slot: ack.slot as usize,
+            workers: ack.workers,
+            cfg: ack.cfg,
+            job: ack.job,
+        },
+    ))
+}
+
+/// Dial the coordinator with bounded exponential backoff. Retries cover
+/// both refused connections (coordinator not up yet) and rejected joins
+/// (our old slot's Left event still in flight after a crash).
+pub fn dial(addr: &str, requested_slot: Option<usize>, rc: Reconnect)
+            -> Result<(TcpLink, JoinInfo)> {
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..rc.attempts.max(1) {
+        if attempt > 0 {
+            std::thread::sleep(backoff_delay(rc, attempt));
+        }
+        match try_dial(addr, requested_slot) {
+            Ok(ok) => return Ok(ok),
+            Err(e) => last = Some(e),
+        }
+    }
+    let err = last.unwrap_or_else(|| anyhow!("no connection attempts made"));
+    Err(err.context(format!("dialing {addr} ({} attempts)", rc.attempts.max(1))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_and_monotone() {
+        let rc = Reconnect::default();
+        assert_eq!(backoff_delay(rc, 1), Duration::from_millis(100));
+        assert_eq!(backoff_delay(rc, 2), Duration::from_millis(200));
+        assert!(backoff_delay(rc, 3) >= backoff_delay(rc, 2));
+        // saturates at max_delay, never overflows
+        assert_eq!(backoff_delay(rc, 60), rc.max_delay);
+    }
+
+    #[test]
+    fn dial_fails_cleanly_with_no_listener() {
+        // port 1 is essentially never listening; bounded attempts must
+        // return an error (not hang) even with nothing on the other side
+        let rc = Reconnect {
+            attempts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+        };
+        assert!(dial("127.0.0.1:1", None, rc).is_err());
+    }
+}

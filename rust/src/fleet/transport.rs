@@ -1,0 +1,240 @@
+//! Transport abstraction for the fleet: how commands and events cross the
+//! coordinator/worker boundary.
+//!
+//! Two implementations exist:
+//! * [`LoopbackHub`]/[`LoopbackLink`] — the original in-process `mpsc`
+//!   channels, now speaking the same membership protocol (join/leave
+//!   events) as a real network transport;
+//! * `TcpHub`/`TcpLink` ([`super::tcp`]) — the length-prefixed binary
+//!   codec of [`super::wire`] over TCP sockets.
+//!
+//! The coordinator drives a [`Hub`]: a multiplexed event source that
+//! reports worker joins, departures, and protocol events, plus per-slot
+//! command sends. Workers drive a [`Link`]: a single duplex connection.
+//! Both transports tally *framed* wire bytes (what the codec would put on
+//! a socket — loopback counts the identical encoding without copying it),
+//! so `CommStats`' logical payload accounting can be compared against real
+//! framing overhead in benches and tests.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::protocol::{Command, Event};
+use super::wire;
+
+/// Framed traffic counters (wire bytes include the frame header; compare
+/// with the logical payload counters in `CommStats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub frames_down: u64,
+    pub bytes_down: u64,
+    pub frames_up: u64,
+    pub bytes_up: u64,
+}
+
+/// Multiplexed coordinator-side endpoint over all worker slots.
+pub enum HubEvent {
+    /// a worker claimed slot `w` (initial staffing or a rejoin)
+    Joined(usize),
+    /// slot `w`'s worker is gone (thread exit, connection loss, or kick)
+    Left(usize),
+    /// a protocol event from slot `w`
+    Msg(usize, Event),
+}
+
+pub trait Hub {
+    fn workers(&self) -> usize;
+
+    /// Wait up to `timeout` for the next membership change or event.
+    /// `Ok(None)` is a timeout; transport-fatal conditions are `Err`.
+    fn poll(&mut self, timeout: Duration) -> Result<Option<HubEvent>>;
+
+    /// Send a command to one slot. An `Err` means that link is down *now*
+    /// (the matching [`HubEvent::Left`] may still be in flight).
+    fn send(&mut self, worker: usize, cmd: &Command) -> Result<()>;
+
+    /// Forcibly disconnect a slot (straggler drop). The departure is
+    /// reported through the normal [`HubEvent::Left`] path.
+    fn kick(&mut self, worker: usize);
+
+    /// Framed byte tallies so far.
+    fn wire(&self) -> WireStats;
+}
+
+/// Worker-side duplex connection to the coordinator.
+pub trait Link {
+    /// Next command; `Ok(None)` means the coordinator closed the link.
+    fn recv(&mut self) -> Result<Option<Command>>;
+    fn send(&mut self, ev: &Event) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// loopback (in-process channels)
+// ---------------------------------------------------------------------------
+
+/// What loopback workers push into the hub's shared queue.
+pub enum LoopMsg {
+    /// worker claims a slot and hands over its command channel
+    Hello(usize, Sender<Command>),
+    /// protocol event
+    Ev(usize, Event),
+    /// worker thread is exiting (sent from a drop guard, so it fires on
+    /// panic unwinding too — the hub never waits on a dead thread)
+    Bye(usize),
+}
+
+/// In-process hub: one shared event queue, one command channel per slot.
+pub struct LoopbackHub {
+    rx: Receiver<LoopMsg>,
+    links: Vec<Option<Sender<Command>>>,
+    wire: WireStats,
+}
+
+impl LoopbackHub {
+    /// Returns the hub plus the sender side workers join through.
+    pub fn new(workers: usize) -> (Self, Sender<LoopMsg>) {
+        let (tx, rx) = mpsc::channel();
+        let hub = Self { rx, links: vec![None; workers], wire: WireStats::default() };
+        (hub, tx)
+    }
+}
+
+impl Hub for LoopbackHub {
+    fn workers(&self) -> usize {
+        self.links.len()
+    }
+
+    fn poll(&mut self, timeout: Duration) -> Result<Option<HubEvent>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(LoopMsg::Hello(w, tx)) => {
+                let slot = self
+                    .links
+                    .get_mut(w)
+                    .ok_or_else(|| anyhow!("join for unknown slot {w}"))?;
+                *slot = Some(tx);
+                Ok(Some(HubEvent::Joined(w)))
+            }
+            Ok(LoopMsg::Ev(w, ev)) => {
+                self.wire.frames_up += 1;
+                self.wire.bytes_up += wire::event_frame_len(&ev);
+                Ok(Some(HubEvent::Msg(w, ev)))
+            }
+            Ok(LoopMsg::Bye(w)) => {
+                if let Some(slot) = self.links.get_mut(w) {
+                    *slot = None;
+                }
+                Ok(Some(HubEvent::Left(w)))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("every worker (and the spawner) disconnected from the hub")
+            }
+        }
+    }
+
+    fn send(&mut self, worker: usize, cmd: &Command) -> Result<()> {
+        let n = wire::command_frame_len(cmd);
+        let Some(slot) = self.links.get_mut(worker) else {
+            bail!("no such worker slot {worker}");
+        };
+        let Some(tx) = slot.as_ref() else {
+            bail!("worker {worker} is not connected");
+        };
+        if tx.send(cmd.clone()).is_err() {
+            *slot = None;
+            bail!("worker {worker} hung up");
+        }
+        self.wire.frames_down += 1;
+        self.wire.bytes_down += n;
+        Ok(())
+    }
+
+    fn kick(&mut self, worker: usize) {
+        // dropping the sole command sender closes the worker's receiver;
+        // its serve loop exits cleanly and the Bye guard reports Left
+        if let Some(slot) = self.links.get_mut(worker) {
+            *slot = None;
+        }
+    }
+
+    fn wire(&self) -> WireStats {
+        self.wire
+    }
+}
+
+/// Worker side of a loopback connection.
+pub struct LoopbackLink {
+    worker: usize,
+    rx: Receiver<Command>,
+    tx: Sender<LoopMsg>,
+}
+
+/// Join the loopback hub on `worker`'s slot: create the command channel
+/// and announce it. Called from inside the worker thread.
+pub fn loopback_join(worker: usize, hub_tx: &Sender<LoopMsg>) -> Result<LoopbackLink> {
+    let (ctx, crx) = mpsc::channel();
+    hub_tx
+        .send(LoopMsg::Hello(worker, ctx))
+        .map_err(|_| anyhow!("coordinator hub is gone"))?;
+    Ok(LoopbackLink { worker, rx: crx, tx: hub_tx.clone() })
+}
+
+impl Link for LoopbackLink {
+    fn recv(&mut self) -> Result<Option<Command>> {
+        // a closed channel means the coordinator is gone or kicked us;
+        // either way it is not this worker's error
+        Ok(self.rx.recv().ok())
+    }
+
+    fn send(&mut self, ev: &Event) -> Result<()> {
+        self.tx
+            .send(LoopMsg::Ev(self.worker, ev.clone()))
+            .map_err(|_| anyhow!("coordinator hub is gone"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::protocol::Ticket;
+
+    fn ticket() -> Ticket {
+        Ticket { step: 0, sub: 0, perturb_seed: 1 }
+    }
+
+    #[test]
+    fn loopback_membership_and_traffic() {
+        let (mut hub, tx) = LoopbackHub::new(2);
+        let mut link = loopback_join(1, &tx).unwrap();
+        match hub.poll(Duration::from_secs(1)).unwrap() {
+            Some(HubEvent::Joined(1)) => {}
+            other => panic!("expected Joined(1), got {:?}", other.is_some()),
+        }
+        hub.send(1, &Command::Forward(ticket())).unwrap();
+        assert!(hub.send(0, &Command::Stop).is_err(), "slot 0 never joined");
+        assert_eq!(link.recv().unwrap(), Some(Command::Forward(ticket())));
+        link.send(&Event::Applied { worker: 1, step: 0, sub: 0, update_secs: 0.0 })
+            .unwrap();
+        match hub.poll(Duration::from_secs(1)).unwrap() {
+            Some(HubEvent::Msg(1, Event::Applied { .. })) => {}
+            _ => panic!("expected the Applied event"),
+        }
+        // tallies count the framed encoding both ways
+        let ws = hub.wire();
+        assert_eq!(ws.frames_down, 1);
+        assert_eq!(ws.frames_up, 1);
+        assert_eq!(ws.bytes_down, wire::command_frame_len(&Command::Forward(ticket())));
+        assert!(ws.bytes_up > 0);
+        // kick closes the worker's command stream
+        hub.kick(1);
+        assert_eq!(link.recv().unwrap(), None);
+    }
+
+    #[test]
+    fn poll_times_out_quietly() {
+        let (mut hub, _tx) = LoopbackHub::new(1);
+        assert!(hub.poll(Duration::from_millis(5)).unwrap().is_none());
+    }
+}

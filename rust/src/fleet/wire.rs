@@ -1,0 +1,880 @@
+//! Length-prefixed binary wire codec for the fleet ticket protocol.
+//!
+//! Every message is one frame: a little-endian `u32` payload length, then
+//! the payload — a one-byte tag followed by fixed-layout little-endian
+//! fields (the same byte order as the `f32_le_bytes` parameter codecs).
+//! The framing exists so the analytic model in [`crate::memmodel::comm`]
+//! can be cross-checked against *actual* encoded sizes: a `Forward` frame
+//! is exactly `FRAME_HEADER_BYTES + TICKET_BYTES`, an `Apply` frame
+//! `FRAME_HEADER_BYTES + KAPPA_BYTES`, and so on (pinned by unit tests
+//! here and by `tests/props_wire.rs`).
+//!
+//! Float policy: two-point losses (`f+`, `f-`) and eval accuracy are
+//! carried *bit-exactly* — NaN is meaningful there (loss poisoning drives
+//! the lockstep skip; NaN accuracy means "no eval set"). Control-plane
+//! floats (kappa, wall seconds, config hyperparameters) must be finite and
+//! decode to a typed [`WireError::NonFinite`] otherwise. Malformed input
+//! (truncation, unknown tags, oversized length prefixes, bogus counts)
+//! never panics: every decode path returns `Result<_, WireError>` and all
+//! buffer access is bounds-checked via `get`.
+
+use crate::config::{ForwardForm, LrSchedule, Method, TrainConfig};
+use crate::coordinator::counter::SampleCounter;
+use crate::coordinator::metrics::PhaseTimers;
+
+use super::protocol::{CatchUp, Command, Event, LogEntry, Ticket, WorkerReport};
+
+/// Per-frame overhead: 4-byte length prefix + 1-byte message tag.
+pub const FRAME_HEADER_BYTES: u64 = 5;
+
+/// Hard ceiling on one frame's payload. Large enough for any catch-up log
+/// the coordinator can produce (entries are pruned at checkpoints), small
+/// enough that a corrupt length prefix cannot drive an allocation bomb.
+pub const MAX_FRAME: usize = 1 << 22;
+
+// Command tags (coordinator -> worker).
+const TAG_FORWARD: u8 = 0x01;
+const TAG_APPLY: u8 = 0x02;
+const TAG_SKIP: u8 = 0x03;
+const TAG_EVAL: u8 = 0x04;
+const TAG_STOP: u8 = 0x05;
+const TAG_CHECKPOINT: u8 = 0x06;
+const TAG_CATCH_UP: u8 = 0x07;
+
+// Event tags (worker -> coordinator).
+const TAG_TWO_POINT: u8 = 0x41;
+const TAG_APPLIED: u8 = 0x42;
+const TAG_EVAL_DONE: u8 = 0x43;
+const TAG_FAILED: u8 = 0x44;
+const TAG_REPORT: u8 = 0x45;
+const TAG_CHECKPOINT_DONE: u8 = 0x46;
+
+// Handshake tags (transport-level, not part of Command/Event).
+const TAG_HELLO: u8 = 0x21;
+const TAG_HELLO_ACK: u8 = 0x22;
+
+/// Typed decode failure. Every malformed input maps to one of these —
+/// the codec never panics on untrusted bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// frame or field ends before its declared length
+    Truncated { need: usize, have: usize },
+    /// length prefix exceeds [`MAX_FRAME`]
+    Oversize { len: u64 },
+    /// unknown message tag for this decode direction
+    UnknownTag { tag: u8 },
+    /// a control-plane float field decoded to NaN/inf
+    NonFinite { field: &'static str },
+    /// payload longer than its message's layout
+    Trailing { extra: usize },
+    /// a declared element count cannot fit in the remaining payload
+    BadCount { field: &'static str, count: u64 },
+    /// a string field is not valid UTF-8
+    BadUtf8 { field: &'static str },
+    /// an enum-like field holds no known value
+    BadEnum { field: &'static str },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::Oversize { len } => {
+                write!(f, "length prefix {len} exceeds MAX_FRAME {MAX_FRAME}")
+            }
+            WireError::UnknownTag { tag } => write!(f, "unknown message tag {tag:#04x}"),
+            WireError::NonFinite { field } => {
+                write!(f, "non-finite value in field `{field}`")
+            }
+            WireError::Trailing { extra } => {
+                write!(f, "{extra} trailing bytes after message payload")
+            }
+            WireError::BadCount { field, count } => {
+                write!(f, "count {count} in `{field}` exceeds the payload")
+            }
+            WireError::BadUtf8 { field } => write!(f, "invalid UTF-8 in `{field}`"),
+            WireError::BadEnum { field } => write!(f, "invalid enum value in `{field}`"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// cursor helpers (all bounds-checked; no indexing, no panics)
+// ---------------------------------------------------------------------------
+
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated {
+            need: n,
+            have: self.remaining(),
+        })?;
+        let s = self.buf.get(self.pos..end).ok_or(WireError::Truncated {
+            need: n,
+            have: self.remaining(),
+        })?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?.first().copied().unwrap_or(0))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        let mut b = [0u8; 4];
+        b.copy_from_slice(s);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// f32 carried bit-exactly (NaN payloads preserved).
+    fn f32_bits(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// f32 that must be finite (control-plane values).
+    fn f32_finite(&mut self, field: &'static str) -> Result<f32, WireError> {
+        let v = self.f32_bits()?;
+        if v.is_finite() {
+            Ok(v)
+        } else {
+            Err(WireError::NonFinite { field })
+        }
+    }
+
+    /// f64 carried bit-exactly (NaN legal — eval accuracy).
+    fn f64_bits(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// f64 that must be finite (wall seconds and friends).
+    fn f64_finite(&mut self, field: &'static str) -> Result<f64, WireError> {
+        let v = self.f64_bits()?;
+        if v.is_finite() {
+            Ok(v)
+        } else {
+            Err(WireError::NonFinite { field })
+        }
+    }
+
+    fn string(&mut self, field: &'static str) -> Result<String, WireError> {
+        let n = self.u32()? as u64;
+        if n > self.remaining() as u64 {
+            return Err(WireError::BadCount { field, count: n });
+        }
+        let bytes = self.take(n as usize)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8 { field })
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Trailing { extra: self.remaining() })
+        }
+    }
+}
+
+struct Wr {
+    buf: Vec<u8>,
+}
+
+impl Wr {
+    /// Start a frame: length prefix placeholder + tag.
+    fn frame(tag: u8) -> Self {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&[0u8; 4]);
+        buf.push(tag);
+        Self { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32_bits(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    fn f64_bits(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Finish: backfill the length prefix over the payload.
+    fn finish(mut self) -> Vec<u8> {
+        let payload = (self.buf.len() - 4) as u32;
+        if let Some(head) = self.buf.get_mut(..4) {
+            head.copy_from_slice(&payload.to_le_bytes());
+        }
+        self.buf
+    }
+}
+
+/// Split a full frame into its payload, validating the length prefix.
+fn frame_payload(frame: &[u8]) -> Result<&[u8], WireError> {
+    let head = frame.get(..4).ok_or(WireError::Truncated {
+        need: 4,
+        have: frame.len(),
+    })?;
+    let mut b = [0u8; 4];
+    b.copy_from_slice(head);
+    let len = u32::from_le_bytes(b) as u64;
+    if len > MAX_FRAME as u64 {
+        return Err(WireError::Oversize { len });
+    }
+    let body = frame.get(4..).unwrap_or(&[]);
+    if (body.len() as u64) < len {
+        return Err(WireError::Truncated {
+            need: len as usize,
+            have: body.len(),
+        });
+    }
+    if (body.len() as u64) > len {
+        return Err(WireError::Trailing {
+            extra: body.len() - len as usize,
+        });
+    }
+    Ok(body)
+}
+
+// ---------------------------------------------------------------------------
+// tickets / log entries
+// ---------------------------------------------------------------------------
+
+fn put_ticket(w: &mut Wr, t: &Ticket) {
+    w.u64(t.step);
+    w.u32(t.sub);
+    w.u32(t.perturb_seed);
+}
+
+fn get_ticket(r: &mut Rd) -> Result<Ticket, WireError> {
+    Ok(Ticket {
+        step: r.u64()?,
+        sub: r.u32()?,
+        perturb_seed: r.u32()?,
+    })
+}
+
+/// Smallest serialized catch-up entry (step + sub + seed + applied flag).
+const LOG_ENTRY_MIN_BYTES: u64 = 17;
+
+fn put_entry(w: &mut Wr, e: &LogEntry) {
+    w.u64(e.step);
+    w.u32(e.sub);
+    w.u32(e.perturb_seed);
+    match e.kappa {
+        Some(k) => {
+            w.u8(1);
+            w.f32_bits(k);
+        }
+        None => w.u8(0),
+    }
+}
+
+fn get_entry(r: &mut Rd) -> Result<LogEntry, WireError> {
+    let step = r.u64()?;
+    let sub = r.u32()?;
+    let perturb_seed = r.u32()?;
+    let kappa = match r.u8()? {
+        0 => None,
+        1 => Some(r.f32_finite("log_entry.kappa")?),
+        _ => return Err(WireError::BadEnum { field: "log_entry.applied" }),
+    };
+    Ok(LogEntry { step, sub, perturb_seed, kappa })
+}
+
+// ---------------------------------------------------------------------------
+// commands
+// ---------------------------------------------------------------------------
+
+/// Encode a command as a full frame (length prefix included).
+pub fn encode_command(cmd: &Command) -> Vec<u8> {
+    match cmd {
+        Command::Forward(t) => {
+            let mut w = Wr::frame(TAG_FORWARD);
+            put_ticket(&mut w, t);
+            w.finish()
+        }
+        Command::Apply { ticket, kappa } => {
+            let mut w = Wr::frame(TAG_APPLY);
+            put_ticket(&mut w, ticket);
+            w.f32_bits(*kappa);
+            w.finish()
+        }
+        Command::Skip { ticket } => {
+            let mut w = Wr::frame(TAG_SKIP);
+            put_ticket(&mut w, ticket);
+            w.finish()
+        }
+        Command::Eval { step } => {
+            let mut w = Wr::frame(TAG_EVAL);
+            w.u64(*step);
+            w.finish()
+        }
+        Command::Stop => Wr::frame(TAG_STOP).finish(),
+        Command::Checkpoint { step } => {
+            let mut w = Wr::frame(TAG_CHECKPOINT);
+            w.u64(*step);
+            w.finish()
+        }
+        Command::CatchUp(c) => {
+            let mut w = Wr::frame(TAG_CATCH_UP);
+            w.u64(c.checkpoint_step.unwrap_or(u64::MAX));
+            w.u32(c.entries.len() as u32);
+            for e in &c.entries {
+                put_entry(&mut w, e);
+            }
+            w.finish()
+        }
+    }
+}
+
+/// Decode a full command frame.
+pub fn decode_command(frame: &[u8]) -> Result<Command, WireError> {
+    let mut r = Rd::new(frame_payload(frame)?);
+    let cmd = match r.u8()? {
+        TAG_FORWARD => Command::Forward(get_ticket(&mut r)?),
+        TAG_APPLY => Command::Apply {
+            ticket: get_ticket(&mut r)?,
+            kappa: r.f32_finite("apply.kappa")?,
+        },
+        TAG_SKIP => Command::Skip { ticket: get_ticket(&mut r)? },
+        TAG_EVAL => Command::Eval { step: r.u64()? },
+        TAG_STOP => Command::Stop,
+        TAG_CHECKPOINT => Command::Checkpoint { step: r.u64()? },
+        TAG_CATCH_UP => {
+            let raw = r.u64()?;
+            let checkpoint_step = if raw == u64::MAX { None } else { Some(raw) };
+            let count = r.u32()? as u64;
+            if count * LOG_ENTRY_MIN_BYTES > r.remaining() as u64 {
+                return Err(WireError::BadCount {
+                    field: "catch_up.entries",
+                    count,
+                });
+            }
+            let mut entries = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                entries.push(get_entry(&mut r)?);
+            }
+            Command::CatchUp(CatchUp { checkpoint_step, entries })
+        }
+        tag => return Err(WireError::UnknownTag { tag }),
+    };
+    r.done()?;
+    Ok(cmd)
+}
+
+// ---------------------------------------------------------------------------
+// events
+// ---------------------------------------------------------------------------
+
+/// Encode an event as a full frame (length prefix included).
+pub fn encode_event(ev: &Event) -> Vec<u8> {
+    match ev {
+        Event::TwoPoint { worker, step, sub, f_plus, f_minus, forward_secs } => {
+            let mut w = Wr::frame(TAG_TWO_POINT);
+            w.u32(*worker as u32);
+            w.u64(*step);
+            w.u32(*sub);
+            w.f32_bits(*f_plus);
+            w.f32_bits(*f_minus);
+            w.f64_bits(*forward_secs);
+            w.finish()
+        }
+        Event::Applied { worker, step, sub, update_secs } => {
+            let mut w = Wr::frame(TAG_APPLIED);
+            w.u32(*worker as u32);
+            w.u64(*step);
+            w.u32(*sub);
+            w.f64_bits(*update_secs);
+            w.finish()
+        }
+        Event::EvalDone { worker, step, accuracy } => {
+            let mut w = Wr::frame(TAG_EVAL_DONE);
+            w.u32(*worker as u32);
+            w.u64(*step);
+            w.f64_bits(*accuracy);
+            w.finish()
+        }
+        Event::Failed { worker, error } => {
+            let mut w = Wr::frame(TAG_FAILED);
+            w.u32(*worker as u32);
+            w.string(error);
+            w.finish()
+        }
+        Event::Report(r) => {
+            let mut w = Wr::frame(TAG_REPORT);
+            w.u32(r.worker as u32);
+            w.u64(r.state_bytes);
+            w.u64(r.counter.matrix_elements);
+            w.u64(r.counter.vector_elements);
+            let (secs, counts, up, reused) = r.timers.parts();
+            for s in secs {
+                w.f64_bits(s);
+            }
+            for c in counts {
+                w.u64(c);
+            }
+            w.u64(up);
+            w.u64(reused);
+            w.finish()
+        }
+        Event::CheckpointDone { worker, step } => {
+            let mut w = Wr::frame(TAG_CHECKPOINT_DONE);
+            w.u32(*worker as u32);
+            w.u64(*step);
+            w.finish()
+        }
+    }
+}
+
+/// Decode a full event frame.
+pub fn decode_event(frame: &[u8]) -> Result<Event, WireError> {
+    let mut r = Rd::new(frame_payload(frame)?);
+    let ev = match r.u8()? {
+        TAG_TWO_POINT => Event::TwoPoint {
+            worker: r.u32()? as usize,
+            step: r.u64()?,
+            sub: r.u32()?,
+            // loss pair is bit-exact: NaN/inf here *is* the poisoning signal
+            f_plus: r.f32_bits()?,
+            f_minus: r.f32_bits()?,
+            forward_secs: r.f64_finite("two_point.forward_secs")?,
+        },
+        TAG_APPLIED => Event::Applied {
+            worker: r.u32()? as usize,
+            step: r.u64()?,
+            sub: r.u32()?,
+            update_secs: r.f64_finite("applied.update_secs")?,
+        },
+        TAG_EVAL_DONE => Event::EvalDone {
+            worker: r.u32()? as usize,
+            step: r.u64()?,
+            // NaN accuracy = "no eval set on this worker", carried bit-exact
+            accuracy: r.f64_bits()?,
+        },
+        TAG_FAILED => Event::Failed {
+            worker: r.u32()? as usize,
+            error: r.string("failed.error")?,
+        },
+        TAG_REPORT => {
+            let worker = r.u32()? as usize;
+            let state_bytes = r.u64()?;
+            let counter = SampleCounter {
+                matrix_elements: r.u64()?,
+                vector_elements: r.u64()?,
+            };
+            let mut secs = [0.0f64; 5];
+            for s in secs.iter_mut() {
+                *s = r.f64_finite("report.phase_secs")?;
+            }
+            let mut counts = [0u64; 5];
+            for c in counts.iter_mut() {
+                *c = r.u64()?;
+            }
+            let up = r.u64()?;
+            let reused = r.u64()?;
+            Event::Report(Box::new(WorkerReport {
+                worker,
+                timers: PhaseTimers::from_parts(secs, counts, up, reused),
+                counter,
+                state_bytes,
+            }))
+        }
+        TAG_CHECKPOINT_DONE => Event::CheckpointDone {
+            worker: r.u32()? as usize,
+            step: r.u64()?,
+        },
+        tag => return Err(WireError::UnknownTag { tag }),
+    };
+    r.done()?;
+    Ok(ev)
+}
+
+// ---------------------------------------------------------------------------
+// handshake
+// ---------------------------------------------------------------------------
+
+/// Worker -> coordinator: claim a slot (`u32::MAX` = any free slot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub requested_slot: u32,
+}
+
+/// Slot value in a [`HelloAck`] meaning "no slot for you" (fleet full).
+pub const SLOT_REJECTED: u32 = u32::MAX;
+
+/// Everything a TCP worker needs to build its replica: its slot, the fleet
+/// width, the full training config, and the data-job description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HelloAck {
+    /// assigned worker slot, or [`SLOT_REJECTED`]
+    pub slot: u32,
+    pub workers: u32,
+    pub cfg: TrainConfig,
+    pub job: JobSpec,
+}
+
+/// Wire form of the standard task job (see `worker::task_job_factory`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobSpec {
+    pub task: String,
+    pub k_shot: u32,
+    pub eval_n: u32,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self { task: "sst2".to_string(), k_shot: 16, eval_n: 0 }
+    }
+}
+
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut w = Wr::frame(TAG_HELLO);
+    w.u32(h.requested_slot);
+    w.finish()
+}
+
+pub fn decode_hello(frame: &[u8]) -> Result<Hello, WireError> {
+    let mut r = Rd::new(frame_payload(frame)?);
+    match r.u8()? {
+        TAG_HELLO => {
+            let h = Hello { requested_slot: r.u32()? };
+            r.done()?;
+            Ok(h)
+        }
+        tag => Err(WireError::UnknownTag { tag }),
+    }
+}
+
+fn put_cfg(w: &mut Wr, cfg: &TrainConfig) {
+    w.string(cfg.method.name());
+    w.u64(cfg.steps as u64);
+    w.f32_bits(cfg.lr);
+    w.f32_bits(cfg.rho);
+    w.f32_bits(cfg.beta1);
+    w.f32_bits(cfg.beta2);
+    w.f32_bits(cfg.eps);
+    w.f32_bits(cfg.adamu_alpha);
+    w.u64(cfg.lazy_interval as u64);
+    w.u64(cfg.seed);
+    w.u64(cfg.eval_every as u64);
+    w.u8(cfg.bias_correction as u8);
+    let (sched, frac) = match cfg.lr_schedule {
+        LrSchedule::Constant => (0u8, 0.0f32),
+        LrSchedule::Linear { final_frac } => (1, final_frac),
+        LrSchedule::Cosine { final_frac } => (2, final_frac),
+    };
+    w.u8(sched);
+    w.f32_bits(frac);
+    w.f32_bits(cfg.kappa_clip);
+    w.u32(cfg.n_perturb as u32);
+    w.u8(match cfg.forward_form {
+        ForwardForm::Materialize => 0,
+        ForwardForm::Implicit => 1,
+    });
+}
+
+fn get_cfg(r: &mut Rd) -> Result<TrainConfig, WireError> {
+    let method_name = r.string("cfg.method")?;
+    let method =
+        Method::parse(&method_name).map_err(|_| WireError::BadEnum { field: "cfg.method" })?;
+    let steps = r.u64()? as usize;
+    let lr = r.f32_finite("cfg.lr")?;
+    let rho = r.f32_finite("cfg.rho")?;
+    let beta1 = r.f32_finite("cfg.beta1")?;
+    let beta2 = r.f32_finite("cfg.beta2")?;
+    let eps = r.f32_finite("cfg.eps")?;
+    let adamu_alpha = r.f32_finite("cfg.adamu_alpha")?;
+    let lazy_interval = r.u64()? as usize;
+    let seed = r.u64()?;
+    let eval_every = r.u64()? as usize;
+    let bias_correction = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(WireError::BadEnum { field: "cfg.bias_correction" }),
+    };
+    let sched = r.u8()?;
+    let frac = r.f32_finite("cfg.lr_schedule.final_frac")?;
+    let lr_schedule = match sched {
+        0 => LrSchedule::Constant,
+        1 => LrSchedule::Linear { final_frac: frac },
+        2 => LrSchedule::Cosine { final_frac: frac },
+        _ => return Err(WireError::BadEnum { field: "cfg.lr_schedule" }),
+    };
+    let kappa_clip = r.f32_finite("cfg.kappa_clip")?;
+    let n_perturb = r.u32()? as usize;
+    let forward_form = match r.u8()? {
+        0 => ForwardForm::Materialize,
+        1 => ForwardForm::Implicit,
+        _ => return Err(WireError::BadEnum { field: "cfg.forward_form" }),
+    };
+    Ok(TrainConfig {
+        method,
+        steps,
+        lr,
+        rho,
+        beta1,
+        beta2,
+        eps,
+        adamu_alpha,
+        lazy_interval,
+        seed,
+        eval_every,
+        bias_correction,
+        lr_schedule,
+        kappa_clip,
+        n_perturb,
+        forward_form,
+    })
+}
+
+pub fn encode_hello_ack(a: &HelloAck) -> Vec<u8> {
+    let mut w = Wr::frame(TAG_HELLO_ACK);
+    w.u32(a.slot);
+    w.u32(a.workers);
+    put_cfg(&mut w, &a.cfg);
+    w.string(&a.job.task);
+    w.u32(a.job.k_shot);
+    w.u32(a.job.eval_n);
+    w.finish()
+}
+
+pub fn decode_hello_ack(frame: &[u8]) -> Result<HelloAck, WireError> {
+    let mut r = Rd::new(frame_payload(frame)?);
+    match r.u8()? {
+        TAG_HELLO_ACK => {
+            let slot = r.u32()?;
+            let workers = r.u32()?;
+            let cfg = get_cfg(&mut r)?;
+            let job = JobSpec {
+                task: r.string("job.task")?,
+                k_shot: r.u32()?,
+                eval_n: r.u32()?,
+            };
+            r.done()?;
+            Ok(HelloAck { slot, workers, cfg, job })
+        }
+        tag => Err(WireError::UnknownTag { tag }),
+    }
+}
+
+/// Framed size of a command on the wire (what a TCP transport writes).
+pub fn command_frame_len(cmd: &Command) -> u64 {
+    encode_command(cmd).len() as u64
+}
+
+/// Framed size of an event on the wire.
+pub fn event_frame_len(ev: &Event) -> u64 {
+    encode_event(ev).len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmodel::comm::{KAPPA_BYTES, TICKET_BYTES, TWO_POINT_BYTES};
+
+    fn ticket() -> Ticket {
+        Ticket { step: 7, sub: 3, perturb_seed: 0xDEAD_BEEF }
+    }
+
+    #[test]
+    fn command_round_trips() {
+        let cmds = vec![
+            Command::Forward(ticket()),
+            Command::Apply { ticket: ticket(), kappa: -1.5 },
+            Command::Skip { ticket: ticket() },
+            Command::Eval { step: 42 },
+            Command::Stop,
+            Command::Checkpoint { step: 10 },
+            Command::CatchUp(CatchUp {
+                checkpoint_step: Some(4),
+                entries: vec![
+                    LogEntry { step: 4, sub: 0, perturb_seed: 9, kappa: Some(0.25) },
+                    LogEntry { step: 5, sub: 0, perturb_seed: 10, kappa: None },
+                ],
+            }),
+            Command::CatchUp(CatchUp { checkpoint_step: None, entries: vec![] }),
+        ];
+        for cmd in &cmds {
+            let frame = encode_command(cmd);
+            let back = decode_command(&frame).unwrap();
+            assert_eq!(*cmd, back, "command round trip");
+            // re-encoding the decoded message is bit-identical
+            assert_eq!(frame, encode_command(&back));
+        }
+    }
+
+    #[test]
+    fn event_round_trips_bit_exactly() {
+        let mut timers = PhaseTimers::default();
+        timers.add(crate::coordinator::metrics::Phase::Forward, 1.25);
+        timers.add_upload_bytes(100, 7);
+        let evs = vec![
+            Event::TwoPoint {
+                worker: 2,
+                step: 9,
+                sub: 1,
+                f_plus: f32::NAN, // poisoning must survive the wire
+                f_minus: -0.0,
+                forward_secs: 0.125,
+            },
+            Event::Applied { worker: 0, step: 1, sub: 0, update_secs: 0.5 },
+            Event::EvalDone { worker: 0, step: 8, accuracy: f64::NAN },
+            Event::Failed { worker: 3, error: "boom: bad artifact".to_string() },
+            Event::Report(Box::new(WorkerReport {
+                worker: 1,
+                timers,
+                counter: SampleCounter { matrix_elements: 5, vector_elements: 6 },
+                state_bytes: 1234,
+            })),
+            Event::CheckpointDone { worker: 0, step: 4 },
+        ];
+        for ev in &evs {
+            let frame = encode_event(ev);
+            let back = decode_event(&frame).unwrap();
+            assert_eq!(frame, encode_event(&back), "event {ev:?} not bit-stable");
+        }
+        // NaN loss bits survive exactly
+        let frame = encode_event(&evs[0]);
+        match decode_event(&frame).unwrap() {
+            Event::TwoPoint { f_plus, f_minus, .. } => {
+                assert_eq!(f_plus.to_bits(), f32::NAN.to_bits());
+                assert_eq!(f_minus.to_bits(), (-0.0f32).to_bits());
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_sizes_match_the_analytic_model() {
+        // the memmodel constants are the *logical* payload; the frame adds
+        // exactly FRAME_HEADER_BYTES (+ metadata on the result path)
+        let fwd = encode_command(&Command::Forward(ticket()));
+        assert_eq!(fwd.len() as u64, FRAME_HEADER_BYTES + TICKET_BYTES);
+        let apply = encode_command(&Command::Apply { ticket: ticket(), kappa: 1.0 });
+        assert_eq!(apply.len() as u64, FRAME_HEADER_BYTES + KAPPA_BYTES);
+        let skip = encode_command(&Command::Skip { ticket: ticket() });
+        assert_eq!(skip.len() as u64, FRAME_HEADER_BYTES + TICKET_BYTES);
+        let tp = encode_event(&Event::TwoPoint {
+            worker: 0,
+            step: 0,
+            sub: 0,
+            f_plus: 0.0,
+            f_minus: 0.0,
+            forward_secs: 0.0,
+        });
+        assert_eq!(
+            tp.len() as u64,
+            FRAME_HEADER_BYTES + TWO_POINT_BYTES + crate::memmodel::comm::RESULT_META_BYTES
+        );
+    }
+
+    #[test]
+    fn malformed_frames_yield_typed_errors() {
+        // truncation at every prefix of a valid frame
+        let frame = encode_command(&Command::Apply { ticket: ticket(), kappa: 2.0 });
+        for cut in 0..frame.len() {
+            let err = decode_command(&frame[..cut]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated { .. }),
+                "cut at {cut}: {err:?}"
+            );
+        }
+        // unknown tag
+        let mut bogus = encode_command(&Command::Stop);
+        bogus[4] = 0xEE;
+        assert_eq!(decode_command(&bogus), Err(WireError::UnknownTag { tag: 0xEE }));
+        // oversized length prefix
+        let mut huge = vec![0u8; 8];
+        huge[..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            decode_command(&huge),
+            Err(WireError::Oversize { .. })
+        ));
+        // trailing garbage
+        let mut long = encode_command(&Command::Stop);
+        long.push(0);
+        assert!(matches!(decode_command(&long), Err(WireError::Trailing { .. })));
+        // non-finite kappa is a wire error (the lockstep-skip path never
+        // broadcasts one; a frame carrying it is corrupt by definition)
+        let mut w = Wr::frame(TAG_APPLY);
+        put_ticket(&mut w, &ticket());
+        w.f32_bits(f32::INFINITY);
+        assert_eq!(
+            decode_command(&w.finish()),
+            Err(WireError::NonFinite { field: "apply.kappa" })
+        );
+        // catch-up count larger than the payload can hold
+        let mut w = Wr::frame(TAG_CATCH_UP);
+        w.u64(u64::MAX);
+        w.u32(1_000_000);
+        assert!(matches!(
+            decode_command(&w.finish()),
+            Err(WireError::BadCount { .. })
+        ));
+    }
+
+    #[test]
+    fn handshake_round_trips() {
+        let hello = Hello { requested_slot: 3 };
+        assert_eq!(decode_hello(&encode_hello(&hello)).unwrap(), hello);
+
+        let mut cfg = TrainConfig::default();
+        cfg.steps = 17;
+        cfg.seed = 99;
+        cfg.lr_schedule = LrSchedule::Cosine { final_frac: 0.25 };
+        let ack = HelloAck {
+            slot: 1,
+            workers: 4,
+            cfg,
+            job: JobSpec { task: "agnews".to_string(), k_shot: 8, eval_n: 32 },
+        };
+        let frame = encode_hello_ack(&ack);
+        let back = decode_hello_ack(&frame).unwrap();
+        assert_eq!(ack, back);
+        assert_eq!(frame, encode_hello_ack(&back));
+        // a command decoder must not accept a handshake frame
+        assert!(matches!(
+            decode_command(&frame),
+            Err(WireError::UnknownTag { .. })
+        ));
+    }
+}

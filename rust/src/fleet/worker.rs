@@ -1,15 +1,22 @@
-//! One fleet worker: a private runtime + parameter replica driven by
-//! coordinator tickets.
+//! One fleet worker: a parameter replica driven by coordinator commands.
 //!
 //! The worker never sees another replica's parameters. It samples its own
-//! data shard (`Stream::Data`, shard = worker index), runs the fused
+//! data shard (`Stream::Data`, shard = worker slot), runs the fused
 //! two-point forward for each ticket, reports the scalar loss pair, and
 //! replays the coordinator's aggregated kappa through the *same*
 //! [`StepEngine`] update path the single-process trainer uses — which is
 //! exactly why all replicas stay bit-identical with zero parameter traffic.
+//!
+//! The protocol loop ([`serve`]) is written against the [`Replica`] trait
+//! and the transport [`Link`] trait, so the same loop runs the real
+//! PJRT-backed [`EngineReplica`] over in-process channels or TCP, and the
+//! artifact-free simulation replica (`fleet::sim`) in the chaos tests.
+//! Catch-up is part of the loop: a (re)joining worker receives the last
+//! published checkpoint plus the (seed, kappa) log and replays it — an
+//! update is fully determined by those scalars, so replay is exact.
 
-use std::path::Path;
-use std::sync::mpsc::{Receiver, Sender};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::Sender;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -18,13 +25,16 @@ use crate::config::TrainConfig;
 use crate::coordinator::counter::SampleCounter;
 use crate::coordinator::eval;
 use crate::coordinator::metrics::{Phase, PhaseTimers};
-use crate::coordinator::optimizer::{build_optimizer, ForwardOut};
+use crate::coordinator::optimizer::{build_optimizer, ForwardOut, ZoOptimizer};
+use crate::coordinator::seeds::SeedSchedule;
 use crate::coordinator::step::StepEngine;
 use crate::coordinator::trainer::DataSource;
 use crate::data::Batch;
 use crate::runtime::{checkpoint, Manifest, ParamStore, Runtime};
 
 use super::protocol::{Command, Event, Ticket, WorkerReport};
+use super::tcp::{self, JoinInfo, Reconnect};
+use super::transport::{loopback_join, Link, LoopMsg};
 
 /// Everything one worker needs beyond the shared [`TrainConfig`]: its data
 /// shard source, and (worker 0 only) the eval set and checkpoint target.
@@ -71,92 +81,76 @@ pub fn task_job_factory(task_name: String, seed: u64, k_shot: usize,
     })
 }
 
-/// Thread entry point: run the ticket loop, convert any error into a
-/// [`Event::Failed`] so the coordinator aborts cleanly instead of hanging.
-/// A *panic* (as opposed to an `Err`) is also reported via a drop guard —
-/// otherwise the coordinator would block forever on a round the dead
-/// worker never answers; the panic itself still propagates through the
-/// scoped join.
-pub(crate) fn run_worker(worker: usize, workers: u32, artifact_dir: &Path,
-                         cfg: &TrainConfig, factory: &JobFactory,
-                         rx: Receiver<Command>, tx: Sender<Event>) {
-    struct PanicGuard {
-        worker: usize,
-        tx: Sender<Event>,
-    }
-    impl Drop for PanicGuard {
-        fn drop(&mut self) {
-            if std::thread::panicking() {
-                let _ = self.tx.send(Event::Failed {
-                    worker: self.worker,
-                    error: "worker thread panicked".to_string(),
-                });
-            }
-        }
-    }
-    let _guard = PanicGuard { worker, tx: tx.clone() };
-    if let Err(e) = worker_loop(worker, workers, artifact_dir, cfg, factory,
-                                &rx, &tx) {
-        let _ = tx.send(Event::Failed { worker, error: format!("{e:#}") });
-    }
+// ---------------------------------------------------------------------------
+// the replica abstraction
+// ---------------------------------------------------------------------------
+
+/// End-of-run accounting one replica hands back on Stop.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaReport {
+    pub timers: PhaseTimers,
+    pub counter: SampleCounter,
+    pub state_bytes: u64,
 }
 
-fn send(tx: &Sender<Event>, ev: Event) -> Result<()> {
-    tx.send(ev).map_err(|_| anyhow!("coordinator channel closed"))
+/// One parameter replica, as the protocol loop sees it. Implementations:
+/// [`EngineReplica`] (the real runtime) and `fleet::sim::SimReplica`
+/// (deterministic toy model for transport/fault tests).
+pub trait Replica {
+    /// Two-point forward for (step, sub) on this replica's data shard.
+    fn forward(&mut self, step: u64, sub: u32) -> Result<(f32, f32)>;
+    /// Apply the aggregated (already clipped) kappa for (step, sub). Also
+    /// the catch-up replay path, so it must not assume a prior `forward`
+    /// for the same step.
+    fn apply(&mut self, step: u64, sub: u32, kappa: f32) -> Result<()>;
+    /// Lockstep skip for (step, sub) — default no-op.
+    fn skip(&mut self, _step: u64, _sub: u32) -> Result<()> {
+        Ok(())
+    }
+    /// Held-out eval; NaN when this replica carries no eval set.
+    fn eval(&mut self) -> Result<f64>;
+    /// Publish a step checkpoint (`step` = completed-step count).
+    fn save_checkpoint(&mut self, step: u64) -> Result<()>;
+    /// Load the published checkpoint; must be for exactly `expect_step`.
+    fn load_checkpoint(&mut self, expect_step: u64) -> Result<()>;
+    /// Final bookkeeping (write the end-of-run checkpoint, report stats).
+    fn finish(&mut self) -> Result<ReplicaReport>;
 }
 
-fn worker_loop(worker: usize, workers: u32, artifact_dir: &Path,
-               cfg: &TrainConfig, factory: &JobFactory,
-               rx: &Receiver<Command>, tx: &Sender<Event>) -> Result<()> {
-    let rt = Runtime::open(artifact_dir)
-        .with_context(|| format!("worker {worker}: opening runtime"))?;
-    let engine = StepEngine::new(cfg.clone());
-    let mut driver = build_optimizer(&rt, &engine.cfg, &engine.seeds)?;
-    let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
-    let job = factory(worker, &rt.manifest)
-        .with_context(|| format!("worker {worker}: building job"))?;
-    // precompile exactly this method's artifact set (plus the eval head on
-    // the worker that carries it) so the first ticket is pure execution and
-    // round-0 straggling doesn't depend on compile order
-    rt.warmup_method(cfg.method, cfg.forward_form)
-        .with_context(|| format!("worker {worker}: warmup"))?;
-    if job.eval.is_some() {
-        rt.warmup(&["eval_logits"])
-            .with_context(|| format!("worker {worker}: eval warmup"))?;
-    }
-    let mut timers = PhaseTimers::default();
-    let mut counter = SampleCounter::default();
-    // the current step's batch; sub-perturbations and the update phase
-    // reuse it, exactly like the single-process trainer
-    let mut current: Option<(u64, Batch)> = None;
+/// How one [`serve`] session ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeEnd {
+    /// clean protocol shutdown (Stop received, report sent)
+    Stopped,
+    /// the coordinator closed the link (kick, or coordinator gone); a TCP
+    /// worker reconnects with a fresh replica, a loopback worker exits
+    LinkClosed,
+}
 
+/// Replica-consistency check: the broadcast perturbation seed must match
+/// this worker's locally derived schedule.
+fn check_ticket(seeds: &SeedSchedule, worker: usize, t: &Ticket) -> Result<()> {
+    let local = seeds.perturb_seed(t.step, t.sub);
+    ensure!(local == t.perturb_seed,
+            "worker {worker}: seed schedule diverged at step {} sub {} \
+             (coordinator {:#x}, local {local:#x})",
+            t.step, t.sub, t.perturb_seed);
+    Ok(())
+}
+
+/// The protocol loop: execute commands against `replica` until the
+/// coordinator stops us or the link dies. Transport- and replica-agnostic.
+pub fn serve(link: &mut dyn Link, worker: usize, seeds: &SeedSchedule,
+             replica: &mut dyn Replica) -> Result<ServeEnd> {
     loop {
-        // a closed command channel means the coordinator is gone (it
-        // aborted); exit quietly — it is not this worker's error
-        let Ok(cmd) = rx.recv() else { return Ok(()) };
+        let Some(cmd) = link.recv()? else { return Ok(ServeEnd::LinkClosed) };
         match cmd {
             Command::Forward(t) => {
-                check_ticket(&engine, worker, &t)?;
-                if current.as_ref().map(|(s, _)| *s) != Some(t.step) {
-                    let dseed = engine.seeds
-                        .shard_data_seed(t.step, worker as u32, workers);
-                    let b = timers.time(Phase::Sampling,
-                                        || job.data.batch(dseed, t.step));
-                    current = Some((t.step, b));
-                }
-                let Some((_, batch)) = current.as_ref() else {
-                    bail!("worker {worker}: no batch staged for step {}", t.step);
-                };
+                check_ticket(seeds, worker, &t)?;
                 let t0 = Instant::now();
-                let fwd = engine.forward_sub(&rt, &mut *driver, &mut params,
-                                             batch, t.step, t.sub,
-                                             &mut timers, &mut counter)?;
+                let (f_plus, f_minus) = replica.forward(t.step, t.sub)?;
                 let forward_secs = t0.elapsed().as_secs_f64();
-                let ForwardOut::TwoPoint { f_plus, f_minus } = fwd else {
-                    bail!("worker {worker}: fleet requires a two-point ZO \
-                           forward (got a first-order loss)");
-                };
-                send(tx, Event::TwoPoint {
+                link.send(&Event::TwoPoint {
                     worker,
                     step: t.step,
                     sub: t.sub,
@@ -166,18 +160,10 @@ fn worker_loop(worker: usize, workers: u32, artifact_dir: &Path,
                 })?;
             }
             Command::Apply { ticket: t, kappa } => {
-                check_ticket(&engine, worker, &t)?;
-                let Some((step, batch)) = current.as_ref() else {
-                    bail!("worker {worker}: Apply before any Forward");
-                };
-                ensure!(*step == t.step,
-                        "worker {worker}: Apply for step {} but batch is for \
-                         step {step}", t.step);
+                check_ticket(seeds, worker, &t)?;
                 let t0 = Instant::now();
-                engine.update_sub(&rt, &mut *driver, &mut params, batch,
-                                  t.step, t.sub, kappa, &mut timers,
-                                  &mut counter)?;
-                send(tx, Event::Applied {
+                replica.apply(t.step, t.sub, kappa)?;
+                link.send(&Event::Applied {
                     worker,
                     step: t.step,
                     sub: t.sub,
@@ -185,7 +171,9 @@ fn worker_loop(worker: usize, workers: u32, artifact_dir: &Path,
                 })?;
             }
             Command::Skip { ticket: t } => {
-                send(tx, Event::Applied {
+                check_ticket(seeds, worker, &t)?;
+                replica.skip(t.step, t.sub)?;
+                link.send(&Event::Applied {
                     worker,
                     step: t.step,
                     sub: t.sub,
@@ -193,38 +181,311 @@ fn worker_loop(worker: usize, workers: u32, artifact_dir: &Path,
                 })?;
             }
             Command::Eval { step } => {
-                let accuracy = match &job.eval {
-                    Some((batches, labels)) => {
-                        eval::accuracy(&rt, &params, batches, labels)?
+                let accuracy = replica.eval()?;
+                link.send(&Event::EvalDone { worker, step, accuracy })?;
+            }
+            Command::Checkpoint { step } => {
+                replica.save_checkpoint(step)?;
+                link.send(&Event::CheckpointDone { worker, step })?;
+            }
+            Command::CatchUp(c) => {
+                // converge on the fleet's current parameters: load the
+                // checkpoint (if any), then replay the logged tail; each
+                // entry is cross-checked against the local seed schedule
+                if let Some(cs) = c.checkpoint_step {
+                    replica.load_checkpoint(cs)?;
+                }
+                for e in &c.entries {
+                    let local = seeds.perturb_seed(e.step, e.sub);
+                    ensure!(local == e.perturb_seed,
+                            "worker {worker}: catch-up log diverged from the \
+                             seed schedule at step {} sub {}", e.step, e.sub);
+                    match e.kappa {
+                        Some(k) => replica.apply(e.step, e.sub, k)?,
+                        None => replica.skip(e.step, e.sub)?,
                     }
-                    None => f64::NAN,
-                };
-                send(tx, Event::EvalDone { worker, step, accuracy })?;
+                }
+                // no reply: the coordinator's next command (a Forward for
+                // the in-flight round) is the acknowledgement path
             }
             Command::Stop => {
-                if let Some(dir) = &job.save_to {
-                    checkpoint::save(dir, &rt.manifest, &params,
-                                     engine.cfg.steps as u64)?;
-                }
-                send(tx, Event::Report(Box::new(WorkerReport {
+                let r = replica.finish()?;
+                link.send(&Event::Report(Box::new(WorkerReport {
                     worker,
-                    timers,
-                    counter,
-                    state_bytes: driver.state_bytes(),
+                    timers: r.timers,
+                    counter: r.counter,
+                    state_bytes: r.state_bytes,
                 })))?;
-                return Ok(());
+                return Ok(ServeEnd::Stopped);
             }
         }
     }
 }
 
-/// Replica-consistency check: the broadcast perturbation seed must match
-/// this worker's locally derived schedule.
-fn check_ticket(engine: &StepEngine, worker: usize, t: &Ticket) -> Result<()> {
-    let local = engine.seeds.perturb_seed(t.step, t.sub);
-    ensure!(local == t.perturb_seed,
-            "worker {worker}: seed schedule diverged at step {} sub {} \
-             (coordinator {:#x}, local {local:#x})",
-            t.step, t.sub, t.perturb_seed);
-    Ok(())
+// ---------------------------------------------------------------------------
+// the real (PJRT runtime) replica
+// ---------------------------------------------------------------------------
+
+/// The production replica: private [`Runtime`] + [`ParamStore`] + optimizer
+/// driver, stepping through the same [`StepEngine`] as the single-process
+/// trainer.
+pub struct EngineReplica {
+    worker: usize,
+    workers: u32,
+    rt: Runtime,
+    engine: StepEngine,
+    driver: Box<dyn ZoOptimizer>,
+    params: ParamStore,
+    job: WorkerJob,
+    timers: PhaseTimers,
+    counter: SampleCounter,
+    /// the current step's batch; sub-perturbations and the update phase
+    /// reuse it, exactly like the single-process trainer
+    current: Option<(u64, Batch)>,
+    /// where fleet step checkpoints are published / loaded from
+    checkpoint_dir: Option<PathBuf>,
+}
+
+impl EngineReplica {
+    pub fn build(worker: usize, workers: u32, artifact_dir: &Path,
+                 cfg: &TrainConfig, factory: &JobFactory,
+                 checkpoint_dir: Option<PathBuf>) -> Result<Self> {
+        let rt = Runtime::open(artifact_dir)
+            .with_context(|| format!("worker {worker}: opening runtime"))?;
+        let engine = StepEngine::new(cfg.clone());
+        let driver = build_optimizer(&rt, &engine.cfg, &engine.seeds)?;
+        let params = ParamStore::load(&rt.client, &rt.manifest)?;
+        let job = factory(worker, &rt.manifest)
+            .with_context(|| format!("worker {worker}: building job"))?;
+        // precompile exactly this method's artifact set (plus the eval head
+        // on the worker that carries it) so the first ticket is pure
+        // execution and round-0 straggling doesn't depend on compile order
+        rt.warmup_method(cfg.method, cfg.forward_form)
+            .with_context(|| format!("worker {worker}: warmup"))?;
+        if job.eval.is_some() {
+            rt.warmup(&["eval_logits"])
+                .with_context(|| format!("worker {worker}: eval warmup"))?;
+        }
+        Ok(Self {
+            worker,
+            workers,
+            rt,
+            engine,
+            driver,
+            params,
+            job,
+            timers: PhaseTimers::default(),
+            counter: SampleCounter::default(),
+            current: None,
+            checkpoint_dir,
+        })
+    }
+
+    /// Sample this worker's shard batch for `step` unless already staged.
+    /// Both `forward` and `apply` stage — the apply side matters on the
+    /// catch-up replay path, where no forward precedes the update.
+    fn stage_batch(&mut self, step: u64) {
+        if self.current.as_ref().map(|(s, _)| *s) == Some(step) {
+            return;
+        }
+        let dseed = self.engine.seeds
+            .shard_data_seed(step, self.worker as u32, self.workers);
+        let Self { timers, job, .. } = self;
+        let b = timers.time(Phase::Sampling, || job.data.batch(dseed, step));
+        self.current = Some((step, b));
+    }
+}
+
+impl Replica for EngineReplica {
+    fn forward(&mut self, step: u64, sub: u32) -> Result<(f32, f32)> {
+        self.stage_batch(step);
+        let Self { worker, rt, engine, driver, params, timers, counter,
+                   current, .. } = self;
+        let Some((_, batch)) = current.as_ref() else {
+            bail!("worker {worker}: no batch staged for step {step}");
+        };
+        let fwd = engine.forward_sub(rt, &mut **driver, params, batch, step,
+                                     sub, timers, counter)?;
+        let ForwardOut::TwoPoint { f_plus, f_minus } = fwd else {
+            bail!("worker {worker}: fleet requires a two-point ZO forward \
+                   (got a first-order loss)");
+        };
+        Ok((f_plus, f_minus))
+    }
+
+    fn apply(&mut self, step: u64, sub: u32, kappa: f32) -> Result<()> {
+        self.stage_batch(step);
+        let Self { worker, rt, engine, driver, params, timers, counter,
+                   current, .. } = self;
+        let Some((s, batch)) = current.as_ref() else {
+            bail!("worker {worker}: no batch staged for step {step}");
+        };
+        ensure!(*s == step,
+                "worker {worker}: Apply for step {step} but batch is for \
+                 step {s}");
+        engine.update_sub(rt, &mut **driver, params, batch, step, sub, kappa,
+                          timers, counter)
+    }
+
+    fn eval(&mut self) -> Result<f64> {
+        match &self.job.eval {
+            Some((batches, labels)) => {
+                eval::accuracy(&self.rt, &self.params, batches, labels)
+            }
+            None => Ok(f64::NAN),
+        }
+    }
+
+    fn save_checkpoint(&mut self, step: u64) -> Result<()> {
+        let Some(dir) = &self.checkpoint_dir else {
+            bail!("worker {}: Checkpoint command but no --checkpoint-dir",
+                  self.worker);
+        };
+        checkpoint::save(dir, &self.rt.manifest, &self.params, step)
+    }
+
+    fn load_checkpoint(&mut self, expect_step: u64) -> Result<()> {
+        let Some(dir) = &self.checkpoint_dir else {
+            bail!("worker {}: CatchUp names a checkpoint but no \
+                   --checkpoint-dir", self.worker);
+        };
+        let (store, step) = checkpoint::load(dir, &self.rt.client,
+                                             &self.rt.manifest)?;
+        ensure!(step == expect_step,
+                "checkpoint in {} is for step {step}, coordinator expected \
+                 {expect_step}", dir.display());
+        self.params = store;
+        self.current = None;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<ReplicaReport> {
+        if let Some(dir) = &self.job.save_to {
+            checkpoint::save(dir, &self.rt.manifest, &self.params,
+                             self.engine.cfg.steps as u64)?;
+        }
+        Ok(ReplicaReport {
+            timers: self.timers.clone(),
+            counter: self.counter.clone(),
+            state_bytes: self.driver.state_bytes(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread / process entry points
+// ---------------------------------------------------------------------------
+
+/// Builds a custom replica for (worker slot, fleet width) — the test
+/// injection point the chaos suite uses to run artifact-free fleets.
+pub type ReplicaFactory =
+    dyn Fn(usize, u32) -> Result<Box<dyn Replica>> + Send + Sync;
+
+/// Departure announcement on every exit path, *including panic unwinding*
+/// — the coordinator must never wait on a dead thread. Declared first in
+/// each entry point so it drops last (after any Failed event is sent).
+struct ByeGuard {
+    worker: usize,
+    tx: Sender<LoopMsg>,
+}
+
+impl Drop for ByeGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(LoopMsg::Bye(self.worker));
+    }
+}
+
+/// Loopback thread entry for the production replica. Joins first so the
+/// coordinator learns membership while the (slow) runtime build and warmup
+/// proceed; commands queue in the channel meanwhile.
+pub(crate) fn run_worker_loopback(worker: usize, workers: u32,
+                                  artifact_dir: &Path, cfg: &TrainConfig,
+                                  factory: &JobFactory,
+                                  hub_tx: Sender<LoopMsg>,
+                                  checkpoint_dir: Option<PathBuf>) {
+    let _bye = ByeGuard { worker, tx: hub_tx.clone() };
+    let Ok(mut link) = loopback_join(worker, &hub_tx) else { return };
+    let seeds = SeedSchedule::new(cfg.seed);
+    let fail = |e: &anyhow::Error| {
+        let _ = hub_tx.send(LoopMsg::Ev(worker, Event::Failed {
+            worker,
+            error: format!("{e:#}"),
+        }));
+    };
+    match EngineReplica::build(worker, workers, artifact_dir, cfg, factory,
+                               checkpoint_dir) {
+        Ok(mut replica) => {
+            if let Err(e) = serve(&mut link, worker, &seeds, &mut replica) {
+                fail(&e);
+            }
+        }
+        Err(e) => fail(&e),
+    }
+}
+
+/// Loopback thread entry for an injected replica (chaos / sim tests).
+pub(crate) fn run_custom_loopback(worker: usize, workers: u32, seed: u64,
+                                  make: &ReplicaFactory,
+                                  hub_tx: Sender<LoopMsg>) {
+    let _bye = ByeGuard { worker, tx: hub_tx.clone() };
+    let Ok(mut link) = loopback_join(worker, &hub_tx) else { return };
+    let seeds = SeedSchedule::new(seed);
+    let fail = |e: &anyhow::Error| {
+        let _ = hub_tx.send(LoopMsg::Ev(worker, Event::Failed {
+            worker,
+            error: format!("{e:#}"),
+        }));
+    };
+    match make(worker, workers) {
+        Ok(mut replica) => {
+            if let Err(e) = serve(&mut link, worker, &seeds, &mut *replica) {
+                fail(&e);
+            }
+        }
+        Err(e) => fail(&e),
+    }
+}
+
+/// TCP worker loop with an injected replica builder: dial, serve, and on a
+/// closed link (kick, coordinator restart window) reconnect with a *fresh*
+/// replica — the catch-up protocol converges it, so a reconnect is
+/// indistinguishable from a crash-restart.
+pub fn serve_tcp(addr: &str, rc: Reconnect,
+                 make: &mut dyn FnMut(&JoinInfo) -> Result<Box<dyn Replica>>)
+                 -> Result<()> {
+    loop {
+        let (mut link, info) = tcp::dial(addr, None, rc)?;
+        let seeds = SeedSchedule::new(info.cfg.seed);
+        let mut replica = make(&info)?;
+        match serve(&mut link, info.slot, &seeds, &mut *replica) {
+            Ok(ServeEnd::Stopped) => return Ok(()),
+            Ok(ServeEnd::LinkClosed) => continue,
+            Err(e) => {
+                let _ = link.send(&Event::Failed {
+                    worker: info.slot,
+                    error: format!("{e:#}"),
+                });
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Process entry for `tezo train-dp --connect <addr>`: a remote worker that
+/// learns everything (slot, fleet width, config, job) from the handshake.
+pub fn run_tcp_worker(addr: &str, artifact_dir: &Path,
+                      save_to: Option<PathBuf>,
+                      checkpoint_dir: Option<PathBuf>, rc: Reconnect)
+                      -> Result<()> {
+    let artifact_dir = artifact_dir.to_path_buf();
+    serve_tcp(addr, rc, &mut |info: &JoinInfo| {
+        let factory = task_job_factory(info.job.task.clone(), info.cfg.seed,
+                                       info.job.k_shot as usize,
+                                       info.job.eval_n as usize,
+                                       save_to.clone());
+        let replica = EngineReplica::build(info.slot, info.workers,
+                                           &artifact_dir, &info.cfg, &*factory,
+                                           checkpoint_dir.clone())?;
+        Ok(Box::new(replica) as Box<dyn Replica>)
+    })
 }

@@ -13,11 +13,12 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use tezo::clix::{self, ArgSpec};
-use tezo::config::{search_space, FleetConfig, ForwardForm, Method, TrainConfig};
+use tezo::config::{search_space, FleetConfig, ForwardForm, Method,
+                   StragglerPolicy, TrainConfig};
 use tezo::coordinator::rank;
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
-use tezo::fleet::{task_job_factory, FleetTrainer};
+use tezo::fleet::{task_job_factory, FleetTrainer, JobSpec, Transport};
 use tezo::memmodel::{comm, tables};
 use tezo::runtime::{ParamStore, Runtime};
 
@@ -234,6 +235,16 @@ const TRAIN_DP_SPECS: &[ArgSpec] = &[
     ArgSpec::opt("n-perturb", "1", "q-SPSA perturbations per step (SGD-form only)"),
     ArgSpec::opt("forward-form", "implicit", "two-point loss form: implicit|materialize (low-rank methods)"),
     ArgSpec::opt("save-to", "", "worker 0 writes a checkpoint here at the end"),
+    ArgSpec::opt("transport", "loopback", "fleet wire: loopback|tcp"),
+    ArgSpec::opt("listen", "127.0.0.1:7700", "coordinator bind address (--transport tcp)"),
+    ArgSpec::opt("connect", "", "worker mode: dial this coordinator and serve tickets"),
+    ArgSpec::opt("straggler", "wait", "round-deadline policy: wait|drop"),
+    ArgSpec::opt("straggler-timeout-ms", "30000", "drop policy: round deadline in ms"),
+    ArgSpec::opt("checkpoint-every", "0", "publish a catch-up checkpoint every N steps (0 = off)"),
+    ArgSpec::opt("checkpoint-dir", "", "where step checkpoints are published/loaded"),
+    ArgSpec::opt("max-restarts", "0", "worker deaths tolerated before aborting (0 = fail fast)"),
+    ArgSpec::opt("reconnect-attempts", "10", "worker mode: dial attempts per reconnect"),
+    ArgSpec::opt("reconnect-backoff-ms", "100", "worker mode: base backoff between attempts"),
     ArgSpec::switch("quiet", "suppress per-step output"),
     ArgSpec::switch("help", "show help"),
 ];
@@ -247,22 +258,77 @@ fn cmd_train_dp(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let config = args.get_str("config")?;
-    let method = Method::parse(args.get_str("method")?)?;
-    let cfg = parse_train_cfg(&args)?;
-    let fleet = FleetConfig::new(args.get_usize("workers")?);
-    fleet.validate(&cfg)?;
-
     let save_to = match args.get("save-to") {
         Some(d) if !d.is_empty() => Some(PathBuf::from(d)),
         _ => None,
     };
-    let factory = task_job_factory(args.get_str("task")?.to_string(), cfg.seed,
-                                   args.get_usize("k")?,
-                                   args.get_usize("eval-n")?, save_to);
+    let checkpoint_dir = match args.get("checkpoint-dir") {
+        Some(d) if !d.is_empty() => Some(PathBuf::from(d)),
+        _ => None,
+    };
+
+    // worker mode: everything else (method, steps, task) comes from the
+    // coordinator's handshake, so conflicting local flags cannot desync it
+    if let Some(addr) = args.get("connect") {
+        if !addr.is_empty() {
+            let rc = tezo::fleet::tcp::Reconnect {
+                attempts: args.get_usize("reconnect-attempts")? as u32,
+                base_delay: std::time::Duration::from_millis(
+                    args.get_u64("reconnect-backoff-ms")?),
+                ..Default::default()
+            };
+            let dir = tezo::artifacts_root().join(config);
+            println!("worker: dialing {addr} (artifacts: {config})");
+            tezo::fleet::worker::run_tcp_worker(addr, &dir, save_to,
+                                                checkpoint_dir, rc)?;
+            println!("worker: fleet stopped cleanly");
+            return Ok(());
+        }
+    }
+
+    let method = Method::parse(args.get_str("method")?)?;
+    let cfg = parse_train_cfg(&args)?;
+    let mut fleet = FleetConfig::new(args.get_usize("workers")?);
+    fleet.straggler = match args.get_str("straggler")? {
+        "wait" => StragglerPolicy::Wait,
+        "drop" => StragglerPolicy::DropSkip {
+            timeout_ms: args.get_u64("straggler-timeout-ms")?,
+        },
+        other => bail!("unknown straggler policy {other:?} (wait|drop)"),
+    };
+    fleet.checkpoint_every = args.get_usize("checkpoint-every")?;
+    fleet.max_restarts = args.get_usize("max-restarts")?;
+    fleet.validate(&cfg)?;
+
+    let task_name = args.get_str("task")?.to_string();
+    let k_shot = args.get_usize("k")?;
+    let eval_n = args.get_usize("eval-n")?;
+    let factory = task_job_factory(task_name.clone(), cfg.seed, k_shot,
+                                   eval_n, save_to);
+
+    let transport = match args.get_str("transport")? {
+        "loopback" => Transport::Loopback,
+        "tcp" => {
+            let listen = args.get_str("listen")?.to_string();
+            println!("coordinator: listening on {listen} for {} workers",
+                     fleet.workers);
+            Transport::TcpListen(listen)
+        }
+        other => bail!("unknown transport {other:?} (loopback|tcp)"),
+    };
 
     let dir = tezo::artifacts_root().join(config);
     let n_params = tezo::runtime::Manifest::load(&dir)?.config.n_params as u64;
-    let mut trainer = FleetTrainer::new(fleet, cfg.clone(), dir, factory);
+    let mut trainer = FleetTrainer::new(fleet, cfg.clone(), dir, factory)
+        .with_transport(transport)
+        .with_job_spec(JobSpec {
+            task: task_name,
+            k_shot: k_shot as u32,
+            eval_n: eval_n as u32,
+        });
+    if let Some(d) = checkpoint_dir {
+        trainer = trainer.with_checkpoint_dir(d);
+    }
     if !args.has("quiet") {
         trainer.on_step = Some(Box::new(|step, loss| {
             if step % 20 == 0 {
@@ -294,9 +360,23 @@ fn cmd_train_dp(argv: &[String]) -> Result<()> {
         * cfg.steps as u64;
     println!("communication: {scalar} bytes total ({} tickets, {} results)",
              outcome.fleet.comm.tickets, outcome.fleet.comm.results);
+    let wire = outcome.fleet.comm.total_wire_bytes();
+    if wire > 0 {
+        println!("  on the wire (framed): {wire} bytes in {} frames \
+                  ({} down / {} up)",
+                 outcome.fleet.comm.frames_down + outcome.fleet.comm.frames_up,
+                 outcome.fleet.comm.wire_down, outcome.fleet.comm.wire_up);
+    }
     if fleet.workers > 1 {
         println!("  gradient all-reduce would move {allreduce} bytes \
                   ({:.1e}x more)", allreduce as f64 / scalar.max(1) as f64);
+    }
+    let fm = &outcome.fleet;
+    if fm.rejoins + fm.drops + fm.checkpoints + fm.stale_events > 0 {
+        println!("fault tolerance: {} rejoins, {} straggler drops, {} \
+                  degraded rounds, {} checkpoints, {} stale events",
+                 fm.rejoins, fm.drops, fm.degraded_rounds, fm.checkpoints,
+                 fm.stale_events);
     }
     println!("optimizer state per replica: {} bytes", outcome.state_bytes);
     if outcome.skipped > 0 {

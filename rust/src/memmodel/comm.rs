@@ -19,12 +19,32 @@ pub const TWO_POINT_BYTES: u64 = 8;
 /// included for the replica-consistency check).
 pub const KAPPA_BYTES: u64 = 4 + TICKET_BYTES;
 
+/// Per-frame overhead of the binary TCP codec (`fleet::wire`): a 4-byte
+/// little-endian length prefix plus a 1-byte message tag.
+pub const FRAME_HEADER_BYTES: u64 = 5;
+/// Result-path metadata the framed protocol carries beyond the logical
+/// two-point payload: worker id (u32) + step (u64) + sub (u32) + forward
+/// wall seconds (f64) for straggler accounting.
+pub const RESULT_META_BYTES: u64 = 4 + 8 + 4 + 8;
+
 /// Total logical wire bytes one training step moves for the fleet protocol:
 /// per sub-perturbation, a ticket down to every worker, a two-point result
 /// up from every worker, and the aggregated kappa broadcast back down.
 pub fn zo_scalar_step_bytes(workers: u64, n_perturb: u64) -> u64 {
     let q = n_perturb.max(1);
     q * workers * (TICKET_BYTES + TWO_POINT_BYTES + KAPPA_BYTES)
+}
+
+/// Framed bytes the same step puts on a real wire: each logical message
+/// plus its frame header, and the result frame's metadata fields. This is
+/// what `fleet::wire` actually encodes — pinned against the codec by
+/// `tests/props_wire.rs`, so model and implementation cannot drift.
+pub fn zo_scalar_step_wire_bytes(workers: u64, n_perturb: u64) -> u64 {
+    let q = n_perturb.max(1);
+    let ticket = FRAME_HEADER_BYTES + TICKET_BYTES;
+    let result = FRAME_HEADER_BYTES + RESULT_META_BYTES + TWO_POINT_BYTES;
+    let kappa = FRAME_HEADER_BYTES + KAPPA_BYTES;
+    q * workers * (ticket + result + kappa)
 }
 
 /// Total wire bytes of one ring all-reduce over an fp32 gradient of
@@ -57,6 +77,26 @@ mod tests {
         assert_eq!(zo_scalar_step_bytes(8, 1), zo_scalar_step_bytes(8, 1));
         // q-SPSA scales linearly
         assert_eq!(zo_scalar_step_bytes(8, 4), 4 * zo_scalar_step_bytes(8, 1));
+    }
+
+    #[test]
+    fn framing_overhead_is_bounded_and_scales_like_the_logical_model() {
+        // framed > logical, but by a constant per message — the O(workers)
+        // scaling the paper's systems claim rests on is unchanged
+        for (w, q) in [(1u64, 1u64), (4, 1), (8, 2), (64, 4)] {
+            let logical = zo_scalar_step_bytes(w, q);
+            let framed = zo_scalar_step_wire_bytes(w, q);
+            assert!(framed > logical);
+            assert_eq!(
+                framed - logical,
+                q * w * (3 * FRAME_HEADER_BYTES + RESULT_META_BYTES),
+                "overhead must be exactly 3 headers + result metadata per \
+                 (worker, sub)"
+            );
+        }
+        // q-SPSA scales linearly in the framed model too
+        assert_eq!(zo_scalar_step_wire_bytes(8, 4),
+                   4 * zo_scalar_step_wire_bytes(8, 1));
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Chaos battery for the fault-tolerant fleet: kill and revive workers at
+//! fuzzed step boundaries and demand the run stays *bitwise* identical to
+//! the uninterrupted oracle replay — the strongest statement the seed-log
+//! catch-up protocol can make. Covers both catch-up modes (full log replay
+//! and checkpoint + log tail) plus replica-side crashes through the
+//! `Event::Failed` path.
+//!
+//! Each case appends a line to `out/chaos_fleet_log.txt`; CI uploads the
+//! log as an artifact when the job fails.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use tezo::config::{FleetConfig, TrainConfig};
+use tezo::fleet::sim::{self, SimReplica};
+use tezo::fleet::worker::{JobFactory, Replica, ReplicaFactory};
+use tezo::fleet::{FleetOutcome, FleetTrainer, KillPlan};
+use tezo::proplite::{self, prop_assert, Gen};
+
+const DIM: usize = 16;
+
+/// Sim fleets inject replicas directly; the runtime-backed job factory must
+/// never be consulted.
+fn unused_jobs() -> Box<JobFactory> {
+    Box::new(|_, _| Err(anyhow::anyhow!("sim fleets inject their replicas")))
+}
+
+fn sim_cfg(steps: usize, seed: u64) -> TrainConfig {
+    TrainConfig { steps, lr: 0.05, seed, ..TrainConfig::default() }
+}
+
+/// Append one case record to the CI-collected chaos log (best effort).
+fn log_case(line: &str) {
+    std::fs::create_dir_all("out").ok();
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("out/chaos_fleet_log.txt")
+    {
+        writeln!(f, "{line}").ok();
+    }
+}
+
+/// Run a loopback sim fleet with `kills` = (step, worker) kick injections
+/// at step boundaries; return the outcome plus every worker's final
+/// parameter bits.
+fn run_chaos(cfg: &TrainConfig, workers: usize, checkpoint_every: usize,
+             max_restarts: usize, kills: Vec<(u64, usize)>, tag: &str)
+             -> (FleetOutcome, Vec<Vec<u32>>) {
+    let dir = std::env::temp_dir()
+        .join(format!("tezo_chaos_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+
+    let make: Box<ReplicaFactory> = {
+        let cfg = cfg.clone();
+        let dir = dir.clone();
+        Box::new(move |w, n| {
+            // one shared checkpoint file: exactly one live worker writes
+            // each checkpoint, and a rejoining incarnation loads it
+            Ok(Box::new(
+                SimReplica::new(w, n, &cfg, DIM)
+                    .with_checkpoint_path(dir.join("ckpt.bin"))
+                    .with_save_to(dir.join(format!("final_{w}.bin"))),
+            ) as Box<dyn Replica>)
+        })
+    };
+    let plan: KillPlan = Box::new(move |step| {
+        kills.iter().filter(|&&(s, _)| s == step).map(|&(_, w)| w).collect()
+    });
+    let fc = FleetConfig {
+        checkpoint_every,
+        max_restarts,
+        ..FleetConfig::new(workers)
+    };
+    let out = FleetTrainer::new(fc, cfg.clone(), PathBuf::from("unused"),
+                                unused_jobs())
+        .with_replica_factory(make)
+        .with_kill_plan(plan)
+        .run()
+        .expect("chaos fleet run");
+
+    let params = (0..workers)
+        .map(|w| {
+            let path = dir.join(format!("final_{w}.bin"));
+            let (step, p) = sim::read_sim_params(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            assert_eq!(step, cfg.steps as u64, "worker {w} stopped early");
+            p.iter().map(|x| x.to_bits()).collect()
+        })
+        .collect();
+    std::fs::remove_dir_all(&dir).ok();
+    (out, params)
+}
+
+/// The shared postcondition: trace, kappa bits, loss bits, and every
+/// worker's final parameters match the uninterrupted oracle exactly.
+fn assert_bitwise_oracle_match(out: &FleetOutcome, params: &[Vec<u32>],
+                               cfg: &TrainConfig, workers: usize,
+                               label: &str) -> Result<(), String> {
+    let oracle = sim::run_oracle(cfg, workers as u32, DIM);
+    prop_assert(out.trace == oracle.trace,
+                &format!("{label}: (seed, kappa) trace diverged"))?;
+    prop_assert(
+        out.trace.iter().zip(&oracle.trace).all(|(a, b)| {
+            a.kappa.map(f32::to_bits) == b.kappa.map(f32::to_bits)
+        }),
+        &format!("{label}: kappa stream not bit-identical"),
+    )?;
+    prop_assert(
+        out.metrics.losses.len() == oracle.losses.len()
+            && out
+                .metrics
+                .losses
+                .iter()
+                .zip(&oracle.losses)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+        &format!("{label}: loss stream not bit-identical"),
+    )?;
+    let oracle_bits: Vec<u32> =
+        oracle.params.iter().map(|p| p.to_bits()).collect();
+    for (w, bits) in params.iter().enumerate() {
+        prop_assert(*bits == oracle_bits,
+                    &format!("{label}: worker {w} final params diverged"))?;
+    }
+    Ok(())
+}
+
+/// Draw `n` kill events at distinct step boundaries in `1..steps` (distinct
+/// steps: the fleet is fully staffed at every boundary, so each kick is
+/// guaranteed to hit a live worker and be charged to the restart budget).
+fn gen_kills(g: &mut Gen, n: usize, steps: usize, workers: usize)
+             -> Vec<(u64, usize)> {
+    let mut pool: Vec<u64> = (1..steps as u64).collect();
+    (0..n)
+        .map(|_| {
+            let s = pool.swap_remove(g.usize_in(0..pool.len()));
+            (s, g.usize_in(0..workers))
+        })
+        .collect()
+}
+
+#[test]
+fn kills_with_full_replay_catch_up_stay_bitwise() {
+    proplite::run(6, |g| {
+        let workers = 2 + g.usize_in(0..2);
+        let steps = 6 + g.usize_in(0..6);
+        let cfg = sim_cfg(steps, g.u64() % 1000);
+        let n_kills = 2 + g.usize_in(0..2);
+        let kills = gen_kills(g, n_kills, steps, workers);
+        let (out, params) =
+            run_chaos(&cfg, workers, 0, n_kills, kills.clone(), "replay");
+        log_case(&format!(
+            "replay: workers={workers} steps={steps} seed={} kills={kills:?} \
+             rejoins={}", cfg.seed, out.fleet.rejoins));
+        prop_assert(out.fleet.rejoins == n_kills as u64,
+                    &format!("expected {n_kills} rejoins, saw {}",
+                             out.fleet.rejoins))?;
+        assert_bitwise_oracle_match(&out, &params, &cfg, workers,
+                                    "full-replay")
+    });
+}
+
+#[test]
+fn kills_with_checkpoint_catch_up_stay_bitwise() {
+    proplite::run(6, |g| {
+        let workers = 2 + g.usize_in(0..2);
+        let steps = 6 + g.usize_in(0..6);
+        let checkpoint_every = 2 + g.usize_in(0..3);
+        let cfg = sim_cfg(steps, g.u64() % 1000);
+        let n_kills = 2 + g.usize_in(0..2);
+        let kills = gen_kills(g, n_kills, steps, workers);
+        let (out, params) = run_chaos(&cfg, workers, checkpoint_every,
+                                      n_kills, kills.clone(), "ckpt");
+        log_case(&format!(
+            "ckpt: workers={workers} steps={steps} every={checkpoint_every} \
+             seed={} kills={kills:?} rejoins={} checkpoints={}",
+            cfg.seed, out.fleet.rejoins, out.fleet.checkpoints));
+        prop_assert(out.fleet.rejoins == n_kills as u64,
+                    &format!("expected {n_kills} rejoins, saw {}",
+                             out.fleet.rejoins))?;
+        prop_assert(
+            out.fleet.checkpoints == (steps / checkpoint_every) as u64,
+            &format!("expected {} checkpoints, saw {}",
+                     steps / checkpoint_every, out.fleet.checkpoints),
+        )?;
+        assert_bitwise_oracle_match(&out, &params, &cfg, workers,
+                                    "checkpoint")
+    });
+}
+
+/// Replica-side crashes (the `Event::Failed` path, not a coordinator kick):
+/// the first incarnation of two different workers dies mid-forward; the
+/// respawned incarnations catch up from the step-3 checkpoint + log tail
+/// and the run still matches the oracle bitwise.
+#[test]
+fn injected_forward_crashes_recover_bitwise() {
+    const WORKERS: usize = 2;
+    let cfg = sim_cfg(9, 7);
+    let dir = std::env::temp_dir()
+        .join(format!("tezo_chaos_{}_crash", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+
+    let incarnations: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..WORKERS).map(|_| AtomicUsize::new(0)).collect());
+    let make: Box<ReplicaFactory> = {
+        let cfg = cfg.clone();
+        let dir = dir.clone();
+        let incarnations = Arc::clone(&incarnations);
+        Box::new(move |w, n| {
+            let mut r = SimReplica::new(w, n, &cfg, DIM)
+                .with_checkpoint_path(dir.join("ckpt.bin"))
+                .with_save_to(dir.join(format!("final_{w}.bin")));
+            // only the first incarnation carries the crash plan — its
+            // replacement must come up clean or it would die forever
+            if incarnations[w].fetch_add(1, Ordering::SeqCst) == 0 {
+                r = r.with_die_at(match w {
+                    0 => vec![(5, 0)],
+                    _ => vec![(2, 0)],
+                });
+            }
+            Ok(Box::new(r) as Box<dyn Replica>)
+        })
+    };
+    let fc = FleetConfig {
+        checkpoint_every: 3,
+        max_restarts: 2,
+        ..FleetConfig::new(WORKERS)
+    };
+    let out = FleetTrainer::new(fc, cfg.clone(), PathBuf::from("unused"),
+                                unused_jobs())
+        .with_replica_factory(make)
+        .run()
+        .expect("crash fleet run");
+
+    let params: Vec<Vec<u32>> = (0..WORKERS)
+        .map(|w| {
+            let (step, p) =
+                sim::read_sim_params(&dir.join(format!("final_{w}.bin")))
+                    .expect("final params");
+            assert_eq!(step, cfg.steps as u64);
+            p.iter().map(|x| x.to_bits()).collect()
+        })
+        .collect();
+    std::fs::remove_dir_all(&dir).ok();
+
+    log_case(&format!("crash: workers={WORKERS} steps={} rejoins={}",
+                      cfg.steps, out.fleet.rejoins));
+    assert_eq!(out.fleet.rejoins, 2, "both crashed workers must rejoin");
+    assert_bitwise_oracle_match(&out, &params, &cfg, WORKERS, "crash")
+        .unwrap_or_else(|e| panic!("{e}"));
+}

@@ -1,4 +1,7 @@
-//! Ordering-determinism properties of the fleet aggregation path.
+//! Ordering-determinism properties of the fleet aggregation path, plus the
+//! transport-parity test: the same fleet run over in-process loopback
+//! channels and over real TCP sockets must produce bit-identical
+//! trajectories.
 //!
 //! The coordinator receives two-point results in thread-scheduling order
 //! but slots them by worker index before reducing (see
@@ -8,8 +11,18 @@
 //! invariant to arrival order, and a single-worker fleet must reproduce
 //! that worker's own measurement exactly.
 
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use tezo::config::{FleetConfig, TrainConfig};
 use tezo::fleet::metrics::FleetMetrics;
 use tezo::fleet::protocol::aggregate_two_point;
+use tezo::fleet::sim::{self, SimReplica};
+use tezo::fleet::tcp::{JoinInfo, Reconnect};
+use tezo::fleet::wire;
+use tezo::fleet::worker::{serve_tcp, JobFactory, Replica, ReplicaFactory};
+use tezo::fleet::{FleetTrainer, JobSpec, Transport};
 use tezo::proplite::{self, prop_assert, Gen};
 
 /// Fisher–Yates permutation of `0..n` driven by the property generator.
@@ -109,4 +122,161 @@ fn metrics_rows_stay_in_worker_order() {
     let rows = m.per_worker();
     let ids: Vec<usize> = rows.iter().map(|&(w, _, _)| w).collect();
     assert_eq!(ids, vec![0, 1, 2], "reporting rows must be worker-ordered");
+}
+
+// ---------------------------------------------------------------------------
+// transport parity: loopback vs TCP
+// ---------------------------------------------------------------------------
+
+/// Sim fleets inject replicas directly; the runtime-backed job factory must
+/// never be consulted.
+fn unused_jobs() -> Box<JobFactory> {
+    Box::new(|_, _| Err(anyhow::anyhow!("sim fleets inject their replicas")))
+}
+
+fn sim_cfg(steps: usize, seed: u64) -> TrainConfig {
+    TrainConfig { steps, lr: 0.05, seed, ..TrainConfig::default() }
+}
+
+/// Read the `{prefix}_{w}.bin` param snapshots a fleet run saved, checking
+/// each one stopped at `steps`, and return the raw bit patterns.
+fn final_param_bits(dir: &std::path::Path, prefix: &str, workers: usize,
+                    steps: u64) -> Vec<Vec<u32>> {
+    (0..workers)
+        .map(|w| {
+            let path = dir.join(format!("{prefix}_{w}.bin"));
+            let (step, params) = sim::read_sim_params(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            assert_eq!(step, steps, "{prefix}_{w} stopped early");
+            params.iter().map(|p| p.to_bits()).collect()
+        })
+        .collect()
+}
+
+/// The tentpole parity claim: the identical fleet driven over in-process
+/// loopback channels and over real localhost TCP sockets produces the
+/// same (seed, kappa) trace, the same loss stream, and the same final
+/// parameters on every worker — all *bitwise* — and both match the
+/// single-process oracle replay. The framed byte counters may differ only
+/// by the TCP handshake (one Hello up + one HelloAck down per worker).
+#[test]
+fn loopback_and_tcp_fleets_are_bit_identical() {
+    const DIM: usize = 24;
+    const WORKERS: usize = 2;
+    let cfg = sim_cfg(10, 41);
+
+    // sandboxes without localhost networking: skip rather than fail
+    let probe = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("skipping TCP parity test: cannot bind localhost: {e}");
+            return;
+        }
+    };
+    let addr = probe.local_addr().expect("probe addr").to_string();
+    drop(probe);
+
+    let dir = std::env::temp_dir()
+        .join(format!("tezo_parity_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+
+    // ---- loopback run -----------------------------------------------------
+    let lb = {
+        let cfg_w = cfg.clone();
+        let dir_w = dir.clone();
+        let make: Box<ReplicaFactory> = Box::new(move |w, workers| {
+            Ok(Box::new(
+                SimReplica::new(w, workers, &cfg_w, DIM)
+                    .with_save_to(dir_w.join(format!("lb_{w}.bin"))),
+            ) as Box<dyn Replica>)
+        });
+        FleetTrainer::new(FleetConfig::new(WORKERS), cfg.clone(),
+                          PathBuf::from("unused"), unused_jobs())
+            .with_replica_factory(make)
+            .run()
+            .expect("loopback fleet run")
+    };
+
+    // ---- TCP run: external worker processes, modeled as threads -----------
+    let rc = Reconnect {
+        attempts: 80,
+        base_delay: Duration::from_millis(25),
+        max_delay: Duration::from_millis(200),
+    };
+    let worker_threads: Vec<_> = (0..WORKERS)
+        .map(|_| {
+            let (addr, dir) = (addr.clone(), dir.clone());
+            std::thread::spawn(move || {
+                serve_tcp(&addr, rc, &mut |info: &JoinInfo| {
+                    // config arrives over the handshake, not shared memory
+                    Ok(Box::new(
+                        SimReplica::new(info.slot, info.workers, &info.cfg, DIM)
+                            .with_save_to(
+                                dir.join(format!("tcp_{}.bin", info.slot)),
+                            ),
+                    ) as Box<dyn Replica>)
+                })
+            })
+        })
+        .collect();
+    let tcp = FleetTrainer::new(FleetConfig::new(WORKERS), cfg.clone(),
+                                PathBuf::from("unused"), unused_jobs())
+        .with_transport(Transport::TcpListen(addr))
+        .run()
+        .expect("tcp fleet run");
+    for h in worker_threads {
+        h.join().expect("worker thread panicked").expect("tcp worker");
+    }
+
+    // ---- bitwise parity ---------------------------------------------------
+    let oracle = sim::run_oracle(&cfg, WORKERS as u32, DIM);
+    assert_eq!(lb.trace, oracle.trace, "loopback trace vs oracle");
+    assert_eq!(tcp.trace, oracle.trace, "tcp trace vs oracle");
+    for (a, b) in lb.trace.iter().zip(&tcp.trace) {
+        assert_eq!(a.kappa.map(f32::to_bits), b.kappa.map(f32::to_bits),
+                   "kappa stream must be bit-identical across transports");
+    }
+    let bits = |ls: &[f64]| ls.iter().map(|l| l.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&lb.metrics.losses), bits(&oracle.losses));
+    assert_eq!(bits(&tcp.metrics.losses), bits(&oracle.losses));
+
+    let steps = cfg.steps as u64;
+    let lb_params = final_param_bits(&dir, "lb", WORKERS, steps);
+    let tcp_params = final_param_bits(&dir, "tcp", WORKERS, steps);
+    let oracle_bits: Vec<u32> =
+        oracle.params.iter().map(|p| p.to_bits()).collect();
+    for w in 0..WORKERS {
+        assert_eq!(lb_params[w], oracle_bits, "loopback worker {w} params");
+        assert_eq!(tcp_params[w], oracle_bits, "tcp worker {w} params");
+    }
+
+    // logical payload accounting is transport-independent...
+    let (lc, tc) = (&lb.fleet.comm, &tcp.fleet.comm);
+    assert_eq!(lc.tickets, tc.tickets);
+    assert_eq!(lc.results, tc.results);
+    assert_eq!(lc.broadcasts, tc.broadcasts);
+    assert_eq!(lc.bytes_down, tc.bytes_down);
+    assert_eq!(lc.bytes_up, tc.bytes_up);
+
+    // ...and the framed counters differ by exactly one handshake per
+    // worker (Hello length is slot-independent; the coordinator ships
+    // this cfg and the default job spec in every HelloAck)
+    let hello_len = wire::encode_hello(
+        &wire::Hello { requested_slot: u32::MAX }).len() as u64;
+    let ack_len = wire::encode_hello_ack(&wire::HelloAck {
+        slot: 0,
+        workers: WORKERS as u32,
+        cfg: cfg.clone(),
+        job: JobSpec::default(),
+    })
+    .len() as u64;
+    let w = WORKERS as u64;
+    assert_eq!(tc.wire_up, lc.wire_up + w * hello_len,
+               "tcp up-wire must exceed loopback by exactly the Hellos");
+    assert_eq!(tc.wire_down, lc.wire_down + w * ack_len,
+               "tcp down-wire must exceed loopback by exactly the HelloAcks");
+    assert_eq!(tc.frames_up, lc.frames_up + w);
+    assert_eq!(tc.frames_down, lc.frames_down + w);
+
+    std::fs::remove_dir_all(&dir).ok();
 }

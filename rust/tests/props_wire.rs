@@ -1,0 +1,397 @@
+//! Fuzz battery for the fleet wire codec (`fleet::wire`).
+//!
+//! Properties pinned here:
+//! * every `Command`/`Event`/handshake message round-trips through the
+//!   codec **bit-identically** (encode -> decode -> encode reproduces the
+//!   exact frame, NaN payloads included);
+//! * the codec is canonical: any frame that decodes at all re-encodes to
+//!   the same bytes;
+//! * malformed input — truncation at every byte boundary, random byte
+//!   flips, unknown tags, oversized length prefixes, non-finite
+//!   control-plane floats — yields a typed [`WireError`], never a panic;
+//! * the frame sizes cross-check the analytic model in `memmodel::comm`:
+//!   the constants there are exactly what the real encoder produces.
+
+use tezo::config::LrSchedule;
+use tezo::fleet::protocol::{CatchUp, Command, Event, LogEntry, Ticket,
+                            WorkerReport};
+use tezo::fleet::wire::{self, WireError};
+use tezo::memmodel::comm;
+use tezo::proplite::{self, prop_assert, Gen};
+
+// Wire tags, restated independently of the private constants in
+// `fleet::wire` — a tag renumbering is a protocol break and must fail here.
+const TAG_APPLY: u8 = 0x02;
+const TAG_TWO_POINT: u8 = 0x41;
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+fn gen_ticket(g: &mut Gen) -> Ticket {
+    Ticket {
+        step: g.u64() % 1_000_000,
+        sub: (g.u64() % 64) as u32,
+        perturb_seed: g.u64() as u32,
+    }
+}
+
+fn gen_entry(g: &mut Gen) -> LogEntry {
+    LogEntry {
+        step: g.u64() % 100_000,
+        sub: (g.u64() % 8) as u32,
+        perturb_seed: g.u64() as u32,
+        kappa: g.bool().then(|| g.f32_in(-100.0..100.0)),
+    }
+}
+
+fn gen_string(g: &mut Gen) -> String {
+    let pool = ['a', 'Z', '0', ' ', ':', 'λ', '≠', '🦀'];
+    let n = g.usize_in(0..33);
+    (0..n).map(|_| *g.pick(&pool)).collect()
+}
+
+fn gen_command(g: &mut Gen) -> Command {
+    match g.usize_in(0..7) {
+        0 => Command::Forward(gen_ticket(g)),
+        1 => Command::Apply { ticket: gen_ticket(g), kappa: g.f32_in(-1e6..1e6) },
+        2 => Command::Skip { ticket: gen_ticket(g) },
+        3 => Command::Eval { step: g.u64() },
+        4 => Command::Stop,
+        5 => Command::Checkpoint { step: g.u64() },
+        _ => {
+            let n = g.usize_in(0..24);
+            Command::CatchUp(CatchUp {
+                // u64::MAX is the on-wire None sentinel, never a real step
+                checkpoint_step: g.bool().then(|| g.u64() % (u64::MAX - 1)),
+                entries: (0..n).map(|_| gen_entry(g)).collect(),
+            })
+        }
+    }
+}
+
+fn gen_event(g: &mut Gen) -> Event {
+    let worker = g.usize_in(0..1024);
+    match g.usize_in(0..6) {
+        0 => Event::TwoPoint {
+            worker,
+            step: g.u64() % 1_000_000,
+            sub: (g.u64() % 64) as u32,
+            // arbitrary bit patterns: the loss pair is carried bit-exactly,
+            // NaN/inf included (loss poisoning is in-band)
+            f_plus: f32::from_bits(g.u64() as u32),
+            f_minus: f32::from_bits(g.u64() as u32),
+            forward_secs: g.f64_in(0.0..1e6),
+        },
+        1 => Event::Applied {
+            worker,
+            step: g.u64() % 1_000_000,
+            sub: (g.u64() % 64) as u32,
+            update_secs: g.f64_in(0.0..1e6),
+        },
+        2 => Event::EvalDone {
+            worker,
+            step: g.u64() % 1_000_000,
+            // NaN = "no eval set here", a legal bit-exact payload
+            accuracy: if g.bool() { f64::NAN } else { g.f64_in(0.0..1.0) },
+        },
+        3 => Event::Failed { worker, error: gen_string(g) },
+        4 => {
+            let secs = [
+                g.f64_in(0.0..100.0),
+                g.f64_in(0.0..100.0),
+                g.f64_in(0.0..100.0),
+                g.f64_in(0.0..100.0),
+                g.f64_in(0.0..100.0),
+            ];
+            let counts = [g.u64() % 1000, g.u64() % 1000, g.u64() % 1000,
+                          g.u64() % 1000, g.u64() % 1000];
+            Event::Report(Box::new(WorkerReport {
+                worker,
+                timers: tezo::coordinator::metrics::PhaseTimers::from_parts(
+                    secs, counts, g.u64() % 100_000, g.u64() % 100_000),
+                counter: tezo::coordinator::counter::SampleCounter {
+                    matrix_elements: g.u64() % 1_000_000,
+                    vector_elements: g.u64() % 1_000_000,
+                },
+                state_bytes: g.u64() % 1_000_000,
+            }))
+        }
+        _ => Event::CheckpointDone { worker, step: g.u64() },
+    }
+}
+
+/// Build a raw frame by hand: `[payload_len u32 LE][tag][body]`.
+fn raw_frame(tag: u8, body: &[u8]) -> Vec<u8> {
+    let mut f = ((body.len() + 1) as u32).to_le_bytes().to_vec();
+    f.push(tag);
+    f.extend_from_slice(body);
+    f
+}
+
+// ---------------------------------------------------------------------------
+// round trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn commands_round_trip_bit_identically() {
+    proplite::run(300, |g| {
+        let cmd = gen_command(g);
+        let frame = wire::encode_command(&cmd);
+        let back = wire::decode_command(&frame)
+            .map_err(|e| format!("decode of {cmd:?} failed: {e}"))?;
+        prop_assert(back == cmd, &format!("value drift: {cmd:?} vs {back:?}"))?;
+        prop_assert(wire::encode_command(&back) == frame,
+                    "re-encode is not bit-identical")?;
+        prop_assert(wire::command_frame_len(&cmd) == frame.len() as u64,
+                    "command_frame_len disagrees with the encoder")
+    });
+}
+
+#[test]
+fn events_round_trip_bit_identically() {
+    // Event has no PartialEq (f32 NaN payloads are meaningful), so bitwise
+    // frame equality after a decode/encode cycle IS the equality check —
+    // and the stronger one.
+    proplite::run(300, |g| {
+        let ev = gen_event(g);
+        let frame = wire::encode_event(&ev);
+        let back = wire::decode_event(&frame)
+            .map_err(|e| format!("decode of {ev:?} failed: {e}"))?;
+        prop_assert(wire::encode_event(&back) == frame,
+                    &format!("re-encode drift for {ev:?}"))?;
+        prop_assert(wire::event_frame_len(&ev) == frame.len() as u64,
+                    "event_frame_len disagrees with the encoder")
+    });
+}
+
+#[test]
+fn handshake_round_trips_with_fuzzed_config() {
+    proplite::run(120, |g| {
+        let mut cfg = tezo::config::TrainConfig::default();
+        cfg.steps = g.usize_in(1..10_000);
+        cfg.lr = g.f32_in(1e-8..1.0);
+        cfg.rho = g.f32_in(1e-6..1.0);
+        cfg.seed = g.u64();
+        cfg.eval_every = g.usize_in(0..100);
+        cfg.kappa_clip = g.f32_in(0.0..1e4);
+        cfg.n_perturb = g.usize_in(1..8);
+        cfg.lr_schedule = match g.usize_in(0..3) {
+            0 => LrSchedule::Constant,
+            1 => LrSchedule::Linear { final_frac: g.f32_in(0.0..1.0) },
+            _ => LrSchedule::Cosine { final_frac: g.f32_in(0.0..1.0) },
+        };
+        let ack = wire::HelloAck {
+            slot: (g.u64() % 64) as u32,
+            workers: (g.u64() % 64) as u32,
+            cfg,
+            job: wire::JobSpec {
+                task: gen_string(g),
+                k_shot: (g.u64() % 64) as u32,
+                eval_n: (g.u64() % 64) as u32,
+            },
+        };
+        let frame = wire::encode_hello_ack(&ack);
+        let back = wire::decode_hello_ack(&frame)
+            .map_err(|e| format!("hello_ack decode failed: {e}"))?;
+        prop_assert(back == ack, "hello_ack value drift")?;
+        prop_assert(wire::encode_hello_ack(&back) == frame,
+                    "hello_ack re-encode drift")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// malformed input: typed errors, never panics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_truncation_is_a_typed_error() {
+    proplite::run(80, |g| {
+        let frame = wire::encode_command(&gen_command(g));
+        for cut in 0..frame.len() {
+            match wire::decode_command(&frame[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => {
+                    return Err(format!(
+                        "cut at {cut}/{}: expected Truncated, got {other:?}",
+                        frame.len()));
+                }
+            }
+        }
+        let frame = wire::encode_event(&gen_event(g));
+        for cut in 0..frame.len() {
+            match wire::decode_event(&frame[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => {
+                    return Err(format!(
+                        "event cut at {cut}/{}: expected Truncated, got \
+                         {other:?}", frame.len()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_byte_flips_never_panic_and_stay_canonical() {
+    proplite::run(400, |g| {
+        let mut frame = wire::encode_command(&gen_command(g));
+        let i = g.usize_in(0..frame.len());
+        let flip = (g.u64() % 255) as u8 + 1; // never a no-op flip
+        frame[i] ^= flip;
+        // any outcome is legal except a panic; an accepted frame must be
+        // canonical (decode-then-encode reproduces the mutated bytes)
+        if let Ok(cmd) = wire::decode_command(&frame) {
+            prop_assert(wire::encode_command(&cmd) == frame,
+                        "accepted a non-canonical mutated frame")?;
+        }
+        let mut frame = wire::encode_event(&gen_event(g));
+        let i = g.usize_in(0..frame.len());
+        frame[i] ^= flip;
+        if let Ok(ev) = wire::decode_event(&frame) {
+            prop_assert(wire::encode_event(&ev) == frame,
+                        "accepted a non-canonical mutated event frame")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn unknown_tags_are_rejected_in_both_directions() {
+    proplite::run(100, |g| {
+        // tags outside every assigned range (commands 0x01-0x07, events
+        // 0x41-0x46, handshake 0x21-0x22)
+        let tag = 0x80 | (g.u64() % 128) as u8;
+        let frame = raw_frame(tag, &[]);
+        prop_assert(
+            wire::decode_command(&frame) == Err(WireError::UnknownTag { tag }),
+            "command decoder accepted an unassigned tag")?;
+        prop_assert(
+            matches!(wire::decode_event(&frame),
+                     Err(WireError::UnknownTag { tag: t }) if t == tag),
+            "event decoder accepted an unassigned tag")?;
+        // cross-direction confusion: a command frame is not an event and
+        // vice versa (the tag ranges are disjoint by design)
+        let cmd_frame = wire::encode_command(&gen_command(g));
+        prop_assert(
+            matches!(wire::decode_event(&cmd_frame),
+                     Err(WireError::UnknownTag { .. })),
+            "event decoder accepted a command frame")?;
+        let ev_frame = wire::encode_event(&gen_event(g));
+        prop_assert(
+            matches!(wire::decode_command(&ev_frame),
+                     Err(WireError::UnknownTag { .. })),
+            "command decoder accepted an event frame")
+    });
+}
+
+#[test]
+fn oversized_length_prefixes_are_rejected_before_allocation() {
+    proplite::run(60, |g| {
+        let len = wire::MAX_FRAME as u64 + 1 + g.u64() % (u32::MAX as u64
+            - wire::MAX_FRAME as u64 - 1);
+        let mut frame = (len as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&[0u8; 16]); // far less than it declares
+        prop_assert(
+            matches!(wire::decode_command(&frame),
+                     Err(WireError::Oversize { .. })),
+            "oversized command length prefix not rejected")?;
+        prop_assert(
+            matches!(wire::decode_event(&frame),
+                     Err(WireError::Oversize { .. })),
+            "oversized event length prefix not rejected")
+    });
+}
+
+#[test]
+fn non_finite_control_floats_are_typed_errors() {
+    let ticket_body = |step: u64, sub: u32, seed: u32| {
+        let mut b = step.to_le_bytes().to_vec();
+        b.extend_from_slice(&sub.to_le_bytes());
+        b.extend_from_slice(&seed.to_le_bytes());
+        b
+    };
+    for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+        // Apply.kappa is control-plane: a non-finite value is corruption,
+        // not a payload (the lockstep-skip path uses Skip, never NaN kappa)
+        let mut body = ticket_body(3, 1, 99);
+        body.extend_from_slice(&bad.to_bits().to_le_bytes());
+        assert_eq!(
+            wire::decode_command(&raw_frame(TAG_APPLY, &body)),
+            Err(WireError::NonFinite { field: "apply.kappa" }),
+        );
+    }
+    // TwoPoint.forward_secs is control-plane even though the loss pair
+    // beside it is bit-exact
+    let mut body = 7u32.to_le_bytes().to_vec(); // worker
+    body.extend_from_slice(&5u64.to_le_bytes()); // step
+    body.extend_from_slice(&0u32.to_le_bytes()); // sub
+    body.extend_from_slice(&f32::NAN.to_bits().to_le_bytes()); // f+ (legal)
+    body.extend_from_slice(&0.5f32.to_bits().to_le_bytes()); // f-
+    body.extend_from_slice(&f64::INFINITY.to_bits().to_le_bytes()); // secs
+    assert!(matches!(
+        wire::decode_event(&raw_frame(TAG_TWO_POINT, &body)),
+        Err(WireError::NonFinite { field: "two_point.forward_secs" }),
+    ));
+}
+
+#[test]
+fn catch_up_count_bombs_are_rejected() {
+    proplite::run(40, |g| {
+        // declared entry count far beyond what the payload could hold
+        let mut body = u64::MAX.to_le_bytes().to_vec(); // checkpoint: None
+        let count = 1_000_000 + (g.u64() % 1_000_000) as u32;
+        body.extend_from_slice(&count.to_le_bytes());
+        let frame = raw_frame(0x07, &body); // TAG_CATCH_UP
+        prop_assert(
+            matches!(wire::decode_command(&frame),
+                     Err(WireError::BadCount { .. })),
+            "catch-up count bomb not rejected")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the analytic comm model is the real frame sizes (satellite cross-check)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn frame_sizes_pin_the_memmodel_constants() {
+    let t = Ticket { step: 12, sub: 2, perturb_seed: 0xFEED };
+    let fwd = wire::command_frame_len(&Command::Forward(t));
+    assert_eq!(fwd, comm::FRAME_HEADER_BYTES + comm::TICKET_BYTES);
+    let apply = wire::command_frame_len(&Command::Apply { ticket: t, kappa: 0.5 });
+    assert_eq!(apply, comm::FRAME_HEADER_BYTES + comm::KAPPA_BYTES);
+    let skip = wire::command_frame_len(&Command::Skip { ticket: t });
+    assert_eq!(skip, comm::FRAME_HEADER_BYTES + comm::TICKET_BYTES);
+    let tp = wire::event_frame_len(&Event::TwoPoint {
+        worker: 0,
+        step: 0,
+        sub: 0,
+        f_plus: 0.0,
+        f_minus: 0.0,
+        forward_secs: 0.0,
+    });
+    assert_eq!(
+        tp,
+        comm::FRAME_HEADER_BYTES + comm::TWO_POINT_BYTES + comm::RESULT_META_BYTES
+    );
+    // wire.rs re-exports the same header constant the memmodel pins
+    assert_eq!(wire::FRAME_HEADER_BYTES, comm::FRAME_HEADER_BYTES);
+
+    // the analytic per-step wire model is exactly the sum of real frames
+    for workers in [1u64, 2, 3, 8] {
+        for q in [1u64, 4] {
+            assert_eq!(
+                comm::zo_scalar_step_wire_bytes(workers, q),
+                q * workers * (fwd + tp + apply),
+                "analytic wire model drifted from the encoder (W={workers}, q={q})"
+            );
+        }
+    }
+    // and the logical model remains the payload-only view of the same round
+    assert_eq!(
+        comm::zo_scalar_step_bytes(1, 1),
+        comm::TICKET_BYTES + comm::TWO_POINT_BYTES + comm::KAPPA_BYTES
+    );
+}

@@ -157,4 +157,25 @@ mod tests {
                           "fn f() { x.unwrap_or(0); }");
         assert!(fs.is_empty());
     }
+
+    #[test]
+    fn wire_transport_modules_stay_on_the_hot_path() {
+        // the TCP transport runs unattended for hours: a panic in the
+        // codec or the socket loops kills a live fleet worker, so these
+        // files must never fall out of the hot-path prefix list
+        for p in [
+            "rust/src/fleet/wire.rs",
+            "rust/src/fleet/tcp.rs",
+            "rust/src/fleet/transport.rs",
+            "rust/src/fleet/worker.rs",
+            "rust/src/fleet/coordinator.rs",
+            "rust/src/fleet/sim.rs",
+        ] {
+            assert!(is_hot_path(p), "{p} must be hot-path covered");
+        }
+        let fs = findings("rust/src/fleet/wire.rs",
+                          "fn f(b: &[u8]) -> u8 { b[0] }");
+        assert_eq!(fs.len(), 1, "codec indexing must stay guarded");
+        assert_eq!(fs[0].code, Code::IndexHotPath);
+    }
 }
