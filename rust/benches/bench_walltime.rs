@@ -19,6 +19,7 @@ use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
 use tezo::jsonx::Value;
 use tezo::runtime::hlo_stats::HloStats;
 use tezo::runtime::{ParamStore, Runtime};
+use tezo::telemetry::{self, Telemetry};
 
 const METHODS: [Method; 10] = [
     Method::Mezo, Method::Subzo, Method::Lozo, Method::Tezo,
@@ -35,6 +36,7 @@ fn main() {
         if fast { "tiny,tiny_jnp".into() } else { "tiny,tiny_jnp,small,medium".into() }
     });
     let mut form_entries: Vec<(String, Value)> = Vec::new();
+    let mut tel_entry: Option<Value> = None;
     for config in configs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let dir = tezo::artifacts_root().join(config);
         if !dir.join("manifest.json").exists() {
@@ -44,6 +46,20 @@ fn main() {
         bench_config(config, steps);
         if let Some(v) = bench_forward_forms(config, steps) {
             form_entries.push((config.to_string(), v));
+        }
+        if tel_entry.is_none() {
+            tel_entry = bench_telemetry_overhead(config, steps);
+        }
+    }
+    if let Some(entry) = tel_entry {
+        let doc = Value::obj(vec![
+            ("snapshot", Value::str("telemetry on/off step-time overhead")),
+            ("run", entry),
+        ]);
+        let path = std::path::PathBuf::from("out/BENCH_PR8.json");
+        match write_json_value(&path, &doc) {
+            Ok(()) => println!("telemetry overhead snapshot -> {}", path.display()),
+            Err(e) => println!("(snapshot write failed: {e})"),
         }
     }
     if !form_entries.is_empty() {
@@ -122,6 +138,51 @@ fn bench_forward_forms(config: &str, steps: usize) -> Option<Value> {
                  Value::f(fwd_ms[0] / fwd_ms[1].max(1e-9))));
     rep.print();
     Some(Value::obj(fields))
+}
+
+/// PR 8 budget check: the same `tezo` run with the tracer off and on,
+/// interleaved A/B with a min-of-N readout so machine drift hits both
+/// arms. The snapshot asserts the <2% step-time overhead budget from
+/// docs/observability.md (enabled spans are O(1) clock reads + one ring
+/// write per phase; disabled telemetry is a single `Option` check).
+fn bench_telemetry_overhead(config: &str, steps: usize) -> Option<Value> {
+    let rt = Runtime::open(&tezo::artifacts_root().join(config)).ok()?;
+    let run = |tel: &Telemetry| -> f64 {
+        let mut cfg = TrainConfig::with_preset(Method::Tezo, config);
+        cfg.steps = steps;
+        let mut params = ParamStore::load(&rt.client, &rt.manifest).expect("params");
+        let tok = Tokenizer::new(rt.manifest.config.vocab);
+        let task = Task::new(tasks::spec_by_name("rte").unwrap(), tok,
+                             rt.manifest.config.seq_len, 0);
+        let builder = BatchBuilder::new(task, rt.manifest.config.batch, 16);
+        let mut trainer = Trainer::new(&rt, cfg, DataSource::Task(builder))
+            .with_telemetry(tel.clone());
+        let outcome = trainer.run(&mut params).expect("train");
+        outcome.metrics.wall_seconds / steps as f64 * 1e3
+    };
+    // warmup: compiles the artifact set so both measured arms are pure
+    // execution
+    run(&Telemetry::off());
+    let mut off_ms = f64::INFINITY;
+    let mut on_ms = f64::INFINITY;
+    for _ in 0..3 {
+        off_ms = off_ms.min(run(&Telemetry::off()));
+        let tel = Telemetry::new(telemetry::DEFAULT_RING_CAPACITY);
+        on_ms = on_ms.min(run(&tel));
+    }
+    let overhead = on_ms / off_ms.max(1e-9) - 1.0;
+    println!("telemetry overhead ({config}): off {off_ms:.2} ms/step, \
+              on {on_ms:.2} ms/step ({:+.2}%)", overhead * 100.0);
+    assert!(overhead < 0.02,
+            "telemetry overhead {:.2}% exceeds the 2% budget", overhead * 100.0);
+    Some(Value::obj(vec![
+        ("config", Value::str(config)),
+        ("steps", Value::i(steps as i64)),
+        ("telemetry_off_ms_per_step", Value::f(off_ms)),
+        ("telemetry_on_ms_per_step", Value::f(on_ms)),
+        ("overhead_frac", Value::f(overhead)),
+        ("budget_frac", Value::f(0.02)),
+    ]))
 }
 
 fn bench_config(config: &str, steps: usize) {

@@ -1,11 +1,18 @@
 //! Training metrics: loss curves, phase timing, report emission.
+//!
+//! Since PR 8 the phase timers are a thin view over the telemetry layer:
+//! the float `secs`/`counts` aggregates stay authoritative (they are the
+//! fleet wire contract, see [`PhaseTimers::parts`]), while every timing
+//! additionally lands in a per-phase [`LatencyHist`] and — when a tracer
+//! is attached — in the span ring. Wall-clock access goes through
+//! `telemetry::clock` only (TZ-OBS001).
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::jsonx::Value;
+use crate::telemetry::{secs_to_ns, LatencyHist, Stopwatch, Telemetry};
 use crate::tensor::stats;
 
 /// The per-step phases of a ZO iteration (paper Fig 3b breakdown).
@@ -42,12 +49,40 @@ impl Phase {
 /// Accumulated wall-clock per phase, plus the host→device upload byte
 /// counters of the staging pool (what the ≥2x TeZO upload-reduction claim
 /// is measured with — see docs/runtime.md).
-#[derive(Clone, Debug, Default)]
+///
+/// The histograms and tracer handle are in-process extensions: they do
+/// not travel over the fleet wire ([`Self::parts`] is unchanged from the
+/// PR 7 codec), so a report decoded from a TCP worker carries aggregates
+/// only.
+#[derive(Clone, Debug)]
 pub struct PhaseTimers {
     secs: [f64; 5],
     counts: [u64; 5],
     upload_bytes: u64,
     upload_reused_bytes: u64,
+    hists: [LatencyHist; 5],
+    telemetry: Telemetry,
+    span_step: i64,
+}
+
+impl Default for PhaseTimers {
+    fn default() -> Self {
+        Self {
+            secs: [0.0; 5],
+            counts: [0; 5],
+            upload_bytes: 0,
+            upload_reused_bytes: 0,
+            hists: [
+                LatencyHist::new(),
+                LatencyHist::new(),
+                LatencyHist::new(),
+                LatencyHist::new(),
+                LatencyHist::new(),
+            ],
+            telemetry: Telemetry::off(),
+            span_step: -1,
+        }
+    }
 }
 
 impl PhaseTimers {
@@ -58,22 +93,59 @@ impl PhaseTimers {
             .unwrap_or(Phase::ALL.len() - 1)
     }
 
-    /// Time a closure under `phase`.
-    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
-        let out = f();
+    /// Attach a tracer: subsequent timings also emit phase spans.
+    pub fn set_telemetry(&mut self, telemetry: Telemetry) {
+        self.telemetry = telemetry;
+    }
+
+    /// Tracer handle shared with this timer set (disabled by default).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// Tag subsequent phase spans with a training step (-1 clears).
+    pub fn set_span_step(&mut self, step: i64) {
+        self.span_step = step;
+    }
+
+    fn record_phase(&mut self, phase: Phase, secs: f64, dur_ns: u64, start_ns: Option<u64>) {
         let i = Self::slot(phase);
-        self.secs[i] += t0.elapsed().as_secs_f64();
+        self.secs[i] += secs;
         self.counts[i] += 1;
-        out
+        self.hists[i].record_ns(dur_ns);
+        if self.telemetry.enabled() {
+            match start_ns {
+                Some(t0) => {
+                    self.telemetry.span_at("phase", phase.name(), t0, dur_ns, 0, self.span_step)
+                }
+                None => self.telemetry.span_dur("phase", phase.name(), dur_ns, 0, self.span_step),
+            }
+        }
+    }
+
+    /// Time a closure under `phase`. With a tracer attached the tracer's
+    /// clock is used (so a deterministic test clock yields deterministic
+    /// spans); otherwise a [`Stopwatch`] measures the duration.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        if self.telemetry.enabled() {
+            let t0 = self.telemetry.now_ns();
+            let out = f();
+            let dur_ns = self.telemetry.now_ns().saturating_sub(t0);
+            self.record_phase(phase, dur_ns as f64 / 1e9, dur_ns, Some(t0));
+            out
+        } else {
+            let t0 = Stopwatch::start();
+            let out = f();
+            let dur_ns = t0.elapsed_ns();
+            self.record_phase(phase, dur_ns as f64 / 1e9, dur_ns, None);
+            out
+        }
     }
 
     /// Record pre-measured seconds under `phase` (for work that cannot be
     /// wrapped in a closure without fighting the borrow checker).
     pub fn add(&mut self, phase: Phase, secs: f64) {
-        let i = Self::slot(phase);
-        self.secs[i] += secs;
-        self.counts[i] += 1;
+        self.record_phase(phase, secs, secs_to_ns(secs), None);
     }
 
     /// Record host→device staging traffic: bytes actually uploaded and
@@ -81,6 +153,16 @@ impl PhaseTimers {
     pub fn add_upload_bytes(&mut self, fresh: u64, reused: u64) {
         self.upload_bytes += fresh;
         self.upload_reused_bytes += reused;
+        if self.telemetry.enabled() {
+            if fresh > 0 {
+                self.telemetry
+                    .counter("stage", "upload_fresh_bytes", fresh as f64, self.span_step);
+            }
+            if reused > 0 {
+                self.telemetry
+                    .counter("stage", "upload_reused_bytes", reused as f64, self.span_step);
+            }
+        }
     }
 
     /// Bytes moved host→device by artifact-argument staging.
@@ -96,14 +178,16 @@ impl PhaseTimers {
 
     /// Raw field tuple for serialization (the fleet wire codec ships the
     /// per-worker report over TCP): `(secs, counts, upload, reused)`.
+    /// Histograms and tracer state deliberately stay host-local.
     pub fn parts(&self) -> ([f64; 5], [u64; 5], u64, u64) {
         (self.secs, self.counts, self.upload_bytes, self.upload_reused_bytes)
     }
 
-    /// Rebuild from [`Self::parts`] output (wire decode).
+    /// Rebuild from [`Self::parts`] output (wire decode). The rebuilt
+    /// timers carry empty histograms and no tracer.
     pub fn from_parts(secs: [f64; 5], counts: [u64; 5], upload_bytes: u64,
                       upload_reused_bytes: u64) -> Self {
-        Self { secs, counts, upload_bytes, upload_reused_bytes }
+        Self { secs, counts, upload_bytes, upload_reused_bytes, ..Self::default() }
     }
 
     pub fn seconds(&self, phase: Phase) -> f64 {
@@ -114,16 +198,43 @@ impl PhaseTimers {
         self.secs.iter().sum()
     }
 
-    /// (phase, seconds, fraction) rows.
+    /// Per-phase latency histogram (nanoseconds, this process only).
+    pub fn hist(&self, phase: Phase) -> &LatencyHist {
+        &self.hists[Self::slot(phase)]
+    }
+
+    /// (phase, seconds, fraction) rows. An empty run reports zero
+    /// fractions rather than NaN/garbage ratios.
     pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
-        let total = self.total_seconds().max(1e-12);
+        let total = self.total_seconds();
         Phase::ALL
             .iter()
             .map(|p| {
                 let s = self.seconds(*p);
-                (p.name(), s, s / total)
+                let frac = if total > 0.0 { s / total } else { 0.0 };
+                (p.name(), s, frac)
             })
             .collect()
+    }
+
+    /// Per-phase quantile summary (the `TrainOutcome` telemetry block).
+    pub fn phase_quantiles_json(&self) -> Value {
+        Value::arr(
+            Phase::ALL
+                .iter()
+                .map(|p| {
+                    let h = self.hist(*p);
+                    Value::obj(vec![
+                        ("phase", Value::str(p.name())),
+                        ("count", Value::i(h.count() as i64)),
+                        ("p50_ns", Value::i(h.p50_ns() as i64)),
+                        ("p95_ns", Value::i(h.p95_ns() as i64)),
+                        ("p99_ns", Value::i(h.p99_ns() as i64)),
+                        ("max_ns", Value::i(h.max_ns() as i64)),
+                    ])
+                })
+                .collect(),
+        )
     }
 }
 
@@ -160,6 +271,7 @@ impl TrainMetrics {
         stats::mean(&self.losses[..k])
     }
 
+    /// Mean wall seconds per step; 0.0 (not NaN) for an empty run.
     pub fn seconds_per_step(&self) -> f64 {
         if self.steps == 0 { 0.0 } else { self.wall_seconds / self.steps as f64 }
     }
@@ -184,7 +296,9 @@ impl TrainMetrics {
         Ok(())
     }
 
-    /// JSON summary (for EXPERIMENTS.md and the sweep driver).
+    /// JSON summary (for EXPERIMENTS.md and the sweep driver). All PR 7
+    /// keys are preserved; `phase_quantiles` is the additive PR 8
+    /// telemetry block.
     pub fn summary_json(&self, label: &str) -> Value {
         Value::obj(vec![
             ("label", Value::str(label)),
@@ -206,6 +320,7 @@ impl TrainMetrics {
                         ("fraction", Value::f(f)),
                     ]))
                     .collect())),
+            ("phase_quantiles", self.timers.phase_quantiles_json()),
         ])
     }
 }
@@ -213,6 +328,7 @@ impl TrainMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::telemetry::{EventKind, TestClock};
 
     #[test]
     fn timers_accumulate() {
@@ -244,5 +360,73 @@ mod tests {
             m.record_loss(10.0 - (i as f64) * 0.05);
         }
         assert!(m.final_loss_avg(10) < m.initial_loss_avg(10));
+    }
+
+    #[test]
+    fn empty_breakdown_is_all_zeros() {
+        let t = PhaseTimers::default();
+        for (_, secs, frac) in t.breakdown() {
+            assert_eq!(secs, 0.0);
+            assert_eq!(frac, 0.0);
+            assert!(frac.is_finite());
+        }
+    }
+
+    #[test]
+    fn empty_run_seconds_per_step_is_zero() {
+        let m = TrainMetrics::default();
+        assert_eq!(m.seconds_per_step(), 0.0);
+        assert!(m.seconds_per_step().is_finite());
+        // ... and the JSON summary stays renderable (no panics, fractions 0)
+        let v = m.summary_json("empty");
+        assert_eq!(v.get_f64("sec_per_step").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn timings_land_in_histograms() {
+        let mut t = PhaseTimers::default();
+        t.add(Phase::Forward, 0.001);
+        t.add(Phase::Forward, 0.002);
+        t.time(Phase::Host, || {});
+        assert_eq!(t.hist(Phase::Forward).count(), 2);
+        assert_eq!(t.hist(Phase::Host).count(), 1);
+        assert!(t.hist(Phase::Forward).max_ns() >= 2_000_000);
+        let (_, counts, _, _) = t.parts();
+        assert_eq!(counts[PhaseTimers::slot(Phase::Forward)],
+                   t.hist(Phase::Forward).count());
+    }
+
+    #[test]
+    fn attached_tracer_sees_phase_spans() {
+        let tel = Telemetry::with_clock(16, Box::new(TestClock::new(500)));
+        let mut t = PhaseTimers::default();
+        t.set_telemetry(tel.clone());
+        t.set_span_step(7);
+        t.time(Phase::Forward, || {});
+        t.add(Phase::Dispatch, 0.001);
+        t.add_upload_bytes(64, 0);
+        let ev = tel.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].kind, EventKind::Span);
+        assert_eq!(ev[0].name, "forward");
+        assert_eq!(ev[0].dur_ns, 500); // one TestClock tick
+        assert_eq!(ev[0].step, 7);
+        assert_eq!(ev[1].name, "dispatch");
+        assert_eq!(ev[2].name, "upload_fresh_bytes");
+        // the float aggregate and the histogram agree with the spans
+        assert_eq!(t.hist(Phase::Forward).count(), 1);
+        assert!((t.seconds(Phase::Forward) - 500e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn wire_parts_roundtrip_ignores_telemetry_state() {
+        let mut t = PhaseTimers::default();
+        t.set_telemetry(Telemetry::with_clock(8, Box::new(TestClock::new(1))));
+        t.add(Phase::Forward, 0.5);
+        let (secs, counts, up, reused) = t.parts();
+        let back = PhaseTimers::from_parts(secs, counts, up, reused);
+        assert_eq!(back.parts(), t.parts());
+        assert!(!back.telemetry().enabled());
+        assert!(back.hist(Phase::Forward).is_empty());
     }
 }

@@ -4,14 +4,13 @@
 //! full Adam state — deliberately the expensive baseline the memory tables
 //! compare against.
 
-use std::time::Instant;
-
 use anyhow::{anyhow, Result};
 
 use crate::config::Method;
 use crate::coordinator::metrics::Phase;
 use crate::runtime::exec::scalar_first;
 use crate::runtime::Runtime;
+use crate::telemetry::Stopwatch;
 
 use super::{bind_batch, param_elems, zeros_like_params, ForwardOut, StepCtx,
             ZoOptimizer};
@@ -42,7 +41,7 @@ impl ZoOptimizer for FoAdam {
     }
 
     fn forward(&mut self, ctx: &mut StepCtx) -> Result<ForwardOut> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("fo_valgrad")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         bind_batch(&mut call, ctx.batch, ctx.arena)?;
@@ -61,7 +60,7 @@ impl ZoOptimizer for FoAdam {
             .take()
             .ok_or_else(|| anyhow!("fo-adam update without forward"))?;
         let n = ctx.params.len();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("fo_adam_update")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("grad", &grads)?;

@@ -4,8 +4,6 @@
 //! (`S` state, n x r per matrix) while the U subspace is frozen; `S` resets
 //! at each window boundary.
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::config::{Method, TrainConfig};
@@ -13,6 +11,7 @@ use crate::coordinator::metrics::Phase;
 use crate::coordinator::seeds::SeedSchedule;
 use crate::runtime::exec::scalar_pair;
 use crate::runtime::{Runtime, StepArena};
+use crate::telemetry::Stopwatch;
 
 use super::{bind_batch, vector_elems, zeros_buf, ForwardOut, StepCtx, ZoOptimizer};
 
@@ -69,7 +68,7 @@ fn lozo_forward(ctx: &mut StepCtx, lazy: &LazyU) -> Result<ForwardOut> {
     // per-step V draws (in-HLO) + dense 1D
     ctx.counter.add_matrix(lazy.n_sum * lazy.rank as u64);
     ctx.counter.add_vector(vector_elems(ctx.rt));
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let artifact = ctx.rt.manifest.loss_artifact(ctx.cfg.method, ctx.cfg.forward_form);
     let mut call = ctx.rt.prepared(artifact)?;
     call.bind_bufs("param", ctx.params.bufs())?;
@@ -107,7 +106,7 @@ impl ZoOptimizer for Lozo {
 
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
         let seed = ctx.step_seed();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("lozo_update_sgd")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("factor_u", &self.lazy.us)?;
@@ -169,7 +168,7 @@ impl ZoOptimizer for LozoM {
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
         let seed = ctx.step_seed();
         let n = ctx.params.len();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("lozo_update_m")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("factor_u", &self.lazy.us)?;

@@ -4,14 +4,13 @@
 //! state (the resampling technique); -m and -Adam hold full-size moment
 //! buffers — exactly the memory the paper's Fig 3(a) charges them for.
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::config::Method;
 use crate::coordinator::metrics::Phase;
 use crate::runtime::exec::scalar_pair;
 use crate::runtime::Runtime;
+use crate::telemetry::Stopwatch;
 
 use super::{bind_batch, matrix_elems, param_elems, vector_elems, zeros_like_params,
             ForwardOut, StepCtx, ZoOptimizer};
@@ -22,7 +21,7 @@ fn mezo_forward(ctx: &mut StepCtx) -> Result<ForwardOut> {
     // the artifact draws a dense Z over every parameter
     ctx.counter.add_matrix(matrix_elems(ctx.rt));
     ctx.counter.add_vector(vector_elems(ctx.rt));
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let mut call = ctx.rt.prepared("mezo_loss_pm")?;
     call.bind_bufs("param", ctx.params.bufs())?;
     bind_batch(&mut call, ctx.batch, ctx.arena)?;
@@ -64,7 +63,7 @@ impl ZoOptimizer for Mezo {
         // the paper's model (the draw is one logical sample per step), so no
         // second counter increment here.
         let coeff = ctx.lr * kappa;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("mezo_update_sgd")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_scalar_u32("seed", seed, ctx.arena)?;
@@ -103,7 +102,7 @@ impl ZoOptimizer for MezoM {
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
         let seed = ctx.step_seed();
         let n = ctx.params.len();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("mezo_update_m")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("state_m", &self.m)?;
@@ -156,7 +155,7 @@ impl ZoOptimizer for MezoAdam {
         self.t += 1;
         let seed = ctx.step_seed();
         let n = ctx.params.len();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("mezo_update_adam")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("state_m", &self.m)?;

@@ -2,8 +2,6 @@
 //! refreshed lazily (QR in the `subzo_factors` artifact) and a Gaussian
 //! r x r Sigma drawn in-HLO each step.
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::config::{Method, TrainConfig};
@@ -11,6 +9,7 @@ use crate::coordinator::metrics::Phase;
 use crate::coordinator::seeds::SeedSchedule;
 use crate::runtime::exec::scalar_pair;
 use crate::runtime::{Runtime, StepArena};
+use crate::telemetry::Stopwatch;
 
 use super::{bind_batch, vector_elems, ForwardOut, StepCtx, ZoOptimizer};
 
@@ -85,7 +84,7 @@ impl ZoOptimizer for Subzo {
         ctx.counter.add_matrix(self.n_mats * (self.rank * self.rank) as u64);
         ctx.counter.add_vector(vector_elems(ctx.rt));
         let seed = ctx.step_seed();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("subzo_loss_pm")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("factor_u", &self.us)?;
@@ -101,7 +100,7 @@ impl ZoOptimizer for Subzo {
 
     fn update(&mut self, ctx: &mut StepCtx, kappa: f32) -> Result<()> {
         let seed = ctx.step_seed();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("subzo_update")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("factor_u", &self.us)?;

@@ -7,8 +7,6 @@
 //! momentum/Adam state is the tau-sized host vectors `tau_M`, `tau_V`
 //! (the O(r) optimizer state that makes TeZO-Adam cheaper than MeZO-SGD).
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::config::Method;
@@ -17,6 +15,7 @@ use crate::coordinator::seeds::{SeedSchedule, Stream};
 use crate::rngx::{normal_rng, SplitMix64};
 use crate::runtime::exec::scalar_pair;
 use crate::runtime::Runtime;
+use crate::telemetry::Stopwatch;
 
 use super::{bind_batch, vector_elems, ForwardOut, StepCtx, ZoOptimizer};
 
@@ -99,7 +98,7 @@ fn tezo_forward(ctx: &mut StepCtx, factors: &Factors, taus: &[Vec<f32>])
     let seed = ctx.step_seed();
     ctx.counter.add_matrix(factors.tau_draw_count());
     ctx.counter.add_vector(vector_elems(ctx.rt));
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let artifact = ctx.rt.manifest.loss_artifact(ctx.cfg.method, ctx.cfg.forward_form);
     let mut call = ctx.rt.prepared(artifact)?;
     call.bind_bufs("param", ctx.params.bufs())?;
@@ -121,7 +120,7 @@ fn tezo_forward(ctx: &mut StepCtx, factors: &Factors, taus: &[Vec<f32>])
 fn tezo_update_factor(ctx: &mut StepCtx, factors: &Factors,
                       tau_effs: &[Vec<f32>], coeff1d: f32) -> Result<()> {
     let seed = ctx.step_seed();
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let mut call = ctx.rt.prepared("tezo_update_factor")?;
     call.bind_bufs("param", ctx.params.bufs())?;
     call.bind_bufs("factor_u", &factors.us)?;
@@ -366,7 +365,7 @@ impl ZoOptimizer for TezoAdam {
         let (tau_m_hat, tau_v_hat) = (&self.tau_m_hat, &self.tau_v_hat);
 
         let seed = ctx.step_seed();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("tezo_update_adam")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("factor_u", &self.factors.us)?;

@@ -4,14 +4,13 @@
 //! Adam-style second moment. Full-size `m_pert` and `v` states, so its
 //! memory footprint is MeZO-Adam-like (paper Table 4 baseline).
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::config::Method;
 use crate::coordinator::metrics::Phase;
 use crate::runtime::exec::scalar_pair;
 use crate::runtime::Runtime;
+use crate::telemetry::Stopwatch;
 
 use super::{bind_batch, matrix_elems, param_elems, vector_elems, zeros_like_params,
             ForwardOut, StepCtx, ZoOptimizer};
@@ -43,7 +42,7 @@ impl ZoOptimizer for ZoAdamu {
         let seed = ctx.step_seed();
         ctx.counter.add_matrix(matrix_elems(ctx.rt));
         ctx.counter.add_vector(vector_elems(ctx.rt));
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("adamu_loss_pm")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("state_mpert", &self.m_pert)?;
@@ -61,7 +60,7 @@ impl ZoOptimizer for ZoAdamu {
         self.t += 1;
         let seed = ctx.step_seed();
         let n = ctx.params.len();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut call = ctx.rt.prepared("adamu_update")?;
         call.bind_bufs("param", ctx.params.bufs())?;
         call.bind_bufs("state_mpert", &self.m_pert)?;

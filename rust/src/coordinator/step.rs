@@ -154,6 +154,8 @@ impl StepEngine {
             let fwd = self.forward_sub(rt, driver, params, batch, step, sub,
                                        timers, counter)?;
             let (loss, kappa) = self.combine(&fwd);
+            // observational only: the tracer reads kappa, never the reverse
+            timers.telemetry().counter("step", "kappa", kappa as f64, step as i64);
             if !loss.is_finite() || !kappa.is_finite() {
                 return Ok(loss);
             }

@@ -14,8 +14,6 @@
 //! hooks, and metrics. Every phase is timed (Fig 3b), every random draw
 //! counted (Table 2).
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::config::TrainConfig;
@@ -27,6 +25,7 @@ use crate::coordinator::seeds::SeedSchedule;
 use crate::coordinator::step::StepEngine;
 use crate::data::{Batch, BatchBuilder, Corpus};
 use crate::runtime::{ParamStore, Runtime};
+use crate::telemetry::{Stopwatch, Telemetry};
 
 /// Where training batches come from.
 pub enum DataSource {
@@ -70,6 +69,8 @@ pub struct Trainer<'a> {
     pub on_step: Option<Box<dyn FnMut(u64, f64) + 'a>>,
     /// eval batches for the periodic accuracy hook
     pub eval_set: Option<(Vec<Batch>, Vec<i32>)>,
+    /// tracer handle (disabled by default; `--telemetry-dir` enables it)
+    pub telemetry: Telemetry,
 }
 
 impl<'a> Trainer<'a> {
@@ -80,12 +81,20 @@ impl<'a> Trainer<'a> {
             data,
             on_step: None,
             eval_set: None,
+            telemetry: Telemetry::off(),
         }
     }
 
     /// Attach a held-out eval set (batches + candidate label tokens).
     pub fn with_eval(mut self, batches: Vec<Batch>, label_tokens: Vec<i32>) -> Self {
         self.eval_set = Some((batches, label_tokens));
+        self
+    }
+
+    /// Attach a tracer: phase spans, step spans, and loss/kappa counters
+    /// land in its ring (observational only — never fed back into seeds).
+    pub fn with_telemetry(mut self, telemetry: Telemetry) -> Self {
+        self.telemetry = telemetry;
         self
     }
 
@@ -107,15 +116,21 @@ impl<'a> Trainer<'a> {
         let mut counter = SampleCounter::default();
         let mut skipped = 0u64;
         let staged0 = self.rt.stage().stats();
-        let wall0 = Instant::now();
+        metrics.timers.set_telemetry(self.telemetry.clone());
+        let wall0 = Stopwatch::start();
+        let run0 = self.telemetry.now_ns();
 
         for step in 0..steps {
+            metrics.timers.set_span_step(step as i64);
+            let step0 = self.telemetry.now_ns();
             let dseed = engine.seeds.data_seed(step);
             let batch = metrics
                 .timers
                 .time(Phase::Sampling, || self.data.batch(dseed, step));
             let loss = engine.step(self.rt, &mut *driver, params, &batch, step,
                                    &mut metrics.timers, &mut counter)?;
+            self.telemetry.span_from("step", "step", step0, 0, step as i64);
+            self.telemetry.counter("step", "loss", loss, step as i64);
             if loss.is_finite() {
                 metrics.record_loss(loss);
             } else {
@@ -143,7 +158,9 @@ impl<'a> Trainer<'a> {
                 metrics.evals.push((steps, acc));
             }
         }
-        metrics.wall_seconds = wall0.elapsed().as_secs_f64();
+        metrics.timers.set_span_step(-1);
+        self.telemetry.span_from("run", "train", run0, 0, -1);
+        metrics.wall_seconds = wall0.elapsed_secs();
         Ok(TrainOutcome {
             metrics,
             counter,

@@ -28,7 +28,7 @@
 //! round in lockstep instead of waiting for it.
 
 use std::path::PathBuf;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Result};
 
@@ -36,6 +36,7 @@ use crate::config::{FleetConfig, StragglerPolicy, TrainConfig};
 use crate::coordinator::metrics::TrainMetrics;
 use crate::coordinator::optimizer::ForwardOut;
 use crate::coordinator::step::StepEngine;
+use crate::telemetry::{secs_to_ns, Stopwatch, Telemetry};
 
 use super::metrics::FleetMetrics;
 use super::protocol::{aggregate_two_point, CatchUp, Command, Event, LogEntry,
@@ -113,6 +114,10 @@ pub struct FleetTrainer {
     /// test injection: replace the PJRT-backed replica with a custom one
     /// (loopback only; see `fleet::sim`)
     pub replica_factory: Option<Box<ReplicaFactory>>,
+    /// tracer handle (disabled by default; `--telemetry-dir` enables it).
+    /// Spans and marks are recorded from values the drive loop already
+    /// holds — the tracer never sits on a gather's wait path.
+    pub telemetry: Telemetry,
 }
 
 impl FleetTrainer {
@@ -129,6 +134,7 @@ impl FleetTrainer {
             checkpoint_dir: None,
             kill_plan: None,
             replica_factory: None,
+            telemetry: Telemetry::off(),
         }
     }
 
@@ -157,6 +163,13 @@ impl FleetTrainer {
         self
     }
 
+    /// Attach a tracer: per-worker round spans, rejoin/drop/checkpoint
+    /// marks, and loss/kappa counters land in its ring.
+    pub fn with_telemetry(mut self, telemetry: Telemetry) -> Self {
+        self.telemetry = telemetry;
+        self
+    }
+
     /// Run the configured number of steps across the fleet.
     pub fn run(&mut self) -> Result<FleetOutcome> {
         self.cfg.validate()?;
@@ -172,6 +185,7 @@ impl FleetTrainer {
         let cfg = self.cfg.clone();
         let seed = cfg.seed;
         let checkpoint_dir = self.checkpoint_dir.clone();
+        let telemetry = self.telemetry.clone();
 
         match self.transport.clone() {
             Transport::Loopback => std::thread::scope(|scope| {
@@ -204,7 +218,7 @@ impl FleetTrainer {
                     spawn_worker(w);
                 }
                 let out = drive(&engine, &fleet_cfg, &mut hub, &mut on_step,
-                                &mut spawn_worker, &mut kill_plan);
+                                &mut spawn_worker, &mut kill_plan, &telemetry);
                 // dropping the hub drops every command sender: workers
                 // unblock, see a closed link, and exit so the scope can
                 // join instead of hanging on error paths
@@ -219,7 +233,7 @@ impl FleetTrainer {
                 // refilled by the worker process dialing back in
                 let mut no_respawn = |_w: usize| {};
                 drive(&engine, &fleet_cfg, &mut hub, &mut on_step,
-                      &mut no_respawn, &mut kill_plan)
+                      &mut no_respawn, &mut kill_plan, &telemetry)
             }
         }
     }
@@ -240,13 +254,15 @@ struct Drive<'a> {
     /// departures we caused via straggler kicks (not charged)
     pending_drops: usize,
     last_failure: Option<String>,
-    last_event: Instant,
+    last_event: Stopwatch,
     /// prunable catch-up log (entries since the last published checkpoint)
     log: Vec<LogEntry>,
     /// full run trace (never pruned; returned in [`FleetOutcome`])
     trace: Vec<LogEntry>,
     last_checkpoint: Option<u64>,
     fleet: FleetMetrics,
+    /// tracer handle (off by default; observational only)
+    tel: Telemetry,
 }
 
 impl Drive<'_> {
@@ -288,20 +304,35 @@ impl Drive<'_> {
     fn poll_next(&mut self) -> Result<Option<HubEvent>> {
         let ev = self.hub.poll(POLL_QUANTUM)?;
         if ev.is_some() {
-            self.last_event = Instant::now();
-        } else if self.staffed
-            && !self.alive.iter().any(|&a| a)
-            && self.last_event.elapsed() > DEAD_FLEET_STALL
-        {
-            match &self.last_failure {
-                Some(e) => bail!("every worker is gone and none rejoined \
-                                  within {}s (last failure: {e})",
-                                 DEAD_FLEET_STALL.as_secs()),
-                None => bail!("every worker is gone and none rejoined \
-                               within {}s", DEAD_FLEET_STALL.as_secs()),
+            self.last_event = Stopwatch::start();
+        } else if self.staffed && !self.alive.iter().any(|&a| a) {
+            // dead-fleet wait: one mark per poll quantum (bounded by the
+            // stall budget, so this cannot flood the ring)
+            self.tel.mark("fleet", "dead_wait", 0, -1);
+            if self.last_event.elapsed() > DEAD_FLEET_STALL {
+                match &self.last_failure {
+                    Some(e) => bail!("every worker is gone and none rejoined \
+                                      within {}s (last failure: {e})",
+                                     DEAD_FLEET_STALL.as_secs()),
+                    None => bail!("every worker is gone and none rejoined \
+                                   within {}s", DEAD_FLEET_STALL.as_secs()),
+                }
             }
         }
         Ok(ev)
+    }
+
+    /// Per-worker round spans (lane = worker slot) from the wall times the
+    /// workers reported — recorded after the gather completes, never on its
+    /// critical path.
+    fn emit_round_spans(&self, name: &'static str, times: &[f64], step: u64) {
+        if !self.tel.enabled() {
+            return;
+        }
+        for (w, &t) in times.iter().enumerate() {
+            self.tel
+                .span_dur("round", name, secs_to_ns(t), w as u32, step as i64);
+        }
     }
 
     fn on_joined(&mut self, w: usize) -> Result<()> {
@@ -312,6 +343,9 @@ impl Drive<'_> {
             // parameters before it sees any ticket (per-link ordering
             // guarantees the CatchUp precedes the next Forward)
             self.fleet.rejoins += 1;
+            self.tel.mark("fleet", "rejoin", w as u32, -1);
+            self.tel
+                .counter("fleet", "catchup_entries", self.log.len() as f64, -1);
             let cmd = Command::CatchUp(CatchUp {
                 checkpoint_step: self.last_checkpoint,
                 entries: self.log.clone(),
@@ -324,12 +358,15 @@ impl Drive<'_> {
     fn on_left(&mut self, w: usize) -> Result<()> {
         ensure!(w < self.alive.len(), "departure of unknown slot {w}");
         self.alive[w] = false;
+        self.tel.mark("fleet", "left", w as u32, -1);
         if self.pending_drops > 0 {
             // a deliberate straggler kick, already counted in fleet.drops —
             // it does not consume the crash-restart budget
             self.pending_drops -= 1;
         } else {
             self.deaths += 1;
+            self.tel
+                .counter("fleet", "restart_budget_used", self.deaths as f64, -1);
             if self.deaths > self.fc.max_restarts {
                 match &self.last_failure {
                     Some(e) => bail!("worker {w} failed: {e}"),
@@ -383,7 +420,7 @@ impl Drive<'_> {
         let mut slots: Vec<Option<(f32, f32)>> = vec![None; n];
         let mut sent = vec![false; n];
         let mut times = vec![0.0f64; n];
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         loop {
             // (re)send to every live worker that has neither an outstanding
             // ticket nor a result — a rejoiner gets exactly one resend, so a
@@ -417,6 +454,8 @@ impl Drive<'_> {
                                     self.alive[w] = false;
                                     self.fleet.drops += 1;
                                     self.pending_drops += 1;
+                                    self.tel.mark("fleet", "drop", w as u32,
+                                                  ticket.step as i64);
                                 }
                             }
                             return Ok(None);
@@ -549,6 +588,8 @@ impl Drive<'_> {
                             self.last_checkpoint = Some(step_done);
                             self.log.retain(|e| e.step >= step_done);
                             self.fleet.checkpoints += 1;
+                            self.tel.mark("fleet", "checkpoint", 0,
+                                          step_done as i64);
                             return Ok(());
                         }
                         Event::Failed { worker, error } => {
@@ -696,7 +737,7 @@ impl Drive<'_> {
 fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
          on_step: &mut Option<Box<dyn FnMut(u64, f64) + Send>>,
          respawn: &mut dyn FnMut(usize),
-         kill_plan: &mut Option<KillPlan>)
+         kill_plan: &mut Option<KillPlan>, tel: &Telemetry)
          -> Result<FleetOutcome> {
     let workers = fc.workers;
     let steps = engine.cfg.steps as u64;
@@ -710,15 +751,17 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
         deaths: 0,
         pending_drops: 0,
         last_failure: None,
-        last_event: Instant::now(),
+        last_event: Stopwatch::start(),
         log: Vec::new(),
         trace: Vec::new(),
         last_checkpoint: None,
         fleet: FleetMetrics::new(workers),
+        tel: tel.clone(),
     };
     let mut metrics = TrainMetrics::default();
     let mut skipped = 0u64;
-    let wall0 = Instant::now();
+    let wall0 = Stopwatch::start();
+    let run0 = tel.now_ns();
     d.staff()?;
 
     for step in 0..steps {
@@ -731,6 +774,7 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
                 }
             }
         }
+        let step0 = tel.now_ns();
         let mut loss_acc = 0.0f64;
         let mut early: Option<f64> = None;
         for sub in 0..q {
@@ -748,6 +792,10 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
                 break;
             };
             d.fleet.record_forward_round(&fwd_times);
+            d.emit_round_spans("forward", &fwd_times, step);
+            if let Some(&f) = d.fleet.round_factors.last() {
+                d.tel.counter("round", "straggler_factor", f, step as i64);
+            }
             let (f_plus, f_minus) = aggregate_two_point(&pairs);
             let (loss, kappa_raw) =
                 engine.combine(&ForwardOut::TwoPoint { f_plus, f_minus });
@@ -759,8 +807,11 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
                 break;
             }
             let kappa = engine.clip_kappa(kappa_raw);
+            // observational only: the tracer reads kappa, never the reverse
+            d.tel.counter("round", "kappa", kappa as f64, step as i64);
             let upd_times = d.ack_round(ticket, Some(kappa))?;
             d.fleet.record_update_round(&upd_times);
+            d.emit_round_spans("update", &upd_times, step);
             loss_acc += loss;
         }
         // same semantics as the single-process engine: a non-finite
@@ -770,6 +821,8 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
             Some(l) => l,
             None => loss_acc / q as f64,
         };
+        tel.span_from("step", "step", step0, 0, step as i64);
+        tel.counter("step", "loss", loss, step as i64);
         if loss.is_finite() {
             metrics.record_loss(loss);
         } else {
@@ -809,7 +862,8 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
     d.fleet.comm.wire_up = ws.bytes_up;
     d.fleet.comm.frames_down = ws.frames_down;
     d.fleet.comm.frames_up = ws.frames_up;
-    metrics.wall_seconds = wall0.elapsed().as_secs_f64();
+    tel.span_from("run", "train-dp", run0, 0, -1);
+    metrics.wall_seconds = wall0.elapsed_secs();
     let state_bytes = workers_out.first().map(|r| r.state_bytes).unwrap_or(0);
     Ok(FleetOutcome {
         metrics,

@@ -8,8 +8,16 @@
 //! fast replicas. `critical_path_secs` (sum of per-round maxima) over
 //! `mean_path_secs` (sum of per-round means) is the fleet's load-imbalance
 //! factor — 1.0 means perfectly balanced shards.
+//!
+//! Since PR 8 the per-worker running sums are backed by full round-RTT
+//! histograms ([`LatencyHist`], telemetry layer): the sums stay (they are
+//! what `train-dp` prints and what the tests pin), but p50/p95/p99 per
+//! worker and the per-round straggler-factor series are now part of the
+//! fleet summary JSON.
 
 use crate::fleet::protocol::CommStats;
+use crate::jsonx::Value;
+use crate::telemetry::{secs_to_ns, LatencyHist};
 
 /// Aggregated fleet statistics for one run.
 #[derive(Clone, Debug, Default)]
@@ -18,6 +26,14 @@ pub struct FleetMetrics {
     pub forward_secs: Vec<f64>,
     /// accumulated update wall seconds per worker
     pub update_secs: Vec<f64>,
+    /// per-worker forward round-time histograms (ns)
+    pub forward_hist: Vec<LatencyHist>,
+    /// per-worker update round-time histograms (ns)
+    pub update_hist: Vec<LatencyHist>,
+    /// per-round straggler factor (slowest / mean forward time), one entry
+    /// per forward round — the closed-loop signal the final
+    /// [`Self::straggler_factor`] aggregate hides
+    pub round_factors: Vec<f64>,
     /// synchronous forward rounds driven (steps x sub-perturbations)
     pub rounds: u64,
     /// sum over rounds of the slowest worker's forward time
@@ -51,6 +67,8 @@ impl FleetMetrics {
         Self {
             forward_secs: vec![0.0; workers],
             update_secs: vec![0.0; workers],
+            forward_hist: vec![LatencyHist::new(); workers],
+            update_hist: vec![LatencyHist::new(); workers],
             ..Self::default()
         }
     }
@@ -71,10 +89,15 @@ impl FleetMetrics {
             min = min.min(t);
             sum += t;
         }
+        for (h, &t) in self.forward_hist.iter_mut().zip(times) {
+            h.record_ns(secs_to_ns(t));
+        }
+        let mean = sum / times.len().max(1) as f64;
         self.rounds += 1;
         self.critical_path_secs += max;
-        self.mean_path_secs += sum / times.len().max(1) as f64;
+        self.mean_path_secs += mean;
         self.spread_secs += max - min.min(max);
+        self.round_factors.push(if mean > 0.0 { max / mean } else { 1.0 });
     }
 
     /// Record one update round's per-worker wall times.
@@ -82,6 +105,9 @@ impl FleetMetrics {
         debug_assert_eq!(times.len(), self.update_secs.len());
         for (acc, &t) in self.update_secs.iter_mut().zip(times) {
             *acc += t;
+        }
+        for (h, &t) in self.update_hist.iter_mut().zip(times) {
+            h.record_ns(secs_to_ns(t));
         }
     }
 
@@ -107,6 +133,45 @@ impl FleetMetrics {
             .enumerate()
             .map(|(w, (&f, &u))| (w, f, u))
             .collect()
+    }
+
+    fn hist_json(h: &LatencyHist) -> Value {
+        Value::obj(vec![
+            ("count", Value::i(h.count() as i64)),
+            ("p50_ns", Value::i(h.p50_ns() as i64)),
+            ("p95_ns", Value::i(h.p95_ns() as i64)),
+            ("p99_ns", Value::i(h.p99_ns() as i64)),
+            ("max_ns", Value::i(h.max_ns() as i64)),
+        ])
+    }
+
+    /// Fleet summary (written next to the trace by `--telemetry-dir`):
+    /// aggregate straggler stats, the full per-round factor series, and
+    /// per-worker forward/update quantiles.
+    pub fn summary_json(&self) -> Value {
+        Value::obj(vec![
+            ("workers", Value::i(self.workers() as i64)),
+            ("rounds", Value::i(self.rounds as i64)),
+            ("straggler_factor", Value::f(self.straggler_factor())),
+            ("straggler_wait_secs", Value::f(self.straggler_wait_secs())),
+            ("round_straggler_factors",
+             Value::arr(self.round_factors.iter().map(|&f| Value::f(f)).collect())),
+            ("rejoins", Value::i(self.rejoins as i64)),
+            ("drops", Value::i(self.drops as i64)),
+            ("degraded_rounds", Value::i(self.degraded_rounds as i64)),
+            ("checkpoints", Value::i(self.checkpoints as i64)),
+            ("per_worker", Value::arr(
+                self.forward_hist
+                    .iter()
+                    .zip(&self.update_hist)
+                    .enumerate()
+                    .map(|(w, (fh, uh))| Value::obj(vec![
+                        ("worker", Value::i(w as i64)),
+                        ("forward", Self::hist_json(fh)),
+                        ("update", Self::hist_json(uh)),
+                    ]))
+                    .collect())),
+        ])
     }
 }
 
@@ -136,5 +201,44 @@ mod tests {
         assert_eq!(m.straggler_wait_secs(), 0.0);
         // empty metrics are well-defined too
         assert_eq!(FleetMetrics::new(2).straggler_factor(), 1.0);
+    }
+
+    #[test]
+    fn per_round_factors_keep_what_the_aggregate_hides() {
+        let mut m = FleetMetrics::new(2);
+        m.record_forward_round(&[1.0, 1.0]); // balanced round
+        m.record_forward_round(&[1.0, 3.0]); // skewed round
+        assert_eq!(m.round_factors.len(), 2);
+        assert!((m.round_factors[0] - 1.0).abs() < 1e-12);
+        assert!((m.round_factors[1] - 1.5).abs() < 1e-12);
+        // the aggregate factor sits between the two rounds
+        let agg = m.straggler_factor();
+        assert!(agg > m.round_factors[0] && agg < m.round_factors[1]);
+    }
+
+    #[test]
+    fn round_times_land_in_per_worker_histograms() {
+        let mut m = FleetMetrics::new(2);
+        m.record_forward_round(&[0.001, 0.002]);
+        m.record_forward_round(&[0.001, 0.004]);
+        m.record_update_round(&[0.0005, 0.0005]);
+        assert_eq!(m.forward_hist[0].count(), 2);
+        assert_eq!(m.forward_hist[1].count(), 2);
+        assert_eq!(m.update_hist[0].count(), 1);
+        assert!(m.forward_hist[1].max_ns() >= 4_000_000);
+        // running sums and histogram sums agree (to ns rounding)
+        assert!((m.forward_secs[1] - m.forward_hist[1].sum_ns() as f64 / 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_json_has_per_round_and_per_worker_blocks() {
+        let mut m = FleetMetrics::new(2);
+        m.record_forward_round(&[1.0, 2.0]);
+        m.record_update_round(&[0.5, 0.5]);
+        let v = m.summary_json();
+        assert_eq!(v.get("round_straggler_factors").unwrap().as_array().unwrap().len(), 1);
+        let pw = v.get("per_worker").unwrap().as_array().unwrap();
+        assert_eq!(pw.len(), 2);
+        assert_eq!(pw[1].get("forward").unwrap().get("count").unwrap().as_i64().unwrap(), 1);
     }
 }

@@ -22,11 +22,12 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::TrainConfig;
+use crate::telemetry::Stopwatch;
 
 use super::protocol::{Command, Event};
 use super::transport::{Hub, HubEvent, Link, WireStats};
@@ -53,7 +54,7 @@ enum FrameRead {
 
 /// Finish reading `buf`; read timeouts are retried under [`STALL_BUDGET`].
 fn read_exact_stalling(stream: &mut TcpStream, buf: &mut [u8]) -> Result<()> {
-    let start = Instant::now();
+    let start = Stopwatch::start();
     let mut got = 0usize;
     while got < buf.len() {
         match stream.read(&mut buf[got..]) {
@@ -96,7 +97,7 @@ fn read_frame_step(stream: &mut TcpStream) -> Result<FrameRead> {
 
 /// Read one frame within `deadline`, treating idle polls as waiting.
 fn read_frame_deadline(stream: &mut TcpStream, deadline: Duration) -> Result<Vec<u8>> {
-    let start = Instant::now();
+    let start = Stopwatch::start();
     loop {
         match read_frame_step(stream)? {
             FrameRead::Frame(f) => return Ok(f),
@@ -444,7 +445,7 @@ pub struct TcpLink {
 
 impl Link for TcpLink {
     fn recv(&mut self) -> Result<Option<Command>> {
-        let idle0 = Instant::now();
+        let idle0 = Stopwatch::start();
         loop {
             match read_frame_step(&mut self.stream)? {
                 FrameRead::Frame(f) => return Ok(Some(wire::decode_command(&f)?)),

@@ -17,7 +17,6 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::Sender;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -31,6 +30,7 @@ use crate::coordinator::step::StepEngine;
 use crate::coordinator::trainer::DataSource;
 use crate::data::Batch;
 use crate::runtime::{checkpoint, Manifest, ParamStore, Runtime};
+use crate::telemetry::Stopwatch;
 
 use super::protocol::{Command, Event, Ticket, WorkerReport};
 use super::tcp::{self, JoinInfo, Reconnect};
@@ -147,7 +147,7 @@ pub fn serve(link: &mut dyn Link, worker: usize, seeds: &SeedSchedule,
         match cmd {
             Command::Forward(t) => {
                 check_ticket(seeds, worker, &t)?;
-                let t0 = Instant::now();
+                let t0 = Stopwatch::start();
                 let (f_plus, f_minus) = replica.forward(t.step, t.sub)?;
                 let forward_secs = t0.elapsed().as_secs_f64();
                 link.send(&Event::TwoPoint {
@@ -161,7 +161,7 @@ pub fn serve(link: &mut dyn Link, worker: usize, seeds: &SeedSchedule,
             }
             Command::Apply { ticket: t, kappa } => {
                 check_ticket(seeds, worker, &t)?;
-                let t0 = Instant::now();
+                let t0 = Stopwatch::start();
                 replica.apply(t.step, t.sub, kappa)?;
                 link.send(&Event::Applied {
                     worker,

@@ -23,7 +23,8 @@
 //! usual ecosystem crates are replaced by in-tree substrates: [`rngx`]
 //! (deterministic RNG), [`jsonx`] (JSON), [`clix`] (CLI parsing),
 //! [`benchkit`] (criterion-style benching), [`proplite`] (property
-//! testing), [`tensor`] (host linear algebra incl. top-k SVD).
+//! testing), [`tensor`] (host linear algebra incl. top-k SVD), and
+//! [`telemetry`] (span tracing, latency histograms, trace export).
 
 pub mod benchkit;
 pub mod clix;
@@ -36,6 +37,7 @@ pub mod memmodel;
 pub mod proplite;
 pub mod rngx;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 
 /// Repository-level version string (also printed by `tezo --version`).

@@ -7,6 +7,7 @@
 //!   memory-report  render Table 7 / Table 9 / Fig 1(c) from the memory model
 //!   rank-probe     recompute the Eq.(7) rank schedule and check the manifest
 //!   inspect        artifact inventory + compile times for a config
+//!   trace-report   summarize a `--telemetry-dir` trace (phases, stragglers)
 
 use std::path::PathBuf;
 
@@ -19,8 +20,10 @@ use tezo::coordinator::rank;
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
 use tezo::fleet::{task_job_factory, FleetTrainer, JobSpec, Transport};
+use tezo::coordinator::metrics::{Phase, PhaseTimers};
 use tezo::memmodel::{comm, tables};
 use tezo::runtime::{ParamStore, Runtime};
+use tezo::telemetry::{self, Telemetry};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -42,6 +45,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "probe-variance" => cmd_probe_variance(rest),
         "generate" => cmd_generate(rest),
         "inspect" => cmd_inspect(rest),
+        "trace-report" => cmd_trace_report(rest),
         "--version" | "version" => {
             println!("tezo {}", tezo::VERSION);
             Ok(())
@@ -66,6 +70,7 @@ fn print_help() {
          \x20 probe-variance kappa-distribution diagnostics per ZO method\n\
          \x20 generate       greedy decoding through the eval artifact\n\
          \x20 inspect        artifact inventory for a config\n\
+         \x20 trace-report   summarize a --telemetry-dir trace\n\
          \x20 help           this message\n\n\
          run `tezo <command> --help` for flags",
         tezo::VERSION
@@ -94,6 +99,7 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     ArgSpec::opt("forward-form", "implicit", "two-point loss form: implicit|materialize (low-rank methods)"),
     ArgSpec::opt("save-to", "", "write a parameter checkpoint here at the end"),
     ArgSpec::opt("init-from", "", "initialize parameters from this checkpoint"),
+    ArgSpec::opt("telemetry-dir", "", "write trace.jsonl + metrics.prom here"),
     ArgSpec::switch("quiet", "suppress per-step output"),
     ArgSpec::switch("help", "show help"),
 ];
@@ -136,7 +142,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     // precompile exactly this method's artifact set (+ the eval head) so
     // step 0 is pure execution
     {
-        let t0 = std::time::Instant::now();
+        let t0 = telemetry::Stopwatch::start();
         rt.warmup_method(cfg.method, cfg.forward_form)?;
         if args.get_usize("eval-n")? > 0 {
             rt.warmup(&["eval_logits"])?;
@@ -164,8 +170,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let eval_batches = builder.eval_batches(args.get_usize("eval-n")?);
 
     let quiet = args.has("quiet");
+    let (telemetry_dir, tel) = telemetry_from_args(&args)?;
     let mut trainer = Trainer::new(&rt, cfg.clone(), DataSource::Task(builder))
-        .with_eval(eval_batches, label_tokens);
+        .with_eval(eval_batches, label_tokens)
+        .with_telemetry(tel.clone());
     if !quiet {
         trainer.on_step = Some(Box::new(|step, loss| {
             if step % 20 == 0 {
@@ -210,6 +218,65 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             println!("checkpoint -> {dir}");
         }
     }
+    if let Some(dir) = &telemetry_dir {
+        write_run_telemetry(dir, &tel, "tezo train",
+                            &outcome.metrics.timers, None)?;
+    }
+    Ok(())
+}
+
+/// Parse `--telemetry-dir`: an enabled tracer plus the export target, or
+/// the no-op tracer when the flag is absent.
+fn telemetry_from_args(args: &clix::Args)
+                       -> Result<(Option<PathBuf>, Telemetry)> {
+    Ok(match args.get("telemetry-dir") {
+        Some(d) if !d.is_empty() => {
+            (Some(PathBuf::from(d)),
+             Telemetry::new(telemetry::DEFAULT_RING_CAPACITY))
+        }
+        _ => (None, Telemetry::off()),
+    })
+}
+
+/// Export one run's telemetry artifacts into `dir`: the Perfetto-loadable
+/// Chrome trace, a Prometheus-style snapshot of the latency histograms,
+/// and (fleet runs) the fleet summary JSON.
+fn write_run_telemetry(dir: &std::path::Path, tel: &Telemetry, process: &str,
+                       timers: &PhaseTimers,
+                       fleet: Option<&tezo::fleet::FleetMetrics>) -> Result<()> {
+    telemetry::export::write_trace_file(&dir.join("trace.jsonl"), tel, process)?;
+    let mut prom = telemetry::export::PromWriter::new();
+    for phase in Phase::ALL {
+        let h = timers.hist(phase);
+        if !h.is_empty() {
+            prom.hist("tezo_phase_latency_ns", &[("phase", phase.name())], h);
+        }
+    }
+    if let Some(fm) = fleet {
+        prom.gauge("tezo_fleet_straggler_factor", &[], fm.straggler_factor());
+        prom.gauge("tezo_fleet_straggler_wait_secs", &[],
+                   fm.straggler_wait_secs());
+        for (w, h) in fm.forward_hist.iter().enumerate() {
+            if !h.is_empty() {
+                let lane = w.to_string();
+                prom.hist("tezo_round_forward_ns",
+                          &[("worker", lane.as_str())], h);
+            }
+        }
+        for (w, h) in fm.update_hist.iter().enumerate() {
+            if !h.is_empty() {
+                let lane = w.to_string();
+                prom.hist("tezo_round_update_ns",
+                          &[("worker", lane.as_str())], h);
+            }
+        }
+        let summary = tezo::jsonx::to_string_pretty(&fm.summary_json());
+        telemetry::export::write_text(&dir.join("fleet_summary.json"),
+                                      &summary)?;
+    }
+    prom.counter_total("tezo_trace_dropped_events", &[], tel.dropped());
+    telemetry::export::write_text(&dir.join("metrics.prom"), &prom.finish())?;
+    println!("telemetry -> {}", dir.display());
     Ok(())
 }
 
@@ -245,6 +312,7 @@ const TRAIN_DP_SPECS: &[ArgSpec] = &[
     ArgSpec::opt("max-restarts", "0", "worker deaths tolerated before aborting (0 = fail fast)"),
     ArgSpec::opt("reconnect-attempts", "10", "worker mode: dial attempts per reconnect"),
     ArgSpec::opt("reconnect-backoff-ms", "100", "worker mode: base backoff between attempts"),
+    ArgSpec::opt("telemetry-dir", "", "write trace.jsonl + metrics.prom + fleet_summary.json here"),
     ArgSpec::switch("quiet", "suppress per-step output"),
     ArgSpec::switch("help", "show help"),
 ];
@@ -319,13 +387,15 @@ fn cmd_train_dp(argv: &[String]) -> Result<()> {
 
     let dir = tezo::artifacts_root().join(config);
     let n_params = tezo::runtime::Manifest::load(&dir)?.config.n_params as u64;
+    let (telemetry_dir, tel) = telemetry_from_args(&args)?;
     let mut trainer = FleetTrainer::new(fleet, cfg.clone(), dir, factory)
         .with_transport(transport)
         .with_job_spec(JobSpec {
             task: task_name,
             k_shot: k_shot as u32,
             eval_n: eval_n as u32,
-        });
+        })
+        .with_telemetry(tel.clone());
     if let Some(d) = checkpoint_dir {
         trainer = trainer.with_checkpoint_dir(d);
     }
@@ -388,6 +458,10 @@ fn cmd_train_dp(argv: &[String]) -> Result<()> {
             outcome.metrics.write_loss_csv(&PathBuf::from(path))?;
             println!("loss curve -> {path}");
         }
+    }
+    if let Some(d) = &telemetry_dir {
+        write_run_telemetry(d, &tel, "tezo train-dp",
+                            &outcome.metrics.timers, Some(&outcome.fleet))?;
     }
     Ok(())
 }
@@ -722,7 +796,7 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
     if args.has("compile") {
         let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
         for n in &names {
-            let t = std::time::Instant::now();
+            let t = telemetry::Stopwatch::start();
             rt.executable(n)?;
             println!("  compiled {n} in {:.2}s", t.elapsed().as_secs_f64());
         }
@@ -730,4 +804,29 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
                  rt.compile_seconds(), rt.compiled_count());
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// trace-report
+// ---------------------------------------------------------------------------
+
+const TRACE_REPORT_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("trace", "out/trace/trace.jsonl",
+                 "trace file written by --telemetry-dir"),
+    ArgSpec::opt("slowest", "5", "how many slowest steps to list"),
+    ArgSpec::switch("check", "validate the trace schema and exit"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_trace_report(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, TRACE_REPORT_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help("trace-report",
+                                       "summarize a telemetry trace",
+                                       TRACE_REPORT_SPECS));
+        return Ok(());
+    }
+    telemetry::report::trace_report(args.get_str("trace")?,
+                                    args.has("check"),
+                                    args.get_usize("slowest")?)
 }

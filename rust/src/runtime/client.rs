@@ -13,11 +13,11 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::{ForwardForm, Method};
+use crate::telemetry::Stopwatch;
 
 use super::manifest::Manifest;
 use super::plan::CallPlan;
@@ -62,7 +62,7 @@ impl Runtime {
         }
         let meta = self.manifest.artifact(artifact)?;
         let path = self.manifest.dir.join(&meta.file);
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
         )

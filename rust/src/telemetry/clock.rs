@@ -1,0 +1,152 @@
+//! Clock access for the telemetry layer.
+//!
+//! Every wall-clock read in the workspace lives in this file (enforced by
+//! tezo-lint TZ-OBS001): the rest of the crate measures elapsed time
+//! through [`Stopwatch`] and the tracer reads timestamps through a
+//! [`Clock`] handle, so tests can substitute [`TestClock`] and compare
+//! trace files byte-for-byte.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic nanosecond clock behind the tracer.
+///
+/// `Send + Sync` so one clock can stamp events from the coordinator and
+/// every fleet worker thread; `Debug` so tracer handles stay debuggable.
+pub trait Clock: fmt::Debug + Send + Sync {
+    /// Nanoseconds since the clock's zero anchor.
+    fn now_ns(&self) -> u64;
+}
+
+/// Real monotonic clock, zero-anchored at construction so trace
+/// timestamps start near zero and fit comfortably in microseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct MonotonicClock {
+    zero: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        Self { zero: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        duration_ns(self.zero.elapsed())
+    }
+}
+
+/// Deterministic clock for tests: every read advances time by a fixed
+/// tick, so two identical call sequences observe identical timestamps
+/// and produce byte-identical trace files.
+#[derive(Debug)]
+pub struct TestClock {
+    now: AtomicU64,
+    tick_ns: u64,
+}
+
+impl TestClock {
+    pub fn new(tick_ns: u64) -> Self {
+        Self { now: AtomicU64::new(0), tick_ns }
+    }
+}
+
+impl Clock for TestClock {
+    fn now_ns(&self) -> u64 {
+        self.now.fetch_add(self.tick_ns, Ordering::Relaxed)
+    }
+}
+
+/// Free-running elapsed timer: the one sanctioned way for code outside
+/// `telemetry/` to measure wall time (TZ-OBS001 denies raw `Instant`
+/// elsewhere). Deliberately read-only — it exposes durations, never
+/// absolute timestamps, so its readings cannot leak into seeds or wire
+/// frames as entropy.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { t0: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        duration_ns(self.t0.elapsed())
+    }
+}
+
+fn duration_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Seconds (as measured by a [`Stopwatch`]) to integer nanoseconds for
+/// histogram recording; negative and non-finite inputs clamp to zero.
+pub fn secs_to_ns(secs: f64) -> u64 {
+    if secs.is_finite() && secs > 0.0 {
+        let ns = secs * 1e9;
+        if ns >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            ns as u64
+        }
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_clock_is_deterministic() {
+        let a = TestClock::new(100);
+        let b = TestClock::new(100);
+        for _ in 0..5 {
+            assert_eq!(a.now_ns(), b.now_ns());
+        }
+        assert_eq!(a.now_ns(), 500);
+    }
+
+    #[test]
+    fn monotonic_clock_never_goes_backwards() {
+        let c = MonotonicClock::new();
+        let t0 = c.now_ns();
+        let t1 = c.now_ns();
+        assert!(t1 >= t0);
+    }
+
+    #[test]
+    fn stopwatch_reports_consistent_units() {
+        let sw = Stopwatch::start();
+        let ns = sw.elapsed_ns();
+        let secs = sw.elapsed_secs();
+        assert!(secs >= ns as f64 / 1e9);
+    }
+
+    #[test]
+    fn secs_to_ns_clamps_garbage() {
+        assert_eq!(secs_to_ns(-1.0), 0);
+        assert_eq!(secs_to_ns(f64::NAN), 0);
+        assert_eq!(secs_to_ns(f64::INFINITY), u64::MAX);
+        assert_eq!(secs_to_ns(1.5e-6), 1500);
+    }
+}

@@ -1,0 +1,251 @@
+//! Exporters: Chrome trace-event JSON (Perfetto-loadable) and a
+//! Prometheus-style text snapshot.
+//!
+//! The trace file is a strict JSON array with one event object per line,
+//! so it loads in Perfetto / `chrome://tracing` and still greps like a
+//! JSONL stream. All numeric formatting is deterministic (integer
+//! microseconds for `ts`/`dur`, shortest-roundtrip `Display` for f64
+//! payloads), so identical event sequences serialize byte-identically.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::hist::LatencyHist;
+use super::span::{EventKind, Telemetry, TraceEvent};
+
+/// Minimal JSON string escape (quotes, backslash, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Deterministic f64 → JSON: shortest-roundtrip for finite values,
+/// `null` for NaN/inf (matching the jsonx writer's convention).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+fn event_line(e: &TraceEvent) -> String {
+    let ts_us = e.ts_ns / 1000;
+    match e.kind {
+        EventKind::Span => format!(
+            "{{\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{},\"dur\":{},\"cat\":\"{}\",\"name\":\"{}\",\"args\":{{\"step\":{},\"dur_ns\":{}}}}}",
+            e.lane,
+            ts_us,
+            e.dur_ns / 1000,
+            esc(e.cat),
+            esc(e.name),
+            e.step,
+            e.dur_ns,
+        ),
+        EventKind::Counter => format!(
+            "{{\"ph\":\"C\",\"pid\":0,\"tid\":0,\"ts\":{},\"cat\":\"{}\",\"name\":\"{}\",\"args\":{{\"value\":{},\"step\":{}}}}}",
+            ts_us,
+            esc(e.cat),
+            esc(e.name),
+            fmt_f64(e.value),
+            e.step,
+        ),
+        EventKind::Mark => format!(
+            "{{\"ph\":\"i\",\"s\":\"g\",\"pid\":0,\"tid\":{},\"ts\":{},\"cat\":\"{}\",\"name\":\"{}\",\"args\":{{\"step\":{}}}}}",
+            e.lane,
+            ts_us,
+            esc(e.cat),
+            esc(e.name),
+            e.step,
+        ),
+    }
+}
+
+/// Render events as a Chrome trace-event JSON array (one event per
+/// line). `process` labels the trace in the viewer; `dropped` > 0 adds a
+/// metadata counter so truncated rings are visible in the artifact.
+pub fn chrome_trace_string(events: &[TraceEvent], process: &str, dropped: u64) -> String {
+    let mut out = String::new();
+    out.push_str("[\n");
+    out.push_str(&format!(
+        "{{\"ph\":\"M\",\"pid\":0,\"name\":\"process_name\",\"args\":{{\"name\":\"{}\"}}}}",
+        esc(process)
+    ));
+    for e in events {
+        out.push_str(",\n");
+        out.push_str(&event_line(e));
+    }
+    if dropped > 0 {
+        out.push_str(&format!(
+            ",\n{{\"ph\":\"C\",\"pid\":0,\"tid\":0,\"ts\":0,\"cat\":\"telemetry\",\"name\":\"dropped_events\",\"args\":{{\"value\":{dropped},\"step\":-1}}}}"
+        ));
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Write `tel`'s ring to `path` as a Perfetto-loadable trace.
+pub fn write_trace_file(path: &Path, tel: &Telemetry, process: &str) -> Result<()> {
+    let body = chrome_trace_string(&tel.events(), process, tel.dropped());
+    write_text(path, &body)
+}
+
+/// Write a text artifact, creating parent directories as needed.
+pub fn write_text(path: &Path, body: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create telemetry dir {}", dir.display()))?;
+    }
+    std::fs::write(path, body).with_context(|| format!("write {}", path.display()))
+}
+
+/// Prometheus text-format builder. Histograms are emitted as cumulative
+/// `_bucket{le=...}` series over the occupied log buckets plus `_sum` /
+/// `_count`, with deterministic `quantile=...` gauges read from the same
+/// bucket state (so the snapshot always matches `LatencyHist` readout).
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+    last_type: String,
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn type_line(&mut self, metric: &str, kind: &str) {
+        let key = format!("{metric}/{kind}");
+        if self.last_type != key {
+            self.out.push_str(&format!("# TYPE {metric} {kind}\n"));
+            self.last_type = key;
+        }
+    }
+
+    fn labels(base: &[(&str, &str)], extra: Option<(&str, &str)>) -> String {
+        let mut parts: Vec<String> = base
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", esc(v)))
+            .collect();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{v}\""));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    }
+
+    pub fn gauge(&mut self, metric: &str, labels: &[(&str, &str)], v: f64) {
+        self.type_line(metric, "gauge");
+        self.out
+            .push_str(&format!("{metric}{} {}\n", Self::labels(labels, None), fmt_f64(v)));
+    }
+
+    pub fn counter_total(&mut self, metric: &str, labels: &[(&str, &str)], v: u64) {
+        self.type_line(metric, "counter");
+        self.out
+            .push_str(&format!("{metric}{} {v}\n", Self::labels(labels, None)));
+    }
+
+    pub fn hist(&mut self, metric: &str, labels: &[(&str, &str)], h: &LatencyHist) {
+        self.type_line(metric, "histogram");
+        let mut cum = 0u64;
+        for (i, c) in h.nonzero() {
+            cum = cum.saturating_add(c);
+            let le = LatencyHist::bucket_hi(i).to_string();
+            self.out.push_str(&format!(
+                "{metric}_bucket{} {cum}\n",
+                Self::labels(labels, Some(("le", &le)))
+            ));
+        }
+        self.out.push_str(&format!(
+            "{metric}_bucket{} {}\n",
+            Self::labels(labels, Some(("le", "+Inf"))),
+            h.count()
+        ));
+        self.out
+            .push_str(&format!("{metric}_sum{} {}\n", Self::labels(labels, None), h.sum_ns()));
+        self.out
+            .push_str(&format!("{metric}_count{} {}\n", Self::labels(labels, None), h.count()));
+        for (q, v) in [("0.5", h.p50_ns()), ("0.95", h.p95_ns()), ("0.99", h.p99_ns())] {
+            self.out.push_str(&format!(
+                "{metric}{} {v}\n",
+                Self::labels(labels, Some(("quantile", q)))
+            ));
+        }
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::clock::TestClock;
+
+    fn sample_events() -> Telemetry {
+        let t = Telemetry::with_clock(16, Box::new(TestClock::new(1_000_000)));
+        let s0 = t.now_ns();
+        t.span_from("phase", "forward", s0, 0, 0);
+        t.counter("step", "loss", 1.25, 0);
+        t.mark("fleet", "rejoin", 2, 4);
+        t
+    }
+
+    #[test]
+    fn trace_is_strict_json_and_stable() {
+        let t = sample_events();
+        let body = chrome_trace_string(&t.events(), "tezo test", t.dropped());
+        let v = crate::jsonx::parse(&body).expect("trace must be strict JSON");
+        let rows = v.as_array().expect("array");
+        assert_eq!(rows.len(), 4); // metadata + 3 events
+        assert_eq!(rows[1].get_str("ph").unwrap(), "X");
+        assert_eq!(rows[1].get("args").unwrap().get_f64("dur_ns").unwrap(), 1e6);
+        assert_eq!(rows[2].get_str("ph").unwrap(), "C");
+        assert_eq!(rows[2].get("args").unwrap().get_f64("value").unwrap(), 1.25);
+        // identical event sequences serialize byte-identically
+        let t2 = sample_events();
+        let body2 = chrome_trace_string(&t2.events(), "tezo test", t2.dropped());
+        assert_eq!(body, body2);
+    }
+
+    #[test]
+    fn non_finite_counter_serializes_as_null() {
+        let t = Telemetry::with_clock(4, Box::new(TestClock::new(1)));
+        t.counter("step", "loss", f64::NAN, 0);
+        let body = chrome_trace_string(&t.events(), "x", 0);
+        assert!(crate::jsonx::parse(&body).is_ok());
+        assert!(body.contains("\"value\":null"));
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative_and_quantiles_match() {
+        let mut h = LatencyHist::new();
+        for v in [100u64, 200, 300, 40_000] {
+            h.record_ns(v);
+        }
+        let mut w = PromWriter::new();
+        w.hist("tezo_phase_latency_ns", &[("phase", "forward")], &h);
+        let txt = w.finish();
+        assert!(txt.contains("# TYPE tezo_phase_latency_ns histogram"));
+        assert!(txt.contains("le=\"+Inf\"} 4"));
+        assert!(txt.contains(&format!("quantile=\"0.5\"}} {}", h.p50_ns())));
+        assert!(txt.contains("tezo_phase_latency_ns_count{phase=\"forward\"} 4"));
+    }
+}

@@ -1,0 +1,226 @@
+//! Fixed-log-bucket latency histograms.
+//!
+//! Values are integer nanoseconds. Bucket selection is pure integer
+//! arithmetic (`leading_zeros` plus two mantissa bits — no floats, per
+//! TZ-DET), and merging is an elementwise saturating add, which is
+//! associative and commutative: the order workers report in can never
+//! change a merged readout. Quantiles are read out as the inclusive
+//! upper bound of the covering bucket — deterministic, never below the
+//! true quantile, and at four sub-buckets per octave never more than
+//! ~25% above it.
+
+/// Total bucket count: 16 exact buckets below 16 ns, then 4 sub-buckets
+/// for each of the 60 octaves up to `u64::MAX` (16 + 60*4 = 256).
+pub const N_BUCKETS: usize = 256;
+
+const LINEAR_MAX: u64 = 16;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyHist {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self {
+            counts: [0; N_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    /// Bucket index for a value: exact buckets below 16 ns, then four
+    /// sub-buckets per power of two. Monotone non-decreasing in `v`.
+    pub fn bucket_index(v: u64) -> usize {
+        if v < LINEAR_MAX {
+            v as usize
+        } else {
+            // highest set bit position; v >= 16 so octave >= 4
+            let octave = 63 - v.leading_zeros() as usize;
+            let sub = ((v >> (octave - 2)) & 3) as usize;
+            LINEAR_MAX as usize + (octave - 4) * 4 + sub
+        }
+    }
+
+    /// Inclusive lower bound of bucket `i`.
+    pub fn bucket_lo(i: usize) -> u64 {
+        if i < LINEAR_MAX as usize {
+            i as u64
+        } else {
+            let rel = i - LINEAR_MAX as usize;
+            let octave = 4 + rel / 4;
+            let sub = (rel % 4) as u64;
+            (1u64 << octave) + (sub << (octave - 2))
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i`.
+    pub fn bucket_hi(i: usize) -> u64 {
+        if i + 1 < N_BUCKETS {
+            Self::bucket_lo(i + 1) - 1
+        } else {
+            u64::MAX
+        }
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let i = Self::bucket_index(ns);
+        self.counts[i] = self.counts[i].saturating_add(1);
+        self.count = self.count.saturating_add(1);
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Merge another histogram in. Saturating elementwise adds keep the
+    /// operation associative and commutative, so fleet-side merges are
+    /// invariant to worker arrival order.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a = a.saturating_add(*b);
+        }
+        self.count = self.count.saturating_add(other.count);
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min_ns }
+    }
+
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.sum_ns / self.count }
+    }
+
+    /// Upper bound of the bucket holding the sample of rank
+    /// `ceil(q_num * count / q_den)` (clamped to `[1, count]`), capped at
+    /// the exact observed maximum. Returns 0 on an empty histogram.
+    /// Integer arithmetic throughout: the readout is a deterministic
+    /// function of the merged counts alone.
+    pub fn quantile_ns(&self, q_num: u64, q_den: u64) -> u64 {
+        if self.count == 0 || q_den == 0 {
+            return 0;
+        }
+        let rank = q_num
+            .saturating_mul(self.count)
+            .div_ceil(q_den)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen = seen.saturating_add(*c);
+            if seen >= rank {
+                return Self::bucket_hi(i).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50_ns(&self) -> u64 {
+        self.quantile_ns(50, 100)
+    }
+
+    pub fn p95_ns(&self) -> u64 {
+        self.quantile_ns(95, 100)
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.quantile_ns(99, 100)
+    }
+
+    /// Occupied buckets as `(index, count)` pairs, in bucket order.
+    pub fn nonzero(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| (i, *c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_cover_and_order() {
+        for v in [0u64, 1, 15, 16, 17, 28, 31, 32, 1000, 1 << 20, u64::MAX] {
+            let i = LatencyHist::bucket_index(v);
+            assert!(i < N_BUCKETS);
+            assert!(LatencyHist::bucket_lo(i) <= v, "lo({i}) > {v}");
+            assert!(v <= LatencyHist::bucket_hi(i), "{v} > hi({i})");
+        }
+        for i in 0..N_BUCKETS - 1 {
+            assert!(LatencyHist::bucket_hi(i) < LatencyHist::bucket_lo(i + 1));
+        }
+    }
+
+    #[test]
+    fn quantiles_on_known_data() {
+        let mut h = LatencyHist::new();
+        for v in 1..=100u64 {
+            h.record_ns(v * 1000);
+        }
+        let p50 = h.p50_ns();
+        assert!(p50 >= 50_000 && p50 <= 50_000 + 50_000 / 4 + 1, "{p50}");
+        assert_eq!(h.quantile_ns(100, 100), 100_000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.min_ns(), 1000);
+        assert_eq!(h.max_ns(), 100_000);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.p50_ns(), 0);
+        assert_eq!(h.mean_ns(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn merge_equals_pooled_recording() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        let mut pooled = LatencyHist::new();
+        for v in [3u64, 500, 999_999, 42] {
+            a.record_ns(v);
+            pooled.record_ns(v);
+        }
+        for v in [7u64, 123_456, 1] {
+            b.record_ns(v);
+            pooled.record_ns(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, pooled);
+    }
+}

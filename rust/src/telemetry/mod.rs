@@ -1,0 +1,37 @@
+//! Unified telemetry: span tracing, latency histograms, exporters.
+//!
+//! The observability substrate for the trainer, runtime, and fleet
+//! (PR 8). Four invariants shape the design:
+//!
+//! 1. **Clock confinement** — every wall-clock read lives in
+//!    [`clock`]; the rest of the crate uses [`Stopwatch`] for durations
+//!    and the tracer's [`Clock`] for timestamps (tezo-lint TZ-OBS001).
+//! 2. **Determinism (TZ-DET)** — histogram bucket selection is pure
+//!    integer arithmetic and merging is elementwise saturating addition,
+//!    so merged readouts are invariant to worker arrival order; under a
+//!    [`TestClock`] two identical runs export byte-identical traces.
+//! 3. **Observational only** — telemetry values never flow into seeds,
+//!    kappa, or wire frames (lint-enforced by TZ-OBS001's flow check).
+//!    The layer watches the run; it must not steer it.
+//! 4. **Near-zero cost when off** — [`Telemetry::off`] is the default;
+//!    every record call is one `Option` check, the ring is never
+//!    allocated, and no files are written.
+//!
+//! Exporters: Chrome trace-event JSON (Perfetto-loadable, one event per
+//! line), a Prometheus-style text snapshot, and summary blocks folded
+//! into the existing `TrainOutcome` JSON. See `docs/observability.md`.
+
+pub mod clock;
+pub mod export;
+pub mod hist;
+pub mod report;
+pub mod span;
+
+pub use clock::{secs_to_ns, Clock, MonotonicClock, Stopwatch, TestClock};
+pub use hist::LatencyHist;
+pub use span::{EventKind, Telemetry, TraceEvent};
+
+/// Default ring capacity behind `--telemetry-dir` (one event is ~80 B,
+/// so the full ring is ~5 MB; a 1000-step single-worker run emits on the
+/// order of 10 events per step and fits with wide margin).
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;

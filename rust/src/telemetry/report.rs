@@ -1,0 +1,221 @@
+//! `trace-report`: summarize an exported Chrome trace file.
+//!
+//! Reads a trace written by [`super::export::write_trace_file`], checks
+//! every event against the schema, and prints per-phase latency
+//! histograms, the slowest steps, and a per-worker skew table. The same
+//! walk backs the CI schema check (`--check`), so the validation CI runs
+//! is exactly the validation users run.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::hist::LatencyHist;
+use crate::jsonx::{self, Value};
+
+/// One validated trace row (metadata rows are passed through as `Meta`).
+enum Row {
+    Meta,
+    Span { cat: String, name: String, lane: u32, step: i64, dur_ns: u64 },
+    Counter { name: String },
+    Mark { name: String },
+}
+
+fn parse_row(v: &Value) -> Result<Row> {
+    let ph = v.get_str("ph").context("event missing \"ph\"")?;
+    match ph {
+        "M" => {
+            v.get_str("name").context("metadata missing \"name\"")?;
+            Ok(Row::Meta)
+        }
+        "X" => {
+            let cat = v.get_str("cat")?.to_string();
+            let name = v.get_str("name")?.to_string();
+            let ts = v.get("ts")?.as_i64().context("\"ts\" must be integer microseconds")?;
+            let dur = v.get("dur")?.as_i64().context("\"dur\" must be integer microseconds")?;
+            if ts < 0 || dur < 0 {
+                bail!("negative ts/dur in span {name:?}");
+            }
+            let lane = u32::try_from(v.get("tid")?.as_i64()?).context("\"tid\" out of range")?;
+            let args = v.get("args")?;
+            let step = args.get("step")?.as_i64()?;
+            let dur_ns = u64::try_from(args.get("dur_ns")?.as_i64()?)
+                .context("\"dur_ns\" out of range")?;
+            Ok(Row::Span { cat, name, lane, step, dur_ns })
+        }
+        "C" => {
+            let name = v.get_str("name")?.to_string();
+            let args = v.get("args")?;
+            let value = args.get("value")?;
+            if !value.is_null() {
+                value.as_f64().context("counter \"value\" must be numeric or null")?;
+            }
+            args.get("step")?.as_i64()?;
+            Ok(Row::Counter { name })
+        }
+        "i" => {
+            let name = v.get_str("name")?.to_string();
+            v.get("args")?.get("step")?.as_i64()?;
+            Ok(Row::Mark { name })
+        }
+        other => bail!("unknown event phase {other:?} (expected M/X/C/i)"),
+    }
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Summarize (and optionally just schema-check) a trace file.
+pub fn trace_report(path: &str, check_only: bool, slowest: usize) -> Result<()> {
+    let body =
+        std::fs::read_to_string(path).with_context(|| format!("read trace file {path}"))?;
+    let root = jsonx::parse(&body).context("trace is not valid JSON")?;
+    let rows = root.as_array().context("trace root must be a JSON array")?;
+
+    let mut phase_hists: BTreeMap<String, LatencyHist> = BTreeMap::new();
+    let mut step_spans: Vec<(i64, u64)> = Vec::new();
+    let mut worker_hists: BTreeMap<u32, LatencyHist> = BTreeMap::new();
+    let mut counters = 0usize;
+    let mut marks: BTreeMap<String, usize> = BTreeMap::new();
+    let mut spans = 0usize;
+
+    for (i, row) in rows.iter().enumerate() {
+        let parsed = parse_row(row).with_context(|| format!("trace event #{i}"))?;
+        match parsed {
+            Row::Meta => {}
+            Row::Span { cat, name, lane, step, dur_ns } => {
+                spans += 1;
+                match cat.as_str() {
+                    "phase" | "dispatch" => {
+                        phase_hists.entry(name).or_default().record_ns(dur_ns);
+                    }
+                    "step" | "run" => step_spans.push((step, dur_ns)),
+                    "round" => {
+                        worker_hists.entry(lane).or_default().record_ns(dur_ns);
+                    }
+                    _ => {}
+                }
+            }
+            Row::Counter { .. } => counters += 1,
+            Row::Mark { name } => *marks.entry(name).or_default() += 1,
+        }
+    }
+
+    println!(
+        "trace {path}: {} events ({spans} spans, {counters} counters, {} marks)",
+        rows.len().saturating_sub(1),
+        marks.values().sum::<usize>()
+    );
+    if check_only {
+        println!("schema check passed");
+        return Ok(());
+    }
+
+    if !phase_hists.is_empty() {
+        println!("\nper-phase latency:");
+        println!(
+            "  {:<12} {:>8} {:>10} {:>10} {:>10} {:>10}",
+            "phase", "count", "p50", "p95", "p99", "max"
+        );
+        for (name, h) in &phase_hists {
+            println!(
+                "  {:<12} {:>8} {:>10} {:>10} {:>10} {:>10}",
+                name,
+                h.count(),
+                fmt_ns(h.p50_ns()),
+                fmt_ns(h.p95_ns()),
+                fmt_ns(h.p99_ns()),
+                fmt_ns(h.max_ns())
+            );
+        }
+    }
+
+    // slowest step spans (cat "step"/"run"; run spans carry step = -1 and
+    // are excluded from the ranking)
+    let mut ranked: Vec<(i64, u64)> =
+        step_spans.iter().copied().filter(|(s, _)| *s >= 0).collect();
+    ranked.sort_by_key(|(s, d)| (std::cmp::Reverse(*d), *s));
+    if !ranked.is_empty() {
+        println!("\nslowest steps:");
+        for (step, dur) in ranked.iter().take(slowest.max(1)) {
+            println!("  step {:<6} {}", step, fmt_ns(*dur));
+        }
+    }
+
+    if !worker_hists.is_empty() {
+        let best_p50 = worker_hists.values().map(|h| h.p50_ns()).min().unwrap_or(0);
+        println!("\nper-worker round skew:");
+        println!(
+            "  {:<8} {:>8} {:>10} {:>10} {:>10} {:>8}",
+            "worker", "rounds", "p50", "p95", "max", "vs-best"
+        );
+        for (w, h) in &worker_hists {
+            let skew = if best_p50 > 0 {
+                h.p50_ns() as f64 / best_p50 as f64
+            } else {
+                1.0
+            };
+            println!(
+                "  {:<8} {:>8} {:>10} {:>10} {:>10} {:>7.2}x",
+                w,
+                h.count(),
+                fmt_ns(h.p50_ns()),
+                fmt_ns(h.p95_ns()),
+                fmt_ns(h.max_ns()),
+                skew
+            );
+        }
+    }
+
+    if !marks.is_empty() {
+        println!("\nevents:");
+        for (name, n) in &marks {
+            println!("  {name:<20} {n}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::clock::TestClock;
+    use crate::telemetry::export::chrome_trace_string;
+    use crate::telemetry::span::Telemetry;
+
+    #[test]
+    fn roundtrip_written_trace_validates() {
+        let t = Telemetry::with_clock(32, Box::new(TestClock::new(1000)));
+        let s0 = t.now_ns();
+        t.span_from("phase", "forward", s0, 0, 0);
+        t.counter("step", "loss", 2.0, 0);
+        t.mark("fleet", "rejoin", 1, 3);
+        let body = chrome_trace_string(&t.events(), "tezo test", t.dropped());
+        let root = jsonx::parse(&body).unwrap();
+        for (i, row) in root.as_array().unwrap().iter().enumerate() {
+            parse_row(row).unwrap_or_else(|e| panic!("event #{i}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn schema_check_rejects_malformed_events() {
+        for bad in [
+            r#"[{"ph":"X","pid":0,"tid":0,"ts":1,"cat":"phase","name":"f","args":{"step":0}}]"#,
+            r#"[{"ph":"Q","name":"x"}]"#,
+            r#"[{"pid":0}]"#,
+        ] {
+            let root = jsonx::parse(bad).unwrap();
+            let rows = root.as_array().unwrap();
+            assert!(rows.iter().any(|r| parse_row(r).is_err()), "{bad}");
+        }
+    }
+}

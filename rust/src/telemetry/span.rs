@@ -1,0 +1,282 @@
+//! Span and event tracer over a preallocated ring buffer.
+//!
+//! The span model is a fixed hierarchy — run → step → phase → dispatch
+//! on the trainer side, round → worker on the fleet side — flattened
+//! into one event row per span so recording is a single ring push under
+//! a mutex (no open-span stack, no allocation after construction). A
+//! disabled tracer ([`Telemetry::off`], the default) records nothing and
+//! costs one `Option` check per call site.
+
+use std::sync::{Arc, Mutex};
+
+use super::clock::{Clock, MonotonicClock};
+
+/// What an event row means (maps onto Chrome trace-event phases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A duration `ts_ns .. ts_ns + dur_ns` (Chrome `ph:"X"`).
+    Span,
+    /// A sampled numeric series, e.g. loss per step (Chrome `ph:"C"`).
+    Counter,
+    /// A point event, e.g. a worker rejoin (Chrome `ph:"i"`).
+    Mark,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    /// Trace row: fleet worker slot for round spans, 0 otherwise.
+    pub lane: u32,
+    /// Training step the event belongs to, -1 when not step-scoped.
+    pub step: i64,
+    /// Counter payload; 0.0 for spans and marks.
+    pub value: f64,
+}
+
+/// Fixed-capacity ring: once full, the oldest event is overwritten, so a
+/// long run keeps its most recent window plus an exact drop count.
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<TraceEvent>,
+    start: usize,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap), start: 0, cap, dropped: 0 }
+    }
+
+    fn push(&mut self, e: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else if self.cap > 0 {
+            self.buf[self.start] = e;
+            self.start = (self.start + 1) % self.cap;
+            self.dropped += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.start..]);
+        out.extend_from_slice(&self.buf[..self.start]);
+        out
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    clock: Box<dyn Clock>,
+    ring: Mutex<Ring>,
+}
+
+/// Cloneable tracer handle. The default ([`Telemetry::off`]) is a no-op
+/// shell: every record call returns immediately, so instrumented code
+/// pays one branch when tracing is disabled. Clones share one ring and
+/// one clock, so the coordinator and fleet workers stamp events on a
+/// common timeline.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Telemetry {
+    /// Disabled tracer (same as `Telemetry::default()`).
+    pub fn off() -> Self {
+        Self { inner: None }
+    }
+
+    /// Enabled tracer on the real monotonic clock.
+    pub fn new(capacity: usize) -> Self {
+        Self::with_clock(capacity, Box::new(MonotonicClock::new()))
+    }
+
+    /// Enabled tracer on an explicit clock (tests use [`super::TestClock`]).
+    pub fn with_clock(capacity: usize, clock: Box<dyn Clock>) -> Self {
+        Self {
+            inner: Some(Arc::new(Inner { clock, ring: Mutex::new(Ring::new(capacity)) })),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Current timestamp on the tracer's clock; 0 when disabled.
+    pub fn now_ns(&self) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.clock.now_ns(),
+            None => 0,
+        }
+    }
+
+    fn push(&self, e: TraceEvent) {
+        if let Some(inner) = &self.inner {
+            if let Ok(mut ring) = inner.ring.lock() {
+                ring.push(e);
+            }
+        }
+    }
+
+    /// Record a span with an explicit start and duration (both already
+    /// observed on this tracer's clock). Does not read the clock, so a
+    /// timing measured once lands verbatim in the ring.
+    pub fn span_at(&self, cat: &'static str, name: &'static str, ts_ns: u64, dur_ns: u64, lane: u32, step: i64) {
+        self.push(TraceEvent {
+            kind: EventKind::Span,
+            cat,
+            name,
+            ts_ns,
+            dur_ns,
+            lane,
+            step,
+            value: 0.0,
+        });
+    }
+
+    /// Record a span that started at `start_ns` (a prior `now_ns` read)
+    /// and ends now.
+    pub fn span_from(&self, cat: &'static str, name: &'static str, start_ns: u64, lane: u32, step: i64) {
+        if let Some(inner) = &self.inner {
+            let now = inner.clock.now_ns();
+            self.span_at(cat, name, start_ns, now.saturating_sub(start_ns), lane, step);
+        }
+    }
+
+    /// Record a span of known duration ending now (used when the
+    /// duration was measured externally, e.g. by a `Stopwatch` or a
+    /// worker-reported timing).
+    pub fn span_dur(&self, cat: &'static str, name: &'static str, dur_ns: u64, lane: u32, step: i64) {
+        if let Some(inner) = &self.inner {
+            let now = inner.clock.now_ns();
+            self.push(TraceEvent {
+                kind: EventKind::Span,
+                cat,
+                name,
+                ts_ns: now.saturating_sub(dur_ns),
+                dur_ns,
+                lane,
+                step,
+                value: 0.0,
+            });
+        }
+    }
+
+    /// Record a sampled numeric series point (loss, kappa, bytes, ...).
+    pub fn counter(&self, cat: &'static str, name: &'static str, value: f64, step: i64) {
+        if let Some(inner) = &self.inner {
+            let now = inner.clock.now_ns();
+            self.push(TraceEvent {
+                kind: EventKind::Counter,
+                cat,
+                name,
+                ts_ns: now,
+                dur_ns: 0,
+                lane: 0,
+                step,
+                value,
+            });
+        }
+    }
+
+    /// Record a point event (rejoin, drop, checkpoint, ...).
+    pub fn mark(&self, cat: &'static str, name: &'static str, lane: u32, step: i64) {
+        if let Some(inner) = &self.inner {
+            let now = inner.clock.now_ns();
+            self.push(TraceEvent {
+                kind: EventKind::Mark,
+                cat,
+                name,
+                ts_ns: now,
+                dur_ns: 0,
+                lane,
+                step,
+                value: 0.0,
+            });
+        }
+    }
+
+    /// Snapshot of the ring in timestamp (insertion) order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        match &self.inner {
+            Some(inner) => match inner.ring.lock() {
+                Ok(ring) => ring.snapshot(),
+                Err(_) => Vec::new(),
+            },
+            None => Vec::new(),
+        }
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        match &self.inner {
+            Some(inner) => match inner.ring.lock() {
+                Ok(ring) => ring.dropped,
+                Err(_) => 0,
+            },
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::clock::TestClock;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Telemetry::off();
+        t.counter("step", "loss", 1.0, 0);
+        t.mark("fleet", "rejoin", 2, 5);
+        assert!(!t.enabled());
+        assert!(t.events().is_empty());
+        assert_eq!(t.now_ns(), 0);
+    }
+
+    #[test]
+    fn spans_and_counters_land_in_order() {
+        let t = Telemetry::with_clock(16, Box::new(TestClock::new(10)));
+        let s0 = t.now_ns();
+        t.span_from("phase", "forward", s0, 0, 3);
+        t.counter("step", "loss", 0.5, 3);
+        let ev = t.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].kind, EventKind::Span);
+        assert_eq!(ev[0].ts_ns, 0);
+        assert_eq!(ev[0].dur_ns, 10);
+        assert_eq!(ev[1].kind, EventKind::Counter);
+        assert_eq!(ev[1].value, 0.5);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let t = Telemetry::with_clock(2, Box::new(TestClock::new(1)));
+        for i in 0..5i64 {
+            t.mark("fleet", "tick", 0, i);
+        }
+        let ev = t.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].step, 3);
+        assert_eq!(ev[1].step, 4);
+        assert_eq!(t.dropped(), 3);
+    }
+
+    #[test]
+    fn clones_share_one_ring() {
+        let t = Telemetry::with_clock(8, Box::new(TestClock::new(1)));
+        let t2 = t.clone();
+        t.mark("a", "x", 0, 0);
+        t2.mark("a", "y", 0, 1);
+        assert_eq!(t.events().len(), 2);
+    }
+}

@@ -1,0 +1,199 @@
+//! Property tests for the telemetry layer (PR 8): histogram bucket
+//! invariants, merge algebra, quantile bounds, and trace determinism.
+//!
+//! The histogram properties are what make fleet aggregation trustworthy:
+//! bucket selection must be monotone and containing (a duration lands in
+//! a bucket that brackets it), merges must be associative and commutative
+//! (worker arrival order cannot change a merged readout — TZ-DET), and
+//! quantile readouts must be bracketed by the recorded min/max. The
+//! determinism test pins the export path: the same event sequence under a
+//! [`TestClock`] serializes to byte-identical trace files.
+
+use tezo::proplite::{self, prop_assert};
+use tezo::telemetry::export::chrome_trace_string;
+use tezo::telemetry::{LatencyHist, Telemetry, TestClock};
+
+/// Random duration spanning the full magnitude range (0 ns .. ~500 years),
+/// not just the uniform-u64 regime where every value is astronomically
+/// large.
+fn random_ns(g: &mut tezo::proplite::Gen) -> u64 {
+    let shift = g.usize_in(0..64);
+    g.u64() >> shift
+}
+
+/// Random duration bounded to 2^55 ns so test-side sums of ~100 samples
+/// cannot overflow u64 (the histogram itself saturates; the assertions
+/// below use plain `+`).
+fn bounded_ns(g: &mut tezo::proplite::Gen) -> u64 {
+    g.u64() >> g.usize_in(9..64)
+}
+
+fn random_hist(g: &mut tezo::proplite::Gen, max_n: usize) -> LatencyHist {
+    let mut h = LatencyHist::new();
+    for _ in 0..g.usize_in(0..max_n) {
+        h.record_ns(bounded_ns(g));
+    }
+    h
+}
+
+#[test]
+fn buckets_contain_their_values_and_order_monotonically() {
+    proplite::run(500, |g| {
+        let v = random_ns(g);
+        let i = LatencyHist::bucket_index(v);
+        prop_assert(LatencyHist::bucket_lo(i) <= v, "lo <= v")?;
+        prop_assert(v <= LatencyHist::bucket_hi(i), "v <= hi")?;
+        // monotone: a larger value never lands in an earlier bucket
+        let w = random_ns(g);
+        let (small, big) = if v <= w { (v, w) } else { (w, v) };
+        prop_assert(
+            LatencyHist::bucket_index(small) <= LatencyHist::bucket_index(big),
+            "bucket index monotone in value")
+    });
+}
+
+#[test]
+fn bucket_edges_tile_the_u64_range() {
+    // deterministic exhaustive check over every bucket boundary: edges are
+    // strictly increasing and adjacent buckets meet with no gap
+    for i in 0..tezo::telemetry::hist::N_BUCKETS - 1 {
+        let hi = LatencyHist::bucket_hi(i);
+        let next_lo = LatencyHist::bucket_lo(i + 1);
+        assert_eq!(hi.wrapping_add(1), next_lo, "gap/overlap at bucket {i}");
+        assert!(LatencyHist::bucket_lo(i) <= hi, "inverted bucket {i}");
+    }
+    assert_eq!(LatencyHist::bucket_hi(tezo::telemetry::hist::N_BUCKETS - 1),
+               u64::MAX);
+}
+
+#[test]
+fn merge_is_commutative_and_matches_pooled_recording() {
+    proplite::run(200, |g| {
+        let a = random_hist(g, 40);
+        let b = random_hist(g, 40);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        prop_assert(ab == ba, "merge commutes")?;
+        prop_assert(ab.count() == a.count() + b.count(), "counts add")?;
+        prop_assert(ab.sum_ns() == a.sum_ns() + b.sum_ns(), "sums add")
+    });
+}
+
+#[test]
+fn merge_is_associative() {
+    proplite::run(200, |g| {
+        let a = random_hist(g, 25);
+        let b = random_hist(g, 25);
+        let c = random_hist(g, 25);
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        prop_assert(left == right, "(a+b)+c == a+(b+c)")
+    });
+}
+
+#[test]
+fn quantiles_are_bracketed_and_monotone_in_q() {
+    proplite::run(300, |g| {
+        let mut h = LatencyHist::new();
+        let n = g.usize_in(1..60);
+        for _ in 0..n {
+            h.record_ns(random_ns(g));
+        }
+        let p50 = h.p50_ns();
+        let p95 = h.p95_ns();
+        let p99 = h.p99_ns();
+        prop_assert(p50 <= p95 && p95 <= p99, "quantiles monotone in q")?;
+        prop_assert(p99 <= h.max_ns(), "p99 <= max")?;
+        // a quantile readout is the covering bucket's upper edge clamped
+        // to max: it can never undershoot the bucket holding min
+        prop_assert(p50 >= LatencyHist::bucket_lo(
+                        LatencyHist::bucket_index(h.min_ns())),
+                    "p50 >= min bucket lo")
+    });
+}
+
+#[test]
+fn single_value_histogram_reads_back_its_bucket() {
+    proplite::run(300, |g| {
+        let v = random_ns(g);
+        let mut h = LatencyHist::new();
+        h.record_ns(v);
+        prop_assert(h.min_ns() == v && h.max_ns() == v, "min/max exact")?;
+        // every quantile of a one-sample hist is clamped to the sample
+        prop_assert(h.p50_ns() == v && h.p99_ns() == v,
+                    "quantiles clamp to the single sample")
+    });
+}
+
+/// One scripted event sequence — spans, counters, marks, and enough
+/// events on a tiny ring to exercise the overwrite path.
+fn scripted_run(ring: usize, tick_ns: u64) -> Telemetry {
+    let t = Telemetry::with_clock(ring, Box::new(TestClock::new(tick_ns)));
+    let run0 = t.now_ns();
+    for step in 0..20i64 {
+        let s0 = t.now_ns();
+        t.span_from("phase", "sampling", s0, 0, step);
+        let f0 = t.now_ns();
+        t.span_from("phase", "forward", f0, 0, step);
+        t.span_dur("round", "forward", 1_500 * (step as u64 + 1), 1, step);
+        t.counter("step", "loss", 2.0 / (step + 1) as f64, step);
+        if step % 7 == 0 {
+            t.mark("fleet", "checkpoint", 0, step);
+        }
+    }
+    t.span_from("run", "train", run0, 0, -1);
+    t
+}
+
+#[test]
+fn identical_runs_export_byte_identical_traces() {
+    let a = scripted_run(64, 250);
+    let b = scripted_run(64, 250);
+    let ta = chrome_trace_string(&a.events(), "tezo determinism", a.dropped());
+    let tb = chrome_trace_string(&b.events(), "tezo determinism", b.dropped());
+    assert_eq!(ta, tb, "same script + same TestClock must be byte-identical");
+    // and the file-writing path preserves the bytes exactly
+    let dir = std::env::temp_dir().join("tezo_props_telemetry");
+    let pa = dir.join("a.jsonl");
+    let pb = dir.join("b.jsonl");
+    tezo::telemetry::export::write_trace_file(&pa, &a, "tezo determinism")
+        .expect("write a");
+    tezo::telemetry::export::write_trace_file(&pb, &b, "tezo determinism")
+        .expect("write b");
+    let ba = std::fs::read(&pa).expect("read a");
+    let bb = std::fs::read(&pb).expect("read b");
+    assert_eq!(ba, bb, "trace files must be byte-identical");
+    assert!(!ba.is_empty());
+}
+
+#[test]
+fn ring_overwrite_keeps_newest_events_and_counts_drops() {
+    let t = scripted_run(16, 250);
+    let events = t.events();
+    assert_eq!(events.len(), 16, "ring caps the snapshot");
+    assert!(t.dropped() > 0, "overflow must be visible");
+    // the run-close span (latest event) survived the overwrites
+    assert_eq!(events.last().map(|e| e.cat), Some("run"));
+}
+
+#[test]
+fn trace_parses_as_strict_json_with_expected_schema() {
+    let t = scripted_run(64, 250);
+    let body = chrome_trace_string(&t.events(), "tezo schema", t.dropped());
+    let v = tezo::jsonx::parse(&body).expect("strict JSON");
+    let rows = v.as_array().expect("array");
+    assert!(rows.len() > 2);
+    assert_eq!(rows[0].get_str("ph").unwrap(), "M");
+    for row in &rows[1..] {
+        let ph = row.get_str("ph").expect("ph");
+        assert!(matches!(ph, "X" | "C" | "i"), "unexpected ph {ph:?}");
+        assert!(row.get("args").is_ok(), "args present");
+    }
+}

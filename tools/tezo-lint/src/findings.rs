@@ -34,6 +34,9 @@ pub enum Code {
     ArtForwardForm,
     /// allowlist entry that matches nothing (stale) or has no justification
     AllowlistStale,
+    /// raw clock read outside the telemetry boundary, or a telemetry
+    /// readout flowing into seed/wire/kappa state
+    ObsClock,
 }
 
 impl Code {
@@ -51,10 +54,11 @@ impl Code {
             Code::ArtUnreferenced => "TZ-ART003",
             Code::ArtForwardForm => "TZ-ART004",
             Code::AllowlistStale => "TZ-ALLOW001",
+            Code::ObsClock => "TZ-OBS001",
         }
     }
 
-    pub const ALL: [Code; 12] = [
+    pub const ALL: [Code; 13] = [
         Code::RngAmbient,
         Code::RngWallClock,
         Code::RngTimeSeed,
@@ -67,6 +71,7 @@ impl Code {
         Code::ArtUnreferenced,
         Code::ArtForwardForm,
         Code::AllowlistStale,
+        Code::ObsClock,
     ];
 }
 

@@ -117,14 +117,15 @@ fn rel(root: &Path, p: &Path) -> String {
         .replace('\\', "/")
 }
 
-/// Code rules (RNG/time, determinism, panic-free hot paths) over the
-/// given sources.
+/// Code rules (RNG/time, determinism, panic-free hot paths, telemetry
+/// clock discipline) over the given sources.
 pub fn run_code_lint(files: &[SourceFile]) -> Vec<Finding> {
     let mut out = Vec::new();
     for f in files {
         rules::rng_time::check(f, &mut out);
         rules::determinism::check(f, &mut out);
         rules::panics::check(f, &mut out);
+        rules::obs::check(f, &mut out);
     }
     out
 }

@@ -1,0 +1,155 @@
+//! Telemetry / clock discipline (TZ-OBS001).
+//!
+//! PR 8 confines every wall-clock read to the telemetry layer: the rest
+//! of the workspace measures durations through `telemetry::Stopwatch`
+//! and takes timestamps from the tracer's `Clock`, which is what lets a
+//! `TestClock` make whole-run traces byte-deterministic. Two halves:
+//!
+//! * a raw monotonic clock type (`Instant`) outside `telemetry/`,
+//!   `benchkit/`, `rngx/`, or the benches is denied — use `Stopwatch`
+//!   or the tracer's clock so the read stays swappable. (`SystemTime` /
+//!   `UNIX_EPOCH` stay TZ-RNG002's business.)
+//! * a telemetry readout (`now_ns`, `elapsed_ns`, quantiles, ...) in the
+//!   same statement as a kappa/wire/perturb sink is flagged: the tracer
+//!   observes the run and must never steer it. The seed direction is
+//!   already TZ-RNG003; this closes the kappa and wire directions.
+
+use crate::findings::{Code, Finding};
+use crate::rules::statement_around;
+use crate::source::SourceFile;
+
+/// Raw clock types the telemetry layer wraps.
+const CLOCK_TYPES: &[&str] = &["Instant"];
+
+/// Read-direction telemetry identifiers — values coming *out* of the
+/// layer. Write-direction calls (`counter`, `mark`, `record_ns`,
+/// `span_from`, `secs_to_ns`) are deliberately absent: feeding kappa or
+/// loss *into* the tracer is the intended observational flow.
+const TELEM_READS: &[&str] = &[
+    "now_ns", "elapsed", "elapsed_ns", "elapsed_secs", "dur_ns", "ts_ns",
+    "quantile_ns", "p50_ns", "p95_ns", "p99_ns", "mean_ns", "sum_ns",
+    "min_ns", "max_ns",
+];
+
+/// Identifiers marking state a telemetry readout must never reach.
+const OBS_SINKS: &[&str] = &["kappa", "wire", "frame", "encode", "perturb"];
+
+/// Modules allowed to touch the raw clock: the telemetry layer itself,
+/// the bench harnesses (which report real wall time by definition), and
+/// rngx (whose lint tests exercise clock tokens).
+fn clock_ok(path: &str) -> bool {
+    path.contains("/telemetry/") || path.contains("/benchkit/")
+        || path.contains("/rngx/") || path.contains("/benches/")
+}
+
+pub fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    let raw_clock_ok = clock_ok(&file.path);
+
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.masked[i] || t.kind != crate::lexer::Kind::Ident {
+            continue;
+        }
+        let name = t.text.as_str();
+
+        if !raw_clock_ok && CLOCK_TYPES.contains(&name) {
+            out.push(Finding::new(
+                Code::ObsClock,
+                &file.path,
+                t.line,
+                format!("raw clock `{name}` outside the telemetry layer — \
+                         use telemetry::Stopwatch or the tracer's Clock"),
+            ));
+            continue;
+        }
+
+        if TELEM_READS.contains(&name) {
+            let (lo, hi) = statement_around(&file.tokens, i);
+            let sink = file.tokens[lo..=hi].iter().find(|s| {
+                s.kind == crate::lexer::Kind::Ident
+                    && OBS_SINKS.iter().any(|k| {
+                        let id = s.text.to_ascii_lowercase();
+                        id == *k || id.starts_with(&format!("{k}_"))
+                            || id.ends_with(&format!("_{k}"))
+                    })
+            });
+            if let Some(s) = sink {
+                out.push(Finding::new(
+                    Code::ObsClock,
+                    &file.path,
+                    t.line,
+                    format!("telemetry readout `{name}` flows into `{}` — \
+                             the tracer is observational only", s.text),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::new(path.into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_raw_instant_outside_telemetry() {
+        let fs = findings("rust/src/fleet/worker.rs",
+                          "fn f() { let t0 = Instant::now(); }");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].code, Code::ObsClock);
+    }
+
+    #[test]
+    fn telemetry_benchkit_and_benches_are_exempt() {
+        for path in ["rust/src/telemetry/clock.rs", "rust/src/benchkit/mod.rs",
+                     "rust/benches/bench_walltime.rs"] {
+            assert!(findings(path, "fn f() { let t0 = Instant::now(); }")
+                        .is_empty(),
+                    "{path} should be exempt");
+        }
+    }
+
+    #[test]
+    fn flags_readout_flowing_into_kappa_and_wire() {
+        let fs = findings(
+            "rust/src/coordinator/step.rs",
+            "fn f() { let kappa = tel.now_ns() as f64; \
+             let frame = encode(h.p99_ns()); }",
+        );
+        assert_eq!(fs.len(), 2);
+        assert!(fs.iter().all(|f| f.code == Code::ObsClock));
+    }
+
+    #[test]
+    fn observational_counters_are_fine() {
+        // write-direction: kappa flowing INTO the tracer is the point
+        let fs = findings(
+            "rust/src/fleet/coordinator.rs",
+            "fn f() { tel.counter(\"round\", \"kappa\", kappa, step); \
+             tel.span_dur(\"round\", \"forward\", secs_to_ns(t), w, s); }",
+        );
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn pure_timing_statements_are_fine() {
+        let fs = findings(
+            "rust/src/fleet/tcp.rs",
+            "fn f() { if start.elapsed() > STALL_BUDGET { return; } \
+             let dt = sw.elapsed_secs(); record(dt); }",
+        );
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn test_code_is_masked() {
+        let fs = findings("rust/src/fleet/worker.rs",
+                          "#[test]\nfn t() { let t0 = Instant::now(); }");
+        assert!(fs.is_empty());
+    }
+}

@@ -14,6 +14,7 @@ fn code_lint(path: &str, src: &str) -> Vec<Finding> {
     rules::rng_time::check(&f, &mut out);
     rules::determinism::check(&f, &mut out);
     rules::panics::check(&f, &mut out);
+    rules::obs::check(&f, &mut out);
     out
 }
 
@@ -29,7 +30,27 @@ fn bad_rng_fixture_exact_counts() {
     assert_eq!(count(&fs, Code::RngAmbient), 2, "{fs:?}");
     assert_eq!(count(&fs, Code::RngWallClock), 2, "{fs:?}");
     assert_eq!(count(&fs, Code::RngTimeSeed), 2, "{fs:?}");
-    assert_eq!(fs.len(), 6, "{fs:?}");
+    assert_eq!(count(&fs, Code::ObsClock), 2, "{fs:?}"); // 2x raw Instant
+    assert_eq!(fs.len(), 8, "{fs:?}");
+}
+
+#[test]
+fn bad_obs_fixture_exact_counts() {
+    // non-hot, non-telemetry path: both TZ-OBS001 halves apply
+    let fs = code_lint("rust/src/tensor/fixture_obs.rs",
+                       include_str!("fixtures/bad_obs.rs"));
+    assert_eq!(count(&fs, Code::ObsClock), 3, "{fs:?}");
+    assert_eq!(fs.len(), 3, "{fs:?}");
+}
+
+#[test]
+fn obs_clock_exemption_is_path_scoped() {
+    // the same fixture inside the telemetry layer: the raw-clock half is
+    // exempt there, but readouts steering kappa/wire stay flagged
+    let fs = code_lint("rust/src/telemetry/fixture_obs.rs",
+                       include_str!("fixtures/bad_obs.rs"));
+    assert_eq!(count(&fs, Code::ObsClock), 2, "{fs:?}");
+    assert_eq!(fs.len(), 2, "{fs:?}");
 }
 
 #[test]

@@ -1,0 +1,19 @@
+// Fixture: telemetry/clock discipline violations (TZ-OBS001). Never
+// compiled — parsed by the lint fixture tests, which assert the exact
+// finding counts.
+
+fn raw_clock() -> f64 {
+    let t0 = Instant::now(); // TZ-OBS001 (raw clock outside telemetry/)
+    work();
+    t0.elapsed().as_secs_f64() // fine: pure timing, no obs sink
+}
+
+fn steering(tel: &Telemetry, h: &LatencyHist) {
+    let kappa = tel.now_ns() as f64 * 1e-9; // TZ-OBS001 (readout -> kappa)
+    let frame = encode_frame(h.p99_ns()); // TZ-OBS001 (readout -> wire frame)
+    send(kappa, frame);
+}
+
+fn observing(tel: &Telemetry, kappa: f64, step: i64) {
+    tel.counter("step", "kappa", kappa, step); // fine: write direction
+}

@@ -12,14 +12,14 @@ fn wall_clock_id() -> u64 {
 }
 
 fn time_seeded() -> u64 {
-    let start = Instant::now();
+    let start = Instant::now(); // TZ-OBS001 (raw clock outside telemetry/)
     work();
     let seed = start.elapsed().as_nanos() as u64; // TZ-RNG003 x2
     seed
 }
 
 fn honest_timing() -> f64 {
-    let start = Instant::now();
+    let start = Instant::now(); // TZ-OBS001 (raw clock outside telemetry/)
     work();
     start.elapsed().as_secs_f64() // fine: no seed sink in the statement
 }
