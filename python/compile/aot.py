@@ -32,6 +32,7 @@ from jax._src.lib import xla_client as xc
 
 from . import zo_steps as zs
 from .configs import ModelConfig, get_config
+from .kernels.lowrank_matmul import sweep_tile
 from .model import init_params
 
 # ---------------------------------------------------------------------------
@@ -133,6 +134,53 @@ def forward_form(artifact_name: str):
     return None
 
 
+# ---------------------------------------------------------------------------
+# Build-time tile sweep (manifest ``tiles`` block)
+# ---------------------------------------------------------------------------
+
+def tile_sweep(cfg: ModelConfig, ranks: Dict[str, int],
+               trials: int = 2) -> Dict[str, dict]:
+    """Measured (bm, bn) Pallas tile per distinct weight shape.
+
+    Replaces the old fixed ``bm=128, bn=256`` default of the fused low-rank
+    matmul with a per-shape sweep (kernels/lowrank_matmul.sweep_tile), keyed
+    by ``{k}x{n}`` with ``m = batch * seq_len`` rows. Only meaningful for
+    configs that route through the Pallas kernels; jnp-path configs skip it
+    (``build_config`` gates on ``cfg.use_pallas``).
+    """
+    m = cfg.batch * cfg.seq_len
+    shapes: Dict[tuple, int] = {}
+    for name, (k, n) in cfg.matrix_params():
+        shapes[(k, n)] = max(shapes.get((k, n), 1), ranks[name])
+    out: Dict[str, dict] = {}
+    for (k, n), r in sorted(shapes.items()):
+        t = time.time()
+        res = sweep_tile(m, n, k, r, trials=trials)
+        out[f"{k}x{n}"] = {"m": m, "k": k, "n": n, "r": r, **res}
+        print(f"  [{cfg.name}] tile {k}x{n} (r={r}): bm={res['bm']} "
+              f"bn={res['bn']} over {len(res['candidates'])} candidates "
+              f"({time.time() - t:.1f}s)")
+    return out
+
+
+def retile_config(cfg_name: str, out_root: str) -> None:
+    """Re-run the tile sweep against an existing build and patch its
+    manifest in place (adds/refreshes the ``tiles`` key; everything else —
+    HLO files, hashes, params — is left untouched)."""
+    cfg = get_config(cfg_name)
+    path = os.path.join(out_root, cfg.name, "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    if not cfg.use_pallas:
+        print(f"[{cfg.name}] jnp path — no Pallas tiles to tune")
+        return
+    ranks = {e["name"]: e["rank"] for e in manifest["matrix_ranks"]}
+    manifest["tiles"] = tile_sweep(cfg, ranks)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{cfg.name}] manifest tiles refreshed -> {path}")
+
+
 # Per-shape standalone kernel artifacts for the L1 microbenches (Fig 3b /
 # Table 8 phase accounting): shapes chosen to span the attention / FFN
 # matrices of the experiment configs.
@@ -210,6 +258,8 @@ def build_config(cfg_name: str, out_root: str, seed: int = 0,
         "subzo_rank": subzo_rank,
         "artifacts": artifacts,
     }
+    if cfg.use_pallas:
+        manifest["tiles"] = tile_sweep(cfg, ranks)
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"[{cfg.name}] done in {time.time() - t0:.1f}s -> {out_dir}")
@@ -255,7 +305,16 @@ def main() -> None:
     ap.add_argument("--kernels", action="store_true",
                     help="also build standalone kernel microbench artifacts")
     ap.add_argument("--kernels-only", action="store_true")
+    ap.add_argument("--retile", action="store_true",
+                    help="re-run the tile sweep on an existing build and "
+                         "patch manifest.json in place (no re-lowering)")
     args = ap.parse_args()
+
+    if args.retile:
+        for cfg_name in args.config.split(","):
+            if cfg_name:
+                retile_config(cfg_name.strip(), args.out_root)
+        return
 
     if not args.kernels_only:
         for cfg_name in args.config.split(","):

@@ -23,6 +23,7 @@ deployments and is held to the ref oracle by python/tests/test_kernels.py.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -48,11 +49,84 @@ def _lowrank_matmul_kernel(x_ref, w_ref, u_ref, v_ref, tau_ref, o_ref):
     o_ref[...] = y.astype(o_ref.dtype)
 
 
+# Candidate (bm, bn) targets for the build-time tile sweep. Spans the MXU
+# native 128x128 up to a VMEM-heavy 256x512; every candidate is legalized
+# per shape by `_pick_block` before timing, so degenerate dims collapse to
+# fewer distinct tiles and the sweep stays cheap.
+TILE_CANDIDATES = ((64, 128), (128, 128), (128, 256), (256, 256), (256, 512))
+
+# Fallback tile when no tuned entry is available for a shape (the old fixed
+# default, kept so standalone calls keep working without a manifest).
+DEFAULT_TILE = (128, 256)
+
+
+def legalize_tile(m: int, n: int, bm: int, bn: int):
+    """Snap a candidate (bm, bn) to divisors of the actual (m, n)."""
+    return _pick_block(m, bm), _pick_block(n, bn)
+
+
+def sweep_tile(m, n, k, r, *, candidates=TILE_CANDIDATES, trials=2,
+               timer=None, runner=None):
+    """Time every legalized tile candidate and return the winner.
+
+    Runs at artifact-build time (aot.py records the result in the manifest's
+    ``tiles`` block), replacing the old fixed ``bm=128, bn=256`` default with
+    a measured per-shape choice — the Python analogue of the Rust runtime's
+    forward-form autotuner (rust/src/runtime/tune.rs).
+
+    ``timer`` (ns clock, default ``time.perf_counter_ns``) and ``runner``
+    (callable of (bm, bn), default: run `lowrank_matmul` on fresh inputs)
+    are injectable so tests can script deterministic timings. Each candidate
+    gets one untimed warm call (compile) then ``trials`` timed calls;
+    min-of-trials wins, ties resolved by candidate order (deterministic).
+
+    Returns ``{"bm", "bn", "trials", "candidates": [{"bm", "bn", "ns"}...]}``.
+    """
+    if timer is None:
+        timer = time.perf_counter_ns
+    if runner is None:
+        key = jax.random.PRNGKey(0)
+        kx, kw, ku, kv, kt = jax.random.split(key, 5)
+        x = jax.random.normal(kx, (2, m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32)
+        u = jax.random.normal(ku, (k, r), jnp.float32)
+        v = jax.random.normal(kv, (n, r), jnp.float32)
+        tau = jax.random.normal(kt, (2, r), jnp.float32)
+
+        def runner(bm, bn):
+            lowrank_matmul(x, w, u, v, tau, bm=bm, bn=bn).block_until_ready()
+
+    seen, legal = set(), []
+    for bm, bn in candidates:
+        tile = legalize_tile(m, n, bm, bn)
+        if tile not in seen:
+            seen.add(tile)
+            legal.append(tile)
+
+    timed = []
+    for bm, bn in legal:
+        runner(bm, bn)  # warm: compile outside the timed region
+        best = None
+        for _ in range(max(1, trials)):
+            t0 = timer()
+            runner(bm, bn)
+            dt = timer() - t0
+            best = dt if best is None else min(best, dt)
+        timed.append({"bm": bm, "bn": bn, "ns": int(best)})
+
+    win = min(timed, key=lambda c: c["ns"])  # stable: first-listed tie wins
+    return {"bm": win["bm"], "bn": win["bn"], "trials": max(1, trials),
+            "candidates": timed}
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn"))
-def lowrank_matmul(x, w, u, v, tau, *, bm: int = 128, bn: int = 256):
+def lowrank_matmul(x, w, u, v, tau, *,
+                   bm: int = DEFAULT_TILE[0], bn: int = DEFAULT_TILE[1]):
     """Sign-batched ``x @ W + ((x @ U) * tau) @ V^T`` via Pallas.
 
     x: (2, m, k); w: (k, n); u: (k, r); v: (n, r); tau: (2, r) -> (2, m, n).
+    ``bm``/``bn`` default to `DEFAULT_TILE`; builds that went through
+    `sweep_tile` pass the tuned tile from the manifest instead.
     """
     two, m, k = x.shape
     assert two == 2, "leading axis is the +/- sign pair"

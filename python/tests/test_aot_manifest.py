@@ -65,6 +65,31 @@ def test_manifest_matches_config():
 
 @pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
                     reason="artifacts not built")
+def test_manifest_tiles_block_is_wellformed():
+    """The build-time Pallas tile sweep records one entry per distinct
+    weight shape: winning (bm, bn) divisor tile plus per-candidate ns."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["config"]["use_pallas"], "tiny routes through pallas"
+    tiles = man["tiles"]
+    want_shapes = {f"{k}x{n}" for _, (k, n) in CFG.matrix_params()}
+    assert set(tiles) == want_shapes
+    m_rows = CFG.batch * CFG.seq_len
+    for key, t in tiles.items():
+        assert key == f"{t['k']}x{t['n']}"
+        assert t["m"] == m_rows
+        assert m_rows % t["bm"] == 0, key
+        assert t["n"] % t["bn"] == 0, key
+        assert t["trials"] >= 1
+        # the recorded winner is the argmin over the candidate timings
+        best = min(t["candidates"], key=lambda c: c["ns"])
+        assert (t["bm"], t["bn"]) == (best["bm"], best["bn"]), key
+        for c in t["candidates"]:
+            assert c["ns"] >= 0
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
 def test_manifest_input_roles_are_wellformed():
     with open(os.path.join(ART, "manifest.json")) as f:
         man = json.load(f)

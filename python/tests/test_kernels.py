@@ -179,6 +179,68 @@ def test_lowrank_matmul_zero_tau_is_plain_matmul():
 
 
 # ---------------------------------------------------------------------------
+# build-time tile sweep (manifest "tiles" block)
+# ---------------------------------------------------------------------------
+
+def test_sweep_tile_picks_min_of_trials_winner():
+    """Scripted timer: candidate timings are injected, so the winner is the
+    min-of-trials argmin — no wall clock involved."""
+    from compile.kernels.lowrank_matmul import sweep_tile
+    # at (m=256, n=256) the (256, 512) target legalizes to (256, 256) and
+    # dedups, leaving 4 legal candidates; per timed call the fake clock
+    # advances by the scripted cost of that tile
+    costs = {(64, 128): 50, (128, 128): 30, (128, 256): 40, (256, 256): 70}
+    clock = [0]
+    current = [None]
+
+    def runner(bm, bn):
+        current[0] = (bm, bn)
+
+    def timer():
+        # called at trial start and stop; advancing by the scripted cost on
+        # every call makes each stop-start delta equal that cost exactly
+        clock[0] += costs[current[0]] if current[0] else 0
+        return clock[0]
+
+    res = sweep_tile(256, 256, 64, 8, trials=3, timer=timer, runner=runner)
+    assert (res["bm"], res["bn"]) == (128, 128)
+    assert res["trials"] == 3
+    got = {(c["bm"], c["bn"]): c["ns"] for c in res["candidates"]}
+    assert got == costs
+
+
+def test_sweep_tile_dedups_legalized_candidates():
+    """At a small shape every target collapses to the same legal tile; the
+    sweep must time it once, not len(candidates) times."""
+    from compile.kernels.lowrank_matmul import sweep_tile
+    calls = []
+    res = sweep_tile(32, 32, 16, 4, timer=lambda: len(calls),
+                     runner=lambda bm, bn: calls.append((bm, bn)))
+    assert len(res["candidates"]) == 1
+    assert (res["bm"], res["bn"]) == (32, 32)
+    # 1 warm + 2 trials for the single deduped tile
+    assert calls == [(32, 32)] * 3
+
+
+def test_sweep_tile_ties_resolve_by_candidate_order():
+    from compile.kernels.lowrank_matmul import sweep_tile
+    res = sweep_tile(256, 256, 64, 8, trials=1, timer=lambda: 0,
+                     runner=lambda bm, bn: None)
+    assert all(c["ns"] == 0 for c in res["candidates"])
+    first = res["candidates"][0]
+    assert (res["bm"], res["bn"]) == (first["bm"], first["bn"])
+
+
+def test_sweep_tile_default_runner_runs_real_kernel():
+    """Smoke: the default runner path (real lowrank_matmul calls) completes
+    and returns a legal divisor tile at a tiny shape."""
+    from compile.kernels.lowrank_matmul import sweep_tile
+    res = sweep_tile(32, 32, 16, 4, trials=1)
+    assert 32 % res["bm"] == 0 and 32 % res["bn"] == 0
+    assert all(c["ns"] >= 0 for c in res["candidates"])
+
+
+# ---------------------------------------------------------------------------
 # _pick_block degenerate-tiling guard
 # ---------------------------------------------------------------------------
 

@@ -126,6 +126,65 @@ impl ForwardForm {
     }
 }
 
+/// What `--forward-form` accepts: a concrete [`ForwardForm`] pin, or
+/// `auto` — let the shape-aware autotuner pick per (artifact dir, method)
+/// and persist the decision in `tuning.json` (see `runtime::tune` and
+/// docs/runtime.md "Autotuning").
+///
+/// `Auto` is resolved to a concrete form exactly once per run, *before*
+/// the step engine or any fleet worker is built; the fleet coordinator
+/// ships the pinned result in the handshake so every replica dispatches
+/// the same artifact (forms are numerically close but not bitwise equal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FormPolicy {
+    /// measure (or read the cached decision) at warmup and pin the winner
+    Auto,
+    /// dispatch exactly this form, no measurement
+    Pinned(ForwardForm),
+}
+
+/// The CLI default for `--forward-form` (train and train-dp share it).
+/// Lives here so the flag table carries no raw form literal (TZ-TUNE001).
+pub const FORWARD_FORM_ARG_DEFAULT: &str = "auto";
+
+impl FormPolicy {
+    pub fn parse(s: &str) -> Result<FormPolicy> {
+        if s.eq_ignore_ascii_case(FORWARD_FORM_ARG_DEFAULT) {
+            return Ok(FormPolicy::Auto);
+        }
+        Ok(FormPolicy::Pinned(ForwardForm::parse(s)?))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FormPolicy::Auto => FORWARD_FORM_ARG_DEFAULT,
+            FormPolicy::Pinned(f) => f.name(),
+        }
+    }
+
+    /// The concrete form when pinned; `None` while still `Auto`.
+    pub fn pinned(&self) -> Option<ForwardForm> {
+        match self {
+            FormPolicy::Auto => None,
+            FormPolicy::Pinned(f) => Some(*f),
+        }
+    }
+
+    /// Last-resort concrete form for contexts that never ran resolution
+    /// (an engine built straight from an `Auto` config, a worker warming
+    /// up before its handshake config arrives). Falls back to the
+    /// factor-form forward — the memory winner and the pre-autotuner
+    /// default — so behavior degrades to the PR 5 semantics, never an
+    /// error. The train/train-dp entry points pin before building, so in
+    /// practice this only fires in tests and embedding uses.
+    pub fn resolve_fallback(&self) -> ForwardForm {
+        match self {
+            FormPolicy::Auto => ForwardForm::Implicit,
+            FormPolicy::Pinned(f) => *f,
+        }
+    }
+}
+
 /// Learning-rate schedule over the run.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LrSchedule {
@@ -196,9 +255,10 @@ pub struct TrainConfig {
     /// (paper's baselines use q=1). Supported by the stateless SGD-form
     /// methods (mezo/lozo/subzo/tezo); momentum/Adam variants require q=1.
     pub n_perturb: usize,
-    /// Which compiled two-point forward the low-rank methods dispatch
-    /// (implicit factor-form vs legacy materialized; see [`ForwardForm`]).
-    pub forward_form: ForwardForm,
+    /// Which compiled two-point forward the low-rank methods dispatch:
+    /// a concrete pin, or `Auto` — resolved once per run by the
+    /// autotuner (see [`FormPolicy`] and `runtime::tune`).
+    pub forward_form: FormPolicy,
 }
 
 impl Default for TrainConfig {
@@ -219,7 +279,7 @@ impl Default for TrainConfig {
             lr_schedule: LrSchedule::Constant,
             kappa_clip: 0.0,
             n_perturb: 1,
-            forward_form: ForwardForm::Implicit,
+            forward_form: FormPolicy::Auto,
         }
     }
 }
@@ -422,12 +482,30 @@ mod tests {
     fn forward_form_parse_and_default() {
         for f in ForwardForm::ALL {
             assert_eq!(ForwardForm::parse(f.name()).unwrap(), f);
+            assert_eq!(FormPolicy::parse(f.name()).unwrap(),
+                       FormPolicy::Pinned(f));
         }
         assert_eq!(ForwardForm::parse("materialized").unwrap(),
                    ForwardForm::Materialize);
         assert!(ForwardForm::parse("nope").is_err());
-        // implicit is the default: the factor-form forward is the hot path
-        assert_eq!(TrainConfig::default().forward_form, ForwardForm::Implicit);
+        assert!(FormPolicy::parse("nope").is_err());
+        // auto is the default: the tuner picks the per-shape winner
+        assert_eq!(FormPolicy::parse(FORWARD_FORM_ARG_DEFAULT).unwrap(),
+                   FormPolicy::Auto);
+        assert_eq!(TrainConfig::default().forward_form, FormPolicy::Auto);
+    }
+
+    #[test]
+    fn form_policy_resolution() {
+        assert_eq!(FormPolicy::Auto.pinned(), None);
+        assert_eq!(FormPolicy::Pinned(ForwardForm::Materialize).pinned(),
+                   Some(ForwardForm::Materialize));
+        // the documented last-resort fallback for unresolved Auto
+        assert_eq!(FormPolicy::Auto.resolve_fallback(), ForwardForm::Implicit);
+        assert_eq!(FormPolicy::Pinned(ForwardForm::Materialize)
+                       .resolve_fallback(),
+                   ForwardForm::Materialize);
+        assert_eq!(FormPolicy::Auto.name(), FORWARD_FORM_ARG_DEFAULT);
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! The coordinator-side autotune probe: supplies `runtime::tune` with a
+//! real timed two-point forward.
+//!
+//! `runtime::tune` owns the decision logic and the persisted table but
+//! cannot measure anything itself — a timed forward needs a driver, a
+//! parameter replica, and a batch, all of which live in this layer. The
+//! probe here builds throwaway copies of all three (the real run's driver
+//! state, sample counters, and staged parameters are never touched),
+//! compiles both loss artifacts, runs one untimed flush per form, and
+//! then hands `tune::measure_and_pin` a closure timing interleaved
+//! two-point forwards with the telemetry [`Stopwatch`].
+//!
+//! Entry points:
+//! * [`resolve`] — for callers with an open [`Runtime`] (`tezo train`);
+//! * [`resolve_for_dir`] — for the fleet coordinator, which normally only
+//!   loads the manifest: a cache hit or static pin costs no PJRT client,
+//!   and only a genuine miss opens a probe runtime.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{ForwardForm, TrainConfig};
+use crate::coordinator::counter::SampleCounter;
+use crate::coordinator::metrics::PhaseTimers;
+use crate::coordinator::optimizer::{build_optimizer, StepCtx, ZoOptimizer};
+use crate::coordinator::seeds::SeedSchedule;
+use crate::data::{Batch, BatchBuilder, Corpus, Tokenizer};
+use crate::runtime::{tune, Manifest, ParamStore, Runtime};
+use crate::telemetry::{Stopwatch, Telemetry};
+
+/// Deterministic probe batch: LM rows from the synthetic corpus at the
+/// run's master seed. Only the shape matters for timing; using the seed
+/// keeps repeated probes identical.
+fn probe_batch(manifest: &Manifest, seed: u64) -> Batch {
+    let c = &manifest.config;
+    let corpus = Corpus::new(Tokenizer::new(c.vocab), c.seq_len, seed);
+    BatchBuilder::corpus_batch(&corpus, c.batch, seed, 0)
+}
+
+/// One two-point forward under `form` against throwaway state, returning
+/// the measured wall nanoseconds (dispatch + execution — the real
+/// per-step cost a form decides).
+#[allow(clippy::too_many_arguments)]
+fn forward_once(rt: &Runtime, cfg: &TrainConfig, seeds: &SeedSchedule,
+                driver: &mut dyn ZoOptimizer, params: &mut ParamStore,
+                batch: &Batch, form: ForwardForm, step: u64) -> Result<u64> {
+    let mut timers = PhaseTimers::default();
+    let mut counter = SampleCounter::default();
+    let arena = rt.step_arena(step);
+    let mut ctx = StepCtx {
+        rt,
+        params,
+        batch,
+        cfg,
+        seeds,
+        step,
+        sub: 0,
+        lr: cfg.lr,
+        form,
+        timers: &mut timers,
+        counter: &mut counter,
+        arena: &arena,
+    };
+    let t0 = Stopwatch::start();
+    driver.forward(&mut ctx)?;
+    Ok(t0.elapsed_ns())
+}
+
+/// Resolve `cfg.forward_form` against an open runtime: static pin, then
+/// the persisted table, then a live measurement that pins and persists
+/// the winner. The measurement compiles *both* loss artifacts (it has
+/// to); every other path leaves the loser uncompiled, which is the
+/// cold-start saving `Runtime::warmup_method` banks on.
+pub fn resolve(rt: &Runtime, cfg: &TrainConfig, tel: &Telemetry)
+               -> Result<tune::Resolution> {
+    if let Some(r) = tune::resolve_static(&rt.manifest, cfg.method,
+                                          cfg.forward_form) {
+        return Ok(r);
+    }
+    if let Some(r) = tune::resolve_cached(&rt.manifest, cfg.method, tel) {
+        return Ok(r);
+    }
+    // cache miss: build the throwaway probe state once, reuse it for
+    // every trial. The driver is form-agnostic (the form lives in the
+    // ctx), so one driver serves both sides of each interleaved pair.
+    let mut params = ParamStore::load(&rt.client, &rt.manifest)?;
+    let batch = probe_batch(&rt.manifest, cfg.seed);
+    let seeds = SeedSchedule::new(cfg.seed);
+    let mut driver = build_optimizer(rt, cfg, &seeds)?;
+    // compile both forms' artifact sets up front and flush one untimed
+    // forward per form, so the timed trials see a hot cache (compile and
+    // first-call costs are warmup, not form evidence)
+    for form in ForwardForm::ALL {
+        rt.warmup_method(cfg.method, form)?;
+    }
+    let mut probe_step: u64 = 0;
+    for form in ForwardForm::ALL {
+        forward_once(rt, cfg, &seeds, driver.as_mut(), &mut params, &batch,
+                     form, probe_step)?;
+        probe_step += 1;
+    }
+    let mut measure = |form: ForwardForm| -> Result<u64> {
+        let ns = forward_once(rt, cfg, &seeds, driver.as_mut(), &mut params,
+                              &batch, form, probe_step)?;
+        probe_step += 1;
+        Ok(ns)
+    };
+    tune::measure_and_pin(&rt.manifest, cfg.method, tel, &mut measure)
+}
+
+/// Resolve for an artifact directory without requiring an open runtime.
+///
+/// The fleet coordinator calls this before spawning workers: a pin, an
+/// untunable method, or a warm `tuning.json` resolves from the manifest
+/// alone; only a genuine miss opens a private probe [`Runtime`] (the
+/// workers still open their own), measures, and persists the decision
+/// the handshake then ships.
+pub fn resolve_for_dir(dir: &Path, cfg: &TrainConfig, tel: &Telemetry)
+                       -> Result<tune::Resolution> {
+    let manifest = Manifest::load(dir)?;
+    if let Some(r) = tune::resolve_static(&manifest, cfg.method,
+                                          cfg.forward_form) {
+        return Ok(r);
+    }
+    if let Some(r) = tune::resolve_cached(&manifest, cfg.method, tel) {
+        return Ok(r);
+    }
+    let rt = Runtime::open(dir)?;
+    resolve(&rt, cfg, tel)
+}

@@ -247,6 +247,10 @@ pub struct TrainMetrics {
     pub timers: PhaseTimers,
     pub steps: u64,
     pub wall_seconds: f64,
+    /// the autotuner's resolution record (`Resolution::summary_json`),
+    /// attached by the train entry points when the run went through the
+    /// form resolver; `None` for embedders that pin the form themselves
+    pub tuning: Option<Value>,
 }
 
 impl TrainMetrics {
@@ -300,7 +304,7 @@ impl TrainMetrics {
     /// keys are preserved; `phase_quantiles` is the additive PR 8
     /// telemetry block.
     pub fn summary_json(&self, label: &str) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("label", Value::str(label)),
             ("steps", Value::i(self.steps as i64)),
             ("initial_loss", Value::f(self.initial_loss_avg(20))),
@@ -321,7 +325,11 @@ impl TrainMetrics {
                     ]))
                     .collect())),
             ("phase_quantiles", self.timers.phase_quantiles_json()),
-        ])
+        ];
+        if let Some(t) = &self.tuning {
+            fields.push(("tuning", t.clone()));
+        }
+        Value::obj(fields)
     }
 }
 

@@ -6,11 +6,13 @@
 //! [`crate::fleet`]; [`optimizer`] implements one driver per method
 //! (MeZO/LOZO/SubZO/ZO-AdaMU baselines, the TeZO family, and the
 //! first-order FT reference); [`seeds`] is the resampling-technique seed
-//! schedule; [`rank`] re-derives the Eq.(7) rank schedule in Rust and
+//! schedule; [`autotune`] is the live probe behind the
+//! [`crate::runtime::tune`] form autotuner; [`rank`] re-derives the Eq.(7) rank schedule in Rust and
 //! cross-checks the manifest; [`eval`] scores classification accuracy via
 //! verbalizer logits; [`counter`] does the Table-2 sampled-element
 //! accounting; [`metrics`] records loss curves and phase breakdowns.
 
+pub mod autotune;
 pub mod counter;
 pub mod eval;
 pub mod generate;

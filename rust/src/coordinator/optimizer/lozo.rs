@@ -60,16 +60,16 @@ impl LazyU {
     }
 }
 
-/// Two-point forward shared by LOZO / LOZO-m. `cfg.forward_form` selects
-/// the artifact (implicit factor-form by default; both share one calling
-/// convention — see tezo.rs).
+/// Two-point forward shared by LOZO / LOZO-m. `ctx.form` (the resolved
+/// autotuner/pin decision) selects the artifact; both forms share one
+/// calling convention — see tezo.rs.
 fn lozo_forward(ctx: &mut StepCtx, lazy: &LazyU) -> Result<ForwardOut> {
     let seed = ctx.step_seed();
     // per-step V draws (in-HLO) + dense 1D
     ctx.counter.add_matrix(lazy.n_sum * lazy.rank as u64);
     ctx.counter.add_vector(vector_elems(ctx.rt));
     let t0 = Stopwatch::start();
-    let artifact = ctx.rt.manifest.loss_artifact(ctx.cfg.method, ctx.cfg.forward_form);
+    let artifact = ctx.rt.manifest.loss_artifact(ctx.cfg.method, ctx.form);
     let mut call = ctx.rt.prepared(artifact)?;
     call.bind_bufs("param", ctx.params.bufs())?;
     call.bind_bufs("factor_u", &lazy.us)?;

@@ -28,7 +28,7 @@ pub use zo_adamu::ZoAdamu;
 
 use anyhow::Result;
 
-use crate::config::{Method, TrainConfig};
+use crate::config::{ForwardForm, Method, TrainConfig};
 use crate::coordinator::counter::SampleCounter;
 use crate::coordinator::metrics::PhaseTimers;
 use crate::coordinator::seeds::SeedSchedule;
@@ -47,6 +47,10 @@ pub struct StepCtx<'a> {
     pub sub: u32,
     /// schedule-effective learning rate for this step
     pub lr: f32,
+    /// the concrete two-point forward form this run dispatches — resolved
+    /// once by the autotuner (or pinned by the config) before the engine
+    /// was built; drivers use this, never the config policy
+    pub form: ForwardForm,
     pub timers: &'a mut PhaseTimers,
     pub counter: &'a mut SampleCounter,
     /// step-scoped staging arena: host tensors bound through it are

@@ -89,17 +89,18 @@ impl Factors {
 
 /// Fused two-point forward shared by all TeZO variants.
 ///
-/// `cfg.forward_form` selects the artifact: the implicit factor-form one
-/// (default) folds the rank-r perturbation into the matmuls sign-batched,
-/// the materialized one builds dense `W +/- rho Z` copies. Both share one
-/// calling convention, so only the name differs here.
+/// `ctx.form` — resolved once by the autotuner (or pinned by the config)
+/// before the engine was built — selects the artifact: the implicit
+/// factor-form one folds the rank-r perturbation into the matmuls
+/// sign-batched, the materialized one builds dense `W +/- rho Z` copies.
+/// Both share one calling convention, so only the name differs here.
 fn tezo_forward(ctx: &mut StepCtx, factors: &Factors, taus: &[Vec<f32>])
                 -> Result<ForwardOut> {
     let seed = ctx.step_seed();
     ctx.counter.add_matrix(factors.tau_draw_count());
     ctx.counter.add_vector(vector_elems(ctx.rt));
     let t0 = Stopwatch::start();
-    let artifact = ctx.rt.manifest.loss_artifact(ctx.cfg.method, ctx.cfg.forward_form);
+    let artifact = ctx.rt.manifest.loss_artifact(ctx.cfg.method, ctx.form);
     let mut call = ctx.rt.prepared(artifact)?;
     call.bind_bufs("param", ctx.params.bufs())?;
     call.bind_bufs("factor_u", &factors.us)?;

@@ -65,6 +65,7 @@ pub fn kappa_distribution(rt: &Runtime, params: &mut ParamStore, batch: &Batch,
             step: i as u64,
             sub: 0,
             lr: cfg.lr,
+            form: cfg.forward_form.resolve_fallback(),
             timers: &mut timers,
             counter: &mut counter,
             arena: &arena,

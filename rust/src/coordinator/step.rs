@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Method, TrainConfig};
+use crate::config::{ForwardForm, Method, TrainConfig};
 use crate::coordinator::counter::SampleCounter;
 use crate::coordinator::metrics::PhaseTimers;
 use crate::coordinator::optimizer::{ForwardOut, StepCtx, ZoOptimizer};
@@ -32,12 +32,23 @@ use crate::runtime::{ParamStore, Runtime};
 pub struct StepEngine {
     pub cfg: TrainConfig,
     pub seeds: SeedSchedule,
+    /// the concrete forward form every sub-step dispatches. Resolved from
+    /// `cfg.forward_form` at construction: the train/train-dp entry points
+    /// pin the config (autotuner or explicit flag) *before* building the
+    /// engine, so an `Auto` reaching here takes the documented fallback.
+    form: ForwardForm,
 }
 
 impl StepEngine {
     pub fn new(cfg: TrainConfig) -> Self {
         let seeds = SeedSchedule::new(cfg.seed);
-        Self { cfg, seeds }
+        let form = cfg.forward_form.resolve_fallback();
+        Self { cfg, seeds, form }
+    }
+
+    /// The concrete two-point forward form this engine dispatches.
+    pub fn form(&self) -> ForwardForm {
+        self.form
     }
 
     /// q-SPSA sub-perturbation count (>= 1).
@@ -79,6 +90,7 @@ impl StepEngine {
             step,
             sub,
             lr,
+            form: self.form,
             timers,
             counter,
             arena: &arena,
@@ -129,6 +141,7 @@ impl StepEngine {
             step,
             sub,
             lr,
+            form: self.form,
             timers,
             counter,
             arena: &arena,
@@ -202,6 +215,18 @@ mod tests {
         assert_eq!(e.clip_kappa(1.5), 1.5);
         let open = engine(1e-3, 0.0);
         assert_eq!(open.clip_kappa(5.0e6), 5.0e6);
+    }
+
+    #[test]
+    fn engine_resolves_form_from_policy() {
+        use crate::config::{FormPolicy, ForwardForm};
+        let mut cfg = TrainConfig::default();
+        cfg.forward_form = FormPolicy::Pinned(ForwardForm::Materialize);
+        assert_eq!(StepEngine::new(cfg).form(), ForwardForm::Materialize);
+        // an engine built straight from an Auto config (tests, embedders)
+        // takes the documented fallback instead of erroring
+        assert_eq!(StepEngine::new(TrainConfig::default()).form(),
+                   ForwardForm::Implicit);
     }
 
     #[test]

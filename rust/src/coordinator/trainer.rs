@@ -24,6 +24,7 @@ use crate::coordinator::optimizer::build_optimizer;
 use crate::coordinator::seeds::SeedSchedule;
 use crate::coordinator::step::StepEngine;
 use crate::data::{Batch, BatchBuilder, Corpus};
+use crate::jsonx::Value;
 use crate::runtime::{ParamStore, Runtime};
 use crate::telemetry::{Stopwatch, Telemetry};
 
@@ -71,6 +72,9 @@ pub struct Trainer<'a> {
     pub eval_set: Option<(Vec<Batch>, Vec<i32>)>,
     /// tracer handle (disabled by default; `--telemetry-dir` enables it)
     pub telemetry: Telemetry,
+    /// autotuner resolution record, forwarded into the outcome's
+    /// `summary_json` as the `tuning` block
+    pub tuning: Option<Value>,
 }
 
 impl<'a> Trainer<'a> {
@@ -82,6 +86,7 @@ impl<'a> Trainer<'a> {
             on_step: None,
             eval_set: None,
             telemetry: Telemetry::off(),
+            tuning: None,
         }
     }
 
@@ -95,6 +100,13 @@ impl<'a> Trainer<'a> {
     /// land in its ring (observational only — never fed back into seeds).
     pub fn with_telemetry(mut self, telemetry: Telemetry) -> Self {
         self.telemetry = telemetry;
+        self
+    }
+
+    /// Attach the autotuner's resolution record (see
+    /// [`crate::runtime::tune::Resolution::summary_json`]).
+    pub fn with_tuning(mut self, tuning: Value) -> Self {
+        self.tuning = Some(tuning);
         self
     }
 
@@ -113,6 +125,7 @@ impl<'a> Trainer<'a> {
         let steps = engine.cfg.steps as u64;
         let mut driver = build_optimizer(self.rt, &engine.cfg, &engine.seeds)?;
         let mut metrics = TrainMetrics::default();
+        metrics.tuning = self.tuning.clone();
         let mut counter = SampleCounter::default();
         let mut skipped = 0u64;
         let staged0 = self.rt.stage().stats();

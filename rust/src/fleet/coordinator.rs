@@ -32,7 +32,8 @@ use std::time::Duration;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::{FleetConfig, StragglerPolicy, TrainConfig};
+use crate::config::{FleetConfig, FormPolicy, StragglerPolicy, TrainConfig};
+use crate::coordinator::autotune;
 use crate::coordinator::metrics::TrainMetrics;
 use crate::coordinator::optimizer::ForwardOut;
 use crate::coordinator::step::StepEngine;
@@ -174,6 +175,33 @@ impl FleetTrainer {
     pub fn run(&mut self) -> Result<FleetOutcome> {
         self.cfg.validate()?;
         self.fleet.validate(&self.cfg)?;
+        // resolve the form policy once for the whole fleet, before the
+        // engine or any worker exists: the pinned decision rides the
+        // handshake (loopback cfg clones / TCP AckInfo), so every replica
+        // dispatches the identical artifact and the bitwise-reproducibility
+        // invariant extends to the tuned form. Sim fleets (custom replicas)
+        // have no real artifact dir to probe and take the documented
+        // fallback instead.
+        let real_artifacts = self.replica_factory.is_none()
+            && self.artifact_dir.join("manifest.json").exists();
+        let tuning = match self.cfg.forward_form.pinned() {
+            Some(_) => None,
+            None if !real_artifacts => {
+                // sim fleets (custom replicas) and fake artifact dirs have
+                // nothing to probe; pin the documented fallback so the
+                // handshake still ships a concrete form
+                self.cfg.forward_form = FormPolicy::Pinned(
+                    self.cfg.forward_form.resolve_fallback());
+                None
+            }
+            None => {
+                let r = autotune::resolve_for_dir(&self.artifact_dir,
+                                                  &self.cfg,
+                                                  &self.telemetry)?;
+                self.cfg.forward_form = FormPolicy::Pinned(r.form);
+                Some(r.summary_json())
+            }
+        };
         let workers = self.fleet.workers;
         let engine = StepEngine::new(self.cfg.clone());
         let fleet_cfg = self.fleet;
@@ -187,7 +215,7 @@ impl FleetTrainer {
         let checkpoint_dir = self.checkpoint_dir.clone();
         let telemetry = self.telemetry.clone();
 
-        match self.transport.clone() {
+        let mut outcome = match self.transport.clone() {
             Transport::Loopback => std::thread::scope(|scope| {
                 let (mut hub, hub_tx) = LoopbackHub::new(workers);
                 // spawner doubles as the crash-restart path: every `Left`
@@ -235,7 +263,9 @@ impl FleetTrainer {
                 drive(&engine, &fleet_cfg, &mut hub, &mut on_step,
                       &mut no_respawn, &mut kill_plan, &telemetry)
             }
-        }
+        }?;
+        outcome.metrics.tuning = tuning;
+        Ok(outcome)
     }
 }
 

@@ -18,7 +18,7 @@
 //! never panics: every decode path returns `Result<_, WireError>` and all
 //! buffer access is bounds-checked via `get`.
 
-use crate::config::{ForwardForm, LrSchedule, Method, TrainConfig};
+use crate::config::{FormPolicy, ForwardForm, LrSchedule, Method, TrainConfig};
 use crate::coordinator::counter::SampleCounter;
 use crate::coordinator::metrics::PhaseTimers;
 
@@ -607,8 +607,9 @@ fn put_cfg(w: &mut Wr, cfg: &TrainConfig) {
     w.f32_bits(cfg.kappa_clip);
     w.u32(cfg.n_perturb as u32);
     w.u8(match cfg.forward_form {
-        ForwardForm::Materialize => 0,
-        ForwardForm::Implicit => 1,
+        FormPolicy::Pinned(ForwardForm::Materialize) => 0,
+        FormPolicy::Pinned(ForwardForm::Implicit) => 1,
+        FormPolicy::Auto => 2,
     });
 }
 
@@ -642,8 +643,9 @@ fn get_cfg(r: &mut Rd) -> Result<TrainConfig, WireError> {
     let kappa_clip = r.f32_finite("cfg.kappa_clip")?;
     let n_perturb = r.u32()? as usize;
     let forward_form = match r.u8()? {
-        0 => ForwardForm::Materialize,
-        1 => ForwardForm::Implicit,
+        0 => FormPolicy::Pinned(ForwardForm::Materialize),
+        1 => FormPolicy::Pinned(ForwardForm::Implicit),
+        2 => FormPolicy::Auto,
         _ => return Err(WireError::BadEnum { field: "cfg.forward_form" }),
     };
     Ok(TrainConfig {

@@ -260,7 +260,10 @@ impl EngineReplica {
         // precompile exactly this method's artifact set (plus the eval head
         // on the worker that carries it) so the first ticket is pure
         // execution and round-0 straggling doesn't depend on compile order
-        rt.warmup_method(cfg.method, cfg.forward_form)
+        // the coordinator resolved the form policy before spawning us (it
+        // rides the handshake), so a pinned policy compiles exactly one
+        // loss lowering; a raw Auto (direct embedder) takes the fallback
+        rt.warmup_method(cfg.method, cfg.forward_form.resolve_fallback())
             .with_context(|| format!("worker {worker}: warmup"))?;
         if job.eval.is_some() {
             rt.warmup(&["eval_logits"])

@@ -14,9 +14,9 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use tezo::clix::{self, ArgSpec};
-use tezo::config::{search_space, FleetConfig, ForwardForm, Method,
-                   StragglerPolicy, TrainConfig};
-use tezo::coordinator::rank;
+use tezo::config::{search_space, FleetConfig, FormPolicy, Method,
+                   StragglerPolicy, TrainConfig, FORWARD_FORM_ARG_DEFAULT};
+use tezo::coordinator::{autotune, rank};
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
 use tezo::fleet::{task_job_factory, FleetTrainer, JobSpec, Transport};
@@ -96,7 +96,8 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     ArgSpec::opt("lr-schedule", "constant", "constant|linear|cosine"),
     ArgSpec::opt("kappa-clip", "0", "clip |kappa| at this value (0 = off)"),
     ArgSpec::opt("n-perturb", "1", "q-SPSA perturbations per step (SGD-form only)"),
-    ArgSpec::opt("forward-form", "implicit", "two-point loss form: implicit|materialize (low-rank methods)"),
+    ArgSpec::opt("forward-form", FORWARD_FORM_ARG_DEFAULT,
+                 "two-point loss form: auto (tuned per shape) | implicit | materialize"),
     ArgSpec::opt("save-to", "", "write a parameter checkpoint here at the end"),
     ArgSpec::opt("init-from", "", "initialize parameters from this checkpoint"),
     ArgSpec::opt("telemetry-dir", "", "write trace.jsonl + metrics.prom here"),
@@ -123,7 +124,7 @@ fn parse_train_cfg(args: &clix::Args) -> Result<TrainConfig> {
     cfg.lr_schedule = tezo::config::LrSchedule::parse(args.get_str("lr-schedule")?)?;
     cfg.kappa_clip = args.get_f32("kappa-clip")?;
     cfg.n_perturb = args.get_usize("n-perturb")?;
-    cfg.forward_form = ForwardForm::parse(args.get_str("forward-form")?)?;
+    cfg.forward_form = FormPolicy::parse(args.get_str("forward-form")?)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -136,14 +137,23 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     let config = args.get_str("config")?;
     let method = Method::parse(args.get_str("method")?)?;
-    let cfg = parse_train_cfg(&args)?;
+    let mut cfg = parse_train_cfg(&args)?;
 
     let rt = Runtime::open_config(config)?;
-    // precompile exactly this method's artifact set (+ the eval head) so
-    // step 0 is pure execution
+    let (telemetry_dir, tel) = telemetry_from_args(&args)?;
+    // resolve the form policy exactly once, before any engine exists:
+    // an explicit pin costs nothing, a warm tuning.json is a cache hit,
+    // and only a genuine miss measures (compiling both forms as it goes)
+    let resolution = autotune::resolve(&rt, &cfg, &tel)?;
+    cfg.forward_form = FormPolicy::Pinned(resolution.form);
+    println!("forward form: {} ({})", resolution.form.name(),
+             resolution.source.name());
+    // precompile exactly this method's pinned artifact set (+ the eval
+    // head) so step 0 is pure execution; on the cached/pinned paths the
+    // losing form's loss artifact is never compiled
     {
         let t0 = telemetry::Stopwatch::start();
-        rt.warmup_method(cfg.method, cfg.forward_form)?;
+        rt.warmup_method(cfg.method, resolution.form)?;
         if args.get_usize("eval-n")? > 0 {
             rt.warmup(&["eval_logits"])?;
         }
@@ -170,10 +180,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let eval_batches = builder.eval_batches(args.get_usize("eval-n")?);
 
     let quiet = args.has("quiet");
-    let (telemetry_dir, tel) = telemetry_from_args(&args)?;
     let mut trainer = Trainer::new(&rt, cfg.clone(), DataSource::Task(builder))
         .with_eval(eval_batches, label_tokens)
-        .with_telemetry(tel.clone());
+        .with_telemetry(tel.clone())
+        .with_tuning(resolution.summary_json());
     if !quiet {
         trainer.on_step = Some(Box::new(|step, loss| {
             if step % 20 == 0 {
@@ -300,7 +310,8 @@ const TRAIN_DP_SPECS: &[ArgSpec] = &[
     ArgSpec::opt("lr-schedule", "constant", "constant|linear|cosine"),
     ArgSpec::opt("kappa-clip", "0", "clip |kappa| at this value (0 = off)"),
     ArgSpec::opt("n-perturb", "1", "q-SPSA perturbations per step (SGD-form only)"),
-    ArgSpec::opt("forward-form", "implicit", "two-point loss form: implicit|materialize (low-rank methods)"),
+    ArgSpec::opt("forward-form", FORWARD_FORM_ARG_DEFAULT,
+                 "two-point loss form: auto (tuned per shape) | implicit | materialize"),
     ArgSpec::opt("save-to", "", "worker 0 writes a checkpoint here at the end"),
     ArgSpec::opt("transport", "loopback", "fleet wire: loopback|tcp"),
     ArgSpec::opt("listen", "127.0.0.1:7700", "coordinator bind address (--transport tcp)"),

@@ -8,10 +8,11 @@
 //!   low-rank method (the PR5 `forward_form` knob).
 
 use crate::benchkit::Report;
-use crate::config::{ForwardForm, Method};
+use crate::config::{FormPolicy, ForwardForm, Method};
 
 use super::layout::{llama, opt};
-use super::usage::{self, memory_usage, memory_usage_form, zero_shot};
+use super::usage::{self, memory_usage, memory_usage_form,
+                   memory_usage_policy, zero_shot};
 
 const T7_METHODS: [Method; 9] = [
     Method::Mezo, Method::Subzo, Method::Lozo, Method::Tezo,
@@ -108,7 +109,7 @@ pub fn forward_forms() -> Report {
     let mut rep = Report::new(
         "Forward forms — two-point transients (materialize vs implicit)",
         &["transient (mat)", "transient (impl)", "total (mat)",
-          "total (impl)", "saved"],
+          "total (impl)", "saved", "auto picks"],
     );
     // only the methods whose implicit artifact actually exists — SubZO is
     // low-rank too but always runs its materialized loss (no implicit
@@ -121,9 +122,15 @@ pub fn forward_forms() -> Report {
             let mat = memory_usage_form(&l, m, 16, ForwardForm::Materialize);
             let imp = memory_usage_form(&l, m, 16, ForwardForm::Implicit);
             let saved = mat.total().saturating_sub(imp.total());
+            // the analytic stand-in for the runtime tuner's decision: the
+            // form the byte model would pin under `--forward-form auto`
+            // (the live tuner optimizes time and records its winner in
+            // `tuning.json`; see docs/runtime.md "Autotuning")
+            let (tuned, _) = memory_usage_policy(&l, m, 16, FormPolicy::Auto);
             rep.add_row(&format!("{} {}", l.name, m.name()), vec![
                 gib(mat.transient), gib(imp.transient),
                 gib(mat.total()), gib(imp.total()), gib(saved),
+                tuned.name().to_string(),
             ]);
         }
     }

@@ -1,6 +1,6 @@
 //! Per-method memory accounting (Fig 1c, Fig 3a, Tables 7 & 9).
 
-use crate::config::{ForwardForm, Method};
+use crate::config::{FormPolicy, ForwardForm, Method};
 
 use super::layout::ModelLayout;
 
@@ -202,6 +202,36 @@ pub fn memory_usage_form(l: &ModelLayout, method: Method, batch: u64,
     b
 }
 
+/// Analytic resolution of a form *policy*: a pinned policy is itself;
+/// `auto` picks the form with the smaller modeled total, ties to the
+/// implicit form — the same tie-break the runtime tuner uses. This is the
+/// memory model's stand-in for `runtime::tune` (which optimizes time, not
+/// bytes, and can disagree on small shapes where the materialized forward
+/// is faster); the `memory-report --table forms` view shows both so that
+/// disagreement is visible, not hidden.
+pub fn resolve_form_policy(l: &ModelLayout, method: Method, batch: u64,
+                           policy: FormPolicy) -> ForwardForm {
+    match policy.pinned() {
+        Some(form) => form,
+        None => {
+            let mat = memory_usage_form(l, method, batch,
+                                        ForwardForm::Materialize).total();
+            let imp = memory_usage_form(l, method, batch,
+                                        ForwardForm::Implicit).total();
+            if mat < imp { ForwardForm::Materialize } else { ForwardForm::Implicit }
+        }
+    }
+}
+
+/// [`memory_usage_form`] for a policy: resolves `auto` analytically first
+/// and reports which concrete form the numbers describe.
+pub fn memory_usage_policy(l: &ModelLayout, method: Method, batch: u64,
+                           policy: FormPolicy)
+                           -> (ForwardForm, MemoryBreakdown) {
+    let form = resolve_form_policy(l, method, batch, policy);
+    (form, memory_usage_form(l, method, batch, form))
+}
+
 /// Zero-shot (inference-only) baseline.
 pub fn zero_shot(l: &ModelLayout) -> MemoryBreakdown {
     MemoryBreakdown {
@@ -320,6 +350,29 @@ mod tests {
         }
         // the paper-table entry points stay transient-free (calibration)
         assert_eq!(memory_usage(&l, Method::Tezo).transient, 0);
+    }
+
+    #[test]
+    fn auto_policy_resolves_analytically() {
+        let l = llama("7b");
+        // pinned policies are themselves
+        assert_eq!(resolve_form_policy(&l, Method::Tezo, 16,
+                       FormPolicy::Pinned(ForwardForm::Materialize)),
+                   ForwardForm::Materialize);
+        // auto: implicit drops the dense transients, so it wins the
+        // byte-model for every tunable method; inert methods tie and take
+        // the same tie-break as the runtime tuner
+        for m in [Method::Tezo, Method::TezoAdam, Method::Lozo,
+                  Method::Mezo, Method::Subzo, Method::FoAdam] {
+            assert_eq!(resolve_form_policy(&l, m, 16, FormPolicy::Auto),
+                       ForwardForm::Implicit, "{m:?}");
+        }
+        let (form, b) = memory_usage_policy(&l, Method::Tezo, 16,
+                                            FormPolicy::Auto);
+        assert_eq!(form, ForwardForm::Implicit);
+        assert_eq!(b.total(),
+                   memory_usage_form(&l, Method::Tezo, 16,
+                                     ForwardForm::Implicit).total());
     }
 
     #[test]

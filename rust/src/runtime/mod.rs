@@ -18,6 +18,10 @@
 //!   shared across the calls that consume it.
 //! * [`exec`] — the positional [`CallBuilder`] convenience layer over the
 //!   same plans (tests, benches, one-off calls).
+//! * [`tune`] — the shape-aware forward-form autotuner: measures both
+//!   two-point lowerings at warmup, pins the winner in a persisted
+//!   `tuning.json` keyed by manifest fingerprint + shape, and resolves
+//!   `--forward-form auto` for every dispatch layer (see docs/runtime.md).
 
 pub mod checkpoint;
 pub mod client;
@@ -27,6 +31,7 @@ pub mod manifest;
 pub mod params;
 pub mod plan;
 pub mod stage;
+pub mod tune;
 
 pub use client::Runtime;
 pub use exec::{ArgValue, CallBuilder};
@@ -34,3 +39,4 @@ pub use manifest::{ArtifactMeta, IoDesc, Manifest, MatrixRank, ParamEntry};
 pub use params::ParamStore;
 pub use plan::{CallPlan, Dtype, PreparedCall};
 pub use stage::{DeviceStage, StageStats, StepArena};
+pub use tune::{Resolution, TuneSource, TuningTable};

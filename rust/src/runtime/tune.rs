@@ -1,0 +1,444 @@
+//! Shape-aware forward-form autotuner.
+//!
+//! BENCH_PR5 measured the implicit factor-form forward winning at tiny
+//! (1.25x) and *losing* at small (0.86x) on CPU — which form is faster is
+//! a property of the (artifact dir, shape, method) triple, not a global
+//! constant. This module owns that decision: under `--forward-form auto`
+//! (the default) the caller measures both compiled forms with interleaved
+//! timed pairs and the winner is pinned in `tuning.json` next to the
+//! manifest, so the measurement cost amortizes across runs. The table is
+//! versioned and keyed by a manifest fingerprint + shape key; any mismatch
+//! invalidates it (stale decisions are never trusted).
+//!
+//! Layering: measurement needs a driver + parameters + a batch, which live
+//! above the runtime — so the timed probe is injected as a closure
+//! (`FnMut(ForwardForm) -> Result<u64>` nanoseconds per two-point
+//! forward). `coordinator::autotune` supplies the real probe; tests inject
+//! fixed timings, which also makes the winner deterministic under
+//! `TestClock`. See docs/runtime.md "Autotuning".
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{FormPolicy, ForwardForm, Method};
+use crate::jsonx::{self, Value};
+use crate::telemetry::Telemetry;
+
+use super::manifest::Manifest;
+
+/// File name of the persisted table, next to `manifest.json`.
+pub const TUNING_FILE: &str = "tuning.json";
+
+/// Schema version; a table written by a different version is discarded.
+pub const TUNING_VERSION: i64 = 1;
+
+/// Timed interleaved (materialize, implicit) pairs per decision.
+pub const TUNE_TRIALS: u64 = 3;
+
+/// One persisted decision: the winning form for `method` on this artifact
+/// dir, plus the evidence (best-of-trials ns per form).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TuneEntry {
+    /// winning loss artifact name (what the drivers will dispatch)
+    pub artifact: String,
+    pub form: ForwardForm,
+    /// best-of-trials two-point forward, nanoseconds
+    pub materialize_ns: u64,
+    pub implicit_ns: u64,
+    pub trials: u64,
+}
+
+/// The persisted per-artifact-dir tuning table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TuningTable {
+    /// FNV-1a-64 of the manifest.json bytes (hex)
+    pub manifest_hash: String,
+    /// shape key of the config the decisions were measured on
+    pub shape: String,
+    /// method name -> decision
+    pub entries: BTreeMap<String, TuneEntry>,
+}
+
+/// Where a run's concrete form came from (reported in the `tuning` block
+/// of `TrainOutcome.summary_json` and the PR description).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneSource {
+    /// `--forward-form` pinned it explicitly; no table involved
+    Pinned,
+    /// the manifest ships only one lowering for this method — nothing to
+    /// choose between (MeZO family, SubZO, ZO-AdaMU, FO, old manifests)
+    Inert,
+    /// a valid `tuning.json` already held the decision
+    CacheHit,
+    /// both forms were measured this run and the winner was persisted
+    Measured,
+    /// no table and no way to measure here; the documented Auto fallback
+    Fallback,
+}
+
+impl TuneSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneSource::Pinned => "pinned",
+            TuneSource::Inert => "inert",
+            TuneSource::CacheHit => "cache_hit",
+            TuneSource::Measured => "measured",
+            TuneSource::Fallback => "fallback",
+        }
+    }
+}
+
+/// A resolved form plus provenance and (when measured or cached) the
+/// per-form evidence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Resolution {
+    pub form: ForwardForm,
+    pub source: TuneSource,
+    pub materialize_ns: Option<u64>,
+    pub implicit_ns: Option<u64>,
+    pub trials: u64,
+}
+
+impl Resolution {
+    fn bare(form: ForwardForm, source: TuneSource) -> Resolution {
+        Resolution { form, source, materialize_ns: None, implicit_ns: None,
+                     trials: 0 }
+    }
+
+    /// The `tuning` block of `TrainOutcome.summary_json`.
+    pub fn summary_json(&self) -> Value {
+        let ns = |v: Option<u64>| match v {
+            Some(n) => Value::i(n as i64),
+            None => Value::Null,
+        };
+        Value::obj(vec![
+            ("form", Value::str(self.form.name())),
+            ("source", Value::str(self.source.name())),
+            ("materialize_ns", ns(self.materialize_ns)),
+            ("implicit_ns", ns(self.implicit_ns)),
+            ("trials", Value::i(self.trials as i64)),
+        ])
+    }
+}
+
+/// FNV-1a-64 of the manifest.json bytes, as 16 hex digits. Any rebuild of
+/// the artifacts (new HLO hashes, new tiles, new shapes) changes the
+/// manifest text and therefore the fingerprint.
+pub fn manifest_fingerprint(dir: &Path) -> Result<String> {
+    let bytes = std::fs::read(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json for the tuning \
+                                  fingerprint", dir.display()))?;
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Ok(format!("{h:016x}"))
+}
+
+/// Shape key a decision is valid for: the geometry the forward actually
+/// depends on. Eval-set size, lr, seeds etc. deliberately excluded.
+pub fn shape_key(m: &Manifest) -> String {
+    let c = &m.config;
+    format!("b{}s{}d{}L{}v{}", c.batch, c.seq_len, c.d_model, c.n_layers,
+            c.vocab)
+}
+
+impl TuningTable {
+    pub fn new(manifest_hash: String, shape: String) -> TuningTable {
+        TuningTable { manifest_hash, shape, entries: BTreeMap::new() }
+    }
+
+    pub fn path(dir: &Path) -> PathBuf {
+        dir.join(TUNING_FILE)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("version", Value::i(TUNING_VERSION)),
+            ("manifest_hash", Value::str(&self.manifest_hash)),
+            ("shape", Value::str(&self.shape)),
+            ("entries", Value::Object(
+                self.entries
+                    .iter()
+                    .map(|(k, e)| (k.clone(), Value::obj(vec![
+                        ("artifact", Value::str(&e.artifact)),
+                        ("form", Value::str(e.form.name())),
+                        ("materialize_ns", Value::i(e.materialize_ns as i64)),
+                        ("implicit_ns", Value::i(e.implicit_ns as i64)),
+                        ("trials", Value::i(e.trials as i64)),
+                    ])))
+                    .collect(),
+            )),
+        ])
+    }
+
+    /// Parse a table; errors on schema problems, but a *version* mismatch
+    /// is also an error here (callers treating staleness as a miss use
+    /// [`TuningTable::load`]).
+    pub fn from_json(v: &Value) -> Result<TuningTable> {
+        let version = v.get("version")?.as_i64()?;
+        if version != TUNING_VERSION {
+            anyhow::bail!("tuning table version {version} (want \
+                           {TUNING_VERSION})");
+        }
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries")?.as_object()? {
+            let ns = |k: &str| -> Result<u64> {
+                Ok(e.get(k)?.as_i64()?.max(0) as u64)
+            };
+            entries.insert(name.clone(), TuneEntry {
+                artifact: e.get_str("artifact")?.to_string(),
+                form: ForwardForm::parse(e.get_str("form")?)?,
+                materialize_ns: ns("materialize_ns")?,
+                implicit_ns: ns("implicit_ns")?,
+                trials: ns("trials")?,
+            });
+        }
+        Ok(TuningTable {
+            manifest_hash: v.get_str("manifest_hash")?.to_string(),
+            shape: v.get_str("shape")?.to_string(),
+            entries,
+        })
+    }
+
+    /// Load the table for `dir` if it exists AND is valid for
+    /// (`manifest_hash`, `shape`). A missing, unparseable, version-skewed,
+    /// or stale table is a cache miss (`None`), never an error — the next
+    /// measurement overwrites it.
+    pub fn load(dir: &Path, manifest_hash: &str, shape: &str)
+                -> Option<TuningTable> {
+        let text = std::fs::read_to_string(Self::path(dir)).ok()?;
+        let v = jsonx::parse(&text).ok()?;
+        let t = Self::from_json(&v).ok()?;
+        if t.manifest_hash != manifest_hash || t.shape != shape {
+            return None;
+        }
+        Some(t)
+    }
+
+    /// Persist next to the manifest.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = Self::path(dir);
+        std::fs::write(&path, jsonx::to_string_pretty(&self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Faster form wins; ties go to the factor form (it also wins on memory,
+/// so equal time is not a tie in practice).
+pub fn winner(materialize_ns: u64, implicit_ns: u64) -> ForwardForm {
+    if materialize_ns < implicit_ns {
+        ForwardForm::Materialize
+    } else {
+        ForwardForm::Implicit
+    }
+}
+
+/// Does `method` on this manifest actually have two lowerings to choose
+/// between? False for the dense-Z families and for artifact dirs built
+/// before the implicit artifacts existed.
+pub fn tunable(manifest: &Manifest, method: Method) -> bool {
+    manifest.loss_artifact(method, ForwardForm::Implicit)
+        != manifest.loss_artifact(method, ForwardForm::Materialize)
+}
+
+/// Resolve without measurement or table I/O: explicit pins and methods
+/// with a single lowering. `None` means a real decision is needed.
+pub fn resolve_static(manifest: &Manifest, method: Method,
+                      policy: FormPolicy) -> Option<Resolution> {
+    if let Some(form) = policy.pinned() {
+        return Some(Resolution::bare(form, TuneSource::Pinned));
+    }
+    if !tunable(manifest, method) {
+        // both names dispatch the same artifact; pick the documented
+        // fallback so warmup/memmodel see a consistent answer
+        return Some(Resolution::bare(policy.resolve_fallback(),
+                                     TuneSource::Inert));
+    }
+    None
+}
+
+/// Table lookup (no timing). `Some` is a cache hit — the counter is
+/// emitted, and *no* interleaved timing spans are recorded, which is how
+/// a warm second run is distinguishable in the trace.
+pub fn resolve_cached(manifest: &Manifest, method: Method,
+                      tel: &Telemetry) -> Option<Resolution> {
+    let hash = manifest_fingerprint(&manifest.dir).ok()?;
+    let shape = shape_key(manifest);
+    let table = TuningTable::load(&manifest.dir, &hash, &shape)?;
+    let e = table.entries.get(method.name())?;
+    // a cached decision must still name an artifact the manifest has
+    if !manifest.artifacts.contains_key(&e.artifact) {
+        return None;
+    }
+    tel.counter("tune", "cache_hit", 1.0, -1);
+    Some(Resolution {
+        form: e.form,
+        source: TuneSource::CacheHit,
+        materialize_ns: Some(e.materialize_ns),
+        implicit_ns: Some(e.implicit_ns),
+        trials: e.trials,
+    })
+}
+
+/// Measure both forms via `measure` (ns per two-point forward, called in
+/// interleaved (materialize, implicit) pairs so drift hits both equally),
+/// pin the best-of-trials winner, and persist the table. Emits the
+/// cache-miss counter and one `tune` span per timed call (lane = trial).
+pub fn measure_and_pin(
+    manifest: &Manifest, method: Method, tel: &Telemetry,
+    measure: &mut dyn FnMut(ForwardForm) -> Result<u64>,
+) -> Result<Resolution> {
+    tel.counter("tune", "cache_miss", 1.0, -1);
+    let mut best_m = u64::MAX;
+    let mut best_i = u64::MAX;
+    for trial in 0..TUNE_TRIALS {
+        let m = measure(ForwardForm::Materialize)?;
+        tel.span_dur("tune", "materialize", m, trial as u32, -1);
+        best_m = best_m.min(m);
+        let i = measure(ForwardForm::Implicit)?;
+        tel.span_dur("tune", "implicit", i, trial as u32, -1);
+        best_i = best_i.min(i);
+    }
+    let form = winner(best_m, best_i);
+    let hash = manifest_fingerprint(&manifest.dir)?;
+    let shape = shape_key(manifest);
+    // keep other methods' decisions when the table is still valid for
+    // this manifest; otherwise start fresh (staleness is per-table)
+    let mut table = TuningTable::load(&manifest.dir, &hash, &shape)
+        .unwrap_or_else(|| TuningTable::new(hash, shape));
+    table.entries.insert(method.name().to_string(), TuneEntry {
+        artifact: manifest.loss_artifact(method, form).to_string(),
+        form,
+        materialize_ns: best_m,
+        implicit_ns: best_i,
+        trials: TUNE_TRIALS,
+    });
+    table.save(&manifest.dir)?;
+    Ok(Resolution {
+        form,
+        source: TuneSource::Measured,
+        materialize_ns: Some(best_m),
+        implicit_ns: Some(best_i),
+        trials: TUNE_TRIALS,
+    })
+}
+
+/// Full resolution: static short-circuits, then the persisted table, then
+/// measurement via the injected probe. The one entry point measuring
+/// callers need.
+pub fn resolve_with(
+    manifest: &Manifest, method: Method, policy: FormPolicy, tel: &Telemetry,
+    measure: &mut dyn FnMut(ForwardForm) -> Result<u64>,
+) -> Result<Resolution> {
+    if let Some(r) = resolve_static(manifest, method, policy) {
+        return Ok(r);
+    }
+    if let Some(r) = resolve_cached(manifest, method, tel) {
+        return Ok(r);
+    }
+    measure_and_pin(manifest, method, tel, measure)
+}
+
+/// Resolution for contexts that cannot measure (no runtime open, e.g. the
+/// memory model or a coordinator that only loaded the manifest): static,
+/// then the table, then the documented `Auto` fallback.
+pub fn resolve_offline(manifest: &Manifest, method: Method,
+                       policy: FormPolicy, tel: &Telemetry) -> Resolution {
+    if let Some(r) = resolve_static(manifest, method, policy) {
+        return r;
+    }
+    match resolve_cached(manifest, method, tel) {
+        Some(r) => r,
+        None => Resolution::bare(policy.resolve_fallback(),
+                                 TuneSource::Fallback),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_fixture() -> TuningTable {
+        let mut t = TuningTable::new("deadbeefdeadbeef".into(),
+                                     "b8s64d64L2v512".into());
+        t.entries.insert("tezo".into(), TuneEntry {
+            artifact: "tezo_loss_pm".into(),
+            form: ForwardForm::Materialize,
+            materialize_ns: 1_000,
+            implicit_ns: 2_000,
+            trials: 3,
+        });
+        t
+    }
+
+    #[test]
+    fn table_json_roundtrip() {
+        let t = table_fixture();
+        let text = jsonx::to_string_pretty(&t.to_json());
+        let back = TuningTable::from_json(&jsonx::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn version_skew_rejected() {
+        let mut v = table_fixture().to_json();
+        if let Value::Object(kv) = &mut v {
+            for (k, val) in kv.iter_mut() {
+                if k == "version" {
+                    *val = Value::i(TUNING_VERSION + 1);
+                }
+            }
+        }
+        assert!(TuningTable::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn load_rejects_stale_tables() {
+        let dir = std::env::temp_dir()
+            .join(format!("tezo-tune-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = table_fixture();
+        t.save(&dir).unwrap();
+        assert_eq!(TuningTable::load(&dir, "deadbeefdeadbeef",
+                                     "b8s64d64L2v512"),
+                   Some(t));
+        // hash mismatch and shape mismatch are both cache misses
+        assert!(TuningTable::load(&dir, "0000000000000000",
+                                  "b8s64d64L2v512").is_none());
+        assert!(TuningTable::load(&dir, "deadbeefdeadbeef",
+                                  "b1s8d8L1v64").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn winner_ties_to_implicit() {
+        assert_eq!(winner(999, 1000), ForwardForm::Materialize);
+        assert_eq!(winner(1000, 999), ForwardForm::Implicit);
+        assert_eq!(winner(1000, 1000), ForwardForm::Implicit);
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let r = Resolution {
+            form: ForwardForm::Materialize,
+            source: TuneSource::Measured,
+            materialize_ns: Some(10),
+            implicit_ns: Some(20),
+            trials: 3,
+        };
+        let v = r.summary_json();
+        assert_eq!(v.get_str("form").unwrap(), "materialize");
+        assert_eq!(v.get_str("source").unwrap(), "measured");
+        assert_eq!(v.get("materialize_ns").unwrap().as_i64().unwrap(), 10);
+        // unresolved evidence serializes as null, not 0
+        let bare = Resolution::bare(ForwardForm::Implicit, TuneSource::Pinned);
+        assert!(matches!(bare.summary_json().get("implicit_ns").unwrap(),
+                         Value::Null));
+    }
+}

@@ -217,7 +217,7 @@ fn implicit_and_materialized_training_converge_similarly() {
         let mut cfg = TrainConfig::with_preset(Method::Tezo, "tiny");
         cfg.steps = 4;
         cfg.seed = 99;
-        cfg.forward_form = form;
+        cfg.forward_form = tezo::config::FormPolicy::Pinned(form);
         let mut params = ParamStore::load(&rt.client, &rt.manifest).unwrap();
         let tok = Tokenizer::new(rt.manifest.config.vocab);
         let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,

@@ -36,7 +36,7 @@ fn run_single_form(rt: &Runtime, method: Method, form: ForwardForm) -> Vec<f64> 
     let mut cfg = TrainConfig::with_preset(method, "tiny");
     cfg.steps = STEPS;
     cfg.seed = SEED;
-    cfg.forward_form = form;
+    cfg.forward_form = tezo::config::FormPolicy::Pinned(form);
     let mut params = ParamStore::load(&rt.client, &rt.manifest).unwrap();
     let tok = Tokenizer::new(rt.manifest.config.vocab);
     let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
@@ -53,6 +53,10 @@ fn run_dp_tezo(workers: usize) -> Vec<f64> {
     let mut cfg = TrainConfig::with_preset(Method::Tezo, "tiny");
     cfg.steps = STEPS;
     cfg.seed = SEED;
+    // pin the form the golden trace was recorded under — an Auto policy
+    // would let the autotuner's measured winner pick the artifact, and
+    // the two lowerings are deliberately not bit-identical
+    cfg.forward_form = tezo::config::FormPolicy::Pinned(ForwardForm::Implicit);
     let factory = task_job_factory("sst2".to_string(), SEED, 16, 0, None);
     let dir = tezo::artifacts_root().join("tiny");
     let mut trainer = FleetTrainer::new(FleetConfig::new(workers), cfg, dir, factory);

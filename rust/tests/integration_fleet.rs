@@ -26,6 +26,12 @@ fn cfg_for(method: Method, steps: usize, seed: u64) -> TrainConfig {
     cfg.steps = steps;
     cfg.seed = seed;
     cfg.eval_every = steps / 2;
+    // pin the form: these parity tests compare the fleet against the plain
+    // trainer, and an Auto policy resolves differently on the two paths
+    // (the fleet probes and may pin the measured winner; the embedded
+    // trainer takes the static fallback)
+    cfg.forward_form =
+        tezo::config::FormPolicy::Pinned(tezo::config::ForwardForm::Implicit);
     cfg
 }
 

@@ -1,0 +1,312 @@
+//! Property battery for the forward-form autotuner (`runtime::tune`).
+//!
+//! Properties pinned here:
+//! * the persisted tuning table round-trips through its JSON codec
+//!   identically (and the re-encode is bit-identical text);
+//! * staleness is airtight: any manifest-hash or shape-key mismatch is a
+//!   cache miss, never a stale decision;
+//! * the winner under injected timings is deterministic — same scripted
+//!   (materialize, implicit) ns sequences, same pinned form, every time —
+//!   and a second resolve is a pure cache hit: counter emitted, **zero**
+//!   interleaved timing spans in the trace (the ISSUE 9 warm-run
+//!   criterion);
+//! * the coordinator→worker handshake ships the resolved form policy
+//!   bitwise: a TCP worker decoding the `HelloAck` sees exactly the config
+//!   a loopback worker gets by clone, for all three policy encodings.
+
+use std::path::{Path, PathBuf};
+
+use tezo::config::{FormPolicy, ForwardForm, Method, TrainConfig};
+use tezo::fleet::wire::{self, HelloAck, JobSpec};
+use tezo::jsonx;
+use tezo::proplite::{self, prop_assert, Gen};
+use tezo::runtime::manifest::{ArtifactMeta, ConfigMeta, Manifest};
+use tezo::runtime::tune::{self, TuneEntry, TuneSource, TuningTable};
+use tezo::telemetry::{EventKind, Telemetry, TestClock};
+
+// ---------------------------------------------------------------------------
+// generators & fixtures
+// ---------------------------------------------------------------------------
+
+fn gen_hex(g: &mut Gen) -> String {
+    format!("{:016x}", g.u64())
+}
+
+fn gen_shape(g: &mut Gen) -> String {
+    format!("b{}s{}d{}L{}v{}", g.usize_in(1..64), g.usize_in(8..512),
+            g.usize_in(8..2048), g.usize_in(1..48), g.usize_in(64..65536))
+}
+
+fn gen_table(g: &mut Gen) -> TuningTable {
+    let mut t = TuningTable::new(gen_hex(g), gen_shape(g));
+    let methods = ["tezo", "tezo_m", "tezo_adam", "lozo", "lozo_m"];
+    let n = g.usize_in(1..methods.len() + 1);
+    for name in methods.iter().take(n) {
+        let form = *g.pick(&ForwardForm::ALL);
+        t.entries.insert(name.to_string(), TuneEntry {
+            artifact: format!("{name}_loss_pm"),
+            form,
+            materialize_ns: g.u64() % 1_000_000_000,
+            implicit_ns: g.u64() % 1_000_000_000,
+            trials: 1 + g.u64() % 8,
+        });
+    }
+    t
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tezo-props-tune-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A manifest the tuner accepts without any runtime: real `manifest.json`
+/// bytes on disk (for the fingerprint) + an in-memory artifact set that
+/// makes TeZO tunable (both lowerings present).
+fn synthetic_manifest(dir: &Path, salt: u64) -> Manifest {
+    std::fs::write(dir.join("manifest.json"),
+                   format!("{{\"synthetic\": {salt}}}")).unwrap();
+    let stub = |file: &str, form: Option<ForwardForm>| ArtifactMeta {
+        file: file.to_string(),
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+        forward_form: form.map(|f| f.name().to_string()),
+    };
+    let mut artifacts = std::collections::BTreeMap::new();
+    artifacts.insert("tezo_loss_pm".to_string(),
+                     stub("tezo_loss_pm.hlo.txt",
+                          Some(ForwardForm::Materialize)));
+    artifacts.insert("tezo_loss_pm_implicit".to_string(),
+                     stub("tezo_loss_pm_implicit.hlo.txt",
+                          Some(ForwardForm::Implicit)));
+    artifacts.insert("tezo_update_factor".to_string(),
+                     stub("tezo_update_factor.hlo.txt", None));
+    Manifest {
+        dir: dir.to_path_buf(),
+        config: ConfigMeta {
+            name: "synthetic".to_string(),
+            d_model: 64, n_layers: 2, n_heads: 2, d_ff: 256, vocab: 256,
+            seq_len: 64, batch: 4, r_max: 8, rank_threshold: 0.25,
+            use_pallas: true, n_params: 0, init_seed: 0,
+        },
+        params: Vec::new(),
+        matrix_ranks: Vec::new(),
+        lozo_rank: 2,
+        subzo_rank: 4,
+        artifacts,
+    }
+}
+
+fn gen_cfg(g: &mut Gen) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.method = *g.pick(&Method::ALL);
+    cfg.steps = g.usize_in(1..1000);
+    cfg.lr = g.f32_in(1e-6..1.0);
+    cfg.rho = g.f32_in(1e-6..1.0);
+    cfg.seed = g.u64();
+    cfg.eval_every = g.usize_in(1..100);
+    cfg.forward_form = *g.pick(&[
+        FormPolicy::Auto,
+        FormPolicy::Pinned(ForwardForm::Materialize),
+        FormPolicy::Pinned(ForwardForm::Implicit),
+    ]);
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// table codec
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_table_json_roundtrip_identity() {
+    proplite::run(200, |g| {
+        let t = gen_table(g);
+        let text = jsonx::to_string_pretty(&t.to_json());
+        let back = TuningTable::from_json(&jsonx::parse(&text)
+            .map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        prop_assert(back == t, "decoded table differs")?;
+        let text2 = jsonx::to_string_pretty(&back.to_json());
+        prop_assert(text2 == text, "re-encode is not bit-identical")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// staleness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_stale_tables_never_load() {
+    let dir = scratch_dir("stale");
+    proplite::run(60, |g| {
+        let t = gen_table(g);
+        t.save(&dir).map_err(|e| e.to_string())?;
+        prop_assert(
+            TuningTable::load(&dir, &t.manifest_hash, &t.shape).as_ref()
+                == Some(&t),
+            "fresh table must load",
+        )?;
+        // any perturbation of hash or shape is a miss
+        let other_hash = gen_hex(g);
+        if other_hash != t.manifest_hash {
+            prop_assert(
+                TuningTable::load(&dir, &other_hash, &t.shape).is_none(),
+                "hash mismatch must be a cache miss",
+            )?;
+        }
+        let other_shape = gen_shape(g);
+        if other_shape != t.shape {
+            prop_assert(
+                TuningTable::load(&dir, &t.manifest_hash, &other_shape)
+                    .is_none(),
+                "shape mismatch must be a cache miss",
+            )?;
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_table_is_a_miss_not_an_error() {
+    let dir = scratch_dir("corrupt");
+    std::fs::write(TuningTable::path(&dir), "{not json").unwrap();
+    assert!(TuningTable::load(&dir, "x", "y").is_none());
+    std::fs::write(TuningTable::path(&dir), "{\"version\": 999}").unwrap();
+    assert!(TuningTable::load(&dir, "x", "y").is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// deterministic winner under injected timings
+// ---------------------------------------------------------------------------
+
+fn events_of(tel: &Telemetry) -> Vec<tezo::telemetry::TraceEvent> {
+    tel.events()
+}
+
+#[test]
+fn prop_injected_timings_make_the_winner_deterministic() {
+    let dir = scratch_dir("winner");
+    proplite::run(40, |g| {
+        let manifest = synthetic_manifest(&dir, g.u64());
+        std::fs::remove_file(TuningTable::path(&dir)).ok();
+        // scripted per-trial timings; the probe replays them in the
+        // interleaved (materialize, implicit) call order
+        let m_ns: Vec<u64> =
+            (0..tune::TUNE_TRIALS).map(|_| 1 + g.u64() % 1_000_000).collect();
+        let i_ns: Vec<u64> =
+            (0..tune::TUNE_TRIALS).map(|_| 1 + g.u64() % 1_000_000).collect();
+        let best_m = *m_ns.iter().min().unwrap();
+        let best_i = *i_ns.iter().min().unwrap();
+        let want = tune::winner(best_m, best_i);
+
+        let run = |tel: &Telemetry| {
+            let (mut mi, mut ii) = (0usize, 0usize);
+            let mut measure = |form: ForwardForm| -> anyhow::Result<u64> {
+                Ok(match form {
+                    ForwardForm::Materialize => { mi += 1; m_ns[mi - 1] }
+                    ForwardForm::Implicit => { ii += 1; i_ns[ii - 1] }
+                })
+            };
+            tune::measure_and_pin(&manifest, Method::Tezo, tel, &mut measure)
+        };
+
+        let tel = Telemetry::with_clock(4096, Box::new(TestClock::new(1)));
+        let r1 = run(&tel).map_err(|e| e.to_string())?;
+        prop_assert(r1.form == want, "winner != argmin of best-of-trials")?;
+        prop_assert(r1.source == TuneSource::Measured, "source")?;
+        prop_assert(r1.materialize_ns == Some(best_m)
+                        && r1.implicit_ns == Some(best_i),
+                    "evidence must be best-of-trials")?;
+        // measuring run emits the miss counter and one span per timed call
+        let evs = events_of(&tel);
+        let spans = evs.iter()
+            .filter(|e| e.kind == EventKind::Span && e.cat == "tune")
+            .count();
+        prop_assert(spans as u64 == 2 * tune::TUNE_TRIALS,
+                    "one tune span per timed call")?;
+        prop_assert(evs.iter().any(|e| e.kind == EventKind::Counter
+                                       && e.name == "cache_miss"),
+                    "cache_miss counter")?;
+
+        // re-measuring with the same script pins the same form (and the
+        // persisted table already holds it)
+        std::fs::remove_file(TuningTable::path(&dir)).ok();
+        let r2 = run(&Telemetry::off()).map_err(|e| e.to_string())?;
+        prop_assert(r2.form == r1.form, "winner must be deterministic")?;
+
+        // warm path: pure cache hit, no timing spans at all
+        let warm = Telemetry::with_clock(4096, Box::new(TestClock::new(1)));
+        let cached = tune::resolve_cached(&manifest, Method::Tezo, &warm)
+            .ok_or("expected a cache hit after measure_and_pin")?;
+        prop_assert(cached.form == r1.form, "cached form differs")?;
+        prop_assert(cached.source == TuneSource::CacheHit, "source")?;
+        let evs = events_of(&warm);
+        prop_assert(
+            !evs.iter().any(|e| e.kind == EventKind::Span && e.cat == "tune"),
+            "cache hit must not emit interleaved timing spans",
+        )?;
+        prop_assert(evs.iter().any(|e| e.kind == EventKind::Counter
+                                       && e.name == "cache_hit"),
+                    "cache_hit counter")
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pinned_and_inert_policies_skip_the_table_entirely() {
+    let dir = scratch_dir("static");
+    let manifest = synthetic_manifest(&dir, 7);
+    // explicit pin wins without touching disk
+    let r = tune::resolve_static(&manifest, Method::Tezo,
+                                 FormPolicy::Pinned(ForwardForm::Materialize))
+        .expect("pinned resolves statically");
+    assert_eq!(r.form, ForwardForm::Materialize);
+    assert_eq!(r.source, TuneSource::Pinned);
+    // MeZO has one lowering: Auto is inert, resolved to the fallback
+    let r = tune::resolve_static(&manifest, Method::Mezo, FormPolicy::Auto)
+        .expect("single-lowering methods resolve statically");
+    assert_eq!(r.form, FormPolicy::Auto.resolve_fallback());
+    assert_eq!(r.source, TuneSource::Inert);
+    // TeZO under Auto genuinely needs a decision
+    assert!(tune::resolve_static(&manifest, Method::Tezo,
+                                 FormPolicy::Auto).is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// coordinator → worker handshake parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_handshake_ships_the_resolved_policy_bitwise() {
+    proplite::run(200, |g| {
+        // what the coordinator resolved (possibly still Auto for inert
+        // methods — the tag must survive that too)
+        let cfg = gen_cfg(g);
+        let ack = HelloAck {
+            slot: (g.u64() % 64) as u32,
+            workers: 1 + (g.u64() % 64) as u32,
+            cfg: cfg.clone(),
+            job: JobSpec::default(),
+        };
+        // loopback path: the worker receives `cfg` by clone — that IS the
+        // reference. TCP path: encode → decode.
+        let frame = wire::encode_hello_ack(&ack);
+        let decoded = wire::decode_hello_ack(&frame)
+            .map_err(|e| format!("{e:?}"))?;
+        prop_assert(decoded.cfg == cfg,
+                    "TCP worker must see the loopback worker's exact cfg")?;
+        prop_assert(decoded.cfg.forward_form == cfg.forward_form,
+                    "form policy lost in the handshake")?;
+        // canonical codec: re-encode reproduces the frame bit-identically
+        let frame2 = wire::encode_hello_ack(&decoded);
+        prop_assert(frame2 == frame, "handshake re-encode differs")?;
+        // the resolved fallback both worker kinds apply is identical
+        prop_assert(decoded.cfg.forward_form.resolve_fallback()
+                        == cfg.forward_form.resolve_fallback(),
+                    "resolved concrete form differs across transports")
+    });
+}

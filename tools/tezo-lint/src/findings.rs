@@ -37,6 +37,9 @@ pub enum Code {
     /// raw clock read outside the telemetry boundary, or a telemetry
     /// readout flowing into seed/wire/kappa state
     ObsClock,
+    /// raw forward-form string literal outside `config/`/`runtime/tune.rs`
+    /// (dispatch must go through `FormPolicy` / the tuning table)
+    TuneFormLiteral,
 }
 
 impl Code {
@@ -55,10 +58,11 @@ impl Code {
             Code::ArtForwardForm => "TZ-ART004",
             Code::AllowlistStale => "TZ-ALLOW001",
             Code::ObsClock => "TZ-OBS001",
+            Code::TuneFormLiteral => "TZ-TUNE001",
         }
     }
 
-    pub const ALL: [Code; 13] = [
+    pub const ALL: [Code; 14] = [
         Code::RngAmbient,
         Code::RngWallClock,
         Code::RngTimeSeed,
@@ -72,6 +76,7 @@ impl Code {
         Code::ArtForwardForm,
         Code::AllowlistStale,
         Code::ObsClock,
+        Code::TuneFormLiteral,
     ];
 }
 

@@ -126,6 +126,7 @@ pub fn run_code_lint(files: &[SourceFile]) -> Vec<Finding> {
         rules::determinism::check(f, &mut out);
         rules::panics::check(f, &mut out);
         rules::obs::check(f, &mut out);
+        rules::tune::check(f, &mut out);
     }
     out
 }

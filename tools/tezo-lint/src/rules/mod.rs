@@ -8,6 +8,7 @@ pub mod determinism;
 pub mod obs;
 pub mod panics;
 pub mod rng_time;
+pub mod tune;
 
 use crate::lexer::Token;
 

@@ -1,0 +1,104 @@
+//! Forward-form literal discipline (TZ-TUNE001).
+//!
+//! PR 9 makes `--forward-form auto` the default: the concrete form is a
+//! *decision* — parsed into `config::FormPolicy`, resolved by
+//! `runtime::tune`, and shipped pinned through the fleet handshake. A raw
+//! `"implicit"` / `"materialize"` string anywhere else is a dispatch path
+//! bypassing that resolution: it silently disagrees with the tuning table
+//! and, in fleet code, can break bitwise parity between workers. Only two
+//! places may spell the words: `config/` (the parser/printer that owns
+//! the vocabulary) and `runtime/tune.rs` (the tuner's own span names and
+//! table codec). Everyone else goes through `ForwardForm::name()` /
+//! `FormPolicy::parse` / the resolved `Resolution`.
+//!
+//! The check is exact-match on string-literal *contents* — prose like
+//! `"two-point loss form: implicit|materialize"` in a help string does
+//! not trip it, and test-masked code is exempt like every other rule.
+
+use crate::findings::{Code, Finding};
+use crate::source::SourceFile;
+
+/// The `ForwardForm::parse` vocabulary plus the `auto` policy word.
+const DENIED: &[&str] = &["implicit", "materialize", "materialized", "dense",
+                          "auto"];
+
+/// The two owners of the vocabulary (see module docs).
+fn exempt(path: &str) -> bool {
+    path.contains("/config/") || path.ends_with("runtime/tune.rs")
+}
+
+pub fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if exempt(&file.path) {
+        return;
+    }
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.masked[i] || t.kind != crate::lexer::Kind::Str {
+            continue;
+        }
+        if DENIED.contains(&t.text.as_str()) {
+            out.push(Finding::new(
+                Code::TuneFormLiteral,
+                &file.path,
+                t.line,
+                format!("raw forward-form literal {:?} — parse it with \
+                         `FormPolicy::parse` / compare via \
+                         `ForwardForm::name()` so the dispatch agrees with \
+                         the tuning table (see docs/runtime.md \"Autotuning\")",
+                        t.text),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::new(path.into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_exact_form_literals_outside_the_owners() {
+        let fs = findings(
+            "rust/src/fleet/worker.rs",
+            "fn f() { let form = \"implicit\"; dispatch(\"materialize\"); \
+             let p = \"auto\"; }",
+        );
+        assert_eq!(fs.len(), 3);
+        assert!(fs.iter().all(|f| f.code == Code::TuneFormLiteral));
+    }
+
+    #[test]
+    fn config_and_tune_own_the_vocabulary() {
+        for path in ["rust/src/config/mod.rs", "rust/src/runtime/tune.rs"] {
+            assert!(findings(path, "const A: &str = \"implicit\";").is_empty(),
+                    "{path} should be exempt");
+        }
+        // but the rest of runtime/ is not
+        assert_eq!(findings("rust/src/runtime/client.rs",
+                            "const A: &str = \"implicit\";").len(), 1);
+    }
+
+    #[test]
+    fn prose_and_compound_strings_are_fine() {
+        let fs = findings(
+            "rust/src/main.rs",
+            "fn f() { help(\"two-point loss form: auto|implicit|materialize\"); \
+             name(\"tezo_loss_pm_implicit\"); }",
+        );
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn test_code_is_masked() {
+        let fs = findings(
+            "rust/src/fleet/worker.rs",
+            "#[test]\nfn t() { assert_eq!(tag, \"materialize\"); }",
+        );
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

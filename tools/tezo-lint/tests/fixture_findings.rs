@@ -15,6 +15,7 @@ fn code_lint(path: &str, src: &str) -> Vec<Finding> {
     rules::determinism::check(&f, &mut out);
     rules::panics::check(&f, &mut out);
     rules::obs::check(&f, &mut out);
+    rules::tune::check(&f, &mut out);
     out
 }
 
@@ -77,6 +78,24 @@ fn hot_path_classification_gates_panic_rules() {
     let fs = code_lint("rust/src/tensor/fixture_panics.rs",
                        include_str!("fixtures/hot_bad_panics.rs"));
     assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn bad_tune_fixture_exact_counts() {
+    let fs = code_lint("rust/src/fleet/fixture_tune.rs",
+                       include_str!("fixtures/bad_tune.rs"));
+    assert_eq!(count(&fs, Code::TuneFormLiteral), 5, "{fs:?}");
+    assert_eq!(fs.len(), 5, "{fs:?}");
+}
+
+#[test]
+fn tune_exemption_is_path_scoped() {
+    // the same fixture inside the vocabulary owners stays clean
+    for path in ["rust/src/config/fixture_tune.rs",
+                 "rust/src/runtime/tune.rs"] {
+        let fs = code_lint(path, include_str!("fixtures/bad_tune.rs"));
+        assert_eq!(count(&fs, Code::TuneFormLiteral), 0, "{path}: {fs:?}");
+    }
 }
 
 #[test]

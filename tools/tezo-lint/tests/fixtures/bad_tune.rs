@@ -1,0 +1,32 @@
+// TZ-TUNE001 fixture: raw forward-form string literals in dispatch code.
+// Never compiled — lexed by the linter under a synthetic non-exempt path.
+
+fn pick_form(shape: &str) -> &'static str {
+    // denied: the form is hardcoded instead of resolved via the table
+    if shape == "small" { "materialize" } else { "implicit" }
+}
+
+fn warmup(rt: &Runtime) {
+    // denied: policy word spelled instead of FormPolicy::parse
+    let policy = "auto";
+    // denied: the legacy aliases count too
+    rt.warm("materialized");
+    rt.warm("dense");
+    let _ = policy;
+}
+
+fn fine(rt: &Runtime) {
+    // artifact names and prose mentioning forms are NOT exact matches
+    rt.warm("tezo_loss_pm_implicit");
+    help("two-point loss form: auto | implicit | materialize");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn masked() {
+        // test code may spell the tags (manifest round-trip assertions)
+        assert_eq!(tag(), "implicit");
+        assert_eq!(other(), "materialize");
+    }
+}
