@@ -74,6 +74,16 @@ impl Method {
         !matches!(self, Method::FoAdam)
     }
 
+    /// Is the method's update a pure function of `(step, perturb_seed,
+    /// kappa)` on top of the current parameters? True for the stateless
+    /// SGD-form methods; false for momentum/Adam variants, whose state a
+    /// `(seed, kappa)` log does not capture. This is the gate for every
+    /// replay-based recovery path: fleet catch-up, `--resume` journal
+    /// replay, and guard rollback (see docs/robustness.md).
+    pub fn statelessly_replayable(&self) -> bool {
+        matches!(self, Method::Mezo | Method::Lozo | Method::Subzo | Method::Tezo)
+    }
+
     /// Does the method keep full-parameter-size optimizer state?
     /// (Drives the memory model and the Fig 3a reproduction.)
     pub fn full_size_state_copies(&self) -> usize {
@@ -371,9 +381,7 @@ impl FleetConfig {
             // (perturb_seed, kappa) scalars alone; that is only exact for
             // methods whose update is a pure function of those scalars —
             // momentum/Adam variants carry state the log does not capture
-            let ok = matches!(train.method,
-                Method::Mezo | Method::Lozo | Method::Subzo | Method::Tezo);
-            if !ok {
+            if !train.method.statelessly_replayable() {
                 bail!("fleet fault tolerance (max_restarts/checkpoint_every) \
                        requires a stateless SGD-form method \
                        (mezo|lozo|subzo|tezo): {} keeps optimizer state the \

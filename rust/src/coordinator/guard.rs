@@ -1,0 +1,249 @@
+//! Divergence guard: detect a run going bad and decide to roll back.
+//!
+//! ZO training can destabilize in two visible ways: the loss goes
+//! non-finite (NaN/Inf measurements, which the step path already skips in
+//! lockstep) or it spikes far above its recent trend. The guard watches
+//! the per-step loss stream and trips a rollback decision when either
+//! signal crosses its configured threshold. The *mechanism* of rollback —
+//! reload the last good checkpoint, truncate the journal tail, re-run —
+//! lives in the trainer and fleet coordinator; this module is the pure
+//! policy state machine, so its exact semantics are property-tested
+//! without artifacts (`rust/tests/props_journal.rs`).
+//!
+//! Because a deterministic run reproduces the same losses after a pure
+//! rollback, `skip_steps > 0` optionally suppresses the next N *updates*
+//! after a rollback (measurements still run and are journaled as
+//! `kappa = None`, exactly like a lockstep skip) — nudging the trajectory
+//! off the divergent path while staying bitwise-replayable from the
+//! journal. See docs/robustness.md for the full failure model.
+
+use anyhow::{ensure, Result};
+
+/// Guard thresholds. `Default` is fully disabled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GuardPolicy {
+    /// trip after this many *consecutive* non-finite step losses
+    /// (0 = non-finite detection off)
+    pub nonfinite_streak: usize,
+    /// trip when a finite loss exceeds `spike_factor * ewma`
+    /// (0.0 = spike detection off; must be > 1.0 when on)
+    pub spike_factor: f64,
+    /// EWMA smoothing for the loss trend, in (0, 1]
+    pub ewma_alpha: f64,
+    /// finite losses folded into the EWMA before spike detection arms
+    pub warmup: usize,
+    /// rollbacks allowed before the guard gives up and errors the run
+    pub max_rollbacks: usize,
+    /// updates suppressed (journaled as skips) after each rollback
+    pub skip_steps: usize,
+}
+
+impl Default for GuardPolicy {
+    fn default() -> Self {
+        GuardPolicy {
+            nonfinite_streak: 0,
+            spike_factor: 0.0,
+            ewma_alpha: 0.1,
+            warmup: 8,
+            max_rollbacks: 3,
+            skip_steps: 0,
+        }
+    }
+}
+
+impl GuardPolicy {
+    /// Is any detector on?
+    pub fn enabled(&self) -> bool {
+        self.nonfinite_streak > 0 || self.spike_factor > 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        ensure!(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0,
+                "guard ewma alpha must be in (0, 1], got {}", self.ewma_alpha);
+        ensure!(self.spike_factor == 0.0 || self.spike_factor > 1.0,
+                "guard spike factor must be > 1 (or 0 to disable), got {}",
+                self.spike_factor);
+        ensure!(self.max_rollbacks > 0,
+                "an enabled guard needs max_rollbacks > 0");
+        Ok(())
+    }
+}
+
+/// Why the guard tripped.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GuardReason {
+    /// `streak` consecutive non-finite step losses
+    NonFiniteStreak { streak: usize },
+    /// a finite loss blew past the trend: `loss > factor * ewma`
+    LossSpike { loss: f64, ewma: f64 },
+}
+
+impl std::fmt::Display for GuardReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GuardReason::NonFiniteStreak { streak } => {
+                write!(f, "{streak} consecutive non-finite step losses")
+            }
+            GuardReason::LossSpike { loss, ewma } => {
+                write!(f, "loss spike: {loss:.6} vs trend {ewma:.6}")
+            }
+        }
+    }
+}
+
+/// The guard's observation state. Feed it every step loss; a `Some`
+/// return is a rollback decision (the caller checks [`can_roll_back`]
+/// and then reports the rollback via [`rolled_back`], which re-arms the
+/// detectors from scratch).
+///
+/// [`can_roll_back`]: GuardState::can_roll_back
+/// [`rolled_back`]: GuardState::rolled_back
+#[derive(Clone, Debug)]
+pub struct GuardState {
+    policy: GuardPolicy,
+    streak: usize,
+    ewma: Option<f64>,
+    seen: usize,
+    rollbacks: usize,
+}
+
+impl GuardState {
+    pub fn new(policy: GuardPolicy) -> Self {
+        GuardState { policy, streak: 0, ewma: None, seen: 0, rollbacks: 0 }
+    }
+
+    pub fn policy(&self) -> &GuardPolicy {
+        &self.policy
+    }
+
+    pub fn rollbacks(&self) -> usize {
+        self.rollbacks
+    }
+
+    /// Is there rollback budget left?
+    pub fn can_roll_back(&self) -> bool {
+        self.rollbacks < self.policy.max_rollbacks
+    }
+
+    /// Record a rollback and reset the detectors (the run re-enters past
+    /// territory; the streak, trend, and warmup must rebuild).
+    pub fn rolled_back(&mut self) {
+        self.rollbacks += 1;
+        self.streak = 0;
+        self.ewma = None;
+        self.seen = 0;
+    }
+
+    /// Observe one step loss. `Some(reason)` means "roll back now".
+    pub fn observe(&mut self, loss: f64) -> Option<GuardReason> {
+        if !self.policy.enabled() {
+            return None;
+        }
+        if !loss.is_finite() {
+            self.streak += 1;
+            if self.policy.nonfinite_streak > 0
+                && self.streak >= self.policy.nonfinite_streak
+            {
+                return Some(GuardReason::NonFiniteStreak { streak: self.streak });
+            }
+            return None;
+        }
+        self.streak = 0;
+        if self.policy.spike_factor > 0.0 {
+            if let Some(ewma) = self.ewma {
+                // a multiplicative threshold only means something on a
+                // positive trend (losses here are MSE / cross-entropy)
+                if self.seen >= self.policy.warmup
+                    && ewma > 0.0
+                    && loss > self.policy.spike_factor * ewma
+                {
+                    return Some(GuardReason::LossSpike { loss, ewma });
+                }
+            }
+        }
+        self.ewma = Some(match self.ewma {
+            Some(e) => self.policy.ewma_alpha * loss
+                + (1.0 - self.policy.ewma_alpha) * e,
+            None => loss,
+        });
+        self.seen += 1;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nf_policy(streak: usize) -> GuardPolicy {
+        GuardPolicy { nonfinite_streak: streak, ..GuardPolicy::default() }
+    }
+
+    #[test]
+    fn disabled_guard_never_trips() {
+        let mut g = GuardState::new(GuardPolicy::default());
+        for _ in 0..100 {
+            assert_eq!(g.observe(f64::NAN), None);
+        }
+    }
+
+    #[test]
+    fn nonfinite_streak_trips_exactly_at_threshold() {
+        let mut g = GuardState::new(nf_policy(3));
+        assert_eq!(g.observe(f64::NAN), None);
+        assert_eq!(g.observe(f64::INFINITY), None);
+        assert_eq!(g.observe(f64::NAN),
+                   Some(GuardReason::NonFiniteStreak { streak: 3 }));
+    }
+
+    #[test]
+    fn finite_loss_resets_the_streak() {
+        let mut g = GuardState::new(nf_policy(2));
+        assert_eq!(g.observe(f64::NAN), None);
+        assert_eq!(g.observe(1.0), None);
+        assert_eq!(g.observe(f64::NAN), None);
+        assert!(g.observe(f64::NAN).is_some());
+    }
+
+    #[test]
+    fn spike_respects_warmup_and_threshold() {
+        let p = GuardPolicy { spike_factor: 2.0, ewma_alpha: 0.5, warmup: 3,
+                              ..GuardPolicy::default() };
+        let mut g = GuardState::new(p);
+        // warmup: even a huge jump does not trip yet
+        assert_eq!(g.observe(1.0), None);
+        assert_eq!(g.observe(100.0), None);
+        assert_eq!(g.observe(1.0), None);
+        // trend is now well under 30; a 100x loss trips
+        let r = g.observe(3000.0);
+        assert!(matches!(r, Some(GuardReason::LossSpike { .. })), "{r:?}");
+    }
+
+    #[test]
+    fn rollback_budget_and_reset() {
+        let p = GuardPolicy { nonfinite_streak: 1, max_rollbacks: 2,
+                              ..GuardPolicy::default() };
+        let mut g = GuardState::new(p);
+        assert!(g.observe(f64::NAN).is_some());
+        assert!(g.can_roll_back());
+        g.rolled_back();
+        // detectors re-armed: one more NaN trips again
+        assert!(g.observe(f64::NAN).is_some());
+        g.rolled_back();
+        assert!(!g.can_roll_back());
+        assert_eq!(g.rollbacks(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_bad_thresholds() {
+        assert!(GuardPolicy::default().validate().is_ok());
+        let bad = GuardPolicy { spike_factor: 0.5, ..GuardPolicy::default() };
+        assert!(bad.validate().is_err());
+        let bad = GuardPolicy { nonfinite_streak: 1, ewma_alpha: 0.0,
+                                ..GuardPolicy::default() };
+        assert!(bad.validate().is_err());
+    }
+}

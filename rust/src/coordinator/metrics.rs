@@ -251,6 +251,13 @@ pub struct TrainMetrics {
     /// attached by the train entry points when the run went through the
     /// form resolver; `None` for embedders that pin the form themselves
     pub tuning: Option<Value>,
+    /// steps whose update was skipped on a non-finite measurement — a
+    /// silently-stalled run must be visible in the summary
+    pub nonfinite_skips: u64,
+    /// guard-triggered rollbacks taken during this run
+    pub rollbacks: u64,
+    /// the checkpoint step this run resumed from (`--resume`)
+    pub resumed_from: Option<u64>,
 }
 
 impl TrainMetrics {
@@ -325,7 +332,12 @@ impl TrainMetrics {
                     ]))
                     .collect())),
             ("phase_quantiles", self.timers.phase_quantiles_json()),
+            ("nonfinite_skips", Value::i(self.nonfinite_skips as i64)),
+            ("rollbacks", Value::i(self.rollbacks as i64)),
         ];
+        if let Some(step) = self.resumed_from {
+            fields.push(("resumed_from", Value::i(step as i64)));
+        }
         if let Some(t) = &self.tuning {
             fields.push(("tuning", t.clone()));
         }

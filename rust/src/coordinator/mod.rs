@@ -10,12 +10,15 @@
 //! [`crate::runtime::tune`] form autotuner; [`rank`] re-derives the Eq.(7) rank schedule in Rust and
 //! cross-checks the manifest; [`eval`] scores classification accuracy via
 //! verbalizer logits; [`counter`] does the Table-2 sampled-element
-//! accounting; [`metrics`] records loss curves and phase breakdowns.
+//! accounting; [`metrics`] records loss curves and phase breakdowns;
+//! [`guard`] is the divergence-detection policy (non-finite streaks, EWMA
+//! loss spikes) behind automatic rollback — see docs/robustness.md.
 
 pub mod autotune;
 pub mod counter;
 pub mod eval;
 pub mod generate;
+pub mod guard;
 pub mod metrics;
 pub mod optimizer;
 pub mod probe;
@@ -25,8 +28,9 @@ pub mod step;
 pub mod trainer;
 
 pub use counter::SampleCounter;
+pub use guard::{GuardPolicy, GuardReason, GuardState};
 pub use metrics::{PhaseTimers, TrainMetrics};
 pub use optimizer::{build_optimizer, StepCtx, ZoOptimizer};
 pub use seeds::SeedSchedule;
 pub use step::StepEngine;
-pub use trainer::{TrainOutcome, Trainer};
+pub use trainer::{CheckpointPlan, TrainOutcome, Trainer};

@@ -155,12 +155,30 @@ impl StepEngine {
     /// One complete local step (all sub-perturbations, forward + update) —
     /// the single-process path. Returns the step's (two-point mean) loss;
     /// a non-finite measurement skips the update and aborts the remaining
-    /// sub-perturbations, returning the offending loss (the run records it
-    /// and continues).
+    /// sub-perturbations, returning the offending loss (the run counts the
+    /// skip, emits `step/nonfinite` telemetry, and continues).
     pub fn step(&self, rt: &Runtime, driver: &mut dyn ZoOptimizer,
                 params: &mut ParamStore, batch: &Batch, step: u64,
                 timers: &mut PhaseTimers, counter: &mut SampleCounter)
                 -> Result<f64> {
+        self.step_observed(rt, driver, params, batch, step, timers, counter,
+                           &mut |_, _, _, _| Ok(()))
+    }
+
+    /// [`step`](Self::step) with a write-ahead observer: `observe(step,
+    /// sub, perturb_seed, kappa)` fires after combine/clip and *before*
+    /// the update is applied (`kappa = None` for a non-finite skip), which
+    /// is exactly the ordering a durable journal needs — an observed
+    /// record may be un-applied after a crash (replay re-applies it), but
+    /// an applied update is always journaled. An observer error aborts
+    /// the step before the update runs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_observed(
+        &self, rt: &Runtime, driver: &mut dyn ZoOptimizer,
+        params: &mut ParamStore, batch: &Batch, step: u64,
+        timers: &mut PhaseTimers, counter: &mut SampleCounter,
+        observe: &mut dyn FnMut(u64, u32, u32, Option<f32>) -> Result<()>)
+        -> Result<f64> {
         let q = self.n_sub();
         let mut loss_acc = 0.0f64;
         for sub in 0..q {
@@ -169,10 +187,16 @@ impl StepEngine {
             let (loss, kappa) = self.combine(&fwd);
             // observational only: the tracer reads kappa, never the reverse
             timers.telemetry().counter("step", "kappa", kappa as f64, step as i64);
+            let seed = self.seeds.perturb_seed(step, sub);
             if !loss.is_finite() || !kappa.is_finite() {
+                // surface the skipped update instead of stalling silently
+                timers.telemetry().counter("step", "nonfinite", 1.0, step as i64);
+                timers.telemetry().mark("step", "nonfinite", 0, step as i64);
+                observe(step, sub, seed, None)?;
                 return Ok(loss);
             }
             let kappa = self.clip_kappa(kappa);
+            observe(step, sub, seed, Some(kappa))?;
             self.update_sub(rt, driver, params, batch, step, sub, kappa,
                             timers, counter)?;
             loss_acc += loss;

@@ -13,19 +13,35 @@
 //! [`crate::fleet`]); this type owns the run loop, data plumbing, eval
 //! hooks, and metrics. Every phase is timed (Fig 3b), every random draw
 //! counted (Table 2).
+//!
+//! ## Durability (PR 10)
+//!
+//! With [`with_checkpointing`](Trainer::with_checkpointing) the run keeps a
+//! write-ahead `(step, sub, seed, kappa)` journal
+//! ([`crate::runtime::journal`]) next to its retained, digest-verified
+//! checkpoints: every update is journaled *before* it is applied, so
+//! [`with_resume`](Trainer::with_resume) can reload the newest verifiable
+//! checkpoint and replay the journal tail **update-only** (no forward
+//! passes) to land bitwise on the uninterrupted trajectory. A
+//! [`GuardPolicy`] additionally watches the loss stream and rolls a
+//! diverging run back to the last good checkpoint. See docs/robustness.md.
 
-use anyhow::Result;
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::counter::SampleCounter;
 use crate::coordinator::eval;
+use crate::coordinator::guard::{GuardPolicy, GuardState};
 use crate::coordinator::metrics::{Phase, TrainMetrics};
 use crate::coordinator::optimizer::build_optimizer;
 use crate::coordinator::seeds::SeedSchedule;
 use crate::coordinator::step::StepEngine;
 use crate::data::{Batch, BatchBuilder, Corpus};
 use crate::jsonx::Value;
-use crate::runtime::{ParamStore, Runtime};
+use crate::runtime::journal::plan_replay;
+use crate::runtime::{checkpoint, Journal, JournalEntry, ParamStore, Runtime};
 use crate::telemetry::{Stopwatch, Telemetry};
 
 /// Where training batches come from.
@@ -47,6 +63,17 @@ impl DataSource {
             }
         }
     }
+}
+
+/// Checkpoint cadence + retention for a durable run.
+#[derive(Clone, Debug)]
+pub struct CheckpointPlan {
+    /// checkpoint directory (also holds `journal.bin`)
+    pub dir: PathBuf,
+    /// save every N completed steps (0 = only the guard's step-0 fallback)
+    pub every: u64,
+    /// retained checkpoints (see [`checkpoint::KEEP_DEFAULT`])
+    pub keep: usize,
 }
 
 /// Result of one training run.
@@ -75,6 +102,12 @@ pub struct Trainer<'a> {
     /// autotuner resolution record, forwarded into the outcome's
     /// `summary_json` as the `tuning` block
     pub tuning: Option<Value>,
+    /// durable checkpoint + journal plan (`None` = in-memory run)
+    pub checkpointing: Option<CheckpointPlan>,
+    /// resume from the plan's directory instead of starting fresh
+    pub resume: bool,
+    /// divergence guard thresholds (`Default` = disabled)
+    pub guard: GuardPolicy,
 }
 
 impl<'a> Trainer<'a> {
@@ -87,6 +120,9 @@ impl<'a> Trainer<'a> {
             eval_set: None,
             telemetry: Telemetry::off(),
             tuning: None,
+            checkpointing: None,
+            resume: false,
+            guard: GuardPolicy::default(),
         }
     }
 
@@ -110,6 +146,27 @@ impl<'a> Trainer<'a> {
         self
     }
 
+    /// Checkpoint every `every` completed steps under `dir`, keeping the
+    /// last `keep` checkpoints, and journal every update durably.
+    pub fn with_checkpointing(mut self, dir: impl Into<PathBuf>, every: u64,
+                              keep: usize) -> Self {
+        self.checkpointing = Some(CheckpointPlan { dir: dir.into(), every, keep });
+        self
+    }
+
+    /// Resume from the checkpoint directory: newest verifiable checkpoint,
+    /// then update-only journal replay, then live training.
+    pub fn with_resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
+        self
+    }
+
+    /// Arm the divergence guard (requires a checkpoint plan to roll back to).
+    pub fn with_guard(mut self, guard: GuardPolicy) -> Self {
+        self.guard = guard;
+        self
+    }
+
     pub fn cfg(&self) -> &TrainConfig {
         &self.engine.cfg
     }
@@ -121,8 +178,28 @@ impl<'a> Trainer<'a> {
     /// Run the configured number of steps.
     pub fn run(&mut self, params: &mut ParamStore) -> Result<TrainOutcome> {
         self.engine.cfg.validate()?;
+        self.guard.validate()?;
+        let plan = self.checkpointing.clone();
+        if self.resume {
+            ensure!(plan.is_some(),
+                    "--resume needs a checkpoint directory (with_checkpointing)");
+        }
+        if self.guard.enabled() {
+            ensure!(plan.is_some(),
+                    "the divergence guard needs a checkpoint directory to \
+                     roll back to (with_checkpointing)");
+        }
+        if self.resume || self.guard.enabled() {
+            ensure!(self.engine.cfg.method.statelessly_replayable(),
+                    "method {:?} cannot replay updates from (seed, kappa) \
+                     records; --resume and the divergence guard need a \
+                     statelessly replayable method",
+                    self.engine.cfg.method);
+        }
+
         let engine = self.engine.clone();
         let steps = engine.cfg.steps as u64;
+        let q = engine.n_sub();
         let mut driver = build_optimizer(self.rt, &engine.cfg, &engine.seeds)?;
         let mut metrics = TrainMetrics::default();
         metrics.tuning = self.tuning.clone();
@@ -133,15 +210,128 @@ impl<'a> Trainer<'a> {
         let wall0 = Stopwatch::start();
         let run0 = self.telemetry.now_ns();
 
-        for step in 0..steps {
+        // durable journal: recovered entries drive resume; a fresh run must
+        // not inherit a stale log from an earlier run in the same directory
+        let mut journal: Option<Journal> = None;
+        let mut recovered: Vec<JournalEntry> = Vec::new();
+        if let Some(plan) = &plan {
+            let (mut j, entries) =
+                Journal::open(&plan.dir.join("journal.bin"), engine.cfg.seed)?;
+            if self.resume {
+                recovered = entries;
+            } else if !j.is_empty() {
+                j.truncate_from_step(0)?;
+            }
+            journal = Some(j);
+        }
+
+        // resume: newest verifiable checkpoint, then update-only replay of
+        // the journal tail. A trailing step interrupted mid-write is
+        // truncated and re-run live — its forwards are deterministic, so
+        // the re-run is bitwise identical to what the crash cut short.
+        let mut start_step = 0u64;
+        if self.resume {
+            if let Some(plan) = &plan {
+                let mut ckpt_step = 0u64;
+                if !checkpoint::candidates(&plan.dir).is_empty() {
+                    let (store, step) = checkpoint::load_with_fallback(
+                        &plan.dir, &self.rt.client, &self.rt.manifest)
+                        .with_context(|| format!("resuming from {}",
+                                                 plan.dir.display()))?;
+                    *params = store;
+                    ckpt_step = step;
+                }
+                let replay = plan_replay(&recovered, ckpt_step, q)?;
+                if let Some(partial) = replay.partial {
+                    if let Some(j) = journal.as_mut() {
+                        j.truncate_from_step(partial)?;
+                    }
+                }
+                let mut replayed = 0u64;
+                for (step, group) in &replay.steps {
+                    let dseed = engine.seeds.data_seed(*step);
+                    let batch = metrics.timers.time(Phase::Sampling,
+                                                    || self.data.batch(dseed, *step));
+                    for e in group {
+                        ensure!(e.perturb_seed
+                                    == engine.seeds.perturb_seed(e.step, e.sub),
+                                "journal step {} sub {} carries seed {:#010x} \
+                                 but this run's schedule derives {:#010x} — \
+                                 the journal belongs to a different run",
+                                e.step, e.sub, e.perturb_seed,
+                                engine.seeds.perturb_seed(e.step, e.sub));
+                        if let Some(kappa) = e.kappa {
+                            engine.update_sub(self.rt, &mut *driver, params,
+                                              &batch, e.step, e.sub, kappa,
+                                              &mut metrics.timers, &mut counter)?;
+                        }
+                        replayed += 1;
+                    }
+                }
+                start_step = replay.partial
+                    .or_else(|| replay.steps.last().map(|(s, _)| s + 1))
+                    .unwrap_or(ckpt_step);
+                metrics.resumed_from = Some(ckpt_step);
+                self.telemetry.counter("resume", "replayed", replayed as f64,
+                                       start_step as i64);
+                self.telemetry.mark("resume", "resumed", 0, start_step as i64);
+            }
+        }
+
+        // an armed guard always has somewhere to roll back to: publish the
+        // initial params as a step-0 checkpoint when none exists yet
+        let mut guard = GuardState::new(self.guard);
+        let mut suppress = 0usize;
+        if let Some(plan) = &plan {
+            if self.guard.enabled() && checkpoint::candidates(&plan.dir).is_empty() {
+                checkpoint::save_retained(&plan.dir, &self.rt.manifest, params,
+                                          0, plan.keep)?;
+            }
+        }
+
+        let mut step = start_step;
+        while step < steps {
             metrics.timers.set_span_step(step as i64);
             let step0 = self.telemetry.now_ns();
             let dseed = engine.seeds.data_seed(step);
             let batch = metrics
                 .timers
                 .time(Phase::Sampling, || self.data.batch(dseed, step));
-            let loss = engine.step(self.rt, &mut *driver, params, &batch, step,
-                                   &mut metrics.timers, &mut counter)?;
+            let loss = if suppress > 0 {
+                // post-rollback suppression: measure the loss but journal a
+                // skip instead of updating — the same footprint as a
+                // lockstep non-finite skip, so replay stays exact
+                suppress -= 1;
+                let fwd = engine.forward_sub(self.rt, &mut *driver, params,
+                                             &batch, step, 0,
+                                             &mut metrics.timers, &mut counter)?;
+                let (loss, _) = engine.combine(&fwd);
+                if let Some(j) = journal.as_mut() {
+                    j.append(&JournalEntry {
+                        step,
+                        sub: 0,
+                        perturb_seed: engine.seeds.perturb_seed(step, 0),
+                        kappa: None,
+                    })?;
+                }
+                self.telemetry.counter("guard", "suppressed", 1.0, step as i64);
+                loss
+            } else {
+                engine.step_observed(
+                    self.rt, &mut *driver, params, &batch, step,
+                    &mut metrics.timers, &mut counter,
+                    &mut |s, sub, seed, kappa| {
+                        if let Some(j) = journal.as_mut() {
+                            j.append(&JournalEntry {
+                                step: s,
+                                sub,
+                                perturb_seed: seed,
+                                kappa,
+                            })?;
+                        }
+                        Ok(())
+                    })?
+            };
             self.telemetry.span_from("step", "step", step0, 0, step as i64);
             self.telemetry.counter("step", "loss", loss, step as i64);
             if loss.is_finite() {
@@ -153,6 +343,33 @@ impl<'a> Trainer<'a> {
             if let Some(cb) = self.on_step.as_mut() {
                 cb(step, loss);
             }
+
+            if let Some(reason) = guard.observe(loss) {
+                ensure!(guard.can_roll_back(),
+                        "divergence guard tripped at step {step} ({reason}) \
+                         with the rollback budget ({}) exhausted",
+                        self.guard.max_rollbacks);
+                if let Some(plan) = &plan {
+                    self.telemetry.mark("guard", "rollback", 0, step as i64);
+                    self.telemetry.counter("guard", "rollback", 1.0, step as i64);
+                    let (store, good_step) = checkpoint::load_with_fallback(
+                        &plan.dir, &self.rt.client, &self.rt.manifest)
+                        .with_context(|| format!(
+                            "guard rollback at step {step} ({reason})"))?;
+                    *params = store;
+                    if let Some(j) = journal.as_mut() {
+                        j.truncate_from_step(good_step)?;
+                    }
+                    // stateless methods rebuild optimizer state from seeds
+                    driver = build_optimizer(self.rt, &engine.cfg, &engine.seeds)?;
+                    guard.rolled_back();
+                    metrics.rollbacks += 1;
+                    suppress = self.guard.skip_steps;
+                    step = good_step;
+                    continue;
+                }
+            }
+
             if engine.cfg.eval_every > 0
                 && (step + 1) % engine.cfg.eval_every as u64 == 0
             {
@@ -161,6 +378,27 @@ impl<'a> Trainer<'a> {
                     metrics.evals.push((step + 1, acc));
                 }
             }
+
+            if let Some(plan) = &plan {
+                if plan.every > 0 && (step + 1) % plan.every == 0 {
+                    checkpoint::save_retained(&plan.dir, &self.rt.manifest,
+                                              params, step + 1, plan.keep)?;
+                    // prune the journal to the *oldest retained* checkpoint,
+                    // not the newest: if the newest descriptor is later found
+                    // corrupt, the fallback checkpoint still needs its replay
+                    // tail in the journal
+                    if let Some(j) = journal.as_mut() {
+                        let floor = checkpoint::list_retained(&plan.dir)
+                            .last()
+                            .map(|&(s, _)| s)
+                            .unwrap_or(step + 1);
+                        j.retain_from_step(floor)?;
+                    }
+                    self.telemetry.mark("checkpoint", "saved", 0,
+                                        (step + 1) as i64);
+                }
+            }
+            step += 1;
         }
         // final eval, unless the periodic hook already scored the last step
         let evaled_at_end = engine.cfg.eval_every > 0
@@ -174,6 +412,7 @@ impl<'a> Trainer<'a> {
         metrics.timers.set_span_step(-1);
         self.telemetry.span_from("run", "train", run0, 0, -1);
         metrics.wall_seconds = wall0.elapsed_secs();
+        metrics.nonfinite_skips = skipped;
         Ok(TrainOutcome {
             metrics,
             counter,

@@ -34,9 +34,12 @@ use anyhow::{bail, ensure, Result};
 
 use crate::config::{FleetConfig, FormPolicy, StragglerPolicy, TrainConfig};
 use crate::coordinator::autotune;
+use crate::coordinator::guard::{GuardPolicy, GuardState};
 use crate::coordinator::metrics::TrainMetrics;
 use crate::coordinator::optimizer::ForwardOut;
 use crate::coordinator::step::StepEngine;
+use crate::runtime::journal::{self, Journal, JournalEntry};
+use crate::runtime::checkpoint;
 use crate::telemetry::{secs_to_ns, Stopwatch, Telemetry};
 
 use super::metrics::FleetMetrics;
@@ -119,6 +122,11 @@ pub struct FleetTrainer {
     /// Spans and marks are recorded from values the drive loop already
     /// holds — the tracer never sits on a gather's wait path.
     pub telemetry: Telemetry,
+    /// restart from the coordinator journal (+ newest verifiable
+    /// checkpoint) in `checkpoint_dir` instead of starting fresh
+    pub resume: bool,
+    /// divergence guard thresholds (`Default` = disabled)
+    pub guard: GuardPolicy,
 }
 
 impl FleetTrainer {
@@ -136,7 +144,24 @@ impl FleetTrainer {
             kill_plan: None,
             replica_factory: None,
             telemetry: Telemetry::off(),
+            resume: false,
+            guard: GuardPolicy::default(),
         }
+    }
+
+    /// Restart from the coordinator journal in `checkpoint_dir`: the
+    /// staffed workers receive a catch-up (newest verifiable checkpoint +
+    /// the journaled tail) before the first ticket.
+    pub fn with_resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
+        self
+    }
+
+    /// Arm the divergence guard (needs a published checkpoint to roll
+    /// back to — `--checkpoint-dir` for real workers).
+    pub fn with_guard(mut self, guard: GuardPolicy) -> Self {
+        self.guard = guard;
+        self
     }
 
     pub fn with_transport(mut self, transport: Transport) -> Self {
@@ -175,6 +200,18 @@ impl FleetTrainer {
     pub fn run(&mut self) -> Result<FleetOutcome> {
         self.cfg.validate()?;
         self.fleet.validate(&self.cfg)?;
+        self.guard.validate()?;
+        if self.guard.enabled() {
+            ensure!(self.checkpoint_dir.is_some()
+                        || self.replica_factory.is_some(),
+                    "the fleet divergence guard needs --checkpoint-dir: a \
+                     published checkpoint is the rollback target");
+        }
+        if self.resume {
+            ensure!(self.checkpoint_dir.is_some(),
+                    "fleet resume needs --checkpoint-dir (the coordinator \
+                     journal lives there)");
+        }
         // resolve the form policy once for the whole fleet, before the
         // engine or any worker exists: the pinned decision rides the
         // handshake (loopback cfg clones / TCP AckInfo), so every replica
@@ -215,6 +252,64 @@ impl FleetTrainer {
         let checkpoint_dir = self.checkpoint_dir.clone();
         let telemetry = self.telemetry.clone();
 
+        // durable coordinator state: open (or create) the journal next to
+        // the published checkpoints, and on resume turn the recovered
+        // records into a prefilled catch-up log the staffed workers replay
+        let q = engine.n_sub();
+        let mut dur = Durability {
+            journal: None,
+            start_step: 0,
+            log: Vec::new(),
+            last_checkpoint: None,
+            announce: false,
+            resumed_from: None,
+            guard: self.guard,
+        };
+        if let Some(ckpt_dir) = &checkpoint_dir {
+            let (mut j, recovered) =
+                Journal::open(&ckpt_dir.join("journal.bin"), seed)?;
+            if self.resume {
+                let ckpt = checkpoint::latest_verified(ckpt_dir)
+                    .ok()
+                    .map(|r| r.step);
+                let floor = ckpt.unwrap_or(0);
+                let replay = journal::plan_replay(&recovered, floor, q)?;
+                if let Some(partial) = replay.partial {
+                    // a step interrupted mid-journal is re-run live; its
+                    // rounds are deterministic, so the re-run is bitwise
+                    // identical to what the crash cut short
+                    j.truncate_from_step(partial)?;
+                }
+                for (_, group) in &replay.steps {
+                    for e in group {
+                        ensure!(e.perturb_seed
+                                    == engine.seeds.perturb_seed(e.step, e.sub),
+                                "journal step {} sub {} carries seed {:#010x} \
+                                 but this run's schedule derives {:#010x} — \
+                                 the journal belongs to a different run",
+                                e.step, e.sub, e.perturb_seed,
+                                engine.seeds.perturb_seed(e.step, e.sub));
+                        dur.log.push(LogEntry {
+                            step: e.step,
+                            sub: e.sub,
+                            perturb_seed: e.perturb_seed,
+                            kappa: e.kappa,
+                        });
+                    }
+                }
+                dur.start_step = replay.partial
+                    .or_else(|| replay.steps.last().map(|(s, _)| s + 1))
+                    .unwrap_or(floor);
+                dur.last_checkpoint = ckpt;
+                dur.announce = ckpt.is_some() || !dur.log.is_empty();
+                dur.resumed_from = Some(floor);
+            } else if !j.is_empty() {
+                // a fresh run must not inherit a stale log
+                j.truncate_from_step(0)?;
+            }
+            dur.journal = Some(j);
+        }
+
         let mut outcome = match self.transport.clone() {
             Transport::Loopback => std::thread::scope(|scope| {
                 let (mut hub, hub_tx) = LoopbackHub::new(workers);
@@ -246,7 +341,8 @@ impl FleetTrainer {
                     spawn_worker(w);
                 }
                 let out = drive(&engine, &fleet_cfg, &mut hub, &mut on_step,
-                                &mut spawn_worker, &mut kill_plan, &telemetry);
+                                &mut spawn_worker, &mut kill_plan, &telemetry,
+                                &mut dur);
                 // dropping the hub drops every command sender: workers
                 // unblock, see a closed link, and exit so the scope can
                 // join instead of hanging on error paths
@@ -261,12 +357,26 @@ impl FleetTrainer {
                 // refilled by the worker process dialing back in
                 let mut no_respawn = |_w: usize| {};
                 drive(&engine, &fleet_cfg, &mut hub, &mut on_step,
-                      &mut no_respawn, &mut kill_plan, &telemetry)
+                      &mut no_respawn, &mut kill_plan, &telemetry, &mut dur)
             }
         }?;
         outcome.metrics.tuning = tuning;
         Ok(outcome)
     }
+}
+
+/// Coordinator-side durability state prepared by [`FleetTrainer::run`]
+/// before the drive loop starts: the open journal, and (on resume) the
+/// prefilled catch-up log plus where live training picks up.
+struct Durability {
+    journal: Option<Journal>,
+    start_step: u64,
+    log: Vec<LogEntry>,
+    last_checkpoint: Option<u64>,
+    /// broadcast a catch-up to the freshly staffed fleet (resume path)
+    announce: bool,
+    resumed_from: Option<u64>,
+    guard: GuardPolicy,
 }
 
 /// Drive-loop state: membership, the catch-up log, and fleet accounting.
@@ -290,6 +400,8 @@ struct Drive<'a> {
     /// full run trace (never pruned; returned in [`FleetOutcome`])
     trace: Vec<LogEntry>,
     last_checkpoint: Option<u64>,
+    /// durable write-ahead journal mirroring `log` (None = in-memory run)
+    journal: Option<Journal>,
     fleet: FleetMetrics,
     /// tracer handle (off by default; observational only)
     tel: Telemetry,
@@ -535,6 +647,17 @@ impl Drive<'_> {
             perturb_seed: ticket.perturb_seed,
             kappa,
         };
+        // WAL ordering: the record is durable before any worker is told to
+        // apply it — a coordinator restart can always re-drive whatever the
+        // fleet may have applied
+        if let Some(j) = self.journal.as_mut() {
+            j.append(&JournalEntry {
+                step: entry.step,
+                sub: entry.sub,
+                perturb_seed: entry.perturb_seed,
+                kappa: entry.kappa,
+            })?;
+        }
         self.log.push(entry);
         self.trace.push(entry);
         let n = self.workers();
@@ -615,8 +738,16 @@ impl Drive<'_> {
                             if worker == from && worker == target
                                 && step == step_done =>
                         {
+                            // prune the journal only to the *previous*
+                            // checkpoint: if the new one is later found
+                            // corrupt, resume falls back to the previous one
+                            // and still needs its replay tail durably
+                            let prev = self.last_checkpoint.unwrap_or(0);
                             self.last_checkpoint = Some(step_done);
                             self.log.retain(|e| e.step >= step_done);
+                            if let Some(j) = self.journal.as_mut() {
+                                j.retain_from_step(prev.min(step_done))?;
+                            }
                             self.fleet.checkpoints += 1;
                             self.tel.mark("fleet", "checkpoint", 0,
                                           step_done as i64);
@@ -767,11 +898,16 @@ impl Drive<'_> {
 fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
          on_step: &mut Option<Box<dyn FnMut(u64, f64) + Send>>,
          respawn: &mut dyn FnMut(usize),
-         kill_plan: &mut Option<KillPlan>, tel: &Telemetry)
+         kill_plan: &mut Option<KillPlan>, tel: &Telemetry,
+         dur: &mut Durability)
          -> Result<FleetOutcome> {
     let workers = fc.workers;
     let steps = engine.cfg.steps as u64;
     let q = engine.n_sub();
+    // on resume the catch-up log is prefilled from the journal so freshly
+    // staffed workers replay it; the trace starts from the same prefix so a
+    // resumed run's trace is bitwise-identical to an uninterrupted one
+    let prefilled = std::mem::take(&mut dur.log);
     let mut d = Drive {
         fc,
         hub,
@@ -782,19 +918,47 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
         pending_drops: 0,
         last_failure: None,
         last_event: Stopwatch::start(),
-        log: Vec::new(),
-        trace: Vec::new(),
-        last_checkpoint: None,
+        log: prefilled.clone(),
+        trace: prefilled,
+        last_checkpoint: dur.last_checkpoint,
+        journal: dur.journal.take(),
         fleet: FleetMetrics::new(workers),
         tel: tel.clone(),
     };
     let mut metrics = TrainMetrics::default();
+    metrics.resumed_from = dur.resumed_from;
     let mut skipped = 0u64;
     let wall0 = Stopwatch::start();
     let run0 = tel.now_ns();
     d.staff()?;
+    if dur.announce {
+        // drive the staffed fleet from init up to where the journal left
+        // off: load the last verified checkpoint (if any) and replay the
+        // durable (seed, kappa) tail
+        let cmd = Command::CatchUp(CatchUp {
+            checkpoint_step: d.last_checkpoint,
+            entries: d.log.clone(),
+        });
+        for w in 0..workers {
+            if d.alive.get(w).copied().unwrap_or(false) {
+                d.try_send(w, &cmd);
+            }
+        }
+        d.tel.mark("fleet", "resume", 0, dur.start_step as i64);
+        d.tel.counter("resume", "replayed", d.log.len() as f64,
+                      dur.start_step as i64);
+    }
+    // an armed guard always has somewhere to roll back to: publish the
+    // fleet's current params as a checkpoint when none exists yet (per-link
+    // ordering guarantees the catch-up replay lands before the save)
+    let mut guard = GuardState::new(dur.guard);
+    let mut suppress = 0usize;
+    if dur.guard.enabled() && d.last_checkpoint.is_none() {
+        d.checkpoint_round(dur.start_step)?;
+    }
 
-    for step in 0..steps {
+    let mut step = dur.start_step;
+    while step < steps {
         if let Some(kill) = kill_plan.as_mut() {
             for w in kill(step) {
                 // chaos injection: the Left arrives through the normal poll
@@ -805,6 +969,32 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
             }
         }
         let step0 = tel.now_ns();
+        let loss = if suppress > 0 {
+            // post-rollback suppression: measure the loss but broadcast a
+            // lockstep skip instead of an update — the same journal and
+            // trace footprint as a non-finite skip, so replay stays exact
+            suppress -= 1;
+            let ticket = Ticket {
+                step,
+                sub: 0,
+                perturb_seed: engine.seeds.perturb_seed(step, 0),
+            };
+            let measured = match d.forward_round(ticket)? {
+                Some((pairs, fwd_times)) => {
+                    d.fleet.record_forward_round(&fwd_times);
+                    d.emit_round_spans("forward", &fwd_times, step);
+                    let (f_plus, f_minus) = aggregate_two_point(&pairs);
+                    engine.combine(&ForwardOut::TwoPoint { f_plus, f_minus }).0
+                }
+                None => {
+                    d.fleet.degraded_rounds += 1;
+                    f64::NAN
+                }
+            };
+            d.ack_round(ticket, None)?;
+            d.tel.counter("guard", "suppressed", 1.0, step as i64);
+            measured
+        } else {
         let mut loss_acc = 0.0f64;
         let mut early: Option<f64> = None;
         for sub in 0..q {
@@ -847,9 +1037,10 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
         // same semantics as the single-process engine: a non-finite
         // measurement aborts the remaining sub-perturbations and the run
         // records that loss as-is
-        let loss = match early {
+        match early {
             Some(l) => l,
             None => loss_acc / q as f64,
+        }
         };
         tel.span_from("step", "step", step0, 0, step as i64);
         tel.counter("step", "loss", loss, step as i64);
@@ -862,6 +1053,42 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
         if let Some(cb) = on_step.as_mut() {
             cb(step, loss);
         }
+
+        if let Some(reason) = guard.observe(loss) {
+            ensure!(guard.can_roll_back(),
+                    "divergence guard tripped at step {step} ({reason}) \
+                     with the rollback budget ({}) exhausted",
+                    dur.guard.max_rollbacks);
+            let Some(good) = d.last_checkpoint else {
+                bail!("divergence guard tripped at step {step} ({reason}) \
+                       but no checkpoint has been published to roll back to")
+            };
+            d.tel.mark("guard", "rollback", 0, step as i64);
+            d.tel.counter("guard", "rollback", 1.0, step as i64);
+            // rewind the durable record first, then converge every live
+            // replica on (checkpoint, replayed tail) — the same state the
+            // coordinator resumes from
+            if let Some(j) = d.journal.as_mut() {
+                j.truncate_from_step(good)?;
+            }
+            d.log.retain(|e| e.step < good);
+            d.trace.retain(|e| e.step < good);
+            let cmd = Command::CatchUp(CatchUp {
+                checkpoint_step: Some(good),
+                entries: d.log.clone(),
+            });
+            for w in 0..workers {
+                if d.alive.get(w).copied().unwrap_or(false) {
+                    d.try_send(w, &cmd);
+                }
+            }
+            guard.rolled_back();
+            metrics.rollbacks += 1;
+            suppress = dur.guard.skip_steps;
+            step = good;
+            continue;
+        }
+
         if fc.checkpoint_every > 0
             && (step + 1) % fc.checkpoint_every as u64 == 0
         {
@@ -874,6 +1101,7 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
                 metrics.evals.push((step + 1, acc));
             }
         }
+        step += 1;
     }
     // final eval, unless the periodic hook already scored the last step
     // (the answering replica returns NaN when it carries no eval set, which
@@ -894,6 +1122,7 @@ fn drive(engine: &StepEngine, fc: &FleetConfig, hub: &mut dyn Hub,
     d.fleet.comm.frames_up = ws.frames_up;
     tel.span_from("run", "train-dp", run0, 0, -1);
     metrics.wall_seconds = wall0.elapsed_secs();
+    metrics.nonfinite_skips = skipped;
     let state_bytes = workers_out.first().map(|r| r.state_bytes).unwrap_or(0);
     Ok(FleetOutcome {
         metrics,

@@ -115,11 +115,10 @@ fn write_sim_params(path: &Path, step: u64, params: &[f32]) -> Result<()> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating {}", dir.display()))?;
     }
-    // temp + rename: a reader (rejoining worker) never sees a half write
-    let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, params_bytes(step, params))
-        .with_context(|| format!("writing {}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
+    // temp + rename + fsync via the durable seam: a reader (rejoining
+    // worker) never sees a half write, and a published checkpoint a
+    // rollback may land on survives a crash
+    crate::runtime::durable::write_atomic(path, &params_bytes(step, params))
         .with_context(|| format!("committing {}", path.display()))?;
     Ok(())
 }
@@ -144,6 +143,10 @@ pub struct SimReplica {
     /// fail the forward of these (step, sub) tickets — a protocol-level
     /// crash the coordinator's fault handling must absorb
     die_at: Vec<(u64, u32)>,
+    /// answer these (step, sub) forwards with NaN exactly once — a
+    /// transient numeric fault the divergence guard must absorb; consumed
+    /// on first hit so the post-rollback re-run measures clean
+    nan_once_at: Vec<(u64, u32)>,
 }
 
 impl SimReplica {
@@ -160,6 +163,7 @@ impl SimReplica {
             checkpoint_path: None,
             save_to: None,
             die_at: Vec::new(),
+            nan_once_at: Vec::new(),
         }
     }
 
@@ -181,6 +185,13 @@ impl SimReplica {
         self.die_at = plan;
         self
     }
+
+    /// Inject transient NaNs: the forward of each listed (step, sub)
+    /// measures (NaN, NaN) once, then the entry is spent.
+    pub fn with_nan_once_at(mut self, plan: Vec<(u64, u32)>) -> Self {
+        self.nan_once_at = plan;
+        self
+    }
 }
 
 impl Replica for SimReplica {
@@ -188,6 +199,12 @@ impl Replica for SimReplica {
         if self.die_at.contains(&(step, sub)) {
             bail!("sim worker {}: injected crash at step {step} sub {sub}",
                   self.worker);
+        }
+        if let Some(pos) =
+            self.nan_once_at.iter().position(|&(s, u)| s == step && u == sub)
+        {
+            self.nan_once_at.remove(pos);
+            return Ok((f32::NAN, f32::NAN));
         }
         let z = sim_z(&self.engine, step, sub, self.dim);
         let target = shard_target(&self.engine, step, self.worker as u32,

@@ -1,13 +1,14 @@
 //! `tezo` — the L3 coordinator CLI.
 //!
 //! Subcommands:
-//!   train          fine-tune one task with one method
-//!   train-dp       seed-synchronized data-parallel fine-tuning (fleet)
-//!   sweep          run the Table 3/4/5 method x task grids (or --list for Table 6)
-//!   memory-report  render Table 7 / Table 9 / Fig 1(c) from the memory model
-//!   rank-probe     recompute the Eq.(7) rank schedule and check the manifest
-//!   inspect        artifact inventory + compile times for a config
-//!   trace-report   summarize a `--telemetry-dir` trace (phases, stragglers)
+//!   train             fine-tune one task with one method
+//!   train-dp          seed-synchronized data-parallel fine-tuning (fleet)
+//!   sweep             run the Table 3/4/5 method x task grids (or --list for Table 6)
+//!   checkpoint-verify verify every checkpoint descriptor + bin in a directory
+//!   memory-report     render Table 7 / Table 9 / Fig 1(c) from the memory model
+//!   rank-probe        recompute the Eq.(7) rank schedule and check the manifest
+//!   inspect           artifact inventory + compile times for a config
+//!   trace-report      summarize a `--telemetry-dir` trace (phases, stragglers)
 
 use std::path::PathBuf;
 
@@ -16,7 +17,7 @@ use anyhow::{bail, Result};
 use tezo::clix::{self, ArgSpec};
 use tezo::config::{search_space, FleetConfig, FormPolicy, Method,
                    StragglerPolicy, TrainConfig, FORWARD_FORM_ARG_DEFAULT};
-use tezo::coordinator::{autotune, rank};
+use tezo::coordinator::{autotune, rank, GuardPolicy};
 use tezo::coordinator::trainer::{DataSource, Trainer};
 use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
 use tezo::fleet::{task_job_factory, FleetTrainer, JobSpec, Transport};
@@ -40,6 +41,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "train-dp" => cmd_train_dp(rest),
         "sweep" => cmd_sweep(rest),
+        "checkpoint-verify" => cmd_checkpoint_verify(rest),
         "memory-report" => cmd_memory(rest),
         "rank-probe" => cmd_rank_probe(rest),
         "probe-variance" => cmd_probe_variance(rest),
@@ -65,6 +67,7 @@ fn print_help() {
          \x20 train          fine-tune one synthetic task with one method\n\
          \x20 train-dp       seed-synchronized data-parallel training (--workers N)\n\
          \x20 sweep          Table 3/4/5 grids; --list prints Table 6\n\
+         \x20 checkpoint-verify  verify checkpoint digests + lengths in a dir\n\
          \x20 memory-report  Table 7 / Table 9 / Fig 1(c) (analytic model)\n\
          \x20 rank-probe     recompute Eq.(7) ranks, verify vs manifest\n\
          \x20 probe-variance kappa-distribution diagnostics per ZO method\n\
@@ -100,6 +103,16 @@ const TRAIN_SPECS: &[ArgSpec] = &[
                  "two-point loss form: auto (tuned per shape) | implicit | materialize"),
     ArgSpec::opt("save-to", "", "write a parameter checkpoint here at the end"),
     ArgSpec::opt("init-from", "", "initialize parameters from this checkpoint"),
+    ArgSpec::opt("checkpoint-dir", "", "durable checkpoint + journal directory"),
+    ArgSpec::opt("checkpoint-every", "0", "save a verified checkpoint every N steps (0 = off)"),
+    ArgSpec::opt("checkpoint-keep", "2", "retained checkpoints (keep-last-K)"),
+    ArgSpec::switch("resume", "resume from --checkpoint-dir: newest verified checkpoint + journal replay"),
+    ArgSpec::opt("guard-nonfinite", "0", "guard: roll back after N consecutive non-finite losses (0 = off)"),
+    ArgSpec::opt("guard-spike", "0", "guard: roll back when loss > factor x EWMA trend (0 = off)"),
+    ArgSpec::opt("guard-ewma-alpha", "0.1", "guard: EWMA smoothing in (0, 1]"),
+    ArgSpec::opt("guard-warmup", "8", "guard: finite losses before spike detection arms"),
+    ArgSpec::opt("guard-max-rollbacks", "3", "guard: rollback budget before aborting"),
+    ArgSpec::opt("guard-skip-steps", "0", "guard: updates suppressed (journaled as skips) after a rollback"),
     ArgSpec::opt("telemetry-dir", "", "write trace.jsonl + metrics.prom here"),
     ArgSpec::switch("quiet", "suppress per-step output"),
     ArgSpec::switch("help", "show help"),
@@ -127,6 +140,21 @@ fn parse_train_cfg(args: &clix::Args) -> Result<TrainConfig> {
     cfg.forward_form = FormPolicy::parse(args.get_str("forward-form")?)?;
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Parse the `--guard-*` flags shared by `train` and `train-dp` into a
+/// [`GuardPolicy`] (the all-zero default leaves the guard disabled).
+fn parse_guard(args: &clix::Args) -> Result<GuardPolicy> {
+    let guard = GuardPolicy {
+        nonfinite_streak: args.get_usize("guard-nonfinite")?,
+        spike_factor: args.get_str("guard-spike")?.parse::<f64>()?,
+        ewma_alpha: args.get_str("guard-ewma-alpha")?.parse::<f64>()?,
+        warmup: args.get_usize("guard-warmup")?,
+        max_rollbacks: args.get_usize("guard-max-rollbacks")?,
+        skip_steps: args.get_usize("guard-skip-steps")?,
+    };
+    guard.validate()?;
+    Ok(guard)
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
@@ -183,7 +211,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let mut trainer = Trainer::new(&rt, cfg.clone(), DataSource::Task(builder))
         .with_eval(eval_batches, label_tokens)
         .with_telemetry(tel.clone())
-        .with_tuning(resolution.summary_json());
+        .with_tuning(resolution.summary_json())
+        .with_resume(args.has("resume"))
+        .with_guard(parse_guard(&args)?);
+    if let Some(dir) = args.get("checkpoint-dir") {
+        if !dir.is_empty() {
+            trainer = trainer.with_checkpointing(
+                PathBuf::from(dir),
+                args.get_u64("checkpoint-every")?,
+                args.get_usize("checkpoint-keep")?);
+        }
+    }
     if !quiet {
         trainer.on_step = Some(Box::new(|step, loss| {
             if step % 20 == 0 {
@@ -194,6 +232,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let outcome = trainer.run(&mut params)?;
 
     println!("\n== {} on {} ({} steps) ==", method.name(), args.get_str("task")?, cfg.steps);
+    if let Some(step) = outcome.metrics.resumed_from {
+        println!("resumed from checkpoint @ step {step} (journal replay)");
+    }
+    if outcome.metrics.rollbacks > 0 {
+        println!("divergence guard: {} rollback(s)", outcome.metrics.rollbacks);
+    }
     println!("loss: {:.4} -> {:.4}",
              outcome.metrics.initial_loss_avg(20), outcome.metrics.final_loss_avg(20));
     if let Some((step, acc)) = outcome.metrics.evals.last() {
@@ -319,7 +363,14 @@ const TRAIN_DP_SPECS: &[ArgSpec] = &[
     ArgSpec::opt("straggler", "wait", "round-deadline policy: wait|drop"),
     ArgSpec::opt("straggler-timeout-ms", "30000", "drop policy: round deadline in ms"),
     ArgSpec::opt("checkpoint-every", "0", "publish a catch-up checkpoint every N steps (0 = off)"),
-    ArgSpec::opt("checkpoint-dir", "", "where step checkpoints are published/loaded"),
+    ArgSpec::opt("checkpoint-dir", "", "where step checkpoints are published/loaded (also the coordinator journal)"),
+    ArgSpec::switch("resume", "restart from the coordinator journal in --checkpoint-dir"),
+    ArgSpec::opt("guard-nonfinite", "0", "guard: roll back after N consecutive non-finite losses (0 = off)"),
+    ArgSpec::opt("guard-spike", "0", "guard: roll back when loss > factor x EWMA trend (0 = off)"),
+    ArgSpec::opt("guard-ewma-alpha", "0.1", "guard: EWMA smoothing in (0, 1]"),
+    ArgSpec::opt("guard-warmup", "8", "guard: finite losses before spike detection arms"),
+    ArgSpec::opt("guard-max-rollbacks", "3", "guard: rollback budget before aborting"),
+    ArgSpec::opt("guard-skip-steps", "0", "guard: updates suppressed (journaled as skips) after a rollback"),
     ArgSpec::opt("max-restarts", "0", "worker deaths tolerated before aborting (0 = fail fast)"),
     ArgSpec::opt("reconnect-attempts", "10", "worker mode: dial attempts per reconnect"),
     ArgSpec::opt("reconnect-backoff-ms", "100", "worker mode: base backoff between attempts"),
@@ -406,7 +457,9 @@ fn cmd_train_dp(argv: &[String]) -> Result<()> {
             k_shot: k_shot as u32,
             eval_n: eval_n as u32,
         })
-        .with_telemetry(tel.clone());
+        .with_telemetry(tel.clone())
+        .with_resume(args.has("resume"))
+        .with_guard(parse_guard(&args)?);
     if let Some(d) = checkpoint_dir {
         trainer = trainer.with_checkpoint_dir(d);
     }
@@ -421,6 +474,12 @@ fn cmd_train_dp(argv: &[String]) -> Result<()> {
 
     println!("\n== {} on {} x{} workers ({} steps) ==",
              method.name(), args.get_str("task")?, fleet.workers, cfg.steps);
+    if let Some(step) = outcome.metrics.resumed_from {
+        println!("resumed from checkpoint @ step {step} (journal replay)");
+    }
+    if outcome.metrics.rollbacks > 0 {
+        println!("divergence guard: {} rollback(s)", outcome.metrics.rollbacks);
+    }
     println!("loss: {:.4} -> {:.4}",
              outcome.metrics.initial_loss_avg(20),
              outcome.metrics.final_loss_avg(20));
@@ -474,6 +533,57 @@ fn cmd_train_dp(argv: &[String]) -> Result<()> {
         write_run_telemetry(d, &tel, "tezo train-dp",
                             &outcome.metrics.timers, Some(&outcome.fleet))?;
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint-verify
+// ---------------------------------------------------------------------------
+
+const CKPT_VERIFY_SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("dir", "", "checkpoint directory to verify"),
+    ArgSpec::switch("help", "show help"),
+];
+
+fn cmd_checkpoint_verify(argv: &[String]) -> Result<()> {
+    let args = clix::parse(argv, CKPT_VERIFY_SPECS)?;
+    if args.has("help") {
+        print!("{}", clix::render_help(
+            "checkpoint-verify",
+            "verify every checkpoint descriptor + bin in a directory",
+            CKPT_VERIFY_SPECS));
+        return Ok(());
+    }
+    let dir = args.get_str("dir")?;
+    if dir.is_empty() {
+        bail!("checkpoint-verify needs --dir <checkpoint directory>");
+    }
+    let dir = std::path::Path::new(dir);
+    let cands = tezo::runtime::checkpoint::candidates(dir);
+    if cands.is_empty() {
+        bail!("{}: no checkpoint descriptors found", dir.display());
+    }
+    println!("== checkpoint-verify: {} ({} descriptor(s)) ==",
+             dir.display(), cands.len());
+    let mut bad = 0usize;
+    for name in &cands {
+        match tezo::runtime::checkpoint::verify_doc(dir, name) {
+            Ok(rep) => {
+                println!("  {name}: ok  step {}  config {}  {} bins \
+                          ({} digested)  {} bytes",
+                         rep.step, rep.config, rep.n_bins, rep.digested,
+                         rep.total_bytes);
+            }
+            Err(e) => {
+                bad += 1;
+                println!("  {name}: CORRUPT — {e:#}");
+            }
+        }
+    }
+    if bad > 0 {
+        bail!("{bad} of {} descriptor(s) failed verification", cands.len());
+    }
+    println!("all descriptors verified");
     Ok(())
 }
 

@@ -19,6 +19,6 @@ pub mod tables;
 pub mod usage;
 
 pub use layout::{llama, opt, ModelLayout};
-pub use usage::{forward_transient_bytes, memory_usage, memory_usage_form,
-                memory_usage_policy, resolve_form_policy,
-                MemoryBreakdown};
+pub use usage::{durability_footprint_bytes, forward_transient_bytes,
+                memory_usage, memory_usage_form, memory_usage_policy,
+                resolve_form_policy, MemoryBreakdown};

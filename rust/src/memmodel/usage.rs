@@ -232,6 +232,19 @@ pub fn memory_usage_policy(l: &ModelLayout, method: Method, batch: u64,
     (form, memory_usage_form(l, method, batch, form))
 }
 
+/// Host-side disk footprint of the durability machinery (docs/robustness.md):
+/// `keep` retained fp32 checkpoints plus the journal's retention window —
+/// between prunes at most `checkpoint_every` steps of `q`-sub frames
+/// survive (`retain_from_step` trims the rest at each save). Disk, not
+/// device memory — sized with the same layout arithmetic as the tables but
+/// never folded into the calibrated Table 7/9 totals.
+pub fn durability_footprint_bytes(l: &ModelLayout, q: u64,
+                                  checkpoint_every: u64, keep: u64) -> u64 {
+    let ckpt = keep * l.n_params() as u64 * 4; // checkpoint bins are fp32 LE
+    let window = checkpoint_every.max(1) * q;
+    ckpt + crate::runtime::journal::journal_bytes(window)
+}
+
 /// Zero-shot (inference-only) baseline.
 pub fn zero_shot(l: &ModelLayout) -> MemoryBreakdown {
     MemoryBreakdown {
@@ -373,6 +386,20 @@ mod tests {
         assert_eq!(b.total(),
                    memory_usage_form(&l, Method::Tezo, 16,
                                      ForwardForm::Implicit).total());
+    }
+
+    #[test]
+    fn durability_footprint_is_checkpoint_dominated() {
+        let l = llama("7b");
+        // two retained fp32 checkpoints = 8 bytes/param; the journal window
+        // (100 steps x 1 sub, 33 B/frame + 20 B header) is noise next to it
+        let bytes = durability_footprint_bytes(&l, 1, 100, 2);
+        let ckpt = 2 * l.n_params() as u64 * 4;
+        assert!(bytes > ckpt);
+        assert!((bytes - ckpt) < 4 * 1024, "journal window {}", bytes - ckpt);
+        // the journal term scales with q and the prune cadence
+        let wider = durability_footprint_bytes(&l, 4, 100, 2);
+        assert_eq!(wider - ckpt, (bytes - ckpt - 20) * 4 + 20);
     }
 
     #[test]

@@ -2,6 +2,21 @@
 //! as raw `.bin` files + a JSON descriptor, compatible with the AOT param
 //! format (so a checkpoint can also seed a fresh run or be inspected with
 //! the same tools as the shipped init).
+//!
+//! Since PR 10 every checkpoint is *integrity-checked and retained*:
+//!
+//! * each `.bin` records its byte length and FNV-1a-64 digest in the
+//!   descriptor, and every load re-verifies both — a truncated, flipped,
+//!   or swapped bin is a typed error, never wrong params;
+//! * each save also commits a step-qualified descriptor
+//!   (`checkpoint_sNNNNNNNNNN.json`) and keeps the last K of them
+//!   (default [`KEEP_DEFAULT`]), so the divergence guard and `--resume`
+//!   always have an older checkpoint to fall back to;
+//! * garbage collection is retention-aware: only bins referenced by *no*
+//!   retained descriptor are collected.
+//!
+//! All writes go through [`super::durable`] (lint rule `TZ-IO001`); the
+//! failure model is documented in docs/robustness.md.
 
 use std::path::Path;
 
@@ -9,40 +24,53 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::jsonx::{self, Value};
 
+use super::durable;
+use super::journal::fnv1a64;
 use super::manifest::Manifest;
-use super::params::{f32_le_bytes, read_f32_bin, ParamStore};
+use super::params::{f32_from_le_bytes, f32_le_bytes, ParamStore};
 
-/// Save `params` under `dir` (created if needed) with run metadata.
+/// Checkpoints retained per directory by default (current + one to roll
+/// back to).
+pub const KEEP_DEFAULT: usize = 2;
+
+/// Save `params` under `dir` (created if needed), retaining the last
+/// [`KEEP_DEFAULT`] checkpoints.
+pub fn save(dir: &Path, manifest: &Manifest, params: &ParamStore, step: u64)
+            -> Result<()> {
+    save_retained(dir, manifest, params, step, KEEP_DEFAULT)
+}
+
+/// Save `params` under `dir` with an explicit retention depth.
 ///
 /// Crash-safe, including when overwriting an existing checkpoint: the
 /// `.bin` files are *step-qualified* (a crashed save can never alias the
-/// files a previous `checkpoint.json` references), every file is written
-/// to a sibling temp path, fsynced, and atomically renamed, and
-/// `checkpoint.json` is renamed *last* — the single commit point. A crash
-/// mid-save leaves the previous checkpoint fully intact (plus orphaned
-/// files from the aborted save, which the next successful save garbage-
-/// collects).
-pub fn save(dir: &Path, manifest: &Manifest, params: &ParamStore, step: u64)
-            -> Result<()> {
+/// files a previous descriptor references), every file is written to a
+/// sibling temp path, fsynced, and atomically renamed, and the
+/// descriptors are renamed *last* — a crash mid-save leaves the previous
+/// checkpoint fully intact (plus orphaned files from the aborted save,
+/// which the next successful save garbage-collects).
+pub fn save_retained(dir: &Path, manifest: &Manifest, params: &ParamStore,
+                     step: u64, keep: usize) -> Result<()> {
+    let keep = keep.max(1);
     std::fs::create_dir_all(dir.join("params"))
         .with_context(|| format!("creating {}", dir.display()))?;
     let mut entries = Vec::new();
-    let mut kept = Vec::new();
     for (i, e) in params.entries.iter().enumerate() {
         let host = params.fetch(i)?;
+        let bytes = f32_le_bytes(&host);
         let base = format!("s{step:010}_{i:03}_{}.bin", e.name.replace('.', "_"));
-        write_atomic(&dir.join("params").join(&base), &f32_le_bytes(&host))?;
-        let fname = format!("params/{base}");
-        kept.push(base);
+        durable::write_atomic(&dir.join("params").join(&base), &bytes)?;
         entries.push(Value::obj(vec![
             ("name", Value::str(&e.name)),
             ("shape", Value::arr(e.shape.iter().map(|&s| Value::i(s as i64)).collect())),
-            ("bin", Value::str(&fname)),
+            ("bin", Value::str(format!("params/{base}"))),
+            ("bytes", Value::i(bytes.len() as i64)),
+            ("digest", Value::str(format!("{:016x}", fnv1a64(&bytes)))),
         ]));
     }
     // persist all bin renames with one directory fsync before the json
     // commit point (write_atomic already fsyncs each file's contents)
-    sync_dir(&dir.join("params"));
+    durable::sync_dir(&dir.join("params"));
     let doc = Value::obj(vec![
         ("format", Value::str("tezo-checkpoint-v1")),
         ("config", Value::str(&manifest.config.name)),
@@ -50,49 +78,80 @@ pub fn save(dir: &Path, manifest: &Manifest, params: &ParamStore, step: u64)
         ("step", Value::i(step as i64)),
         ("params", Value::arr(entries)),
     ]);
-    write_atomic(&dir.join("checkpoint.json"),
-                 jsonx::to_string_pretty(&doc).as_bytes())?;
-    sync_dir(dir);
-    // the new json is committed: drop bins of older/aborted saves
-    gc_params_dir(&dir.join("params"), &kept);
+    let text = jsonx::to_string_pretty(&doc);
+    // the retained step-qualified descriptor first, then the `current`
+    // pointer — both atomic, so any crash point leaves a loadable state
+    durable::write_atomic(&dir.join(retained_name(step)), text.as_bytes())?;
+    durable::write_atomic(&dir.join("checkpoint.json"), text.as_bytes())?;
+    durable::sync_dir(dir);
+    // the new descriptors are committed: enforce retention and drop bins
+    // no retained descriptor references (older or aborted saves)
+    gc_retained(dir, keep);
     Ok(())
 }
 
-/// Write `bytes` to `path` via a same-directory temp file + fsync + rename
-/// (rename within one directory is atomic on POSIX filesystems).
-fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
-    use std::io::Write;
-    let mut name = path
-        .file_name()
-        .ok_or_else(|| anyhow::anyhow!("no file name in {}", path.display()))?
-        .to_os_string();
-    name.push(".tmp");
-    let tmp = path.with_file_name(name);
-    let mut f = std::fs::File::create(&tmp)
-        .with_context(|| format!("creating {}", tmp.display()))?;
-    f.write_all(bytes)
-        .with_context(|| format!("writing {}", tmp.display()))?;
-    f.sync_all()
-        .with_context(|| format!("syncing {}", tmp.display()))?;
-    drop(f);
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
-    Ok(())
+fn retained_name(step: u64) -> String {
+    format!("checkpoint_s{step:010}.json")
 }
 
-/// Best-effort directory fsync, persisting the renames committed inside it
-/// (unix-specific; a no-op where directories cannot be opened).
-fn sync_dir(dir: &Path) {
-    if let Ok(d) = std::fs::File::open(dir) {
-        let _ = d.sync_all();
+/// Step-qualified descriptors under `dir`, newest first.
+pub fn list_retained(dir: &Path) -> Vec<(u64, String)> {
+    let mut out = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else { return out };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(step) = name
+            .strip_prefix("checkpoint_s")
+            .and_then(|s| s.strip_suffix(".json"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        out.push((step, name.to_string()));
     }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out
 }
 
-/// Remove `.bin`/`.tmp` files the just-committed checkpoint does not
-/// reference (leftovers of older or crashed saves). Best effort: a failed
-/// removal only wastes disk, never correctness.
-fn gc_params_dir(params_dir: &Path, kept: &[String]) {
-    let Ok(rd) = std::fs::read_dir(params_dir) else { return };
+/// Descriptor names to try when loading, newest first — the retained
+/// step-qualified descriptors, then the legacy/current `checkpoint.json`.
+pub fn candidates(dir: &Path) -> Vec<String> {
+    let mut out: Vec<String> = list_retained(dir).into_iter().map(|(_, n)| n).collect();
+    if dir.join("checkpoint.json").is_file() {
+        out.push("checkpoint.json".to_string());
+    }
+    out
+}
+
+/// Retention + GC: keep the newest `keep` retained descriptors, remove
+/// the rest, then remove `params/` files referenced by no surviving
+/// descriptor. Best effort: a failed removal only wastes disk, never
+/// correctness.
+fn gc_retained(dir: &Path, keep: usize) {
+    let retained = list_retained(dir);
+    for (_, name) in retained.iter().skip(keep) {
+        let _ = std::fs::remove_file(dir.join(name));
+    }
+    // union of bins referenced by every surviving descriptor (including
+    // the current pointer, which may predate retention)
+    let mut kept: Vec<String> = Vec::new();
+    let mut survivors: Vec<String> =
+        retained.iter().take(keep).map(|(_, n)| n.clone()).collect();
+    survivors.push("checkpoint.json".to_string());
+    for name in &survivors {
+        let Ok(text) = std::fs::read_to_string(dir.join(name)) else { continue };
+        let Ok(doc) = jsonx::parse(&text) else { continue };
+        let Ok(entries) = doc.get("params").and_then(|p| p.as_array()) else { continue };
+        for e in entries {
+            if let Ok(bin) = e.get_str("bin") {
+                if let Some(base) = bin.strip_prefix("params/") {
+                    kept.push(base.to_string());
+                }
+            }
+        }
+    }
+    let Ok(rd) = std::fs::read_dir(dir.join("params")) else { return };
     for entry in rd.flatten() {
         let name = entry.file_name();
         let Some(name) = name.to_str() else { continue };
@@ -102,34 +161,191 @@ fn gc_params_dir(params_dir: &Path, kept: &[String]) {
     }
 }
 
-/// Restore parameters from a checkpoint into fresh device buffers.
-/// The checkpoint must match the manifest's config (name + param table).
-pub fn load(dir: &Path, client: &xla::PjRtClient, manifest: &Manifest)
-            -> Result<(ParamStore, u64)> {
-    let text = std::fs::read_to_string(dir.join("checkpoint.json"))
-        .with_context(|| format!("reading {}/checkpoint.json", dir.display()))?;
-    let doc = jsonx::parse(&text)?;
-    if doc.get_str("format")? != "tezo-checkpoint-v1" {
-        bail!("unknown checkpoint format");
-    }
-    ensure!(doc.get_str("config")? == manifest.config.name,
-            "checkpoint is for config {:?}, runtime is {:?}",
-            doc.get_str("config")?, manifest.config.name);
-    let step = u64::try_from(doc.get("step")?.as_i64()?)
-        .map_err(|_| anyhow::anyhow!("checkpoint step is negative"))?;
-    let entries = doc.get("params")?.as_array()?;
-    ensure!(entries.len() == manifest.params.len(),
-            "checkpoint has {} params, manifest {}", entries.len(),
-            manifest.params.len());
+/// One parameter record of a parsed descriptor.
+struct BinEntry {
+    name: String,
+    shape: Vec<usize>,
+    bin: String,
+    /// byte length + FNV-1a digest (absent in pre-PR-10 checkpoints)
+    bytes: Option<u64>,
+    digest: Option<String>,
+}
 
+impl BinEntry {
+    fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+struct CheckpointDoc {
+    config: String,
+    step: u64,
+    entries: Vec<BinEntry>,
+}
+
+fn parse_doc(dir: &Path, json_name: &str) -> Result<CheckpointDoc> {
+    let path = dir.join(json_name);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = jsonx::parse(&text)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    if doc.get_str("format")? != "tezo-checkpoint-v1" {
+        bail!("{}: unknown checkpoint format", path.display());
+    }
+    let config = doc.get_str("config")?.to_string();
+    let step = u64::try_from(doc.get("step")?.as_i64()?)
+        .map_err(|_| anyhow::anyhow!("{}: checkpoint step is negative", path.display()))?;
+    let mut entries = Vec::new();
+    for e in doc.get("params")?.as_array()? {
+        let mut shape = Vec::new();
+        for s in e.get("shape")?.as_array()? {
+            shape.push(usize::try_from(s.as_i64()?)
+                .map_err(|_| anyhow::anyhow!("negative shape dim"))?);
+        }
+        entries.push(BinEntry {
+            name: e.get_str("name")?.to_string(),
+            shape,
+            bin: e.get_str("bin")?.to_string(),
+            bytes: e.get("bytes").ok().and_then(|v| v.as_i64().ok())
+                .and_then(|v| u64::try_from(v).ok()),
+            digest: e.get("digest").ok().and_then(|v| v.as_str().ok())
+                .map(|s| s.to_string()),
+        });
+    }
+    Ok(CheckpointDoc { config, step, entries })
+}
+
+/// Read one bin and verify it against its descriptor record: the file
+/// must exist, match the shape's byte count, match the recorded length,
+/// and hash to the recorded digest. Every mismatch is a typed contextual
+/// error naming the bin.
+fn read_verified_bin(dir: &Path, e: &BinEntry) -> Result<Vec<u8>> {
+    let path = dir.join(&e.bin);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading checkpoint bin {} ({})",
+                                 path.display(), e.name))?;
+    let want_shape = e.numel() * 4;
+    ensure!(bytes.len() == want_shape,
+            "{}: {} bytes on disk, shape {:?} needs {}",
+            path.display(), bytes.len(), e.shape, want_shape);
+    if let Some(want) = e.bytes {
+        ensure!(bytes.len() as u64 == want,
+                "{}: {} bytes on disk, descriptor recorded {}",
+                path.display(), bytes.len(), want);
+    }
+    if let Some(want) = &e.digest {
+        let got = format!("{:016x}", fnv1a64(&bytes));
+        ensure!(&got == want,
+                "{}: digest {} does not match descriptor {} — bin corrupted \
+                 or swapped", path.display(), got, want);
+    }
+    Ok(bytes)
+}
+
+/// A verified checkpoint summary (pure file inspection, no PJRT).
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub json: String,
+    pub config: String,
+    pub step: u64,
+    pub n_bins: usize,
+    pub total_bytes: u64,
+    /// bins carrying a digest (0 for pre-PR-10 checkpoints: length-only)
+    pub digested: usize,
+}
+
+/// Verify one descriptor and every bin it references, without touching
+/// the device runtime — the `checkpoint-verify` CLI path.
+pub fn verify_doc(dir: &Path, json_name: &str) -> Result<VerifyReport> {
+    let doc = parse_doc(dir, json_name)?;
+    let mut total = 0u64;
+    let mut digested = 0usize;
+    for e in &doc.entries {
+        let bytes = read_verified_bin(dir, e)
+            .with_context(|| format!("verifying {json_name}"))?;
+        total += bytes.len() as u64;
+        if e.digest.is_some() {
+            digested += 1;
+        }
+    }
+    Ok(VerifyReport {
+        json: json_name.to_string(),
+        config: doc.config,
+        step: doc.step,
+        n_bins: doc.entries.len(),
+        total_bytes: total,
+        digested,
+    })
+}
+
+/// Verify the current checkpoint (`checkpoint.json`).
+pub fn verify(dir: &Path) -> Result<VerifyReport> {
+    verify_doc(dir, "checkpoint.json")
+}
+
+/// Newest descriptor under `dir` that passes full verification, or an
+/// error describing why every candidate failed.
+pub fn latest_verified(dir: &Path) -> Result<VerifyReport> {
+    let cands = candidates(dir);
+    ensure!(!cands.is_empty(), "{}: no checkpoint descriptors found", dir.display());
+    let mut failures = Vec::new();
+    for name in &cands {
+        match verify_doc(dir, name) {
+            Ok(rep) => return Ok(rep),
+            Err(e) => failures.push(format!("  {name}: {e:#}")),
+        }
+    }
+    bail!("{}: no verifiable checkpoint among {} candidate(s):\n{}",
+          dir.display(), cands.len(), failures.join("\n"));
+}
+
+fn load_from_doc(dir: &Path, json_name: &str, client: &xla::PjRtClient,
+                 manifest: &Manifest) -> Result<(ParamStore, u64)> {
+    let doc = parse_doc(dir, json_name)?;
+    ensure!(doc.config == manifest.config.name,
+            "checkpoint is for config {:?}, runtime is {:?}",
+            doc.config, manifest.config.name);
+    ensure!(doc.entries.len() == manifest.params.len(),
+            "checkpoint has {} params, manifest {}", doc.entries.len(),
+            manifest.params.len());
     let mut store = ParamStore::load(client, manifest)?; // shapes/entries
-    let mut bufs = Vec::with_capacity(entries.len());
-    for (e, p) in entries.iter().zip(&manifest.params) {
-        ensure!(e.get_str("name")? == p.name,
-                "param order mismatch: {} vs {}", e.get_str("name")?, p.name);
-        let host = read_f32_bin(&dir.join(e.get_str("bin")?), p.numel())?;
+    let mut bufs = Vec::with_capacity(doc.entries.len());
+    for (e, p) in doc.entries.iter().zip(&manifest.params) {
+        ensure!(e.name == p.name,
+                "param order mismatch: {} vs {}", e.name, p.name);
+        ensure!(e.numel() == p.numel(),
+                "{}: checkpoint shape {:?} vs manifest numel {}",
+                e.name, e.shape, p.numel());
+        let bytes = read_verified_bin(dir, e)?;
+        let host = f32_from_le_bytes(&bytes);
         bufs.push(client.buffer_from_host_buffer(&host, &p.shape, None)?);
     }
     store.replace_all(bufs)?;
-    Ok((store, step))
+    Ok((store, doc.step))
+}
+
+/// Restore parameters from the current checkpoint into fresh device
+/// buffers, verifying length + digest of every bin. The checkpoint must
+/// match the manifest's config (name + param table).
+pub fn load(dir: &Path, client: &xla::PjRtClient, manifest: &Manifest)
+            -> Result<(ParamStore, u64)> {
+    load_from_doc(dir, "checkpoint.json", client, manifest)
+}
+
+/// Restore from the newest loadable checkpoint, falling back through the
+/// retained descriptors when the current one is corrupt — the recovery
+/// path behind `--resume` and guard rollback.
+pub fn load_with_fallback(dir: &Path, client: &xla::PjRtClient, manifest: &Manifest)
+                          -> Result<(ParamStore, u64)> {
+    let cands = candidates(dir);
+    ensure!(!cands.is_empty(), "{}: no checkpoint descriptors found", dir.display());
+    let mut failures = Vec::new();
+    for name in &cands {
+        match load_from_doc(dir, name, client, manifest) {
+            Ok(out) => return Ok(out),
+            Err(e) => failures.push(format!("  {name}: {e:#}")),
+        }
+    }
+    bail!("{}: every checkpoint candidate failed to load:\n{}",
+          dir.display(), failures.join("\n"));
 }

@@ -1,0 +1,251 @@
+//! Durable IO: the one module allowed to create and write files on the
+//! hot path (enforced by lint rule `TZ-IO001`, see docs/invariants.md).
+//!
+//! Everything that must survive a crash — checkpoints, the step journal,
+//! the tuning table — funnels through two primitives:
+//!
+//! * [`write_atomic`]: same-directory temp file + fsync + atomic rename.
+//!   A crash at any point leaves either the old file or the new file,
+//!   never a torn mix.
+//! * [`append_sync`]: append bytes to an open log and fsync before
+//!   returning. A crash leaves at most one torn tail, which the journal's
+//!   framing detects and truncates on recovery.
+//!
+//! The module also hosts the fault-injection seam ([`failpoint`]) the
+//! robustness test battery uses to simulate full disks, torn writes, and
+//! crash-after-rename without an actual kill -9 — see docs/robustness.md.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Injectable IO failures for the robustness tests. Failpoints are
+/// thread-local (tests run against their own temp dirs on their own
+/// threads) and disarm after firing once, except the post-crash state of
+/// [`Failure::CrashAfterRename`], which poisons every subsequent durable
+/// op until [`failpoint::reset`] — modeling a process that died right
+/// after the rename syscall was made durable.
+pub mod failpoint {
+    use std::cell::Cell;
+
+    /// The failure the next matching durable op should exhibit.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Failure {
+        /// the write fails before any byte reaches the target (full disk)
+        Enospc,
+        /// only the first `keep` bytes land, then the op errors (torn write)
+        Torn { keep: usize },
+        /// the rename completes durably, then the process "dies": the op
+        /// errors and every later durable op errors until `reset`
+        CrashAfterRename,
+    }
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub(super) enum State {
+        Idle,
+        Armed(Failure),
+        Crashed,
+    }
+
+    thread_local! {
+        static STATE: Cell<State> = const { Cell::new(State::Idle) };
+    }
+
+    /// Arm `f` for the next durable op on this thread.
+    pub fn arm(f: Failure) {
+        STATE.with(|s| s.set(State::Armed(f)));
+    }
+
+    /// Disarm any pending failure and clear the post-crash poison.
+    pub fn reset() {
+        STATE.with(|s| s.set(State::Idle));
+    }
+
+    /// Consume the armed failure, if any. The crashed state is sticky.
+    pub(super) fn take() -> State {
+        STATE.with(|s| {
+            let cur = s.get();
+            match cur {
+                State::Armed(_) => s.set(State::Idle),
+                State::Idle | State::Crashed => {}
+            }
+            cur
+        })
+    }
+
+    pub(super) fn crash() {
+        STATE.with(|s| s.set(State::Crashed));
+    }
+}
+
+use failpoint::{Failure, State};
+
+fn check_crashed() -> Result<State> {
+    let st = failpoint::take();
+    if st == State::Crashed {
+        anyhow::bail!("failpoint: process crashed (durable IO poisoned until reset)");
+    }
+    Ok(st)
+}
+
+/// Write `bytes` to `path` via a same-directory temp file + fsync + rename
+/// (rename within one directory is atomic on POSIX filesystems). A crash
+/// at any point leaves either the previous file or the complete new one.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let st = check_crashed()?;
+    let mut name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("no file name in {}", path.display()))?
+        .to_os_string();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    let mut f = File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    match st {
+        State::Armed(Failure::Enospc) => {
+            anyhow::bail!("failpoint: ENOSPC writing {}", tmp.display());
+        }
+        State::Armed(Failure::Torn { keep }) => {
+            let keep = keep.min(bytes.len());
+            // a torn temp write: partial bytes land, the rename never runs,
+            // so the target file is untouched
+            f.write_all(bytes.get(..keep).unwrap_or(bytes))
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            let _ = f.sync_all();
+            anyhow::bail!("failpoint: torn write of {} ({} of {} bytes)",
+                          tmp.display(), keep, bytes.len());
+        }
+        State::Armed(Failure::CrashAfterRename) | State::Idle | State::Crashed => {}
+    }
+    f.write_all(bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    f.sync_all()
+        .with_context(|| format!("syncing {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    if st == State::Armed(Failure::CrashAfterRename) {
+        failpoint::crash();
+        anyhow::bail!("failpoint: crashed after renaming {}", path.display());
+    }
+    Ok(())
+}
+
+/// Best-effort directory fsync, persisting the renames committed inside it
+/// (unix-specific; a no-op where directories cannot be opened).
+pub fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Open `path` for appending (created if missing).
+pub fn open_append(path: &Path) -> Result<File> {
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {} for append", path.display()))
+}
+
+/// Append `bytes` to an open log file and fsync before returning. Under a
+/// torn-write failpoint only a prefix lands — exactly the torn tail the
+/// journal's frame recovery must truncate.
+pub fn append_sync(f: &mut File, bytes: &[u8]) -> Result<()> {
+    let st = check_crashed()?;
+    match st {
+        State::Armed(Failure::Enospc) => {
+            anyhow::bail!("failpoint: ENOSPC on append");
+        }
+        State::Armed(Failure::Torn { keep }) => {
+            let keep = keep.min(bytes.len());
+            f.write_all(bytes.get(..keep).unwrap_or(bytes))
+                .context("appending (torn)")?;
+            let _ = f.sync_all();
+            anyhow::bail!("failpoint: torn append ({} of {} bytes)", keep, bytes.len());
+        }
+        State::Armed(Failure::CrashAfterRename) | State::Idle | State::Crashed => {}
+    }
+    f.write_all(bytes).context("appending")?;
+    f.sync_all().context("syncing append")?;
+    if st == State::Armed(Failure::CrashAfterRename) {
+        failpoint::crash();
+        anyhow::bail!("failpoint: crashed after append was made durable");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tezo_durable_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_atomic_replaces_whole_file() {
+        let d = tmp("atomic");
+        let p = d.join("x.bin");
+        write_atomic(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        write_atomic(&p, b"second-longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second-longer");
+    }
+
+    #[test]
+    fn enospc_failpoint_leaves_target_untouched() {
+        let d = tmp("enospc");
+        let p = d.join("x.bin");
+        write_atomic(&p, b"good").unwrap();
+        failpoint::arm(failpoint::Failure::Enospc);
+        assert!(write_atomic(&p, b"bad").is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"good");
+        // failpoint disarmed after one shot
+        write_atomic(&p, b"better").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"better");
+    }
+
+    #[test]
+    fn torn_failpoint_never_renames() {
+        let d = tmp("torn");
+        let p = d.join("x.bin");
+        write_atomic(&p, b"good").unwrap();
+        failpoint::arm(failpoint::Failure::Torn { keep: 2 });
+        assert!(write_atomic(&p, b"bad-data").is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"good");
+    }
+
+    #[test]
+    fn crash_after_rename_commits_then_poisons() {
+        let d = tmp("crash");
+        let p = d.join("x.bin");
+        failpoint::arm(failpoint::Failure::CrashAfterRename);
+        assert!(write_atomic(&p, b"committed").is_err());
+        // the rename itself went through...
+        assert_eq!(std::fs::read(&p).unwrap(), b"committed");
+        // ...and everything after the "crash" fails until reset
+        assert!(write_atomic(&d.join("y.bin"), b"z").is_err());
+        failpoint::reset();
+        write_atomic(&d.join("y.bin"), b"z").unwrap();
+    }
+
+    #[test]
+    fn append_sync_appends_and_torn_keeps_prefix() {
+        let d = tmp("append");
+        let p = d.join("log.bin");
+        let mut f = open_append(&p).unwrap();
+        append_sync(&mut f, b"aaaa").unwrap();
+        append_sync(&mut f, b"bbbb").unwrap();
+        failpoint::arm(failpoint::Failure::Torn { keep: 1 });
+        assert!(append_sync(&mut f, b"cccc").is_err());
+        failpoint::reset();
+        assert_eq!(std::fs::read(&p).unwrap(), b"aaaabbbbc");
+    }
+}

@@ -1,0 +1,513 @@
+//! The step journal: an append-only, fsynced write-ahead log of
+//! `(step, sub, perturb_seed, kappa)` records.
+//!
+//! Because every ZO update is fully described by its perturbation seed
+//! plus one scalar (the resampling trick — see docs/fleet.md), this tiny
+//! log plus the last checkpoint *is* the complete training state. The
+//! single-process trainer and the fleet coordinator both write through it
+//! (WAL ordering: a record is durable before its update is applied or
+//! broadcast), which is what makes `--resume` and coordinator restart
+//! reproduce an uninterrupted run bitwise. See docs/robustness.md for the
+//! failure model.
+//!
+//! ## On-disk format (all little-endian)
+//!
+//! ```text
+//! header:  "TEZOJRNL" (8)  | version u32 (=1) | run seed u64      = 20 B
+//! frame:   payload_len u32 | payload (21 B)   | fnv1a64(payload)  = 33 B
+//! payload: step u64 | sub u32 | perturb_seed u32 | tag u8 | kappa bits u32
+//! ```
+//!
+//! `tag` is 1 for an applied update (kappa meaningful) and 0 for a
+//! lockstep skip (kappa bits are zero). Recovery scans frames from the
+//! front and truncates the file at the first short, oversized, or
+//! checksum-failing frame — a kill -9 mid-append loses at most the torn
+//! tail, never a committed record.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::durable;
+
+const MAGIC: &[u8; 8] = b"TEZOJRNL";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 20;
+const PAYLOAD_LEN: usize = 21;
+const FRAME_LEN: usize = 4 + PAYLOAD_LEN + 8;
+
+/// One journaled sub-step: the complete description of one ZO update
+/// (`kappa = None` records a lockstep-skipped update).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JournalEntry {
+    pub step: u64,
+    pub sub: u32,
+    pub perturb_seed: u32,
+    pub kappa: Option<f32>,
+}
+
+/// FNV-1a 64-bit (the same digest the checkpoint manifest and the
+/// autotuner fingerprint use — one hash for the whole durability layer).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn rd_u32(b: &[u8], off: usize) -> Option<u32> {
+    b.get(off..off + 4)
+        .and_then(|s| <[u8; 4]>::try_from(s).ok())
+        .map(u32::from_le_bytes)
+}
+
+fn rd_u64(b: &[u8], off: usize) -> Option<u64> {
+    b.get(off..off + 8)
+        .and_then(|s| <[u8; 8]>::try_from(s).ok())
+        .map(u64::from_le_bytes)
+}
+
+fn header_bytes(seed: u64) -> Vec<u8> {
+    let mut h = Vec::with_capacity(HEADER_LEN);
+    h.extend_from_slice(MAGIC);
+    h.extend_from_slice(&VERSION.to_le_bytes());
+    h.extend_from_slice(&seed.to_le_bytes());
+    h
+}
+
+fn encode_frame(e: &JournalEntry) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(PAYLOAD_LEN);
+    payload.extend_from_slice(&e.step.to_le_bytes());
+    payload.extend_from_slice(&e.sub.to_le_bytes());
+    payload.extend_from_slice(&e.perturb_seed.to_le_bytes());
+    match e.kappa {
+        Some(k) => {
+            payload.push(1);
+            payload.extend_from_slice(&k.to_bits().to_le_bytes());
+        }
+        None => {
+            payload.push(0);
+            payload.extend_from_slice(&0u32.to_le_bytes());
+        }
+    }
+    let mut frame = Vec::with_capacity(FRAME_LEN);
+    frame.extend_from_slice(&(PAYLOAD_LEN as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    frame
+}
+
+fn decode_payload(p: &[u8]) -> Option<JournalEntry> {
+    let step = rd_u64(p, 0)?;
+    let sub = rd_u32(p, 8)?;
+    let perturb_seed = rd_u32(p, 12)?;
+    let tag = *p.get(16)?;
+    let bits = rd_u32(p, 17)?;
+    let kappa = match tag {
+        1 => Some(f32::from_bits(bits)),
+        0 => None,
+        _ => return None, // unknown tag = corrupt frame
+    };
+    Some(JournalEntry { step, sub, perturb_seed, kappa })
+}
+
+/// Result of scanning a journal image: the decoded prefix and the byte
+/// offset of the first bad frame (== image length when fully valid).
+struct Scan {
+    entries: Vec<JournalEntry>,
+    valid_len: usize,
+}
+
+fn scan_frames(image: &[u8]) -> Scan {
+    let mut entries = Vec::new();
+    let mut off = HEADER_LEN;
+    while off + FRAME_LEN <= image.len() {
+        let Some(plen) = rd_u32(image, off) else { break };
+        if plen as usize != PAYLOAD_LEN {
+            break; // corrupt length word: stop here
+        }
+        let Some(payload) = image.get(off + 4..off + 4 + PAYLOAD_LEN) else { break };
+        let Some(want) = rd_u64(image, off + 4 + PAYLOAD_LEN) else { break };
+        if fnv1a64(payload) != want {
+            break; // bit flip or torn checksum
+        }
+        let Some(e) = decode_payload(payload) else { break };
+        entries.push(e);
+        off += FRAME_LEN;
+    }
+    Scan { entries, valid_len: off }
+}
+
+/// An open journal positioned for appending.
+pub struct Journal {
+    path: PathBuf,
+    seed: u64,
+    file: File,
+    entries_len: usize,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path` for run seed `seed`,
+    /// returning the handle plus every committed entry.
+    ///
+    /// Recovery is torn-tail-tolerant: the file is scanned frame by frame
+    /// and physically truncated at the first bad frame, so a crash
+    /// mid-append costs exactly the record being written. A journal whose
+    /// header names a different run seed is a typed error — replaying
+    /// another run's kappas would corrupt silently.
+    pub fn open(path: &Path, seed: u64) -> Result<(Journal, Vec<JournalEntry>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        if !path.exists() {
+            durable::write_atomic(path, &header_bytes(seed))
+                .with_context(|| format!("creating journal {}", path.display()))?;
+            if let Some(parent) = path.parent() {
+                durable::sync_dir(parent);
+            }
+        }
+        let image = std::fs::read(path)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        ensure!(image.len() >= HEADER_LEN && image.get(..8) == Some(MAGIC.as_slice()),
+                "{}: not a tezo journal (bad magic or short header)",
+                path.display());
+        let version = rd_u32(&image, 8)
+            .ok_or_else(|| anyhow::anyhow!("{}: short header", path.display()))?;
+        ensure!(version == VERSION,
+                "{}: journal version {version}, expected {VERSION}", path.display());
+        let file_seed = rd_u64(&image, 12)
+            .ok_or_else(|| anyhow::anyhow!("{}: short header", path.display()))?;
+        ensure!(file_seed == seed,
+                "{}: journal belongs to run seed {file_seed}, this run is {seed}",
+                path.display());
+
+        let scan = scan_frames(&image);
+        if scan.valid_len < image.len() {
+            // torn or corrupt tail: truncate it away so appends extend a
+            // clean frame boundary
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(path)
+                .with_context(|| format!("opening {} to truncate tail", path.display()))?;
+            f.set_len(scan.valid_len as u64)
+                .with_context(|| format!("truncating {} to {} bytes",
+                                         path.display(), scan.valid_len))?;
+            f.sync_all()
+                .with_context(|| format!("syncing truncated {}", path.display()))?;
+        }
+        let file = durable::open_append(path)?;
+        let j = Journal {
+            path: path.to_path_buf(),
+            seed,
+            file,
+            entries_len: scan.entries.len(),
+        };
+        Ok((j, scan.entries))
+    }
+
+    /// Read-only recovery: committed entries without taking the append
+    /// handle (coordinator restart inspects the journal before staffing).
+    pub fn read(path: &Path, seed: u64) -> Result<Vec<JournalEntry>> {
+        let (_, entries) = Journal::open(path, seed)?;
+        Ok(entries)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Committed entries (recovered + appended this process).
+    pub fn len(&self) -> usize {
+        self.entries_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries_len == 0
+    }
+
+    /// Append one entry durably (frame write + fsync). WAL contract: only
+    /// apply/broadcast the update after this returns Ok.
+    pub fn append(&mut self, e: &JournalEntry) -> Result<()> {
+        durable::append_sync(&mut self.file, &encode_frame(e))
+            .with_context(|| format!("journaling step {} sub {}", e.step, e.sub))?;
+        self.entries_len += 1;
+        Ok(())
+    }
+
+    /// Rewrite the journal keeping only entries that satisfy `keep`
+    /// (atomic temp+rename, then the append handle is reopened). Used for
+    /// rollback (`e.step < target`) and checkpoint pruning
+    /// (`e.step >= checkpoint_step`).
+    fn rewrite(&mut self, keep: impl Fn(&JournalEntry) -> bool) -> Result<()> {
+        let entries = Journal::read(&self.path, self.seed)?;
+        let mut image = header_bytes(self.seed);
+        let mut n = 0usize;
+        for e in &entries {
+            if keep(e) {
+                image.extend_from_slice(&encode_frame(e));
+                n += 1;
+            }
+        }
+        durable::write_atomic(&self.path, &image)
+            .with_context(|| format!("rewriting journal {}", self.path.display()))?;
+        if let Some(parent) = self.path.parent() {
+            durable::sync_dir(parent);
+        }
+        self.file = durable::open_append(&self.path)?;
+        self.entries_len = n;
+        Ok(())
+    }
+
+    /// Drop every entry at `step >= target` — the rollback path: the tail
+    /// being undone must not be replayed by a later resume.
+    pub fn truncate_from_step(&mut self, target: u64) -> Result<()> {
+        self.rewrite(|e| e.step < target)
+    }
+
+    /// Drop every entry at `step < checkpoint_step` — the pruning path:
+    /// once a checkpoint at `checkpoint_step` is durable, older records
+    /// are dead weight (mirrors the fleet's in-memory log pruning).
+    pub fn retain_from_step(&mut self, checkpoint_step: u64) -> Result<()> {
+        self.rewrite(|e| e.step >= checkpoint_step)
+    }
+}
+
+/// Analytic size of a journal holding `entries` records (header + frames)
+/// — the memmodel residency term.
+pub fn journal_bytes(entries: u64) -> u64 {
+    HEADER_LEN as u64 + entries * FRAME_LEN as u64
+}
+
+/// The recovered journal tail split for resume: the complete steps to
+/// re-apply update-only, plus the step a crash left half-journaled (if
+/// any) — that one is truncated and re-run live. Shared by the
+/// single-process trainer and the fleet coordinator restart path.
+pub struct Replay {
+    pub steps: Vec<(u64, Vec<JournalEntry>)>,
+    pub partial: Option<u64>,
+}
+
+/// A step's journal footprint is complete when it ends in a skip record
+/// (`kappa = None` aborts the step in lockstep) or holds all `q` applied
+/// sub-perturbations.
+fn group_complete(group: &[JournalEntry], q: u32) -> bool {
+    group.last().map(|e| e.kappa.is_none()).unwrap_or(false)
+        || group.len() as u32 == q
+}
+
+/// Group recovered entries by step and validate the invariants a
+/// write-ahead log guarantees: steps contiguous from the checkpoint, subs
+/// in order, skips only terminal, and at most the *last* step incomplete.
+pub fn plan_replay(entries: &[JournalEntry], ckpt_step: u64, q: u32)
+                   -> Result<Replay> {
+    let mut steps: Vec<(u64, Vec<JournalEntry>)> = Vec::new();
+    for e in entries {
+        // pruning can lag one crash behind the checkpoint — drop the stale
+        // prefix, the checkpoint already covers it
+        if e.step < ckpt_step {
+            continue;
+        }
+        match steps.last_mut() {
+            Some((s, group)) if *s == e.step => group.push(*e),
+            _ => steps.push((e.step, vec![*e])),
+        }
+    }
+    let mut expected = ckpt_step;
+    let n = steps.len();
+    for (i, (s, group)) in steps.iter().enumerate() {
+        ensure!(*s == expected,
+                "journal gap: expected step {expected}, found step {s}");
+        expected += 1;
+        for (k, e) in group.iter().enumerate() {
+            ensure!(e.sub as usize == k,
+                    "journal step {s}: sub {} out of order (position {k})",
+                    e.sub);
+            ensure!(e.kappa.is_some() || k + 1 == group.len(),
+                    "journal step {s}: skip record before sub {}", group.len());
+        }
+        ensure!(group.len() as u32 <= q,
+                "journal step {s} has {} subs, config says {q} — wrong \
+                 n_perturb?", group.len());
+        ensure!(group_complete(group, q) || i + 1 == n,
+                "journal step {s} is incomplete mid-log — wrong n_perturb?");
+    }
+    let partial = steps
+        .last()
+        .filter(|(_, g)| !group_complete(g, q))
+        .map(|(s, _)| *s);
+    if partial.is_some() {
+        steps.pop();
+    }
+    Ok(Replay { steps, partial })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tezo_journal_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d.join("journal.bin")
+    }
+
+    fn e(step: u64, sub: u32, kappa: Option<f32>) -> JournalEntry {
+        JournalEntry { step, sub, perturb_seed: (step as u32) ^ (sub << 8), kappa }
+    }
+
+    #[test]
+    fn roundtrip_and_reopen() {
+        let p = tmp("roundtrip");
+        let want = vec![e(0, 0, Some(0.5)), e(0, 1, Some(-1.25)), e(1, 0, None)];
+        {
+            let (mut j, prior) = Journal::open(&p, 42).unwrap();
+            assert!(prior.is_empty());
+            for x in &want {
+                j.append(x).unwrap();
+            }
+            assert_eq!(j.len(), 3);
+        }
+        let (_, got) = Journal::open(&p, 42).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn kappa_bits_survive_including_nan() {
+        let p = tmp("bits");
+        let nan = f32::from_bits(0x7FC0_1234);
+        let (mut j, _) = Journal::open(&p, 7).unwrap();
+        j.append(&e(3, 0, Some(nan))).unwrap();
+        let got = Journal::read(&p, 7).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].kappa.unwrap().to_bits(), nan.to_bits());
+    }
+
+    #[test]
+    fn torn_tail_is_truncated() {
+        let p = tmp("torn");
+        {
+            let (mut j, _) = Journal::open(&p, 1).unwrap();
+            j.append(&e(0, 0, Some(1.0))).unwrap();
+            j.append(&e(1, 0, Some(2.0))).unwrap();
+        }
+        // simulate kill -9 mid-append: half a frame of garbage
+        let mut img = std::fs::read(&p).unwrap();
+        img.extend_from_slice(&[21, 0, 0, 0, 0xde, 0xad]);
+        std::fs::write(&p, &img).unwrap();
+        let (mut j, got) = Journal::open(&p, 1).unwrap();
+        assert_eq!(got.len(), 2);
+        // the tail was physically removed: appends extend cleanly
+        j.append(&e(2, 0, Some(3.0))).unwrap();
+        assert_eq!(Journal::read(&p, 1).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn bit_flip_truncates_at_the_flipped_frame() {
+        let p = tmp("flip");
+        {
+            let (mut j, _) = Journal::open(&p, 1).unwrap();
+            for s in 0..4 {
+                j.append(&e(s, 0, Some(s as f32))).unwrap();
+            }
+        }
+        let mut img = std::fs::read(&p).unwrap();
+        // flip one payload byte inside frame 2
+        let off = HEADER_LEN + 2 * FRAME_LEN + 6;
+        img[off] ^= 0x40;
+        std::fs::write(&p, &img).unwrap();
+        let (_, got) = Journal::open(&p, 1).unwrap();
+        assert_eq!(got, vec![e(0, 0, Some(0.0)), e(1, 0, Some(1.0))]);
+    }
+
+    #[test]
+    fn seed_mismatch_is_a_typed_error() {
+        let p = tmp("seed");
+        drop(Journal::open(&p, 5).unwrap());
+        let err = Journal::open(&p, 6).unwrap_err().to_string();
+        assert!(err.contains("seed 5"), "{err}");
+    }
+
+    #[test]
+    fn truncate_and_retain() {
+        let p = tmp("trunc");
+        let (mut j, _) = Journal::open(&p, 9).unwrap();
+        for s in 0..6 {
+            j.append(&e(s, 0, Some(s as f32))).unwrap();
+        }
+        j.truncate_from_step(4).unwrap();
+        assert_eq!(j.len(), 4);
+        j.retain_from_step(2).unwrap();
+        assert_eq!(j.len(), 2);
+        let got = Journal::read(&p, 9).unwrap();
+        assert_eq!(got, vec![e(2, 0, Some(2.0)), e(3, 0, Some(3.0))]);
+        // appends still extend the rewritten file
+        j.append(&e(4, 0, Some(4.0))).unwrap();
+        assert_eq!(Journal::read(&p, 9).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn journal_bytes_matches_frame_math() {
+        assert_eq!(journal_bytes(0), 20);
+        assert_eq!(journal_bytes(10), 20 + 10 * 33);
+    }
+
+    #[test]
+    fn plan_replay_splits_complete_and_partial() {
+        // steps 4,5 complete (q=2); step 6 interrupted after sub 0
+        let entries = vec![
+            e2(4, 0, Some(0.1)), e2(4, 1, Some(0.2)),
+            e2(5, 0, None),
+            e2(6, 0, Some(0.3)),
+        ];
+        let r = plan_replay(&entries, 4, 2).unwrap();
+        assert_eq!(r.steps.len(), 2);
+        assert_eq!(r.steps.first().map(|(s, _)| *s), Some(4));
+        assert_eq!(r.steps.last().map(|(s, _)| *s), Some(5));
+        assert_eq!(r.partial, Some(6));
+    }
+
+    #[test]
+    fn plan_replay_drops_prefix_below_checkpoint() {
+        let entries = vec![
+            e2(2, 0, Some(0.1)),
+            e2(3, 0, Some(0.2)),
+            e2(4, 0, Some(0.3)),
+        ];
+        let r = plan_replay(&entries, 3, 1).unwrap();
+        assert_eq!(r.steps.len(), 2);
+        assert_eq!(r.steps.first().map(|(s, _)| *s), Some(3));
+        assert_eq!(r.partial, None);
+    }
+
+    #[test]
+    fn plan_replay_rejects_gaps_and_disorder() {
+        let gap = vec![e2(0, 0, Some(0.1)), e2(2, 0, Some(0.2))];
+        assert!(plan_replay(&gap, 0, 1).is_err());
+        let disorder = vec![e2(0, 1, Some(0.1))];
+        assert!(plan_replay(&disorder, 0, 2).is_err());
+        // q=2: step 0 has one applied sub of two and is not last → error
+        let mid_incomplete = vec![e2(0, 0, Some(0.1)), e2(1, 0, Some(0.2)),
+                                  e2(1, 1, Some(0.3))];
+        assert!(plan_replay(&mid_incomplete, 0, 2).is_err());
+    }
+
+    #[test]
+    fn plan_replay_empty_journal_is_fresh_start() {
+        let r = plan_replay(&[], 7, 2).unwrap();
+        assert!(r.steps.is_empty());
+        assert_eq!(r.partial, None);
+    }
+
+    /// entry with a fixed seed — `plan_replay` never reads the seed field
+    fn e2(step: u64, sub: u32, kappa: Option<f32>) -> JournalEntry {
+        JournalEntry { step, sub, perturb_seed: 0, kappa }
+    }
+}

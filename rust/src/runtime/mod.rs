@@ -22,11 +22,19 @@
 //!   two-point lowerings at warmup, pins the winner in a persisted
 //!   `tuning.json` keyed by manifest fingerprint + shape, and resolves
 //!   `--forward-form auto` for every dispatch layer (see docs/runtime.md).
+//! * [`durable`] — the durable-IO seam (atomic replace, fsynced append,
+//!   injectable failpoints); the one module allowed to create files on the
+//!   hot path (lint rule `TZ-IO001`).
+//! * [`journal`] — the append-only `(seed, kappa)` write-ahead log behind
+//!   `--resume`, guard rollback, and coordinator restart
+//!   (see docs/robustness.md).
 
 pub mod checkpoint;
 pub mod client;
+pub mod durable;
 pub mod exec;
 pub mod hlo_stats;
+pub mod journal;
 pub mod manifest;
 pub mod params;
 pub mod plan;
@@ -35,6 +43,7 @@ pub mod tune;
 
 pub use client::Runtime;
 pub use exec::{ArgValue, CallBuilder};
+pub use journal::{Journal, JournalEntry};
 pub use manifest::{ArtifactMeta, IoDesc, Manifest, MatrixRank, ParamEntry};
 pub use params::ParamStore;
 pub use plan::{CallPlan, Dtype, PreparedCall};

@@ -219,10 +219,11 @@ impl TuningTable {
         Some(t)
     }
 
-    /// Persist next to the manifest.
+    /// Persist next to the manifest (atomic + fsynced: a concurrent or
+    /// crashed run never observes a half-written table).
     pub fn save(&self, dir: &Path) -> Result<()> {
         let path = Self::path(dir);
-        std::fs::write(&path, jsonx::to_string_pretty(&self.to_json()))
+        super::durable::write_atomic(&path, jsonx::to_string_pretty(&self.to_json()).as_bytes())
             .with_context(|| format!("writing {}", path.display()))?;
         Ok(())
     }

@@ -1,0 +1,365 @@
+//! Crash-recovery battery: interrupted runs resumed from (checkpoint +
+//! journal tail) must be *bitwise* indistinguishable from the
+//! uninterrupted run — the survivability claim of PR 10.
+//!
+//! Two tiers:
+//! * artifact-gated (PJRT + `artifacts/tiny`): single-process `Trainer`
+//!   with `--checkpoint-every`/`--resume`, including a torn journal tail
+//!   and a corrupted newest checkpoint (fallback to the older retained
+//!   descriptor + deeper journal replay);
+//! * artifact-free: a 2-worker loopback sim fleet resumed across two
+//!   `FleetTrainer::run` invocations from the coordinator journal, plus
+//!   the divergence guard rolling a live fleet back to its last published
+//!   checkpoint after an injected NaN — both bitwise against
+//!   `sim::run_oracle`.
+
+use std::path::PathBuf;
+
+use tezo::config::{FleetConfig, Method, TrainConfig};
+use tezo::coordinator::trainer::{DataSource, TrainOutcome, Trainer};
+use tezo::coordinator::GuardPolicy;
+use tezo::data::{tasks, BatchBuilder, Task, Tokenizer};
+use tezo::fleet::sim::{self, SimReplica};
+use tezo::fleet::worker::{JobFactory, Replica, ReplicaFactory};
+use tezo::fleet::FleetTrainer;
+use tezo::runtime::{ParamStore, Runtime};
+
+// ---------------------------------------------------------------------------
+// artifact-gated: single-process trainer
+// ---------------------------------------------------------------------------
+
+const STEPS: usize = 10;
+const SEED: u64 = 42;
+
+fn open_tiny() -> Option<Runtime> {
+    let dir = tezo::artifacts_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open runtime"))
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("tezo_crashrec_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn data_source(rt: &Runtime) -> DataSource {
+    let tok = Tokenizer::new(rt.manifest.config.vocab);
+    let task = Task::new(tasks::spec_by_name("sst2").unwrap(), tok,
+                         rt.manifest.config.seq_len, SEED);
+    DataSource::Task(BatchBuilder::new(task, rt.manifest.config.batch, 16))
+}
+
+/// Run `steps` steps; `ckpt` = (dir, every) arms checkpoint + journal;
+/// returns the outcome plus every parameter's final bits.
+fn run_proc(rt: &Runtime, steps: usize, ckpt: Option<(&PathBuf, u64)>,
+            resume: bool) -> (TrainOutcome, Vec<Vec<u32>>) {
+    let mut cfg = TrainConfig::with_preset(Method::Tezo, "tiny");
+    cfg.steps = steps;
+    cfg.seed = SEED;
+    let mut params = ParamStore::load(&rt.client, &rt.manifest).unwrap();
+    let mut trainer = Trainer::new(rt, cfg, data_source(rt));
+    if let Some((dir, every)) = ckpt {
+        trainer = trainer.with_checkpointing(dir.clone(), every, 2);
+    }
+    trainer = trainer.with_resume(resume);
+    let out = trainer.run(&mut params).expect("train run");
+    let bits = (0..params.entries.len())
+        .map(|i| {
+            params.fetch(i).unwrap().iter().map(|x| x.to_bits()).collect()
+        })
+        .collect();
+    (out, bits)
+}
+
+/// The shared postcondition: the resumed run's losses are a bitwise suffix
+/// of the golden run's, and the final parameters match bitwise.
+fn assert_resumed_matches_golden(golden: &(TrainOutcome, Vec<Vec<u32>>),
+                                 resumed: &(TrainOutcome, Vec<Vec<u32>>),
+                                 label: &str) {
+    let n = resumed.0.metrics.losses.len();
+    assert!(n >= 1 && n <= STEPS, "{label}: {n} resumed losses");
+    let tail = &golden.0.metrics.losses[STEPS - n..];
+    assert!(
+        resumed.0.metrics.losses.iter().zip(tail)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "{label}: resumed losses diverge from the golden run"
+    );
+    assert_eq!(resumed.1, golden.1,
+               "{label}: final params diverge from the golden run");
+}
+
+#[test]
+fn interrupted_run_resumes_bitwise() {
+    let Some(rt) = open_tiny() else { return };
+    let golden = run_proc(&rt, STEPS, None, false);
+    let dir = tmp("resume");
+    // "interrupted" at step 8: checkpoints at 3 and 6 retained, journal
+    // carrying the replay tail for steps 6..8
+    run_proc(&rt, 8, Some((&dir, 3)), false);
+    let resumed = run_proc(&rt, STEPS, Some((&dir, 3)), true);
+    assert_eq!(resumed.0.metrics.resumed_from, Some(6));
+    // steps 6..8 replayed update-only from the journal, 8..10 run live
+    assert_eq!(resumed.0.metrics.losses.len(), 2);
+    assert_resumed_matches_golden(&golden, &resumed, "resume");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_journal_tail_is_truncated_and_rerun() {
+    let Some(rt) = open_tiny() else { return };
+    let golden = run_proc(&rt, STEPS, None, false);
+    let dir = tmp("torn");
+    run_proc(&rt, 8, Some((&dir, 3)), false);
+    // simulate a crash mid-append: tear the last frame and add garbage
+    let jpath = dir.join("journal.bin");
+    let mut img = std::fs::read(&jpath).expect("journal written");
+    img.truncate(img.len().saturating_sub(5));
+    img.extend_from_slice(&[0xAB; 17]);
+    std::fs::write(&jpath, &img).unwrap();
+    let resumed = run_proc(&rt, STEPS, Some((&dir, 3)), true);
+    assert_eq!(resumed.0.metrics.resumed_from, Some(6));
+    // the torn record costs at most one journaled step — it is re-run live
+    assert!(resumed.0.metrics.losses.len() >= 2,
+            "torn tail lost committed steps");
+    assert_resumed_matches_golden(&golden, &resumed, "torn-journal");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_newest_checkpoint_falls_back_to_retained() {
+    let Some(rt) = open_tiny() else { return };
+    let golden = run_proc(&rt, STEPS, None, false);
+    let dir = tmp("fallback");
+    run_proc(&rt, 8, Some((&dir, 3)), false);
+    // flip one byte in every step-6 bin: checkpoint_s..6 and the current
+    // pointer both fail verification; resume must fall back to step 3 and
+    // replay the deeper journal tail (3..8)
+    let rd = std::fs::read_dir(dir.join("params")).expect("params dir");
+    let mut corrupted = 0;
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.starts_with("s0000000006_") {
+            let mut img = std::fs::read(entry.path()).unwrap();
+            if let Some(b) = img.first().copied() {
+                img[0] = b ^ 0x40;
+            }
+            std::fs::write(entry.path(), &img).unwrap();
+            corrupted += 1;
+        }
+    }
+    assert!(corrupted > 0, "no step-6 bins found to corrupt");
+    let resumed = run_proc(&rt, STEPS, Some((&dir, 3)), true);
+    assert_eq!(resumed.0.metrics.resumed_from, Some(3),
+               "resume did not fall back to the older retained checkpoint");
+    assert_resumed_matches_golden(&golden, &resumed, "ckpt-fallback");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// artifact-free: loopback sim fleet
+// ---------------------------------------------------------------------------
+
+const DIM: usize = 16;
+const WORKERS: usize = 2;
+
+fn unused_jobs() -> Box<JobFactory> {
+    Box::new(|_, _| Err(anyhow::anyhow!("sim fleets inject their replicas")))
+}
+
+fn sim_cfg(steps: usize) -> TrainConfig {
+    TrainConfig { steps, lr: 0.05, seed: 7, ..TrainConfig::default() }
+}
+
+fn sim_factory(dir: &PathBuf, cfg: &TrainConfig,
+               nan_once_at: Vec<(u64, u32)>) -> Box<ReplicaFactory> {
+    let cfg = cfg.clone();
+    let dir = dir.clone();
+    Box::new(move |w, n| {
+        let mut r = SimReplica::new(w, n, &cfg, DIM)
+            .with_checkpoint_path(dir.join("ckpt.bin"))
+            .with_save_to(dir.join(format!("final_{w}.bin")));
+        if w == 0 {
+            r = r.with_nan_once_at(nan_once_at.clone());
+        }
+        Ok(Box::new(r) as Box<dyn Replica>)
+    })
+}
+
+fn final_param_bits(dir: &PathBuf, steps: u64) -> Vec<Vec<u32>> {
+    (0..WORKERS)
+        .map(|w| {
+            let path = dir.join(format!("final_{w}.bin"));
+            let (step, p) = sim::read_sim_params(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            assert_eq!(step, steps, "worker {w} stopped early");
+            p.iter().map(|x| x.to_bits()).collect()
+        })
+        .collect()
+}
+
+/// A 10-step fleet run interrupted at step 5: the second invocation picks
+/// up from the coordinator journal (checkpoint-free, so the full durable
+/// log replays from init) and the combined run matches the uninterrupted
+/// oracle bitwise — trace, kappa bits, live losses, and final params.
+#[test]
+fn fleet_resumes_from_coordinator_journal_bitwise() {
+    let dir = tmp("fleet_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let fc = FleetConfig { checkpoint_every: 0, ..FleetConfig::new(WORKERS) };
+
+    let half = sim_cfg(5);
+    FleetTrainer::new(fc, half.clone(), PathBuf::from("unused"), unused_jobs())
+        .with_replica_factory(sim_factory(&dir, &half, vec![]))
+        .with_checkpoint_dir(dir.clone())
+        .run()
+        .expect("first half");
+
+    let full = sim_cfg(10);
+    let out = FleetTrainer::new(fc, full.clone(), PathBuf::from("unused"),
+                                unused_jobs())
+        .with_replica_factory(sim_factory(&dir, &full, vec![]))
+        .with_checkpoint_dir(dir.clone())
+        .with_resume(true)
+        .run()
+        .expect("resumed half");
+
+    let oracle = sim::run_oracle(&full, WORKERS as u32, DIM);
+    assert_eq!(out.metrics.resumed_from, Some(0));
+    assert_eq!(out.trace, oracle.trace, "resumed trace diverged");
+    assert!(out.trace.iter().zip(&oracle.trace).all(|(a, b)| {
+        a.kappa.map(f32::to_bits) == b.kappa.map(f32::to_bits)
+    }), "kappa stream not bit-identical");
+    // the resumed invocation runs steps 5..10 live; its losses must be a
+    // bitwise suffix of the oracle's
+    let n = out.metrics.losses.len();
+    assert_eq!(n, 5, "resume replayed instead of restarting at step 5");
+    assert!(out.metrics.losses.iter().zip(&oracle.losses[10 - n..])
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "live losses diverge from the oracle");
+    assert_eq!(final_param_bits(&dir, 10),
+               vec![oracle.params.iter().map(|p| p.to_bits()).collect::<Vec<u32>>();
+                    WORKERS],
+               "final params diverge from the oracle");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same resume, but the journal's tail is torn mid-frame (crash during
+/// append) and garbage follows: recovery truncates the damage, replays the
+/// committed prefix, and re-runs the lost step live — still bitwise.
+#[test]
+fn fleet_resume_survives_torn_journal_tail() {
+    let dir = tmp("fleet_torn");
+    std::fs::create_dir_all(&dir).unwrap();
+    let fc = FleetConfig { checkpoint_every: 0, ..FleetConfig::new(WORKERS) };
+
+    let half = sim_cfg(5);
+    FleetTrainer::new(fc, half.clone(), PathBuf::from("unused"), unused_jobs())
+        .with_replica_factory(sim_factory(&dir, &half, vec![]))
+        .with_checkpoint_dir(dir.clone())
+        .run()
+        .expect("first half");
+
+    let jpath = dir.join("journal.bin");
+    let mut img = std::fs::read(&jpath).expect("journal written");
+    img.truncate(img.len().saturating_sub(7));
+    img.extend_from_slice(&[0xCD; 11]);
+    std::fs::write(&jpath, &img).unwrap();
+
+    let full = sim_cfg(10);
+    let out = FleetTrainer::new(fc, full.clone(), PathBuf::from("unused"),
+                                unused_jobs())
+        .with_replica_factory(sim_factory(&dir, &full, vec![]))
+        .with_checkpoint_dir(dir.clone())
+        .with_resume(true)
+        .run()
+        .expect("resumed half");
+
+    let oracle = sim::run_oracle(&full, WORKERS as u32, DIM);
+    assert_eq!(out.trace, oracle.trace, "trace diverged after torn tail");
+    let n = out.metrics.losses.len();
+    assert!((5..=6).contains(&n),
+            "torn tail should cost at most the torn step, lost {}", 10 - n);
+    assert!(out.metrics.losses.iter().zip(&oracle.losses[10 - n..])
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "live losses diverge from the oracle");
+    assert_eq!(final_param_bits(&dir, 10),
+               vec![oracle.params.iter().map(|p| p.to_bits()).collect::<Vec<u32>>();
+                    WORKERS],
+               "final params diverge from the oracle");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Divergence guard on a live fleet: worker 0 reports one NaN forward at
+/// step 4; the guard rolls the fleet back to the step-3 checkpoint, the
+/// re-run is clean, and the final trace and params still match the oracle
+/// bitwise (`skip_steps: 0` keeps the replay footprint oracle-identical).
+#[test]
+fn fleet_guard_rolls_back_to_checkpoint_and_recovers_bitwise() {
+    let dir = tmp("fleet_guard");
+    std::fs::create_dir_all(&dir).unwrap();
+    let fc = FleetConfig { checkpoint_every: 3, ..FleetConfig::new(WORKERS) };
+    let cfg = sim_cfg(9);
+    let guard = GuardPolicy {
+        nonfinite_streak: 1,
+        max_rollbacks: 3,
+        skip_steps: 0,
+        ..GuardPolicy::default()
+    };
+    let out = FleetTrainer::new(fc, cfg.clone(), PathBuf::from("unused"),
+                                unused_jobs())
+        .with_replica_factory(sim_factory(&dir, &cfg, vec![(4, 0)]))
+        .with_guard(guard)
+        .run()
+        .expect("guarded fleet run");
+
+    assert_eq!(out.metrics.rollbacks, 1, "expected exactly one rollback");
+    assert_eq!(out.skipped, 1, "the NaN step must be skipped in lockstep");
+    let oracle = sim::run_oracle(&cfg, WORKERS as u32, DIM);
+    assert_eq!(out.trace, oracle.trace,
+               "post-rollback trace diverged from the oracle");
+    assert!(out.trace.iter().zip(&oracle.trace).all(|(a, b)| {
+        a.kappa.map(f32::to_bits) == b.kappa.map(f32::to_bits)
+    }), "kappa stream not bit-identical after rollback");
+    // first pass records steps 0..4 and the NaN, the re-run records 3..9:
+    // the re-run's tail must be bitwise the oracle's steps 3..9
+    assert_eq!(out.metrics.losses.len(), 9 + 2);
+    assert!(out.metrics.losses[5..].iter().zip(&oracle.losses[3..])
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "re-run losses diverge from the oracle");
+    assert_eq!(final_param_bits(&dir, 9),
+               vec![oracle.params.iter().map(|p| p.to_bits()).collect::<Vec<u32>>();
+                    WORKERS],
+               "final params diverge from the oracle");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The rollback budget is a hard stop: a second NaN after the only allowed
+/// rollback turns into a typed error instead of a livelock.
+#[test]
+fn fleet_guard_budget_exhaustion_is_a_typed_error() {
+    let dir = tmp("fleet_budget");
+    std::fs::create_dir_all(&dir).unwrap();
+    let fc = FleetConfig { checkpoint_every: 3, ..FleetConfig::new(WORKERS) };
+    let cfg = sim_cfg(9);
+    let guard = GuardPolicy {
+        nonfinite_streak: 1,
+        max_rollbacks: 1,
+        skip_steps: 0,
+        ..GuardPolicy::default()
+    };
+    let err = FleetTrainer::new(fc, cfg.clone(), PathBuf::from("unused"),
+                                unused_jobs())
+        .with_replica_factory(sim_factory(&dir, &cfg, vec![(4, 0), (4, 0)]))
+        .with_guard(guard)
+        .run()
+        .expect_err("budget exhaustion must error");
+    assert!(format!("{err:#}").contains("rollback budget"),
+            "unexpected error: {err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,273 @@
+//! Property battery for checkpoint integrity: every corruption a typed
+//! error, never wrong params. Runs against *synthetic* checkpoint
+//! directories (hand-built descriptors + bins with real FNV digests), so
+//! the whole verify/fallback surface is exercised without a PJRT device.
+//!
+//! Properties pinned here:
+//! * an intact checkpoint verifies, and the report reflects the
+//!   descriptor (step, bin count, byte total, digest coverage);
+//! * any bin corruption — truncation, extension, a single flipped bit,
+//!   or a deleted file — fails verification with an error;
+//! * a tampered descriptor (wrong digest, wrong recorded length, wrong
+//!   shape) fails verification even when the bin itself is intact;
+//! * `latest_verified` falls back to the newest *older* retained
+//!   checkpoint when the current one is corrupt, and reports every
+//!   candidate's failure when none survives;
+//! * pre-PR-10 descriptors (no digest fields) stay loadable, verify
+//!   length-only, and report `digested = 0`.
+
+use std::path::{Path, PathBuf};
+
+use tezo::proplite::{self, prop_assert};
+use tezo::runtime::checkpoint;
+use tezo::runtime::journal::fnv1a64;
+
+fn tmp(tag: &str, case: u64) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "tezo_props_ckpt_{}_{tag}_{case}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn f32_bytes(xs: &[f32]) -> Vec<u8> {
+    xs.iter().flat_map(|f| f.to_le_bytes()).collect()
+}
+
+/// Write a synthetic checkpoint at `step`: bins under `params/` plus the
+/// retained descriptor (and, when `current`, the `checkpoint.json`
+/// pointer) — the exact on-disk layout `save_retained` commits.
+fn write_ckpt(dir: &Path, step: u64, bins: &[(String, Vec<u8>)],
+              digests: bool, current: bool) -> Vec<PathBuf> {
+    std::fs::create_dir_all(dir.join("params")).unwrap();
+    let mut bin_paths = Vec::new();
+    let mut parts = Vec::new();
+    for (i, (name, bytes)) in bins.iter().enumerate() {
+        let base = format!("s{step:010}_{i:03}_{name}.bin");
+        let p = dir.join("params").join(&base);
+        std::fs::write(&p, bytes).unwrap();
+        bin_paths.push(p);
+        let integrity = if digests {
+            format!(", \"bytes\": {}, \"digest\": \"{:016x}\"",
+                    bytes.len(), fnv1a64(bytes))
+        } else {
+            String::new()
+        };
+        parts.push(format!(
+            "{{\"name\": \"{name}\", \"shape\": [{}], \
+               \"bin\": \"params/{base}\"{integrity}}}",
+            bytes.len() / 4
+        ));
+    }
+    let text = format!(
+        "{{\"format\": \"tezo-checkpoint-v1\", \"config\": \"synthetic\", \
+           \"n_params\": 0, \"step\": {step}, \"params\": [{}]}}",
+        parts.join(", ")
+    );
+    std::fs::write(dir.join(format!("checkpoint_s{step:010}.json")), &text).unwrap();
+    if current {
+        std::fs::write(dir.join("checkpoint.json"), &text).unwrap();
+    }
+    bin_paths
+}
+
+fn gen_bins(g: &mut tezo::proplite::Gen) -> Vec<(String, Vec<f32>)> {
+    let n = g.usize_in(1..4);
+    (0..n)
+        .map(|i| (format!("p{i}"), g.vec_f32(g.usize_in(1..16), -1.0..1.0)))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_intact_checkpoint_verifies() {
+    let mut case = 0u64;
+    proplite::run(30, |g| {
+        case += 1;
+        let dir = tmp("intact", case);
+        let step = g.u64() % 10_000;
+        let bins: Vec<(String, Vec<u8>)> = gen_bins(g)
+            .into_iter()
+            .map(|(n, xs)| (n, f32_bytes(&xs)))
+            .collect();
+        write_ckpt(&dir, step, &bins, true, true);
+        let rep = checkpoint::verify(&dir)
+            .map_err(|e| format!("intact checkpoint rejected: {e:#}"))?;
+        prop_assert(rep.step == step, "report step wrong")?;
+        prop_assert(rep.n_bins == bins.len(), "report bin count wrong")?;
+        prop_assert(rep.digested == bins.len(), "digest coverage wrong")?;
+        let total: u64 = bins.iter().map(|(_, b)| b.len() as u64).sum();
+        prop_assert(rep.total_bytes == total, "report byte total wrong")?;
+        prop_assert(rep.config == "synthetic", "report config wrong")?;
+        let newest = checkpoint::latest_verified(&dir)
+            .map_err(|e| format!("latest_verified rejected intact dir: {e:#}"))?;
+        prop_assert(newest.step == step, "latest_verified picked wrong step")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_bin_corruption_is_detected() {
+    let mut case = 0u64;
+    proplite::run(40, |g| {
+        case += 1;
+        let dir = tmp("bincorrupt", case);
+        let bins: Vec<(String, Vec<u8>)> = gen_bins(g)
+            .into_iter()
+            .map(|(n, xs)| (n, f32_bytes(&xs)))
+            .collect();
+        let paths = write_ckpt(&dir, 7, &bins, true, true);
+        let victim = paths.get(g.usize_in(0..paths.len()))
+            .ok_or("no victim bin")?;
+        let mut img = std::fs::read(victim).map_err(|e| e.to_string())?;
+        match g.usize_in(0..4) {
+            0 => {
+                let cut = g.usize_in(0..img.len());
+                img.truncate(cut);
+                std::fs::write(victim, &img).map_err(|e| e.to_string())?;
+            }
+            1 => {
+                for _ in 0..g.usize_in(1..9) {
+                    img.push(g.u64() as u8);
+                }
+                std::fs::write(victim, &img).map_err(|e| e.to_string())?;
+            }
+            2 => {
+                let off = g.usize_in(0..img.len());
+                img[off] ^= 1 << g.usize_in(0..8);
+                std::fs::write(victim, &img).map_err(|e| e.to_string())?;
+            }
+            _ => {
+                std::fs::remove_file(victim).map_err(|e| e.to_string())?;
+            }
+        }
+        prop_assert(checkpoint::verify(&dir).is_err(),
+                    "corrupt bin passed verification")?;
+        // the retained descriptor references the same bins, so with a
+        // single checkpoint there is nothing to fall back to
+        prop_assert(checkpoint::latest_verified(&dir).is_err(),
+                    "latest_verified survived with every candidate corrupt")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_descriptor_tamper_is_detected() {
+    let mut case = 0u64;
+    proplite::run(40, |g| {
+        case += 1;
+        let dir = tmp("doctamper", case);
+        std::fs::create_dir_all(dir.join("params")).unwrap();
+        let xs = g.vec_f32(g.usize_in(1..16), -1.0..1.0);
+        let bytes = f32_bytes(&xs);
+        let base = "s0000000007_000_p0.bin";
+        std::fs::write(dir.join("params").join(base), &bytes)
+            .map_err(|e| e.to_string())?;
+        // one descriptor field lies; the bin itself is intact
+        let (len_field, shape, digest) = match g.usize_in(0..3) {
+            0 => (bytes.len() + 4, xs.len(), fnv1a64(&bytes)),
+            1 => (bytes.len(), xs.len() + 1, fnv1a64(&bytes)),
+            _ => (bytes.len(), xs.len(), fnv1a64(&bytes) ^ 1),
+        };
+        let text = format!(
+            "{{\"format\": \"tezo-checkpoint-v1\", \"config\": \"synthetic\", \
+               \"n_params\": 0, \"step\": 7, \"params\": [{{\
+               \"name\": \"p0\", \"shape\": [{shape}], \
+               \"bin\": \"params/{base}\", \"bytes\": {len_field}, \
+               \"digest\": \"{digest:016x}\"}}]}}"
+        );
+        std::fs::write(dir.join("checkpoint.json"), &text)
+            .map_err(|e| e.to_string())?;
+        prop_assert(checkpoint::verify(&dir).is_err(),
+                    "lying descriptor passed verification")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latest_verified_falls_back_to_older_retained() {
+    let mut case = 0u64;
+    proplite::run(30, |g| {
+        case += 1;
+        let dir = tmp("fallback", case);
+        let old_step = g.u64() % 100;
+        let old_bins: Vec<(String, Vec<u8>)> = gen_bins(g)
+            .into_iter()
+            .map(|(n, xs)| (n, f32_bytes(&xs)))
+            .collect();
+        write_ckpt(&dir, old_step, &old_bins, true, false);
+        let new_bins: Vec<(String, Vec<u8>)> = gen_bins(g)
+            .into_iter()
+            .map(|(n, xs)| (n, f32_bytes(&xs)))
+            .collect();
+        let new_paths = write_ckpt(&dir, old_step + 1, &new_bins, true, true);
+        // corrupt the newest checkpoint's first bin
+        let victim = new_paths.first().ok_or("no new bin")?;
+        let mut img = std::fs::read(victim).map_err(|e| e.to_string())?;
+        let off = g.usize_in(0..img.len());
+        img[off] ^= 0x10;
+        std::fs::write(victim, &img).map_err(|e| e.to_string())?;
+        let rep = checkpoint::latest_verified(&dir)
+            .map_err(|e| format!("no fallback found: {e:#}"))?;
+        prop_assert(rep.step == old_step,
+                    "fallback did not pick the older retained checkpoint")?;
+        // now corrupt the older one too: every candidate must fail, and
+        // the error must name each candidate's failure
+        for (i, (name, _)) in old_bins.iter().enumerate() {
+            let p = dir
+                .join("params")
+                .join(format!("s{old_step:010}_{i:03}_{name}.bin"));
+            let mut img = std::fs::read(&p).map_err(|e| e.to_string())?;
+            if let Some(b) = img.first().copied() {
+                img[0] = b ^ 0x01;
+            }
+            std::fs::write(&p, &img).map_err(|e| e.to_string())?;
+        }
+        let err = match checkpoint::latest_verified(&dir) {
+            Ok(_) => return Err("all-corrupt dir verified".to_string()),
+            Err(e) => format!("{e:#}"),
+        };
+        prop_assert(err.contains("candidate"),
+                    "all-corrupt error does not enumerate candidates")?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// deterministic shape checks
+// ---------------------------------------------------------------------------
+
+#[test]
+fn legacy_descriptor_without_digests_verifies_length_only() {
+    let dir = tmp("legacy", 0);
+    let bins = vec![("w".to_string(), f32_bytes(&[1.0, 2.0, 3.0]))];
+    let paths = write_ckpt(&dir, 3, &bins, false, true);
+    let rep = checkpoint::verify(&dir).unwrap();
+    assert_eq!(rep.digested, 0, "legacy descriptor must report no digests");
+    assert_eq!(rep.n_bins, 1);
+    // truncation is still caught by the shape-derived length check
+    let p = paths.first().unwrap();
+    let img = std::fs::read(p).unwrap();
+    std::fs::write(p, &img[..8]).unwrap();
+    assert!(checkpoint::verify(&dir).is_err(),
+            "truncated legacy bin passed verification");
+}
+
+#[test]
+fn candidates_are_newest_first_with_current_last() {
+    let dir = tmp("order", 0);
+    let bins = vec![("w".to_string(), f32_bytes(&[0.5]))];
+    write_ckpt(&dir, 3, &bins, true, false);
+    write_ckpt(&dir, 1, &bins, true, false);
+    write_ckpt(&dir, 2, &bins, true, true);
+    let got = checkpoint::candidates(&dir);
+    assert_eq!(got, vec![
+        "checkpoint_s0000000003.json".to_string(),
+        "checkpoint_s0000000002.json".to_string(),
+        "checkpoint_s0000000001.json".to_string(),
+        "checkpoint.json".to_string(),
+    ]);
+}

@@ -1,0 +1,393 @@
+//! Property battery for the durability layer — journal framing and
+//! recovery, failpoint-injected IO faults, replay planning, and the
+//! divergence-guard policy. Artifact-free: no PJRT runtime, no compiled
+//! artifacts, every case runs against its own temp directory.
+//!
+//! Properties pinned here:
+//! * every committed journal record survives reopen with bitwise kappas,
+//!   and any corrupt suffix (garbage tail, torn frame, bit flip) loses at
+//!   most the corrupted tail — never a committed prefix record;
+//! * a torn `append_sync` (failpoint) is invisible after recovery: the
+//!   journal reopens to exactly the pre-fault entries and keeps accepting
+//!   appends;
+//! * `plan_replay` accepts every journal a crashed WAL writer can actually
+//!   produce (complete steps, terminal skips, one trailing partial) and
+//!   rejects gaps, sub disorder, and mid-log incomplete steps;
+//! * the guard trips exactly at its thresholds and `rolled_back` re-arms
+//!   the detectors from scratch.
+
+use tezo::coordinator::guard::{GuardPolicy, GuardState};
+use tezo::proplite::{self, prop_assert, Gen};
+use tezo::runtime::durable::{self, failpoint};
+use tezo::runtime::journal::{self, Journal, JournalEntry};
+
+fn tmp(tag: &str, case: u64) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "tezo_props_journal_{}_{tag}_{case}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A random but *valid* WAL tail starting at `ckpt_step`: complete steps
+/// (all `q` subs applied, or cut short by a terminal skip), optionally one
+/// trailing partial step — exactly the set of files a crashed writer that
+/// honors WAL ordering can leave behind.
+fn gen_valid_tail(g: &mut Gen, ckpt_step: u64, q: u32)
+                  -> (Vec<JournalEntry>, usize, Option<u64>) {
+    let n_steps = g.usize_in(0..6);
+    let mut entries = Vec::new();
+    for i in 0..n_steps {
+        let step = ckpt_step + i as u64;
+        let skip_at = if g.bool() { Some(g.usize_in(0..q as usize)) } else { None };
+        for sub in 0..q {
+            if skip_at == Some(sub as usize) {
+                entries.push(JournalEntry {
+                    step, sub, perturb_seed: g.u64() as u32, kappa: None,
+                });
+                break;
+            }
+            entries.push(JournalEntry {
+                step,
+                sub,
+                perturb_seed: g.u64() as u32,
+                kappa: Some(g.f32_in(-2.0..2.0)),
+            });
+        }
+    }
+    // a trailing partial needs q > 1 (with q = 1 any applied sub completes
+    // the step) and at least one applied-but-not-final sub
+    let partial = if q > 1 && g.bool() {
+        let step = ckpt_step + n_steps as u64;
+        let cut = g.usize_in(1..q as usize);
+        for sub in 0..cut as u32 {
+            entries.push(JournalEntry {
+                step,
+                sub,
+                perturb_seed: g.u64() as u32,
+                kappa: Some(g.f32_in(-2.0..2.0)),
+            });
+        }
+        Some(step)
+    } else {
+        None
+    };
+    (entries, n_steps, partial)
+}
+
+// ---------------------------------------------------------------------------
+// journal framing & recovery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_journal_roundtrips_bitwise() {
+    let mut case = 0u64;
+    proplite::run(40, |g| {
+        case += 1;
+        let p = tmp("roundtrip", case).join("journal.bin");
+        let seed = g.u64();
+        let n = g.usize_in(0..40);
+        let want: Vec<JournalEntry> = (0..n)
+            .map(|i| JournalEntry {
+                step: i as u64 / 2,
+                sub: (i % 2) as u32,
+                perturb_seed: g.u64() as u32,
+                // exercise the full bit space, NaNs included
+                kappa: if g.bool() {
+                    Some(f32::from_bits(g.u64() as u32))
+                } else {
+                    None
+                },
+            })
+            .collect();
+        {
+            let (mut j, prior) = Journal::open(&p, seed).unwrap();
+            prop_assert(prior.is_empty(), "fresh journal not empty")?;
+            for e in &want {
+                j.append(e).unwrap();
+            }
+        }
+        let got = Journal::read(&p, seed).unwrap();
+        prop_assert(got.len() == want.len(), "entry count changed on reopen")?;
+        for (a, b) in got.iter().zip(want.iter()) {
+            prop_assert(a.step == b.step && a.sub == b.sub
+                            && a.perturb_seed == b.perturb_seed,
+                        "ids changed on reopen")?;
+            prop_assert(a.kappa.map(f32::to_bits) == b.kappa.map(f32::to_bits),
+                        "kappa bits changed on reopen")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupt_suffix_only_loses_the_tail() {
+    let mut case = 0u64;
+    proplite::run(40, |g| {
+        case += 1;
+        let p = tmp("suffix", case).join("journal.bin");
+        let n = g.usize_in(1..20);
+        {
+            let (mut j, _) = Journal::open(&p, 3).unwrap();
+            for s in 0..n as u64 {
+                j.append(&JournalEntry {
+                    step: s, sub: 0, perturb_seed: s as u32,
+                    kappa: Some(s as f32),
+                }).unwrap();
+            }
+        }
+        let clean = std::fs::read(&p).unwrap();
+        // corrupt: either append garbage (torn final frame) or flip a byte
+        // inside some frame (bit rot) — committed records BEFORE the damage
+        // must all survive
+        let mut img = clean.clone();
+        let intact = if g.bool() {
+            let garbage = g.usize_in(1..33);
+            for _ in 0..garbage {
+                img.push(g.u64() as u8);
+            }
+            n
+        } else {
+            let victim = g.usize_in(0..n);
+            let off = 20 + victim * 33 + g.usize_in(0..33);
+            img[off] ^= 1 << g.usize_in(0..8);
+            victim
+        };
+        std::fs::write(&p, &img).unwrap();
+        let got = Journal::read(&p, 3).unwrap();
+        prop_assert(got.len() >= intact,
+                    "recovery lost a committed record before the damage")?;
+        for (s, e) in got.iter().take(intact).enumerate() {
+            prop_assert(e.step == s as u64 && e.kappa == Some(s as f32),
+                        "recovered prefix entry mutated")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_torn_append_is_invisible_after_recovery() {
+    let mut case = 0u64;
+    proplite::run(30, |g| {
+        case += 1;
+        let p = tmp("torn", case).join("journal.bin");
+        let n = g.usize_in(0..10);
+        let (mut j, _) = Journal::open(&p, 11).unwrap();
+        for s in 0..n as u64 {
+            j.append(&JournalEntry {
+                step: s, sub: 0, perturb_seed: 0, kappa: Some(0.5),
+            }).unwrap();
+        }
+        // tear the next frame at a random byte (possibly zero bytes land)
+        failpoint::arm(failpoint::Failure::Torn { keep: g.usize_in(0..33) });
+        let torn = j.append(&JournalEntry {
+            step: n as u64, sub: 0, perturb_seed: 0, kappa: Some(1.0),
+        });
+        failpoint::reset();
+        prop_assert(torn.is_err(), "torn append must error")?;
+        drop(j);
+        // recovery: only the committed prefix, and the handle still appends
+        let (mut j, got) = Journal::open(&p, 11).unwrap();
+        prop_assert(got.len() == n, "torn frame leaked into recovery")?;
+        j.append(&JournalEntry {
+            step: n as u64, sub: 0, perturb_seed: 0, kappa: Some(2.0),
+        }).unwrap();
+        prop_assert(Journal::read(&p, 11).unwrap().len() == n + 1,
+                    "append after torn recovery lost")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_enospc_leaves_previous_image_intact() {
+    let mut case = 0u64;
+    proplite::run(20, |g| {
+        case += 1;
+        let d = tmp("enospc", case);
+        let p = d.join("x.bin");
+        let before = g.vec_f32(4, -1.0..1.0);
+        let bytes: Vec<u8> = before.iter().flat_map(|f| f.to_le_bytes()).collect();
+        durable::write_atomic(&p, &bytes).unwrap();
+        failpoint::arm(failpoint::Failure::Enospc);
+        let res = durable::write_atomic(&p, b"overwrite");
+        failpoint::reset();
+        prop_assert(res.is_err(), "ENOSPC write must error")?;
+        prop_assert(std::fs::read(&p).unwrap() == bytes,
+                    "failed write mutated the committed file")?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// replay planning
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_plan_replay_accepts_every_valid_wal_tail() {
+    proplite::run(60, |g| {
+        let ckpt = g.u64() % 1000;
+        let q = g.usize_in(1..5) as u32;
+        let (entries, n_complete, partial) = gen_valid_tail(g, ckpt, q);
+        let r = journal::plan_replay(&entries, ckpt, q)
+            .map_err(|e| format!("valid tail rejected: {e:#}"))?;
+        prop_assert(r.steps.len() == n_complete, "complete step count wrong")?;
+        prop_assert(r.partial == partial, "partial step mis-detected")?;
+        for (i, (s, group)) in r.steps.iter().enumerate() {
+            prop_assert(*s == ckpt + i as u64, "replay steps not contiguous")?;
+            let terminal_skip =
+                group.last().map(|e| e.kappa.is_none()).unwrap_or(false);
+            prop_assert(terminal_skip || group.len() as u32 == q,
+                        "incomplete group classified complete")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_replay_rejects_gaps_and_disorder() {
+    proplite::run(60, |g| {
+        let ckpt = g.u64() % 100;
+        let q = g.usize_in(1..4) as u32;
+        let (mut entries, n_complete, _) = gen_valid_tail(g, ckpt, q);
+        if entries.len() < 2 || n_complete < 2 {
+            return Ok(()); // nothing to corrupt; trivially pass
+        }
+        match g.usize_in(0..3) {
+            0 => {
+                // open a step gap by shifting the tail up
+                let cut = g.usize_in(1..entries.len());
+                for e in entries.iter_mut().skip(cut) {
+                    e.step += 1 + (g.u64() % 3);
+                }
+            }
+            1 => {
+                // scramble sub order inside some step
+                let i = g.usize_in(0..entries.len());
+                entries[i].sub += 1;
+            }
+            _ => {
+                // delete the terminal record of a step strictly before the
+                // last group: the step turns incomplete mid-log (or, if it
+                // was a single record, vanishes and opens a gap) — never
+                // the accepted trailing-partial shape
+                let last_step = match entries.last() {
+                    Some(e) => e.step,
+                    None => return Ok(()),
+                };
+                let i = entries.iter().enumerate().position(|(i, e)| {
+                    e.step < last_step
+                        && entries.get(i + 1).map(|n| n.step != e.step)
+                                  .unwrap_or(true)
+                });
+                match i {
+                    Some(i) => { entries.remove(i); }
+                    None => return Ok(()),
+                }
+            }
+        }
+        prop_assert(journal::plan_replay(&entries, ckpt, q).is_err(),
+                    "corrupted tail accepted")?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// guard policy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_guard_trips_exactly_at_the_nonfinite_threshold() {
+    proplite::run(60, |g| {
+        let streak = g.usize_in(1..6);
+        let policy = GuardPolicy { nonfinite_streak: streak,
+                                   ..GuardPolicy::default() };
+        policy.validate().map_err(|e| e.to_string())?;
+        let mut guard = GuardState::new(policy);
+        // random prefix of finite losses never trips
+        for _ in 0..g.usize_in(0..10) {
+            let loss = g.f64_in(0.01..10.0);
+            prop_assert(guard.observe(loss).is_none(),
+                        "finite loss tripped the non-finite detector")?;
+        }
+        // exactly `streak` non-finite losses trip on the last one
+        for i in 1..=streak {
+            let bad = if g.bool() { f64::NAN } else { f64::INFINITY };
+            let fired = guard.observe(bad).is_some();
+            prop_assert(fired == (i == streak),
+                        "streak detector fired at the wrong count")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_guard_finite_loss_resets_the_streak() {
+    proplite::run(60, |g| {
+        let streak = g.usize_in(2..6);
+        let policy = GuardPolicy { nonfinite_streak: streak,
+                                   ..GuardPolicy::default() };
+        let mut guard = GuardState::new(policy);
+        // interleave: up to streak-1 NaNs, then a finite loss, repeated —
+        // the detector must never fire
+        for _ in 0..g.usize_in(1..8) {
+            for _ in 0..g.usize_in(0..streak) {
+                prop_assert(guard.observe(f64::NAN).is_none(),
+                            "sub-threshold streak tripped")?;
+            }
+            prop_assert(guard.observe(g.f64_in(0.01..5.0)).is_none(),
+                        "finite loss tripped")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_guard_rollback_rearms_and_budget_is_exact() {
+    proplite::run(40, |g| {
+        let budget = g.usize_in(1..5);
+        let policy = GuardPolicy { nonfinite_streak: 1, max_rollbacks: budget,
+                                   ..GuardPolicy::default() };
+        let mut guard = GuardState::new(policy);
+        for used in 0..budget {
+            prop_assert(guard.can_roll_back(),
+                        "budget exhausted early")?;
+            prop_assert(guard.observe(f64::NAN).is_some(),
+                        "re-armed detector failed to trip")?;
+            guard.rolled_back();
+            prop_assert(guard.rollbacks() == used + 1, "rollback count")?;
+        }
+        prop_assert(!guard.can_roll_back(), "budget not enforced")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_guard_spike_needs_warmup_and_factor() {
+    proplite::run(40, |g| {
+        let warmup = g.usize_in(1..8);
+        let factor = g.f64_in(1.5..5.0);
+        let policy = GuardPolicy { spike_factor: factor, ewma_alpha: 0.5,
+                                   warmup, ..GuardPolicy::default() };
+        policy.validate().map_err(|e| e.to_string())?;
+        let mut guard = GuardState::new(policy);
+        let base = g.f64_in(0.5..2.0);
+        // during warmup even a huge jump does not trip
+        for _ in 0..warmup {
+            prop_assert(guard.observe(base).is_none(), "tripped in warmup")?;
+        }
+        // at trend `base`, a loss just under the threshold passes...
+        prop_assert(guard.observe(base * factor * 0.99).is_none(),
+                    "sub-threshold loss tripped")?;
+        // ...and rebuilding the trend back down, a clear blowup trips
+        for _ in 0..4 {
+            if guard.observe(base).is_some() {
+                return Err("settling loss tripped".to_string());
+            }
+        }
+        prop_assert(guard.observe(base * factor * 10.0).is_some(),
+                    "blowup did not trip")?;
+        Ok(())
+    });
+}

@@ -40,6 +40,9 @@ pub enum Code {
     /// raw forward-form string literal outside `config/`/`runtime/tune.rs`
     /// (dispatch must go through `FormPolicy` / the tuning table)
     TuneFormLiteral,
+    /// raw `fs::write`/`File::create` in a hot-path module (durable IO
+    /// must go through `runtime::durable`)
+    IoRawWrite,
 }
 
 impl Code {
@@ -59,10 +62,11 @@ impl Code {
             Code::AllowlistStale => "TZ-ALLOW001",
             Code::ObsClock => "TZ-OBS001",
             Code::TuneFormLiteral => "TZ-TUNE001",
+            Code::IoRawWrite => "TZ-IO001",
         }
     }
 
-    pub const ALL: [Code; 14] = [
+    pub const ALL: [Code; 15] = [
         Code::RngAmbient,
         Code::RngWallClock,
         Code::RngTimeSeed,
@@ -77,6 +81,7 @@ impl Code {
         Code::AllowlistStale,
         Code::ObsClock,
         Code::TuneFormLiteral,
+        Code::IoRawWrite,
     ];
 }
 

@@ -127,6 +127,7 @@ pub fn run_code_lint(files: &[SourceFile]) -> Vec<Finding> {
         rules::panics::check(f, &mut out);
         rules::obs::check(f, &mut out);
         rules::tune::check(f, &mut out);
+        rules::io::check(f, &mut out);
     }
     out
 }

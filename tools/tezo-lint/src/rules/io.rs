@@ -1,0 +1,125 @@
+//! Durable-IO discipline (TZ-IO001).
+//!
+//! PR 10 routes every hot-path file creation through `runtime::durable`
+//! (temp + fsync + atomic rename, with failpoint injection for the crash
+//! battery): a raw `std::fs::write` or `File::create` on the training hot
+//! path can leave a torn file that a later run trusts as a checkpoint or
+//! journal. Reads, directory ops, removals, and in-place truncation stay
+//! free — torn-tolerance is a file-*creation* problem.
+//!
+//! * TZ-IO001 — `fs::write(..)` or `File::create(..)`/`File::create_new(..)`
+//!   in a hot-path module (see [`super::panics::is_hot_path`]), outside
+//!   `runtime/durable.rs` (the one legal raw writer) and test code.
+
+use crate::findings::{Code, Finding};
+use crate::lexer::Kind;
+use crate::rules::panics::is_hot_path;
+use crate::source::SourceFile;
+
+/// The durable-IO module itself is the one place raw writes are the point.
+fn exempt(path: &str) -> bool {
+    path.contains("runtime/durable.rs")
+}
+
+/// Does the path segment before token `i` read `<owner> ::`? (`::` lexes
+/// as two `:` puncts.)
+fn owned_by(file: &SourceFile, i: usize, owners: &[&str]) -> bool {
+    if i < 3 {
+        return false;
+    }
+    let ts = &file.tokens;
+    ts[i - 1].is_punct(':')
+        && ts[i - 2].is_punct(':')
+        && ts[i - 3].kind == Kind::Ident
+        && owners.contains(&ts[i - 3].text.as_str())
+}
+
+pub fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !is_hot_path(&file.path) || exempt(&file.path) {
+        return;
+    }
+    for (i, t) in file.tokens.iter().enumerate() {
+        if file.masked[i] || t.kind != Kind::Ident {
+            continue;
+        }
+        let name = t.text.as_str();
+        let owner = if name == "write" && owned_by(file, i, &["fs"]) {
+            "fs"
+        } else if (name == "create" || name == "create_new")
+            && owned_by(file, i, &["File"])
+        {
+            "File"
+        } else {
+            continue;
+        };
+        out.push(Finding::new(
+            Code::IoRawWrite,
+            &file.path,
+            t.line,
+            format!("raw `{owner}::{name}` on the hot path — route the \
+                     write through runtime::durable (write_atomic / \
+                     open_append) so a crash cannot leave a torn file"),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::new(path.into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_raw_writes_on_the_hot_path() {
+        let fs = findings(
+            "rust/src/runtime/checkpoint.rs",
+            "fn f() { std::fs::write(p, b)?; let f = File::create(p)?; \
+             let g = fs::File::create_new(q)?; }",
+        );
+        assert_eq!(fs.len(), 3, "{fs:?}");
+        assert!(fs.iter().all(|f| f.code == Code::IoRawWrite));
+    }
+
+    #[test]
+    fn reads_and_dir_ops_are_fine() {
+        let fs = findings(
+            "rust/src/runtime/checkpoint.rs",
+            "fn f() { let b = std::fs::read(p)?; std::fs::create_dir_all(d)?; \
+             std::fs::remove_file(p)?; let s = std::fs::read_to_string(p)?; }",
+        );
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn durable_module_and_cold_paths_are_exempt() {
+        let src = "fn f() { std::fs::write(p, b)?; let f = File::create(t)?; }";
+        assert!(findings("rust/src/runtime/durable.rs", src).is_empty());
+        assert!(findings("rust/src/telemetry/export.rs", src).is_empty());
+        assert!(findings("rust/benches/bench_io.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_code_is_masked() {
+        let fs = findings(
+            "rust/src/runtime/journal.rs",
+            "#[cfg(test)]\nmod tests { fn t() { std::fs::write(p, b).unwrap(); } }",
+        );
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn unrelated_write_idents_are_fine() {
+        // method calls and other owners must not trip the pattern
+        let fs = findings(
+            "rust/src/runtime/journal.rs",
+            "fn f() { buf.write(b)?; w.write_all(b)?; durable::write_atomic(p, b)?; \
+             Journal::create_entry(); }",
+        );
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod artifacts;
 pub mod determinism;
+pub mod io;
 pub mod obs;
 pub mod panics;
 pub mod rng_time;

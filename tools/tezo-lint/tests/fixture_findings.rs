@@ -16,6 +16,7 @@ fn code_lint(path: &str, src: &str) -> Vec<Finding> {
     rules::panics::check(&f, &mut out);
     rules::obs::check(&f, &mut out);
     rules::tune::check(&f, &mut out);
+    rules::io::check(&f, &mut out);
     out
 }
 
@@ -78,6 +79,24 @@ fn hot_path_classification_gates_panic_rules() {
     let fs = code_lint("rust/src/tensor/fixture_panics.rs",
                        include_str!("fixtures/hot_bad_panics.rs"));
     assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn bad_io_fixture_exact_counts() {
+    let fs = code_lint("rust/src/runtime/fixture_io.rs",
+                       include_str!("fixtures/bad_io.rs"));
+    assert_eq!(count(&fs, Code::IoRawWrite), 2, "{fs:?}");
+    assert_eq!(fs.len(), 2, "{fs:?}");
+}
+
+#[test]
+fn io_rule_is_hot_path_and_durable_scoped() {
+    // same fixture on a cold path, and inside the durable module: clean
+    for path in ["rust/src/tensor/fixture_io.rs",
+                 "rust/src/runtime/durable.rs"] {
+        let fs = code_lint(path, include_str!("fixtures/bad_io.rs"));
+        assert_eq!(count(&fs, Code::IoRawWrite), 0, "{path}: {fs:?}");
+    }
 }
 
 #[test]

@@ -1,0 +1,32 @@
+// Fixture: raw durable-IO violations on a hot path. This file is never
+// compiled — parsed by the lint fixture tests, which assert the exact
+// finding counts.
+
+fn save_descriptor(path: &Path, text: &str) -> std::io::Result<()> {
+    std::fs::write(path, text) // TZ-IO001: torn-file window, no fsync
+}
+
+fn open_log(path: &Path) -> std::io::Result<File> {
+    File::create(path) // TZ-IO001: truncates in place, not crash-safe
+}
+
+fn read_side_is_fine(path: &Path) -> std::io::Result<Vec<u8>> {
+    std::fs::create_dir_all(path)?;
+    std::fs::read(path)
+}
+
+mod helpers {
+    // durable seam calls stay clean
+    fn good(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+        crate::runtime::durable::write_atomic(path, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_write_raw() {
+        std::fs::write("t.bin", b"x").unwrap();
+        let _ = File::create("u.bin").unwrap();
+    }
+}
